@@ -1,0 +1,82 @@
+//! Fig 10 scenario: average time per optimization step as the inter-node
+//! link is throttled to 10 / 100 / 1000 / 10000 Mbps.
+//!
+//!     cargo run --release --example bandwidth_sweep
+//!
+//! Paper findings this reproduces: compression rate dominates below
+//! ~500 Mbps; Random-1/32 ≈ 3.33× faster than DeMo-1/32 at 10 Mbps and
+//! ≈ 18× faster than Decoupled-AdamW with full replication; Random-1/16
+//! tracks DeMo-1/32 (DeMo ships 2× the bytes at equal rate).
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::{results_root, runtime, Experiment};
+use detonation::util::argparse::ArgParser;
+use detonation::util::fmt_secs;
+
+fn main() -> Result<()> {
+    let args = ArgParser::new("bandwidth_sweep", "time/step vs inter-node bandwidth")
+        .opt("model", "seq2seq-tiny", "artifact name")
+        .opt("steps", "24", "steps per point (timing only)")
+        .parse_env();
+
+    let rt = runtime()?;
+    let mut exp = Experiment::new("bandwidth_sweep", &results_root());
+    let schemes = [
+        ("demo-sgd", "demo:1/16"),
+        ("demo-sgd", "demo:1/32"),
+        ("demo-sgd", "random:1/16"),
+        ("demo-sgd", "random:1/32"),
+        ("decoupled-adamw", "full:sign"),
+    ];
+    let bandwidths = [10.0, 100.0, 1000.0, 10000.0];
+
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for (opt, repl) in schemes {
+        let mut times = Vec::new();
+        for mbps in bandwidths {
+            // Latency-scaled paper network (T5-Large reference) with the
+            // inter-node link throttled to the sweep point.
+            let meta = std::fs::read_to_string(format!("artifacts/{}.meta.json", args.str("model")))?;
+            let params = detonation::runtime::Manifest::parse(&meta)?.param_count;
+            let mut cfg = ExperimentConfig {
+                model: args.string("model"),
+                nodes: 2,
+                accels_per_node: 2,
+                steps: args.u64("steps"),
+                net: detonation::net::NetModel::paper_scaled(params, 737e6)
+                    .with_inter_mbps(mbps),
+                ..Default::default()
+            };
+            cfg.apply_arg("opt", opt)?;
+            cfg.apply_arg("repl", repl)?;
+            let label = format!("{}-{}-{}mbps", opt, cfg.repl.label(), mbps);
+            let run = exp.run(&rt, &cfg, Some(&label))?;
+            times.push(run.mean_step_time());
+        }
+        rows.push((format!("{opt}+{repl}"), times));
+    }
+
+    println!("\n=== average time per optimization step (simulated) ===\n");
+    print!("{:<34}", "scheme");
+    for b in bandwidths {
+        print!("{:>12}", format!("{b} Mbps"));
+    }
+    println!();
+    for (label, times) in &rows {
+        print!("{label:<34}");
+        for t in times {
+            print!("{:>12}", fmt_secs(*t));
+        }
+        println!();
+    }
+    // Headline ratios at 10 Mbps.
+    let at10 = |i: usize| rows[i].1[0];
+    println!(
+        "\nat 10 Mbps: random-1/32 is {:.2}x faster than demo-1/32, {:.1}x faster than full replication",
+        at10(1) / at10(3),
+        at10(4) / at10(3),
+    );
+    exp.finish()?;
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! The paper's ViT scenario (Fig 2b): replicator comparison for image
+//! classification on the procedural-texture dataset.
+//!
+//!     cargo run --release --example vision_classification -- --steps 200
+//!
+//! Paper finding: **DeMo replication wins on ViT** ("fast moving momenta
+//! is more suited for this task"); Striding beats Random on highly
+//! structured image data.
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::{results_root, runtime, Experiment};
+use detonation::replicate::ReplSpec;
+use detonation::util::argparse::ArgParser;
+
+fn main() -> Result<()> {
+    let args = ArgParser::new("vision_classification", "replicator comparison on ViT")
+        .opt("model", "vit-tiny", "artifact name")
+        .opt("steps", "200", "training steps")
+        .opt("rate", "1/8", "compression rate")
+        .parse_env();
+
+    let rt = runtime()?;
+    let mut exp = Experiment::new("vision_classification", &results_root());
+    let rate = args.str("rate").strip_prefix("1/").unwrap_or("8").to_string();
+
+    let base = ExperimentConfig {
+        model: args.string("model"),
+        nodes: 2,
+        accels_per_node: 2,
+        steps: args.u64("steps"),
+        val_every: (args.u64("steps") / 4).max(1),
+        // Paper uses 1e-5 for ViT-B; our tiny stand-in tolerates more.
+        lr: 5e-4,
+        ..Default::default()
+    };
+
+    for spec in [
+        format!("demo:1/{rate}"),
+        format!("random:1/{rate}"),
+        format!("striding:1/{rate}"),
+        format!("diloco:{rate}"),
+    ] {
+        let mut cfg = base.clone();
+        cfg.repl = ReplSpec::parse(&spec)?;
+        exp.run(&rt, &cfg, Some(&cfg.repl.label()))?;
+    }
+
+    println!("\n=== image classification (ViT): replicator comparison ===\n");
+    println!("{}", exp.finish()?);
+    if let Some((label, loss)) = exp.best_val() {
+        println!("best validation loss: {label} ({loss:.4})");
+        println!("(paper Fig 2b: DeMo replication wins this architecture)");
+    }
+    Ok(())
+}

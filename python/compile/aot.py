@@ -1,0 +1,158 @@
+"""AOT pipeline: lower L2/L1 jax graphs to HLO text + manifests for Rust.
+
+Interchange format is **HLO text**, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and DESIGN.md §3).
+
+Per model config this emits
+    artifacts/<name>.train.hlo.txt   — (params..., batch) -> (loss, grads...)
+    artifacts/<name>.eval.hlo.txt    — (params..., batch) -> (loss,)
+    artifacts/<name>.meta.json       — parameter manifest + batch spec
+and per DCT-extraction config
+    artifacts/dct_extract_<len>_c<chunk>_k<k>[_sign].hlo.txt
+    (flat momentum) -> (q, m_next)   — Rust↔Pallas cross-validation +
+                                       optional extraction offload.
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import dct_topk
+
+# Extraction artifacts: (flat_len, chunk, k, sign).  flat_len 16384 is the
+# shard-slab size the Rust tests/benches cross-validate against; chunk/k
+# cover the paper's Fig 8/11 sweep corners.
+EXTRACT_CONFIGS = [
+    (16384, 64, 8, True),
+    (16384, 64, 8, False),
+    (16384, 32, 4, True),
+    (16384, 128, 16, True),
+]
+
+# Default artifact set: everything the tests/examples/benches need.
+# lm-100m is opt-in (--models lm-100m) — it lowers fine but compiles for
+# minutes under PJRT-CPU, so the default build skips it.
+DEFAULT_MODELS = [
+    "lm-tiny", "lm-small", "seq2seq-tiny", "seq2seq-small",
+    "vit-tiny", "vit-small",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big dense constants as ``constant({...})`` and the 0.5.1 text
+    parser silently reads those back as ZEROS — e.g. the DCT basis matrix
+    baked into the extraction artifacts would vanish. A regression test in
+    python/tests/test_aot.py greps for the elision marker.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def emit_model(cfg: model.ModelConfig, out_dir: str) -> None:
+    """Lower train+eval steps for one config and write HLO + manifest."""
+    t0 = time.time()
+    args = model.example_args(cfg)
+
+    train = jax.jit(model.make_train_step(cfg))
+    train_hlo = to_hlo_text(train.lower(*args))
+    with open(os.path.join(out_dir, f"{cfg.name}.train.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+
+    ev = jax.jit(model.make_loss_fn(cfg))
+    eval_hlo = to_hlo_text(ev.lower(*args))
+    with open(os.path.join(out_dir, f"{cfg.name}.eval.hlo.txt"), "w") as f:
+        f.write(eval_hlo)
+
+    spec = model.init_spec(cfg)
+    manifest = {
+        "name": cfg.name,
+        "family": cfg.family,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "d_ff": cfg.d_ff,
+        "seq": cfg.seq,
+        "src_seq": cfg.src_seq,
+        "patch_dim": cfg.patch_dim,
+        "batch": cfg.batch,
+        "param_count": int(model.param_count(cfg)),
+        "params": [
+            {
+                "name": n,
+                "shape": list(spec[n][0]),
+                "init": list(spec[n][1]),
+            }
+            for n in model.param_order(cfg)
+        ],
+        "batch_inputs": [
+            {"name": n, "shape": list(s), "dtype": d}
+            for n, s, d in model.batch_spec(cfg)
+        ],
+    }
+    with open(os.path.join(out_dir, f"{cfg.name}.meta.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {cfg.name}: {manifest['param_count']:,} params, "
+          f"train hlo {len(train_hlo)//1024} KiB  ({time.time()-t0:.1f}s)",
+          flush=True)
+
+
+def emit_extract(flat_len: int, chunk: int, k: int, sign: bool,
+                 out_dir: str) -> None:
+    """Lower the Pallas DCT extraction for one (len, chunk, k, sign)."""
+    fn = jax.jit(
+        lambda m: dct_topk.extract_fast_components(m, chunk, k, sign)
+    )
+    hlo = to_hlo_text(fn.lower(jax.ShapeDtypeStruct((flat_len,), jnp.float32)))
+    suffix = "_sign" if sign else ""
+    name = f"dct_extract_{flat_len}_c{chunk}_k{k}{suffix}"
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    print(f"  {name}: {len(hlo)//1024} KiB", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help=f"model configs (default: {' '.join(DEFAULT_MODELS)}; "
+                         f"all known: {' '.join(model.CONFIGS)})")
+    ap.add_argument("--skip-extract", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = args.models if args.models is not None else DEFAULT_MODELS
+    print(f"emitting artifacts to {os.path.abspath(args.out)}", flush=True)
+    for name in names:
+        if name not in model.CONFIGS:
+            print(f"unknown model config {name!r}", file=sys.stderr)
+            sys.exit(2)
+        emit_model(model.CONFIGS[name], args.out)
+    if not args.skip_extract:
+        for flat_len, chunk, k, sign in EXTRACT_CONFIGS:
+            emit_extract(flat_len, chunk, k, sign, args.out)
+    print("done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

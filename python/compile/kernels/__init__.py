@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#   dct_topk   — chunked DCT-II/III + top-k extraction (DeMo replicator)
+#   attention  — fused scaled-dot-product attention (all L2 transformers)
+#   ref        — pure-jnp oracles for both
+from . import attention, dct_topk, ref  # noqa: F401

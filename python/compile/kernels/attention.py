@@ -1,0 +1,132 @@
+"""Layer-1 Pallas fused attention kernel.
+
+Every transformer in model.py (decoder LM, encoder-decoder, ViT) routes
+its scaled-dot-product attention through this kernel, so the model's
+compute hot-spot lowers through Pallas into the AOT HLO artifact.
+
+Shape strategy (DESIGN.md §6): one grid cell = one (batch·head).  The
+whole (S, D) Q/K/V tiles and the (S, T) score tile live in VMEM — valid
+for every experiment in the paper reproduction (S ≤ 512 → score tile
+≤ 1 MiB ≪ 16 MiB VMEM).  QKᵀ and the weighted sum both hit the MXU; the
+softmax row pass is VPU work on the VMEM-resident tile.  This is the
+TPU re-think of flash-attention-style GPU tiling: at these sizes no
+streaming softmax is needed, one block per head is already roofline.
+
+``interpret=True``: CPU PJRT cannot run Mosaic custom-calls; interpret
+mode lowers to portable HLO (see dct_topk.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_scores(q, k, scale: float, causal: bool):
+    """Masked, scaled, row-softmaxed score tile (shared by fwd + bwd)."""
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        s, t = scores.shape
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, t), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, t), 1)
+        scores = jnp.where(row >= col, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool):
+    """Fused attention for one (batch·head): softmax(Q Kᵀ · scale) V."""
+    w = _softmax_scores(q_ref[0], k_ref[0], scale, causal)
+    o_ref[0] = jnp.dot(w, v_ref[0], preferred_element_type=jnp.float32)
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref,
+                     *, scale: float, causal: bool):
+    """Fused attention backward for one (batch·head).
+
+    Recomputes the softmax tile in VMEM (flash-style: cheaper than
+    spilling the (S,T) weights to HBM) and emits dQ/dK/dV:
+        dV = Wᵀ dO
+        dS = W ∘ (dO Vᵀ − rowsum(dO Vᵀ ∘ W))
+        dQ = dS K · scale,  dK = dSᵀ Q · scale
+    """
+    q, k, v, do = q_ref[0], k_ref[0], v_ref[0], do_ref[0]
+    w = _softmax_scores(q, k, scale, causal)
+    dv_ref[0] = jnp.dot(w.T, do, preferred_element_type=jnp.float32)
+    dw = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = w * (dw - jnp.sum(dw * w, axis=-1, keepdims=True))
+    dq_ref[0] = jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+    dk_ref[0] = jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+
+
+def _flat_specs(n: int, s: int, t: int, d: int):
+    qspec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    kspec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    return qspec, kspec
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _attention_flat(qf, kf, vf, causal: bool):
+    """Attention on flattened (B·H, S|T, D) operands; fwd Pallas kernel."""
+    n, s, d = qf.shape
+    t = kf.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    qspec, kspec = _flat_specs(n, s, t, d)
+    return pl.pallas_call(
+        functools.partial(_attn_fwd_kernel, scale=scale, causal=causal),
+        out_shape=jax.ShapeDtypeStruct((n, s, d), jnp.float32),
+        grid=(n,),
+        in_specs=[qspec, kspec, kspec],
+        out_specs=qspec,
+        interpret=True,
+    )(qf, kf, vf)
+
+
+def _attention_flat_fwd(qf, kf, vf, causal: bool):
+    return _attention_flat(qf, kf, vf, causal), (qf, kf, vf)
+
+
+def _attention_flat_bwd(causal: bool, res, do):
+    qf, kf, vf = res
+    n, s, d = qf.shape
+    t = kf.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    qspec, kspec = _flat_specs(n, s, t, d)
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_attn_bwd_kernel, scale=scale, causal=causal),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, t, d), jnp.float32),
+        ),
+        grid=(n,),
+        in_specs=[qspec, kspec, kspec, qspec],
+        out_specs=(qspec, kspec, kspec),
+        interpret=True,
+    )(qf, kf, vf, do)
+    return dq, dk, dv
+
+
+_attention_flat.defvjp(_attention_flat_fwd, _attention_flat_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = False) -> jnp.ndarray:
+    """Multi-head attention via the Pallas kernels (fwd + custom-VJP bwd).
+
+    q: (B, H, S, D); k, v: (B, H, T, D).  Returns (B, H, S, D).
+    Causal requires S == T (decoder self-attention).
+    """
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    if causal and s != t:
+        raise ValueError(f"causal attention needs S==T, got S={s} T={t}")
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+    return _attention_flat(qf, kf, vf, causal).reshape(b, h, s, d)

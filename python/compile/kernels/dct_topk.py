@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernels for DeMo's chunked DCT momentum transform.
+
+The DeMo replicator (Peng et al. 2024; DeToNATION §Methods) extracts the
+"fast-moving" momentum components by (1) reshaping the flat momentum into
+(n_chunks, chunk), (2) applying a DCT-II per chunk, (3) keeping the top-k
+coefficients per chunk by magnitude.  The inverse path is a DCT-III.
+
+Hardware adaptation (DESIGN.md §6): the paper's CUDA implementation maps
+chunks to threadblocks.  On TPU, the natural shape is a *batched small
+matmul against the DCT basis*: we tile a BLOCK of chunks into VMEM via
+BlockSpec and compute ``(BLOCK, chunk) @ (chunk, chunk)`` on the MXU.
+Chunk sizes used by the paper (16..256) divide into 128-lane tiles, and
+one grid step streams one chunk-block HBM→VMEM — the BlockSpec analogue
+of the paper's threadblock sweep.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the same artifact runs
+under the Rust PJRT-CPU runtime.  Correctness vs ``ref.py`` is asserted by
+python/tests/test_kernel.py (hypothesis sweeps shapes/k/chunk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# One grid step transforms this many chunks.  128 rows keeps the MXU
+# operand (BLOCK, chunk) aligned with the 128x128 systolic array for every
+# paper chunk size; VMEM footprint at chunk=256 is 128*256*4B*2 = 256 KiB.
+DEFAULT_BLOCK = 128
+
+
+def _dct_matmul_kernel(x_ref, basis_ref, o_ref):
+    """o = x @ basis^T for one VMEM-resident block of chunks.
+
+    ``basis`` is the orthonormal DCT-II matrix; passing its transpose
+    flipped (DCT-III) reuses the identical kernel for the inverse.
+    """
+    o_ref[...] = jnp.dot(
+        x_ref[...], basis_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _blocked_transform(x: jnp.ndarray, basis: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Run the DCT matmul kernel over (n_chunks, chunk) in blocks of rows."""
+    n_chunks, chunk = x.shape
+    if n_chunks % block != 0:
+        # Pad the chunk axis up to a whole number of blocks; the pad rows
+        # transform to garbage we slice off.  Keeps BlockSpec static.
+        pad = block - n_chunks % block
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    padded_chunks = x.shape[0]
+    grid = (padded_chunks // block,)
+    out = pl.pallas_call(
+        _dct_matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded_chunks, chunk), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, chunk), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, chunk), lambda i: (i, 0)),
+        interpret=True,
+    )(x, basis)
+    return out[:n_chunks]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block"))
+def chunked_dct2(x: jnp.ndarray, chunk: int, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Chunked DCT-II of flat ``x`` → (n_chunks, chunk) coefficients."""
+    basis = ref.dct_basis(chunk, jnp.float32)
+    return _blocked_transform(x.reshape(-1, chunk), basis, block)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block"))
+def chunked_dct3(c: jnp.ndarray, chunk: int, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Chunked DCT-III (inverse): (n_chunks, chunk) coefficients → flat x."""
+    basis = ref.dct_basis(chunk, jnp.float32)
+    # DCT-III is multiplication by basis (not basis^T): reuse the kernel by
+    # handing it the transposed matrix.
+    out = _blocked_transform(c.reshape(-1, chunk), basis.T, block)
+    return out.reshape(-1)
+
+
+def _topk_mask(c: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-row top-k-|.| mask via a sort-based threshold.
+
+    Deliberately NOT jax.lax.top_k: that lowers to the `topk(...,
+    largest=true)` HLO op which the xla_extension 0.5.1 text parser (the
+    Rust runtime's XLA) rejects; `sort` is classic HLO and round-trips.
+    Ties at the threshold admit >k entries per row — measure-zero for the
+    float momentum data this runs on (the Rust side breaks ties by index).
+    """
+    n = c.shape[-1]
+    if k >= n:
+        return jnp.ones_like(c, dtype=bool)
+    a = jnp.abs(c)
+    thresh = jnp.sort(a, axis=-1)[..., n - k : n - k + 1]
+    return a >= thresh
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "k", "sign", "block"))
+def extract_fast_components(
+    m: jnp.ndarray, chunk: int, k: int, sign: bool, block: int = DEFAULT_BLOCK
+):
+    """Full DeMo extraction: DCT-II → top-k mask → residual + transmit.
+
+    Returns (q, m_next):
+      q       — flat decoded transmit vector (signed if ``sign``),
+      m_next  — flat residual momentum (true kept component removed).
+
+    The two DCT passes run on the Pallas kernel; masking/top-k run as
+    plain XLA ops fused around it.  This whole function is what
+    ``aot.py`` lowers into the ``dct_extract_*`` artifacts used for
+    Rust↔Python cross-validation.
+    """
+    c = chunked_dct2(m, chunk, block)
+    mask = _topk_mask(c, k)
+    kept = jnp.where(mask, c, 0.0)
+    m_next = m - chunked_dct3(kept, chunk, block)
+    tx = jnp.sign(kept) if sign else kept
+    q = chunked_dct3(tx, chunk, block)
+    return q, m_next

@@ -1,0 +1,118 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has a line-for-line mathematical twin
+here, written with plain jax.numpy only.  pytest (python/tests/) sweeps
+shapes/dtypes with hypothesis and asserts allclose between kernel and
+oracle; the Rust side additionally cross-validates its native DCT against
+the AOT-compiled encode/decode artifacts built from these kernels.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dct_basis(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Orthonormal DCT-II basis matrix B with shape (n, n).
+
+    Row k is the k-th DCT-II basis vector:
+        B[k, i] = s_k * cos(pi/n * (i + 0.5) * k)
+    with s_0 = sqrt(1/n) and s_k = sqrt(2/n) for k > 0, so that B is
+    orthogonal (B @ B.T = I) and DCT-III (the inverse) is simply B.T.
+
+    The same matrix (bit-identical up to f32 rounding) is generated on the
+    Rust side in ``rust/src/dct``; tests pin a few entries numerically to
+    guard against convention drift (scaling/normalization mismatches are
+    the classic DCT bug).
+    """
+    i = np.arange(n)
+    k = np.arange(n)[:, None]
+    b = np.cos(math.pi / n * (i[None, :] + 0.5) * k)
+    scale = np.full((n, 1), math.sqrt(2.0 / n))
+    scale[0, 0] = math.sqrt(1.0 / n)
+    return jnp.asarray(b * scale, dtype=dtype)
+
+
+def dct2_ref(x: jnp.ndarray, basis: jnp.ndarray) -> jnp.ndarray:
+    """DCT-II of each row of ``x`` (shape (..., n)): coefficients c = x B^T."""
+    return x @ basis.T
+
+
+def dct3_ref(c: jnp.ndarray, basis: jnp.ndarray) -> jnp.ndarray:
+    """DCT-III (inverse of orthonormal DCT-II) of each row: x = c B."""
+    return c @ basis
+
+
+def chunked_dct2_ref(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """DeMo's chunked transform: reshape flat x to (n/chunk, chunk), DCT rows."""
+    n = x.shape[-1]
+    assert n % chunk == 0, f"len {n} not divisible by chunk {chunk}"
+    b = dct_basis(chunk, x.dtype)
+    return dct2_ref(x.reshape(-1, chunk), b)
+
+
+def chunked_dct3_ref(c: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """Inverse of :func:`chunked_dct2_ref`; returns the flat vector."""
+    b = dct_basis(chunk, c.dtype)
+    return dct3_ref(c.reshape(-1, chunk), b).reshape(-1)
+
+
+def topk_mask_ref(c: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-row boolean mask keeping the k largest-|.| coefficients.
+
+    Ties are broken toward the lower index (stable argsort on -|c|),
+    matching the Rust quickselect which orders by (|c| desc, idx asc).
+    """
+    n = c.shape[-1]
+    if k >= n:
+        return jnp.ones_like(c, dtype=bool)
+    order = jnp.argsort(-jnp.abs(c), axis=-1, stable=True)
+    keep = order[..., :k]
+    mask = jnp.zeros(c.shape, dtype=bool)
+    rows = jnp.arange(c.shape[0])[:, None]
+    return mask.at[rows, keep].set(True)
+
+
+def extract_fast_components_ref(m: jnp.ndarray, chunk: int, k: int, sign: bool):
+    """DeMo ExtractFastComponents oracle.
+
+    Input: flat momentum m (len divisible by chunk).
+    Returns (q_flat, m_next_flat, kept) where
+      * kept is the sparse (masked) DCT coefficient matrix,
+      * q_flat is the decoded transmitted update (what every node adds in),
+      * m_next = m - decode(kept) — the momentum keeps only its residual.
+        Sign is applied to what is *transmitted*; the local subtraction
+        removes the true component (matches the DeMo reference impl).
+    """
+    c = chunked_dct2_ref(m, chunk)
+    mask = topk_mask_ref(c, k)
+    kept = jnp.where(mask, c, 0.0)
+    m_next = m - chunked_dct3_ref(kept, chunk)
+    tx = jnp.sign(kept) if sign else kept
+    q = chunked_dct3_ref(tx, chunk)
+    return q, m_next, kept
+
+
+def softmax_ref(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool) -> jnp.ndarray:
+    """Scaled dot-product attention oracle.
+
+    q: (B, H, S, D), k/v: (B, H, T, D).  Causal masks future keys (needs
+    S == T, i.e. self-attention).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / math.sqrt(d)
+    if causal:
+        s, t = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((s, t), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    w = softmax_ref(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v)

@@ -1,0 +1,351 @@
+"""Layer-2 JAX models: the compute graphs AOT-lowered for the Rust runtime.
+
+Three transformer families mirror the paper's three evaluation domains
+(DESIGN.md §2 substitution table):
+
+  * ``lm``      — decoder-only causal LM        (OLMo2 stand-in, Figs 3–6)
+  * ``seq2seq`` — encoder-decoder translation   (T5 stand-in,   Figs 1,2a,8–15)
+  * ``vit``     — vision transformer classifier (ViT-B stand-in, Figs 2b,16)
+
+All attention goes through the Layer-1 Pallas kernel
+(:mod:`compile.kernels.attention`), so the hot-spot lowers through Pallas
+into the same HLO artifact.
+
+Conventions
+-----------
+Parameters are a flat ``{name: array}`` dict with ``/``-separated names;
+the AOT manifest orders them by sorted name, and the Rust side constructs
+and owns the actual parameter buffers (python never initializes state at
+runtime — ``init_spec`` only *describes* shapes and initializers).
+
+``train_step(params, batch) -> (loss, grads)`` is the single artifact
+entry point per model config.  The Rust coordinator implements the
+optimizer and all communication; this graph is pure compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# Configs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + batch spec for one AOT artifact."""
+
+    name: str
+    family: str          # "lm" | "seq2seq" | "vit"
+    vocab: int           # vocab size (lm/seq2seq) or num classes (vit)
+    d_model: int
+    n_heads: int
+    n_layers: int        # decoder layers (and encoder layers for seq2seq)
+    d_ff: int
+    seq: int             # sequence length (lm), target length (seq2seq),
+                         # or number of patches (vit)
+    src_seq: int = 0     # source length (seq2seq only)
+    patch_dim: int = 0   # flattened patch size (vit only)
+    batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The registry every artifact is generated from.  Sizes are chosen so the
+# loss-curve experiments run in CPU-minutes; ``lm-100m`` is the ~100M-param
+# end-to-end config used by examples/train_lm.rs --model lm-100m.
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig("lm-tiny", "lm", vocab=256, d_model=64, n_heads=4,
+                    n_layers=2, d_ff=256, seq=64, batch=8),
+        ModelConfig("lm-small", "lm", vocab=512, d_model=192, n_heads=6,
+                    n_layers=4, d_ff=768, seq=128, batch=8),
+        ModelConfig("lm-100m", "lm", vocab=16384, d_model=640, n_heads=10,
+                    n_layers=14, d_ff=2560, seq=256, batch=4),
+        ModelConfig("seq2seq-tiny", "seq2seq", vocab=256, d_model=64,
+                    n_heads=4, n_layers=2, d_ff=256, seq=48, src_seq=48,
+                    batch=8),
+        ModelConfig("seq2seq-small", "seq2seq", vocab=512, d_model=128,
+                    n_heads=8, n_layers=3, d_ff=512, seq=64, src_seq=64,
+                    batch=8),
+        ModelConfig("vit-tiny", "vit", vocab=16, d_model=64, n_heads=4,
+                    n_layers=2, d_ff=256, seq=64, patch_dim=48, batch=8),
+        ModelConfig("vit-small", "vit", vocab=32, d_model=128, n_heads=8,
+                    n_layers=4, d_ff=512, seq=64, patch_dim=48, batch=8),
+    ]
+}
+
+
+# --------------------------------------------------------------------------
+# Init specs — shapes + initializer descriptions consumed by Rust
+# --------------------------------------------------------------------------
+
+def _block_spec(prefix: str, cfg: ModelConfig, cross: bool) -> Dict[str, Tuple]:
+    """Parameter spec for one pre-norm transformer block.
+
+    Returns {name: (shape, init)} where init is ("normal", std) | ("zeros",)
+    | ("ones",).
+    """
+    d, f = cfg.d_model, cfg.d_ff
+    std = 0.02
+    out_std = 0.02 / math.sqrt(2.0 * cfg.n_layers)  # GPT-2 style residual scaling
+    spec = {
+        f"{prefix}/ln1/scale": ((d,), ("ones",)),
+        f"{prefix}/attn/wq": ((d, d), ("normal", std)),
+        f"{prefix}/attn/wk": ((d, d), ("normal", std)),
+        f"{prefix}/attn/wv": ((d, d), ("normal", std)),
+        f"{prefix}/attn/wo": ((d, d), ("normal", out_std)),
+        f"{prefix}/ln2/scale": ((d,), ("ones",)),
+        f"{prefix}/ffn/w1": ((d, f), ("normal", std)),
+        f"{prefix}/ffn/w2": ((f, d), ("normal", out_std)),
+    }
+    if cross:
+        spec.update({
+            f"{prefix}/lnx/scale": ((d,), ("ones",)),
+            f"{prefix}/xattn/wq": ((d, d), ("normal", std)),
+            f"{prefix}/xattn/wk": ((d, d), ("normal", std)),
+            f"{prefix}/xattn/wv": ((d, d), ("normal", std)),
+            f"{prefix}/xattn/wo": ((d, d), ("normal", out_std)),
+        })
+    return spec
+
+
+def init_spec(cfg: ModelConfig) -> Dict[str, Tuple]:
+    """Full parameter spec {name: (shape, init)} for a config.
+
+    The Rust runtime materializes parameters from this spec (same names,
+    sorted order = flat artifact order) using its own seeded RNG.
+    """
+    d = cfg.d_model
+    std = 0.02
+    spec: Dict[str, Tuple] = {}
+    if cfg.family == "lm":
+        spec["embed/tok"] = ((cfg.vocab, d), ("normal", std))
+        spec["embed/pos"] = ((cfg.seq, d), ("normal", std))
+        for i in range(cfg.n_layers):
+            spec.update(_block_spec(f"dec{i:02d}", cfg, cross=False))
+        spec["final_ln/scale"] = ((d,), ("ones",))
+        spec["head/w"] = ((d, cfg.vocab), ("normal", std))
+    elif cfg.family == "seq2seq":
+        spec["embed/tok"] = ((cfg.vocab, d), ("normal", std))
+        spec["embed/pos_src"] = ((cfg.src_seq, d), ("normal", std))
+        spec["embed/pos_tgt"] = ((cfg.seq, d), ("normal", std))
+        for i in range(cfg.n_layers):
+            spec.update(_block_spec(f"enc{i:02d}", cfg, cross=False))
+        for i in range(cfg.n_layers):
+            spec.update(_block_spec(f"dec{i:02d}", cfg, cross=True))
+        spec["enc_ln/scale"] = ((d,), ("ones",))
+        spec["final_ln/scale"] = ((d,), ("ones",))
+        spec["head/w"] = ((d, cfg.vocab), ("normal", std))
+    elif cfg.family == "vit":
+        spec["embed/patch"] = ((cfg.patch_dim, d), ("normal", std))
+        spec["embed/pos"] = ((cfg.seq + 1, d), ("normal", std))  # +1 CLS
+        spec["embed/cls"] = ((1, d), ("normal", std))
+        for i in range(cfg.n_layers):
+            spec.update(_block_spec(f"enc{i:02d}", cfg, cross=False))
+        spec["final_ln/scale"] = ((d,), ("ones",))
+        spec["head/w"] = ((d, cfg.vocab), ("normal", std))
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return spec
+
+
+def param_order(cfg: ModelConfig) -> List[str]:
+    """Canonical flat ordering of parameters (sorted names)."""
+    return sorted(init_spec(cfg).keys())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Reference initializer (tests only — Rust owns runtime init)."""
+    key = jax.random.PRNGKey(seed)
+    spec = init_spec(cfg)
+    params: Params = {}
+    for name in param_order(cfg):
+        shape, init = spec[name]
+        key, sub = jax.random.split(key)
+        if init[0] == "normal":
+            params[name] = init[1] * jax.random.normal(sub, shape, jnp.float32)
+        elif init[0] == "zeros":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif init[0] == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            raise ValueError(init)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Model pieces
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm (pre-norm blocks; OLMo2/T5-style, no bias)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _unheads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _attn(p: Params, prefix: str, x: jnp.ndarray, kv: jnp.ndarray,
+          n_heads: int, causal: bool) -> jnp.ndarray:
+    """One attention sub-block (self if kv is x, cross otherwise)."""
+    q = _heads(x @ p[f"{prefix}/wq"], n_heads)
+    k = _heads(kv @ p[f"{prefix}/wk"], n_heads)
+    v = _heads(kv @ p[f"{prefix}/wv"], n_heads)
+    o = attention(q, k, v, causal=causal)  # Layer-1 Pallas kernel
+    return _unheads(o) @ p[f"{prefix}/wo"]
+
+
+def _ffn(p: Params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ p[f"{prefix}/w1"]) @ p[f"{prefix}/w2"]
+
+
+def _block(p: Params, prefix: str, x: jnp.ndarray, n_heads: int,
+           causal: bool, enc: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Pre-norm transformer block; optional cross-attention on ``enc``."""
+    h = rms_norm(x, p[f"{prefix}/ln1/scale"])
+    x = x + _attn(p, f"{prefix}/attn", h, h, n_heads, causal)
+    if enc is not None:
+        x = x + _attn(p, f"{prefix}/xattn",
+                      rms_norm(x, p[f"{prefix}/lnx/scale"]), enc,
+                      n_heads, causal=False)
+    x = x + _ffn(p, f"{prefix}/ffn", rms_norm(x, p[f"{prefix}/ln2/scale"]))
+    return x
+
+
+def _xent(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean token-level cross-entropy; logits (..., V), targets int (...)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Losses per family
+# --------------------------------------------------------------------------
+
+def lm_loss(p: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            targets: jnp.ndarray) -> jnp.ndarray:
+    """Causal LM loss.  tokens/targets: int32 (B, S)."""
+    x = p["embed/tok"][tokens] + p["embed/pos"][None, :, :]
+    for i in range(cfg.n_layers):
+        x = _block(p, f"dec{i:02d}", x, cfg.n_heads, causal=True)
+    x = rms_norm(x, p["final_ln/scale"])
+    return _xent(x @ p["head/w"], targets)
+
+
+def seq2seq_loss(p: Params, cfg: ModelConfig, src: jnp.ndarray,
+                 tgt_in: jnp.ndarray, tgt_out: jnp.ndarray) -> jnp.ndarray:
+    """Encoder-decoder translation loss (teacher forcing).
+
+    src: int32 (B, S_src); tgt_in/tgt_out: int32 (B, S_tgt).
+    """
+    e = p["embed/tok"][src] + p["embed/pos_src"][None, :, :]
+    for i in range(cfg.n_layers):
+        e = _block(p, f"enc{i:02d}", e, cfg.n_heads, causal=False)
+    e = rms_norm(e, p["enc_ln/scale"])
+    x = p["embed/tok"][tgt_in] + p["embed/pos_tgt"][None, :, :]
+    for i in range(cfg.n_layers):
+        x = _block(p, f"dec{i:02d}", x, cfg.n_heads, causal=True, enc=e)
+    x = rms_norm(x, p["final_ln/scale"])
+    return _xent(x @ p["head/w"], tgt_out)
+
+
+def vit_loss(p: Params, cfg: ModelConfig, patches: jnp.ndarray,
+             labels: jnp.ndarray) -> jnp.ndarray:
+    """ViT classification loss.  patches: f32 (B, P, patch_dim); labels (B,)."""
+    x = patches @ p["embed/patch"]
+    cls = jnp.broadcast_to(p["embed/cls"], (x.shape[0], 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + p["embed/pos"][None, :, :]
+    for i in range(cfg.n_layers):
+        x = _block(p, f"enc{i:02d}", x, cfg.n_heads, causal=False)
+    x = rms_norm(x, p["final_ln/scale"])
+    logits = x[:, 0, :] @ p["head/w"]
+    return _xent(logits, labels)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """(name, shape, dtype) of the batch inputs, in artifact argument order."""
+    b = cfg.batch
+    if cfg.family == "lm":
+        return [("tokens", (b, cfg.seq), "i32"), ("targets", (b, cfg.seq), "i32")]
+    if cfg.family == "seq2seq":
+        return [("src", (b, cfg.src_seq), "i32"),
+                ("tgt_in", (b, cfg.seq), "i32"),
+                ("tgt_out", (b, cfg.seq), "i32")]
+    if cfg.family == "vit":
+        return [("patches", (b, cfg.seq, cfg.patch_dim), "f32"),
+                ("labels", (b,), "i32")]
+    raise ValueError(cfg.family)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Build ``train_step(*flat_params, *batch) -> (loss, *flat_grads)``.
+
+    Flat positional signature (manifest order) so the Rust runtime can
+    marshal plain literals without pytree knowledge.
+    """
+    order = param_order(cfg)
+    loss_fn = {"lm": lm_loss, "seq2seq": seq2seq_loss, "vit": vit_loss}[cfg.family]
+    n_params = len(order)
+
+    def train_step(*args):
+        params = dict(zip(order, args[:n_params]))
+        batch = args[n_params:]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, *batch)
+        )(params)
+        return (loss,) + tuple(grads[name] for name in order)
+
+    return train_step
+
+
+def make_loss_fn(cfg: ModelConfig):
+    """Build ``eval_step(*flat_params, *batch) -> (loss,)`` (validation)."""
+    order = param_order(cfg)
+    loss_fn = {"lm": lm_loss, "seq2seq": seq2seq_loss, "vit": vit_loss}[cfg.family]
+    n_params = len(order)
+
+    def eval_step(*args):
+        params = dict(zip(order, args[:n_params]))
+        return (loss_fn(params, cfg, *args[n_params:]),)
+
+    return eval_step
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs for jax.jit(...).lower(...)."""
+    spec = init_spec(cfg)
+    args = [jax.ShapeDtypeStruct(spec[n][0], jnp.float32) for n in param_order(cfg)]
+    for _, shape, dt in batch_spec(cfg):
+        args.append(jax.ShapeDtypeStruct(shape, jnp.int32 if dt == "i32" else jnp.float32))
+    return args
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s[0]))) for s in init_spec(cfg).values())

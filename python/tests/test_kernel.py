@@ -1,0 +1,237 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer: hypothesis
+sweeps shapes/chunk/k/sign and asserts allclose between the Pallas
+kernels (interpret=True, the exact code AOT-lowered into the artifacts)
+and the ref.py oracles.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn
+from compile.kernels import dct_topk, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def randn(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# DCT basis identities
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128, 256])
+def test_dct_basis_orthonormal(n):
+    b = np.asarray(ref.dct_basis(n))
+    np.testing.assert_allclose(b @ b.T, np.eye(n), atol=2e-5)
+
+
+def test_dct_basis_pinned_values():
+    """Pin a few entries to guard the normalization convention (the same
+    constants are pinned in rust/src/dct tests — drift on either side is a
+    cross-language mismatch)."""
+    b = np.asarray(ref.dct_basis(4))
+    assert abs(b[0, 0] - 0.5) < 1e-6                       # sqrt(1/4)
+    assert abs(b[1, 0] - math.sqrt(0.5) * math.cos(math.pi / 8)) < 1e-6
+    assert abs(b[3, 3] - math.sqrt(0.5) * math.cos(7 * 3 * math.pi / 8)) < 1e-6
+
+
+def test_dct_constant_signal_concentrates_in_dc():
+    x = jnp.ones(64)
+    c = ref.dct2_ref(x, ref.dct_basis(64))
+    assert abs(float(c[0]) - 8.0) < 1e-4      # sqrt(64) * 1
+    assert float(jnp.max(jnp.abs(c[1:]))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Pallas chunked DCT vs oracle  (hypothesis sweep: shapes / chunks / blocks)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_chunks=st.integers(min_value=1, max_value=300),
+    chunk_pow=st.integers(min_value=2, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_pallas_dct2_matches_ref(n_chunks, chunk_pow, seed):
+    chunk = 2 ** chunk_pow
+    rng = np.random.default_rng(seed)
+    x = randn(rng, (n_chunks * chunk,))
+    got = dct_topk.chunked_dct2(x, chunk)
+    want = ref.chunked_dct2_ref(x, chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_chunks=st.integers(min_value=1, max_value=300),
+    chunk_pow=st.integers(min_value=2, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_pallas_dct_roundtrip(n_chunks, chunk_pow, seed):
+    chunk = 2 ** chunk_pow
+    rng = np.random.default_rng(seed)
+    x = randn(rng, (n_chunks * chunk,))
+    c = dct_topk.chunked_dct2(x, chunk)
+    back = dct_topk.chunked_dct3(c, chunk)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block", [8, 64, 128, 256])
+def test_pallas_dct_block_size_invariance(block):
+    """The BlockSpec tiling must not change the math."""
+    rng = np.random.default_rng(7)
+    x = randn(rng, (4096,))
+    base = ref.chunked_dct2_ref(x, 64)
+    got = dct_topk.chunked_dct2(x, 64, block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Extraction (DCT + topk + sign) vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_chunks=st.integers(min_value=1, max_value=64),
+    chunk_pow=st.integers(min_value=3, max_value=7),
+    k_pow=st.integers(min_value=0, max_value=5),
+    sign=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_pallas_extract_matches_ref(n_chunks, chunk_pow, k_pow, sign, seed):
+    chunk = 2 ** chunk_pow
+    k = min(2 ** k_pow, chunk)
+    rng = np.random.default_rng(seed)
+    m = randn(rng, (n_chunks * chunk,))
+    q, m_next = dct_topk.extract_fast_components(m, chunk, k, sign)
+    q_ref, m_ref, _ = ref.extract_fast_components_ref(m, chunk, k, sign)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m_next), np.asarray(m_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_extract_residual_energy_decreases():
+    """Removing the top-k components must strictly shrink momentum energy."""
+    rng = np.random.default_rng(3)
+    m = randn(rng, (64 * 32,))
+    _, m_next = dct_topk.extract_fast_components(m, 32, 4, True)
+    assert float(jnp.sum(m_next**2)) < float(jnp.sum(m**2))
+
+
+def test_extract_k_full_removes_everything():
+    """k == chunk keeps all coefficients → residual is ~0."""
+    rng = np.random.default_rng(4)
+    m = randn(rng, (16 * 32,))
+    _, m_next = dct_topk.extract_fast_components(m, 32, 32, False)
+    np.testing.assert_allclose(np.asarray(m_next), 0.0, atol=1e-4)
+
+
+def test_extract_transmit_is_ternary_decode_when_signed():
+    """With sign=True the transmitted coefficients are in {-1,0,1}: check by
+    re-encoding q and verifying every nonzero coefficient is ±1."""
+    rng = np.random.default_rng(5)
+    m = randn(rng, (8 * 64,))
+    q, _ = dct_topk.extract_fast_components(m, 64, 8, True)
+    c = np.asarray(ref.chunked_dct2_ref(q, 64))
+    nz = c[np.abs(c) > 1e-4]
+    np.testing.assert_allclose(np.abs(nz), 1.0, atol=1e-4)
+    assert (np.abs(c) > 1e-4).sum() == 8 * 8  # exactly k per chunk
+
+
+# ---------------------------------------------------------------------------
+# Pallas attention vs oracle (fwd + custom-VJP bwd)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=3),
+    h=st.integers(min_value=1, max_value=4),
+    s=st.integers(min_value=1, max_value=48),
+    d=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_pallas_attention_fwd_matches_ref(b, h, s, d, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (randn(rng, (b, h, s, d)) for _ in range(3))
+    got = attn.attention(q, k, v, causal=causal)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_attention_cross_shape():
+    """Cross-attention S != T (decoder querying encoder)."""
+    rng = np.random.default_rng(11)
+    q = randn(rng, (2, 4, 24, 16))
+    k = randn(rng, (2, 4, 40, 16))
+    v = randn(rng, (2, 4, 40, 16))
+    got = attn.attention(q, k, v, causal=False)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_attention_causal_requires_square():
+    rng = np.random.default_rng(12)
+    with pytest.raises(ValueError):
+        attn.attention(randn(rng, (1, 1, 8, 4)), randn(rng, (1, 1, 9, 4)),
+                       randn(rng, (1, 1, 9, 4)), causal=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(min_value=2, max_value=24),
+    d=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_pallas_attention_bwd_matches_ref(s, d, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (randn(rng, (1, 2, s, d)) for _ in range(3))
+
+    def f_pallas(q, k, v):
+        return jnp.sum(jnp.tanh(attn.attention(q, k, v, causal=causal)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.tanh(ref.attention_ref(q, k, v, causal=causal)))
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_attention_causal_ignores_future():
+    """Perturbing future keys/values must not change earlier outputs."""
+    rng = np.random.default_rng(13)
+    q, k, v = (randn(rng, (1, 1, 16, 8)) for _ in range(3))
+    base = np.asarray(attn.attention(q, k, v, causal=True))
+    k2 = k.at[0, 0, 10:].set(99.0)
+    v2 = v.at[0, 0, 10:].set(-99.0)
+    pert = np.asarray(attn.attention(q, k2, v2, causal=True))
+    np.testing.assert_allclose(base[0, 0, :10], pert[0, 0, :10],
+                               rtol=1e-5, atol=1e-5)
+    assert np.abs(base[0, 0, 10:] - pert[0, 0, 10:]).max() > 1e-3
+
+
+def test_attention_softmax_rows_sum_to_one():
+    """Uniform V ⇒ output equals V row regardless of scores."""
+    rng = np.random.default_rng(14)
+    q, k = randn(rng, (1, 1, 8, 4)), randn(rng, (1, 1, 8, 4))
+    v = jnp.ones((1, 1, 8, 4))
+    out = np.asarray(attn.attention(q, k, v, causal=False))
+    np.testing.assert_allclose(out, 1.0, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,145 @@
+"""L2 correctness: model graphs — shapes, grads, loss behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def make_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = []
+    for _, shape, dt in model.batch_spec(cfg):
+        if dt == "i32":
+            batch.append(jnp.asarray(
+                rng.integers(0, cfg.vocab, size=shape, dtype=np.int32)))
+        else:
+            batch.append(jnp.asarray(rng.normal(size=shape).astype(np.float32)))
+    return batch
+
+
+TINY = ["lm-tiny", "seq2seq-tiny", "vit-tiny"]
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_train_step_shapes(name):
+    cfg = model.CONFIGS[name]
+    p = model.init_params(cfg, 0)
+    order = model.param_order(cfg)
+    out = model.make_train_step(cfg)(*[p[n] for n in order], *make_batch(cfg))
+    assert out[0].shape == ()
+    assert len(out) == 1 + len(order)
+    spec = model.init_spec(cfg)
+    for name_, g in zip(order, out[1:]):
+        assert g.shape == spec[name_][0], name_
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_grads_finite_nonzero(name):
+    cfg = model.CONFIGS[name]
+    p = model.init_params(cfg, 1)
+    order = model.param_order(cfg)
+    out = model.make_train_step(cfg)(*[p[n] for n in order], *make_batch(cfg, 1))
+    assert np.isfinite(float(out[0]))
+    total = 0.0
+    for g in out[1:]:
+        arr = np.asarray(g)
+        assert np.isfinite(arr).all()
+        total += float(np.abs(arr).sum())
+    assert total > 0.0
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_initial_loss_near_uniform(name):
+    """At init, the classifier should be near ln(vocab) (uniform predictions)."""
+    cfg = model.CONFIGS[name]
+    p = model.init_params(cfg, 2)
+    order = model.param_order(cfg)
+    out = model.make_loss_fn(cfg)(*[p[n] for n in order], *make_batch(cfg, 2))
+    expected = np.log(cfg.vocab)
+    assert abs(float(out[0]) - expected) < 0.35 * expected
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_eval_matches_train_loss(name):
+    cfg = model.CONFIGS[name]
+    p = model.init_params(cfg, 3)
+    order = model.param_order(cfg)
+    args = [p[n] for n in order] + make_batch(cfg, 3)
+    l_train = float(model.make_train_step(cfg)(*args)[0])
+    l_eval = float(model.make_loss_fn(cfg)(*args)[0])
+    assert abs(l_train - l_eval) < 1e-5
+
+
+def test_sgd_steps_reduce_loss_lm():
+    """A few SGD steps on a fixed batch must reduce the loss (the graph is
+    actually trainable end-to-end through the Pallas attention VJP)."""
+    cfg = model.CONFIGS["lm-tiny"]
+    p = model.init_params(cfg, 4)
+    order = model.param_order(cfg)
+    batch = make_batch(cfg, 4)
+    step = jax.jit(model.make_train_step(cfg))
+    flat = [p[n] for n in order]
+    first = None
+    for _ in range(5):
+        out = step(*flat, *batch)
+        loss = float(out[0])
+        if first is None:
+            first = loss
+        flat = [w - 0.5 * g for w, g in zip(flat, out[1:])]
+    assert loss < first - 0.05, (first, loss)
+
+
+def test_param_order_is_sorted_and_stable():
+    for name in TINY:
+        cfg = model.CONFIGS[name]
+        order = model.param_order(cfg)
+        assert order == sorted(order)
+        assert order == model.param_order(cfg)
+
+
+def test_param_counts_match_spec():
+    for name, cfg in model.CONFIGS.items():
+        spec = model.init_spec(cfg)
+        n = sum(int(np.prod(s[0])) for s in spec.values())
+        assert n == model.param_count(cfg), name
+
+
+def test_lm_100m_is_about_100m():
+    assert 80e6 < model.param_count(model.CONFIGS["lm-100m"]) < 130e6
+
+
+def test_seq2seq_decoder_sees_encoder():
+    """Cross-attention must actually wire encoder → decoder: changing the
+    source sequence changes the loss."""
+    cfg = model.CONFIGS["seq2seq-tiny"]
+    p = model.init_params(cfg, 5)
+    order = model.param_order(cfg)
+    src, tgt_in, tgt_out = make_batch(cfg, 5)
+    f = model.make_loss_fn(cfg)
+    l1 = float(f(*[p[n] for n in order], src, tgt_in, tgt_out)[0])
+    src2 = (src + 7) % cfg.vocab
+    l2 = float(f(*[p[n] for n in order], src2, tgt_in, tgt_out)[0])
+    assert abs(l1 - l2) > 1e-6
+
+
+def test_causal_lm_ignores_future_tokens():
+    """Loss on position i must not depend on tokens > i: compare grads of
+    per-position loss — cheap proxy: perturbing the last input token must not
+    change logits at earlier positions. Exercised via loss on prefix."""
+    cfg = model.CONFIGS["lm-tiny"]
+    p = model.init_params(cfg, 6)
+    tokens = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    tok2 = tokens.at[:, -1].set(5)
+
+    def logits(tok):
+        x = p["embed/tok"][tok] + p["embed/pos"][None, :, :]
+        for i in range(cfg.n_layers):
+            x = model._block(p, f"dec{i:02d}", x, cfg.n_heads, causal=True)
+        x = model.rms_norm(x, p["final_ln/scale"])
+        return x @ p["head/w"]
+
+    a = np.asarray(logits(tokens))[:, :-1]
+    b = np.asarray(logits(tok2))[:, :-1]
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,56 @@
+//! Collectives micro-bench: real data movement + cost model, across group
+//! sizes and buffer sizes (perf deliverable: coordinator off the critical
+//! path relative to artifact execution).
+//!
+//!     cargo bench --bench collectives
+
+use detonation::collectives::{naive_all_gather_bytes, ring_all_gather, ring_reduce_scatter_avg, CollCtx};
+use detonation::net::{NetModel, Topology, TrafficMatrix};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
+    for _ in 0..2 {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_secs_f64() < 0.4 {
+        f();
+        iters += 1;
+    }
+    let us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+    println!("{name:<44} {us:>10.1} µs/op");
+    us
+}
+
+fn main() {
+    let model = NetModel::hpc();
+    for (g, n) in [(2usize, 1 << 18), (4, 1 << 18), (8, 1 << 18), (4, 1 << 22)] {
+        let topo = Topology::new(1, g);
+        let traffic = TrafficMatrix::new(1);
+        let ctx = CollCtx {
+            topo: &topo,
+            model: &model,
+            traffic: &traffic,
+        };
+        let group: Vec<usize> = (0..g).collect();
+        let shards: Vec<(usize, usize)> = (0..g).map(|i| (i * n / g, (i + 1) * n / g)).collect();
+        let mut bufs: Vec<Vec<f32>> = (0..g).map(|i| vec![i as f32; n]).collect();
+        bench(
+            &format!("ring_reduce_scatter g={g} n={}K", n >> 10),
+            || {
+                let mut refs: Vec<&mut [f32]> =
+                    bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                ring_reduce_scatter_avg(&ctx, &group, &mut refs, &shards);
+            },
+        );
+        bench(&format!("ring_all_gather    g={g} n={}K", n >> 10), || {
+            let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            ring_all_gather(&ctx, &group, &mut refs, &shards);
+        });
+        let payloads: Vec<(Vec<u8>, u64)> = (0..g).map(|_| (vec![0u8; n / 8], (n / 8) as u64)).collect();
+        bench(&format!("naive_all_gather   g={g} b={}K", n >> 13), || {
+            std::hint::black_box(naive_all_gather_bytes(&ctx, &group, &payloads));
+        });
+    }
+}

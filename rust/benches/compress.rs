@@ -1,0 +1,59 @@
+//! Compression micro-bench: sign/ternary packing, dtype casts, top-k
+//! selection (perf deliverable; target ≥ 4 GB/s sign-pack).
+//!
+//!     cargo bench --bench compress
+
+use detonation::compress::{pack_ternary, unpack_ternary};
+use detonation::tensor::{f32_to_bf16, f32_to_f16};
+use detonation::topk::topk_per_chunk;
+use detonation::util::rng::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, bytes_per_iter: u64, mut f: F) {
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_secs_f64() < 0.5 {
+        f();
+        iters += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:<32} {:>10.1} µs/iter {:>8.2} GB/s",
+        dt / iters as f64 * 1e6,
+        (bytes_per_iter * iters) as f64 / dt / 1e9
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let n = 1 << 20;
+    let vals: Vec<f32> = (0..n)
+        .map(|_| *[-1.0f32, 0.0, 1.0].get(rng.range(0, 3)).unwrap())
+        .collect();
+    let dense: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+    let bytes = (n * 4) as u64;
+
+    let packed = pack_ternary(&vals);
+    bench("pack_ternary", bytes, || {
+        std::hint::black_box(pack_ternary(&vals));
+    });
+    bench("unpack_ternary", bytes, || {
+        std::hint::black_box(unpack_ternary(&packed, n));
+    });
+    bench("f32->bf16 cast", bytes, || {
+        let v: Vec<u16> = dense.iter().map(|&x| f32_to_bf16(x)).collect();
+        std::hint::black_box(v);
+    });
+    bench("f32->f16 cast", bytes, || {
+        let v: Vec<u16> = dense.iter().map(|&x| f32_to_f16(x)).collect();
+        std::hint::black_box(v);
+    });
+    for (chunk, k) in [(64usize, 8usize), (256, 8), (64, 32)] {
+        bench(&format!("topk_per_chunk c{chunk} k{k}"), bytes, || {
+            std::hint::black_box(topk_per_chunk(&dense, chunk, k));
+        });
+    }
+}

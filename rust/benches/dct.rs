@@ -1,0 +1,62 @@
+//! DCT micro-bench: encode/decode throughput across chunk sizes — the L3
+//! extraction hot path (perf deliverable; target ≥ 1 GB/s/core encode).
+//!
+//!     cargo bench --bench dct
+
+use detonation::dct::Dct;
+use detonation::util::rng::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, bytes_per_iter: u64, mut f: F) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_secs_f64() < 0.5 {
+        f();
+        iters += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let gbps = (bytes_per_iter * iters) as f64 / dt / 1e9;
+    println!(
+        "{name:<32} {:>10.1} µs/iter {:>8.2} GB/s",
+        dt / iters as f64 * 1e6,
+        gbps
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let n = 1 << 20; // 1M elements = 4 MiB
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+    let mut out = vec![0.0f32; n];
+    println!("chunked DCT over {} MiB buffer:", n * 4 / (1 << 20));
+
+    for chunk in [16usize, 32, 64, 128, 256] {
+        let d = Dct::plan(chunk);
+        bench(&format!("dct2 chunk={chunk}"), (n * 4) as u64, || {
+            d.forward_chunked(&x, &mut out);
+        });
+    }
+    for chunk in [64usize, 256] {
+        let d = Dct::plan(chunk);
+        // dense inverse
+        let c = out.clone();
+        let mut back = vec![0.0f32; n];
+        bench(&format!("dct3 dense chunk={chunk}"), (n * 4) as u64, || {
+            d.inverse_chunked(&c, &mut back);
+        });
+        // sparse inverse (k=chunk/8 nonzero) — the real decode workload
+        let mut sparse = vec![0.0f32; n];
+        for ch in 0..n / chunk {
+            for k in 0..chunk / 8 {
+                sparse[ch * chunk + k * 7 % chunk] = 1.0;
+            }
+        }
+        bench(&format!("dct3 sparse chunk={chunk}"), (n * 4) as u64, || {
+            d.inverse_chunked(&sparse, &mut back);
+        });
+    }
+}

@@ -1,0 +1,50 @@
+//! Runtime micro-bench: artifact execution latency (fwd+bwd) and the cost
+//! of literal marshalling — the L3-vs-L2 boundary. Target: marshalling
+//! ≤ 30% of exec time for tiny models, ≤ 5% for small+.
+//!
+//!     cargo bench --bench runtime
+
+use detonation::data::task_for;
+use detonation::runtime::Runtime;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    detonation::util::logging::init();
+    let rt = Runtime::cpu()?;
+    let dir = std::path::PathBuf::from("artifacts");
+    for name in ["lm-tiny", "lm-small", "seq2seq-tiny", "vit-tiny"] {
+        if !dir.join(format!("{name}.meta.json")).exists() {
+            println!("{name:<16} skipped (artifact missing — run `make artifacts`)");
+            continue;
+        }
+        let model = rt.load_model(&dir, name)?;
+        let params = model.manifest.init_flat(1);
+        let task = task_for(&model.manifest, 1);
+        let batch = task.train_batch(0, 0);
+
+        // warmup
+        model.train_step(&params, &batch)?;
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        while t0.elapsed().as_secs_f64() < 2.0 {
+            std::hint::black_box(model.train_step(&params, &batch)?);
+            iters += 1;
+        }
+        let step_ms = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+
+        let t0 = Instant::now();
+        let mut eiters = 0u64;
+        while t0.elapsed().as_secs_f64() < 1.0 {
+            std::hint::black_box(model.eval_step(&params, &batch)?);
+            eiters += 1;
+        }
+        let eval_ms = t0.elapsed().as_secs_f64() / eiters as f64 * 1e3;
+
+        let flops = model.manifest.step_flops();
+        println!(
+            "{name:<16} train {step_ms:>8.2} ms/step  eval {eval_ms:>7.2} ms  ~{:.1} GFLOP/s",
+            flops / (step_ms / 1e3) / 1e9
+        );
+    }
+    Ok(())
+}

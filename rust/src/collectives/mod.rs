@@ -1,0 +1,411 @@
+//! Collective communication over the simulated cluster.
+//!
+//! Real data movement (numerics are exact — divergence across ranks is the
+//! phenomenon under study) + α–β cost accounting per algorithm
+//! (DESIGN.md §2). Two algorithm families, matching what the paper's stack
+//! uses:
+//!
+//! * **Ring** reduce-scatter / all-gather / all-reduce — what
+//!   FSDP/NCCL/RCCL use. Per-rank wire volume `(g-1)/g · N`, i.e. nearly
+//!   size-independent of group size — these *scale*.
+//! * **Naive (blocking) all-gather** of opaque payloads — what DeMo's
+//!   replication uses (`dist.all_gather` of compressed components). Every
+//!   rank sends its payload to every other: received volume `(g-1)·B`
+//!   grows linearly with the group — the paper's Fig 6 "DeMo does not
+//!   scale" mechanism falls straight out of this cost model.
+//!
+//! All functions return the elapsed `SimTime` for the op; the caller
+//! advances the shared clock (groups that run in parallel advance by the
+//! max across groups).
+
+use crate::net::{LinkClass, NetModel, SimTime, Topology, TrafficMatrix};
+
+/// Context threaded through every collective call.
+pub struct CollCtx<'a> {
+    pub topo: &'a Topology,
+    pub model: &'a NetModel,
+    pub traffic: &'a TrafficMatrix,
+}
+
+impl<'a> CollCtx<'a> {
+    /// Record `bytes` flowing rank→rank and return nothing; time is
+    /// accounted by the calling algorithm.
+    fn record(&self, src: usize, dst: usize, bytes: u64) {
+        self.traffic
+            .record(self.topo.node_of(src), self.topo.node_of(dst), bytes);
+    }
+
+    fn class(&self, group: &[usize]) -> LinkClass {
+        self.topo.group_link_class(group)
+    }
+}
+
+/// Ring all-reduce (average) over `bufs[i]` belonging to `group[i]`.
+/// Every buffer ends up holding the element-wise mean.
+pub fn ring_all_reduce_avg(
+    ctx: &CollCtx,
+    group: &[usize],
+    bufs: &mut [&mut [f32]],
+) -> SimTime {
+    assert_eq!(group.len(), bufs.len());
+    let g = group.len();
+    if g <= 1 {
+        return 0.0;
+    }
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n));
+
+    // Semantics: mean into every buffer.
+    let mut acc = vec![0.0f32; n];
+    for b in bufs.iter() {
+        crate::tensor::axpy(&mut acc, 1.0, b);
+    }
+    let inv = 1.0 / g as f32;
+    for x in acc.iter_mut() {
+        *x *= inv;
+    }
+    for b in bufs.iter_mut() {
+        b.copy_from_slice(&acc);
+    }
+
+    // Cost: ring all-reduce = reduce-scatter + all-gather, each (g-1)
+    // steps of N/g elements; record ring-neighbor traffic.
+    let chunk_bytes = (n * 4 / g) as u64;
+    for step in 0..2 * (g - 1) {
+        let _ = step;
+        for i in 0..g {
+            ctx.record(group[i], group[(i + 1) % g], chunk_bytes);
+        }
+    }
+    let class = ctx.class(group);
+    2.0 * (g as f64 - 1.0) * ctx.model.xfer_time(class, chunk_bytes)
+}
+
+/// Ring reduce-scatter (average): after the call, `bufs[i]` holds the mean
+/// in its own shard range `[shards[i].0, shards[i].1)`; other regions are
+/// left untouched (FSDP only guarantees the owned shard).
+pub fn ring_reduce_scatter_avg(
+    ctx: &CollCtx,
+    group: &[usize],
+    bufs: &mut [&mut [f32]],
+    shards: &[(usize, usize)],
+) -> SimTime {
+    assert_eq!(group.len(), bufs.len());
+    assert_eq!(group.len(), shards.len());
+    let g = group.len();
+    if g <= 1 {
+        return 0.0;
+    }
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n));
+
+    // Mean of each shard region into its owner.
+    let inv = 1.0 / g as f32;
+    for (i, &(lo, hi)) in shards.iter().enumerate() {
+        let mut acc = vec![0.0f32; hi - lo];
+        for b in bufs.iter() {
+            crate::tensor::axpy(&mut acc, 1.0, &b[lo..hi]);
+        }
+        for x in acc.iter_mut() {
+            *x *= inv;
+        }
+        bufs[i][lo..hi].copy_from_slice(&acc);
+    }
+
+    let max_shard_bytes = shards.iter().map(|&(lo, hi)| (hi - lo) * 4).max().unwrap() as u64;
+    for i in 0..g {
+        for _ in 0..g - 1 {
+            ctx.record(group[i], group[(i + 1) % g], max_shard_bytes);
+        }
+    }
+    let class = ctx.class(group);
+    (g as f64 - 1.0) * ctx.model.xfer_time(class, max_shard_bytes)
+}
+
+/// Ring all-gather: rank i contributes `bufs[i][shards[i]]`; afterwards
+/// every buffer holds every shard (i.e. the full vector).
+pub fn ring_all_gather(
+    ctx: &CollCtx,
+    group: &[usize],
+    bufs: &mut [&mut [f32]],
+    shards: &[(usize, usize)],
+) -> SimTime {
+    assert_eq!(group.len(), bufs.len());
+    let g = group.len();
+    if g <= 1 {
+        return 0.0;
+    }
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n));
+
+    // Collect every shard from its owner, then write into all buffers.
+    let mut owned: Vec<Vec<f32>> = Vec::with_capacity(g);
+    for (i, &(lo, hi)) in shards.iter().enumerate() {
+        owned.push(bufs[i][lo..hi].to_vec());
+    }
+    for b in bufs.iter_mut() {
+        for (&(lo, hi), shard) in shards.iter().zip(&owned) {
+            b[lo..hi].copy_from_slice(shard);
+        }
+    }
+
+    let max_shard_bytes = shards.iter().map(|&(lo, hi)| (hi - lo) * 4).max().unwrap() as u64;
+    for i in 0..g {
+        for _ in 0..g - 1 {
+            ctx.record(group[i], group[(i + 1) % g], max_shard_bytes);
+        }
+    }
+    let class = ctx.class(group);
+    (g as f64 - 1.0) * ctx.model.xfer_time(class, max_shard_bytes)
+}
+
+/// Naive blocking all-gather of opaque payloads (DeMo's replication
+/// primitive). Returns (gathered payloads in group order, elapsed time).
+/// Received volume per rank is `Σ_{j≠i} bytes_j` — linear in group size.
+pub fn naive_all_gather_bytes<T: Clone>(
+    ctx: &CollCtx,
+    group: &[usize],
+    payloads: &[(T, u64)],
+) -> (Vec<T>, SimTime) {
+    assert_eq!(group.len(), payloads.len());
+    let g = group.len();
+    let gathered: Vec<T> = payloads.iter().map(|(p, _)| p.clone()).collect();
+    if g <= 1 {
+        return (gathered, 0.0);
+    }
+    let class = ctx.class(group);
+    let mut worst: SimTime = 0.0;
+    for (i, &(_, bytes_i)) in payloads.iter().enumerate() {
+        // rank i sends its payload to every peer (blocking, serialized on
+        // its NIC — the paper's non-scaling mechanism).
+        let mut t_send: SimTime = 0.0;
+        for (j, _) in group.iter().enumerate() {
+            if i != j {
+                ctx.record(group[i], group[j], bytes_i);
+                t_send += ctx.model.xfer_time(class, bytes_i);
+            }
+        }
+        worst = worst.max(t_send);
+    }
+    (gathered, worst)
+}
+
+/// Broadcast `src_buf` (group index `src`) into every buffer (tree cost).
+pub fn broadcast(
+    ctx: &CollCtx,
+    group: &[usize],
+    bufs: &mut [&mut [f32]],
+    src: usize,
+) -> SimTime {
+    let g = group.len();
+    assert!(src < g);
+    if g <= 1 {
+        return 0.0;
+    }
+    let n = bufs[src].len();
+    let data = bufs[src].to_vec();
+    for (i, b) in bufs.iter_mut().enumerate() {
+        if i != src {
+            b.copy_from_slice(&data);
+        }
+    }
+    let bytes = (n * 4) as u64;
+    for (j, _) in group.iter().enumerate() {
+        if j != src {
+            ctx.record(group[src], group[j], bytes);
+        }
+    }
+    let class = ctx.class(group);
+    let rounds = (g as f64).log2().ceil();
+    rounds * ctx.model.xfer_time(class, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetModel, Topology, TrafficMatrix};
+    use crate::util::proptest::{approx_slice_eq, prop_assert, proptest};
+
+    fn ctx<'a>(
+        topo: &'a Topology,
+        model: &'a NetModel,
+        traffic: &'a TrafficMatrix,
+    ) -> CollCtx<'a> {
+        CollCtx {
+            topo,
+            model,
+            traffic,
+        }
+    }
+
+    fn even_shards(n: usize, g: usize) -> Vec<(usize, usize)> {
+        (0..g).map(|i| (i * n / g, (i + 1) * n / g)).collect()
+    }
+
+    #[test]
+    fn all_reduce_averages() {
+        let topo = Topology::new(2, 2);
+        let model = NetModel::hpc();
+        let traffic = TrafficMatrix::new(2);
+        let c = ctx(&topo, &model, &traffic);
+        let mut a = vec![1.0f32, 2.0];
+        let mut b = vec![3.0f32, 6.0];
+        let t = ring_all_reduce_avg(&c, &[0, 1], &mut [&mut a, &mut b]);
+        assert_eq!(a, vec![2.0, 4.0]);
+        assert_eq!(b, vec![2.0, 4.0]);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn reduce_scatter_then_all_gather_equals_all_reduce() {
+        proptest(24, |g| {
+            let gsz = g.usize(2, 6);
+            let n = gsz * g.usize(1, 40);
+            let topo = Topology::new(1, gsz);
+            let model = NetModel::hpc();
+            let traffic = TrafficMatrix::new(1);
+            let c = ctx(&topo, &model, &traffic);
+            let group: Vec<usize> = (0..gsz).collect();
+            let shards = even_shards(n, gsz);
+
+            let orig: Vec<Vec<f32>> = (0..gsz).map(|_| g.vec_normal(n, 1.0)).collect();
+
+            // Path A: all-reduce
+            let mut a: Vec<Vec<f32>> = orig.clone();
+            {
+                let mut refs: Vec<&mut [f32]> = a.iter_mut().map(|v| v.as_mut_slice()).collect();
+                ring_all_reduce_avg(&c, &group, &mut refs);
+            }
+
+            // Path B: reduce-scatter + all-gather
+            let mut b: Vec<Vec<f32>> = orig.clone();
+            {
+                let mut refs: Vec<&mut [f32]> = b.iter_mut().map(|v| v.as_mut_slice()).collect();
+                ring_reduce_scatter_avg(&c, &group, &mut refs, &shards);
+                let mut refs: Vec<&mut [f32]> = b.iter_mut().map(|v| v.as_mut_slice()).collect();
+                ring_all_gather(&c, &group, &mut refs, &shards);
+            }
+
+            for i in 0..gsz {
+                prop_assert(
+                    approx_slice_eq(&a[i], &b[i], 1e-5),
+                    format!("rank {i} mismatch"),
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn reduce_scatter_only_touches_own_shard() {
+        let topo = Topology::new(1, 2);
+        let model = NetModel::hpc();
+        let traffic = TrafficMatrix::new(1);
+        let c = ctx(&topo, &model, &traffic);
+        let mut a = vec![1.0f32, 1.0, 5.0, 5.0];
+        let mut b = vec![3.0f32, 3.0, 7.0, 7.0];
+        ring_reduce_scatter_avg(&c, &[0, 1], &mut [&mut a, &mut b], &[(0, 2), (2, 4)]);
+        assert_eq!(a, vec![2.0, 2.0, 5.0, 5.0]); // own shard averaged
+        assert_eq!(b, vec![3.0, 3.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn all_gather_distributes_all_shards() {
+        let topo = Topology::new(1, 2);
+        let model = NetModel::hpc();
+        let traffic = TrafficMatrix::new(1);
+        let c = ctx(&topo, &model, &traffic);
+        let mut a = vec![1.0f32, 2.0, 0.0, 0.0];
+        let mut b = vec![0.0f32, 0.0, 3.0, 4.0];
+        ring_all_gather(&c, &[0, 1], &mut [&mut a, &mut b], &[(0, 2), (2, 4)]);
+        assert_eq!(a, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn naive_gather_time_scales_linearly_with_group() {
+        // The Fig 6 mechanism: time(g) grows ~linearly for fixed payload.
+        let model = NetModel::hpc();
+        let payload_bytes = 1_000_000u64;
+        let mut times = Vec::new();
+        for nodes in [2usize, 8, 32] {
+            let topo = Topology::new(nodes, 1);
+            let traffic = TrafficMatrix::new(nodes);
+            let c = ctx(&topo, &model, &traffic);
+            let group: Vec<usize> = (0..nodes).collect();
+            let payloads: Vec<((), u64)> = group.iter().map(|_| ((), payload_bytes)).collect();
+            let (_, t) = naive_all_gather_bytes(&c, &group, &payloads);
+            times.push(t);
+        }
+        let r1 = times[1] / times[0]; // 8 vs 2 nodes → ~7/1
+        let r2 = times[2] / times[1]; // 32 vs 8 nodes → ~31/7
+        assert!((r1 - 7.0).abs() < 0.2, "{r1}");
+        assert!((r2 - 31.0 / 7.0).abs() < 0.2, "{r2}");
+    }
+
+    #[test]
+    fn ring_all_reduce_time_nearly_constant_in_group() {
+        // Ring scales: in the bandwidth-dominated regime the wire time
+        // 2(g-1)/g·N/bw approaches 2N/bw — nearly group-size independent
+        // (contrast with naive_gather_time_scales_linearly_with_group).
+        let model = NetModel::hpc();
+        let n = 4_000_000usize; // 16 MiB/rank: bandwidth term dominates α
+        let t_at = |nodes: usize| {
+            let topo = Topology::new(nodes, 1);
+            let traffic = TrafficMatrix::new(nodes);
+            let c = ctx(&topo, &model, &traffic);
+            let group: Vec<usize> = (0..nodes).collect();
+            let mut bufs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0; n]).collect();
+            let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            ring_all_reduce_avg(&c, &group, &mut refs)
+        };
+        let t2 = t_at(2);
+        let t8 = t_at(8);
+        assert!(t8 / t2 < 2.5, "ring should not blow up: {t2} vs {t8}");
+    }
+
+    #[test]
+    fn traffic_matrix_sees_inter_node_bytes() {
+        let topo = Topology::new(2, 1);
+        let model = NetModel::hpc();
+        let traffic = TrafficMatrix::new(2);
+        let c = ctx(&topo, &model, &traffic);
+        let mut a = vec![0.0f32; 64];
+        let mut b = vec![2.0f32; 64];
+        ring_all_reduce_avg(&c, &[0, 1], &mut [&mut a, &mut b]);
+        assert!(traffic.inter_node_bytes() > 0);
+        assert_eq!(traffic.intra_node_bytes(), 0);
+    }
+
+    #[test]
+    fn broadcast_copies_and_costs() {
+        let topo = Topology::new(1, 4);
+        let model = NetModel::hpc();
+        let traffic = TrafficMatrix::new(1);
+        let c = ctx(&topo, &model, &traffic);
+        let mut bufs: Vec<Vec<f32>> = vec![vec![0.0; 8]; 4];
+        bufs[2] = vec![7.0; 8];
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let t = broadcast(&c, &[0, 1, 2, 3], &mut refs, 2);
+        assert!(t > 0.0);
+        for b in &bufs {
+            assert_eq!(b, &vec![7.0; 8]);
+        }
+    }
+
+    #[test]
+    fn singleton_groups_are_free() {
+        let topo = Topology::new(1, 1);
+        let model = NetModel::hpc();
+        let traffic = TrafficMatrix::new(1);
+        let c = ctx(&topo, &model, &traffic);
+        let mut a = vec![1.0f32; 4];
+        assert_eq!(ring_all_reduce_avg(&c, &[0], &mut [&mut a]), 0.0);
+        assert_eq!(
+            ring_all_gather(&c, &[0], &mut [&mut a], &[(0, 4)]),
+            0.0
+        );
+        let (g, t) = naive_all_gather_bytes(&c, &[0], &[((), 100)]);
+        assert_eq!(g.len(), 1);
+        assert_eq!(t, 0.0);
+    }
+}

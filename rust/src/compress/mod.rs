@@ -1,0 +1,297 @@
+//! Payload compression + wire-size accounting for replicated updates.
+//!
+//! This module is where the paper's bandwidth arithmetic lives:
+//! * **sign/ternary packing** (Fig 9): transmitted coefficients become
+//!   {-1, 0, +1}, packed 2 bits each (the paper's "ternary system").
+//! * **transfer dtype** (Figs 12–14): f32 / bf16 / f16 value payloads.
+//! * **index transfer**: the DeMo replicator must ship the selected
+//!   indices alongside values; Random/Striding regenerate indices from the
+//!   shared seed and ship *values only* — "double the amount of data, on
+//!   the same bandwidth" (paper §Replication Schemes).
+//!
+//! Every payload knows its exact `wire_bytes()`, which is what the
+//! simulated network charges (`net::Link::transfer`). Tests pin the
+//! paper's claimed ratios (e.g. sign ≈ 16× smaller than f32 values).
+
+use crate::tensor::Dtype;
+
+/// A sparse update payload as it would appear on the wire.
+#[derive(Clone, Debug)]
+pub struct Payload {
+    /// Global indices of the selected components (empty when the receiver
+    /// regenerates them — Random/Striding).
+    pub indices: Option<Vec<u32>>,
+    /// Component values, quantized to `dtype` (stored f32-side for math,
+    /// wire size accounted separately). For `sign=true` values are ±1/0.
+    pub values: Vec<f32>,
+    pub dtype: Dtype,
+    pub sign: bool,
+    /// Pack signed (ternary) values at 2 bits each instead of shipping
+    /// them in `dtype`. The paper transmits signs as ordinary floats and
+    /// flags ternary packing as future work ("the ternary system opens up
+    /// for the possibility to compress the data even more") — so this is
+    /// an opt-in extension (`ReplSpec` suffix `:packed`), off by default.
+    pub packed: bool,
+}
+
+impl Payload {
+    /// Build a payload from selected values, applying sign + dtype
+    /// quantization exactly as the wire would.
+    pub fn new(indices: Option<Vec<u32>>, mut values: Vec<f32>, dtype: Dtype, sign: bool) -> Payload {
+        if let Some(ix) = &indices {
+            assert_eq!(ix.len(), values.len());
+        }
+        if sign {
+            for v in values.iter_mut() {
+                *v = if *v > 0.0 {
+                    1.0
+                } else if *v < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+            }
+        } else {
+            for v in values.iter_mut() {
+                *v = dtype.quantize(*v);
+            }
+        }
+        Payload {
+            indices,
+            values,
+            dtype,
+            sign,
+            packed: false,
+        }
+    }
+
+    /// Enable the 2-bit ternary wire format (extension; see `packed`).
+    pub fn with_packing(mut self) -> Payload {
+        self.packed = true;
+        self
+    }
+
+    /// Exact wire size in bytes: index block + value block.
+    ///
+    /// * indices: 4 B each (u32), omitted when regenerable.
+    /// * values: `dtype.bytes()` each (sign values ride as ±1.0 in
+    ///   `dtype`, exactly like the paper's implementation) — unless the
+    ///   `packed` ternary extension is on: then 2 bits each.
+    pub fn wire_bytes(&self) -> u64 {
+        let idx = self.indices.as_ref().map_or(0, |ix| 4 * ix.len() as u64);
+        let vals = if self.sign && self.packed {
+            (self.values.len() as u64 + 3) / 4
+        } else {
+            (self.dtype.bytes() * self.values.len()) as u64
+        };
+        idx + vals
+    }
+
+    /// Serialize the value block to bytes (what actually crosses the link
+    /// in the simulator — kept real so corruption tests can flip bits).
+    pub fn encode_values(&self) -> Vec<u8> {
+        if self.sign && self.packed {
+            pack_ternary(&self.values)
+        } else {
+            match self.dtype {
+                Dtype::F32 => self
+                    .values
+                    .iter()
+                    .flat_map(|v| v.to_le_bytes())
+                    .collect(),
+                Dtype::Bf16 => self
+                    .values
+                    .iter()
+                    .flat_map(|&v| crate::tensor::f32_to_bf16(v).to_le_bytes())
+                    .collect(),
+                Dtype::F16 => self
+                    .values
+                    .iter()
+                    .flat_map(|&v| crate::tensor::f32_to_f16(v).to_le_bytes())
+                    .collect(),
+            }
+        }
+    }
+
+    /// Decode a value block produced by `encode_values`.
+    pub fn decode_values(bytes: &[u8], n: usize, dtype: Dtype, sign_packed: bool) -> Vec<f32> {
+        if sign_packed {
+            unpack_ternary(bytes, n)
+        } else {
+            match dtype {
+                Dtype::F32 => bytes
+                    .chunks_exact(4)
+                    .take(n)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+                Dtype::Bf16 => bytes
+                    .chunks_exact(2)
+                    .take(n)
+                    .map(|b| crate::tensor::bf16_to_f32(u16::from_le_bytes([b[0], b[1]])))
+                    .collect(),
+                Dtype::F16 => bytes
+                    .chunks_exact(2)
+                    .take(n)
+                    .map(|b| crate::tensor::f16_to_f32(u16::from_le_bytes([b[0], b[1]])))
+                    .collect(),
+            }
+        }
+    }
+}
+
+/// Pack ternary values {-1, 0, +1} at 2 bits each: 00=0, 01=+1, 10=-1.
+pub fn pack_ternary(values: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; (values.len() + 3) / 4];
+    for (i, &v) in values.iter().enumerate() {
+        let code: u8 = if v > 0.0 {
+            0b01
+        } else if v < 0.0 {
+            0b10
+        } else {
+            0b00
+        };
+        out[i / 4] |= code << ((i % 4) * 2);
+    }
+    out
+}
+
+/// Inverse of `pack_ternary`.
+pub fn unpack_ternary(bytes: &[u8], n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let code = (bytes[i / 4] >> ((i % 4) * 2)) & 0b11;
+        out.push(match code {
+            0b01 => 1.0,
+            0b10 => -1.0,
+            _ => 0.0,
+        });
+    }
+    out
+}
+
+/// Bandwidth bookkeeping for one replication round (per rank), feeding the
+/// Fig 12/13 bandwidth-usage plots and the network simulator.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireStats {
+    pub payload_bytes: u64,
+    pub index_bytes: u64,
+    pub value_count: u64,
+}
+
+impl WireStats {
+    pub fn of(p: &Payload) -> WireStats {
+        WireStats {
+            payload_bytes: p.wire_bytes(),
+            index_bytes: p.indices.as_ref().map_or(0, |ix| 4 * ix.len() as u64),
+            value_count: p.values.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, proptest};
+
+    #[test]
+    fn ternary_pack_roundtrip() {
+        let vals = vec![1.0, -1.0, 0.0, 1.0, -1.0, 0.0, 0.0, 1.0, -1.0];
+        let packed = pack_ternary(&vals);
+        assert_eq!(packed.len(), 3); // ceil(9/4)
+        assert_eq!(unpack_ternary(&packed, 9), vals);
+    }
+
+    #[test]
+    fn ternary_roundtrip_property() {
+        proptest(64, |g| {
+            let n = g.usize(0, 500);
+            let vals: Vec<f32> = (0..n)
+                .map(|_| *g.choose(&[-1.0f32, 0.0, 1.0]))
+                .collect();
+            let back = unpack_ternary(&pack_ternary(&vals), n);
+            prop_assert(back == vals, "ternary roundtrip");
+        });
+    }
+
+    #[test]
+    fn sign_values_ride_in_dtype_by_default() {
+        // Paper behaviour: signs are ordinary ±1.0 floats on the wire.
+        let vals = vec![0.5f32; 4096];
+        let signed = Payload::new(None, vals.clone(), Dtype::F32, true);
+        let full = Payload::new(None, vals, Dtype::F32, false);
+        assert_eq!(signed.wire_bytes(), full.wire_bytes());
+    }
+
+    #[test]
+    fn packed_ternary_extension_is_16x_smaller_than_f32() {
+        // The paper's future-work ternary system: 2 bits vs 32 = 16x.
+        let vals = vec![0.5f32; 4096];
+        let packed = Payload::new(None, vals.clone(), Dtype::F32, true).with_packing();
+        let full = Payload::new(None, vals, Dtype::F32, false);
+        assert_eq!(full.wire_bytes(), 16384);
+        assert_eq!(packed.wire_bytes(), 1024);
+        assert_eq!(full.wire_bytes() / packed.wire_bytes(), 16);
+    }
+
+    #[test]
+    fn index_block_doubles_demo_cost_at_f32() {
+        // DeMo ships (u32 index + f32 value) = 8 B/component; Random ships
+        // 4 B/component — exactly the paper's "double the amount of data,
+        // on the same bandwidth".
+        let ix: Vec<u32> = (0..1000).collect();
+        let vals = vec![1.0f32; 1000];
+        let demo = Payload::new(Some(ix), vals.clone(), Dtype::F32, false);
+        let random = Payload::new(None, vals, Dtype::F32, false);
+        assert_eq!(demo.wire_bytes(), 2 * random.wire_bytes());
+    }
+
+    #[test]
+    fn dtype_halves_value_block() {
+        let vals = vec![1.5f32; 256];
+        let f32p = Payload::new(None, vals.clone(), Dtype::F32, false);
+        let bf16p = Payload::new(None, vals.clone(), Dtype::Bf16, false);
+        let f16p = Payload::new(None, vals, Dtype::F16, false);
+        assert_eq!(f32p.wire_bytes(), 1024);
+        assert_eq!(bf16p.wire_bytes(), 512);
+        assert_eq!(f16p.wire_bytes(), 512);
+    }
+
+    #[test]
+    fn payload_quantizes_on_construction() {
+        let p = Payload::new(None, vec![1.0 + 1e-4], Dtype::Bf16, false);
+        // bf16 has ~3 decimal digits: 1.0001 rounds to 1.0
+        assert_eq!(p.values[0], 1.0);
+        let s = Payload::new(None, vec![0.3, -0.7, 0.0], Dtype::F32, true);
+        assert_eq!(s.values, vec![1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_dtypes() {
+        proptest(48, |g| {
+            let n = g.usize(0, 200);
+            let vals = g.vec_normal(n, 2.0);
+            let sign = g.bool();
+            let packed = sign && g.bool();
+            let dtype = *g.choose(&[Dtype::F32, Dtype::Bf16, Dtype::F16]);
+            let mut p = Payload::new(None, vals, dtype, sign);
+            if packed {
+                p = p.with_packing();
+            }
+            let bytes = p.encode_values();
+            let back = Payload::decode_values(&bytes, n, dtype, packed);
+            prop_assert(
+                back == p.values,
+                format!("dtype={dtype:?} sign={sign} packed={packed}"),
+            );
+        });
+    }
+
+    #[test]
+    fn wire_stats_split() {
+        let p = Payload::new(Some(vec![1, 2, 3]), vec![1.0, 2.0, 3.0], Dtype::F16, false);
+        let s = WireStats::of(&p);
+        assert_eq!(s.index_bytes, 12);
+        assert_eq!(s.payload_bytes, 12 + 6);
+        assert_eq!(s.value_count, 3);
+    }
+}

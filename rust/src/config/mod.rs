@@ -1,0 +1,177 @@
+//! Experiment configuration: one struct, JSON-file + CLI-override surface.
+//!
+//! Every launcher entry point (main binary, examples, figure benches)
+//! builds an [`ExperimentConfig`], so runs are fully described by a small
+//! JSON document (written next to the metrics for reproducibility).
+
+use std::path::PathBuf;
+
+use crate::net::NetModel;
+use crate::optim::OptSpec;
+use crate::replicate::ReplSpec;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Artifact/model name (e.g. "lm-small").
+    pub model: String,
+    pub artifacts_dir: PathBuf,
+    /// Cluster shape.
+    pub nodes: usize,
+    pub accels_per_node: usize,
+    /// Optimizer + replication scheme.
+    pub opt: OptSpec,
+    pub repl: ReplSpec,
+    /// Learning-rate schedule: linear warmup then constant (the paper's
+    /// small-scale runs use constant LR; OLMo uses 4% warmup).
+    pub lr: f32,
+    pub warmup_steps: u64,
+    pub steps: u64,
+    pub seed: u64,
+    /// Validation cadence (0 = never) and size.
+    pub val_every: u64,
+    pub val_batches: u64,
+    /// Network model for the simulated cluster.
+    pub net: NetModel,
+    /// Number of distinct gradient streams actually computed (0 = world
+    /// size). Large-scale sims (Fig 5/6) compute a few real streams and
+    /// mirror them — the comm clock still models every rank (DESIGN.md §2).
+    pub compute_streams: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "lm-tiny".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            nodes: 2,
+            accels_per_node: 2,
+            opt: OptSpec::DemoSgd {
+                beta: 0.9,
+                weight_decay: 0.0,
+            },
+            repl: ReplSpec::parse("demo:1/8").unwrap(),
+            lr: 1e-3,
+            warmup_steps: 0,
+            steps: 100,
+            seed: 0xD37,
+            val_every: 0,
+            val_batches: 8,
+            net: NetModel::hpc(),
+            compute_streams: 0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.accels_per_node
+    }
+
+    /// Effective LR at a step (linear warmup → constant).
+    pub fn lr_at(&self, step: u64) -> f32 {
+        if self.warmup_steps == 0 || step >= self.warmup_steps {
+            self.lr
+        } else {
+            self.lr * (step + 1) as f32 / self.warmup_steps as f32
+        }
+    }
+
+    /// Serialize for the run directory.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            (
+                "artifacts_dir",
+                Json::Str(self.artifacts_dir.display().to_string()),
+            ),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("accels_per_node", Json::Num(self.accels_per_node as f64)),
+            ("opt", Json::Str(self.opt.label().to_string())),
+            ("repl", Json::Str(self.repl.label())),
+            ("lr", Json::Num(self.lr as f64)),
+            ("warmup_steps", Json::Num(self.warmup_steps as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("val_every", Json::Num(self.val_every as f64)),
+            ("val_batches", Json::Num(self.val_batches as f64)),
+            ("inter_bw_bytes_per_s", Json::Num(self.net.inter_bw)),
+            ("intra_bw_bytes_per_s", Json::Num(self.net.intra_bw)),
+            ("device_flops", Json::Num(self.net.device_flops)),
+            ("compute_streams", Json::Num(self.compute_streams as f64)),
+        ])
+    }
+
+    /// Apply CLI-style overrides (used by the launcher and examples).
+    pub fn apply_arg(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "model" => self.model = value.into(),
+            "artifacts" => self.artifacts_dir = value.into(),
+            "nodes" => self.nodes = value.parse()?,
+            "accels" => self.accels_per_node = value.parse()?,
+            "opt" => self.opt = OptSpec::parse(value)?,
+            "repl" => self.repl = ReplSpec::parse(value)?,
+            "lr" => self.lr = value.parse()?,
+            "warmup" => self.warmup_steps = value.parse()?,
+            "steps" => self.steps = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "val-every" => self.val_every = value.parse()?,
+            "val-batches" => self.val_batches = value.parse()?,
+            "inter-mbps" => {
+                self.net.inter_bw = value.parse::<f64>()? * 1e6 / 8.0;
+            }
+            "streams" => self.compute_streams = value.parse()?,
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.world_size(), 4);
+        assert_eq!(c.lr_at(0), c.lr);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let c = ExperimentConfig {
+            warmup_steps: 10,
+            lr: 1.0,
+            ..Default::default()
+        };
+        assert!((c.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((c.lr_at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(c.lr_at(10), 1.0);
+        assert_eq!(c.lr_at(999), 1.0);
+    }
+
+    #[test]
+    fn apply_args() {
+        let mut c = ExperimentConfig::default();
+        c.apply_arg("model", "vit-small").unwrap();
+        c.apply_arg("nodes", "8").unwrap();
+        c.apply_arg("repl", "random:1/16").unwrap();
+        c.apply_arg("opt", "adamw").unwrap();
+        c.apply_arg("inter-mbps", "100").unwrap();
+        assert_eq!(c.model, "vit-small");
+        assert_eq!(c.nodes, 8);
+        assert_eq!(c.repl.label(), "random-1/16");
+        assert!((c.net.inter_bw - 12.5e6).abs() < 1.0);
+        assert!(c.apply_arg("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrips_keys() {
+        let c = ExperimentConfig::default();
+        let j = c.to_json();
+        assert_eq!(j.get("model").unwrap().as_str(), Some("lm-tiny"));
+        assert_eq!(j.get("nodes").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("repl").unwrap().as_str(), Some("demo-1/8"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Experiment coordinator: the leader that turns configs into runs.
+//!
+//! One [`Runtime`] (PJRT client) is shared across a whole sweep; each
+//! experiment builds a fresh [`Trainer`] (cluster + optimizer + replicator
+//! state), runs it, and lands metrics + config in `results/<name>/`.
+//! Every figure bench and example drives this module, so the behaviour of
+//! "an experiment" is defined in exactly one place.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{comparison_table, RunMetrics};
+use crate::runtime::Runtime;
+use crate::train::Trainer;
+use crate::util::json::Json;
+
+/// A named collection of runs (one figure / one table).
+pub struct Experiment {
+    pub name: String,
+    pub out_dir: PathBuf,
+    pub runs: Vec<RunMetrics>,
+}
+
+impl Experiment {
+    pub fn new(name: &str, results_root: &Path) -> Experiment {
+        Experiment {
+            name: name.to_string(),
+            out_dir: results_root.join(name),
+            runs: Vec::new(),
+        }
+    }
+
+    /// Run one configuration (label defaults to opt+repl) and collect it.
+    pub fn run(&mut self, rt: &Runtime, cfg: &ExperimentConfig, label: Option<&str>) -> Result<&RunMetrics> {
+        log::info!(
+            "[{}] run {} model={} mesh={}x{} opt={} repl={}",
+            self.name,
+            label.unwrap_or("-"),
+            cfg.model,
+            cfg.nodes,
+            cfg.accels_per_node,
+            cfg.opt.label(),
+            cfg.repl.label()
+        );
+        let mut trainer = Trainer::new(rt, cfg.clone())?;
+        let mut metrics = trainer.run()?;
+        if let Some(l) = label {
+            metrics.label = l.to_string();
+        }
+        std::fs::create_dir_all(&self.out_dir)?;
+        metrics.write_csv(&self.out_dir)?;
+        let cfg_path = self
+            .out_dir
+            .join(format!("{}.config.json", metrics.label.replace('/', "-")));
+        std::fs::write(cfg_path, cfg.to_json().to_string_pretty())?;
+        self.runs.push(metrics);
+        Ok(self.runs.last().unwrap())
+    }
+
+    /// Write the experiment-level summary (table + JSON) and return the
+    /// rendered table.
+    pub fn finish(&self) -> Result<String> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let refs: Vec<&RunMetrics> = self.runs.iter().collect();
+        let table = comparison_table(&refs);
+        std::fs::write(self.out_dir.join("summary.txt"), &table)?;
+        let summaries: Vec<Json> = self.runs.iter().map(|r| r.summary_json()).collect();
+        std::fs::write(
+            self.out_dir.join("summary.json"),
+            Json::Arr(summaries).to_string_pretty(),
+        )?;
+        Ok(table)
+    }
+
+    /// Best (lowest) final validation loss across runs.
+    pub fn best_val(&self) -> Option<(&str, f64)> {
+        self.runs
+            .iter()
+            .filter_map(|r| r.final_val_loss().map(|l| (r.label.as_str(), l)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Best (lowest) tail train loss across runs.
+    pub fn best_tail_loss(&self, n: usize) -> Option<(&str, f64)> {
+        self.runs
+            .iter()
+            .filter_map(|r| r.tail_loss(n).map(|l| (r.label.as_str(), l)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+}
+
+/// Shared entry: build the PJRT runtime once.
+pub fn runtime() -> Result<Runtime> {
+    crate::util::logging::init();
+    Runtime::cpu()
+}
+
+/// Default results root (overridable with DETONATION_RESULTS).
+pub fn results_root() -> PathBuf {
+    std::env::var("DETONATION_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StepRow;
+
+    #[test]
+    fn experiment_summary_and_best() {
+        let mut e = Experiment::new("t", &std::env::temp_dir().join("detonation-coord-test"));
+        for (label, loss) in [("a", 2.0), ("b", 1.0)] {
+            let mut m = RunMetrics::new(label);
+            m.steps.push(StepRow {
+                step: 0,
+                sim_time: 1.0,
+                loss,
+                inter_bytes: 0,
+                intra_bytes: 0,
+                wall_time: 0.0,
+            });
+            m.val.push(crate::metrics::ValRow {
+                step: 1,
+                sim_time: 1.0,
+                loss,
+            });
+            e.runs.push(m);
+        }
+        let table = e.finish().unwrap();
+        assert!(table.contains('a') && table.contains('b'));
+        assert_eq!(e.best_val().unwrap().0, "b");
+        assert_eq!(e.best_tail_loss(5).unwrap().0, "b");
+        std::fs::remove_dir_all(&e.out_dir).ok();
+    }
+}

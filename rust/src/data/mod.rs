@@ -1,0 +1,524 @@
+//! Synthetic datasets standing in for the paper's corpora (DESIGN.md §2):
+//!
+//! * [`LmTask`]   — Zipf/Markov token stream           (Dolma v1.6 stand-in)
+//! * [`TranslationTask`] — deterministic synthetic language pair
+//!   (token remap + reversal + offset)                 (Opus Books En↔Fr)
+//! * [`ImageTask`] — procedural texture/shape classes  (Cifar100)
+//!
+//! All three are generated on the fly from a seed: the *learning problem*
+//! is real (non-trivial structure a transformer must fit, with held-out
+//! validation splits), while requiring no downloads. Data-parallel
+//! divergence — the phenomenon decoupled training controls — comes from
+//! giving every (node, accel) stream a distinct RNG split, exactly like
+//! per-rank dataset sharding in the paper's setup.
+
+use crate::runtime::{BatchData, BatchDtype, Manifest};
+use crate::util::rng::Rng;
+
+/// A task generates per-rank training batches and a fixed validation set.
+pub trait Task: Send {
+    /// Batch for `(rank_stream, step)`; deterministic in its arguments.
+    fn train_batch(&self, stream: u64, step: u64) -> Vec<BatchData>;
+    /// The `i`-th validation batch (held-out split; same for all ranks).
+    fn val_batch(&self, i: u64) -> Vec<BatchData>;
+    fn name(&self) -> &'static str;
+}
+
+/// Build the right task for a model manifest.
+pub fn task_for(manifest: &Manifest, seed: u64) -> Box<dyn Task> {
+    match manifest.family.as_str() {
+        "lm" => Box::new(LmTask::new(manifest, seed)),
+        "seq2seq" => Box::new(TranslationTask::new(manifest, seed)),
+        "vit" => Box::new(ImageTask::new(manifest, seed)),
+        other => panic!("unknown model family {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Causal LM: Zipf-weighted Markov chain over the vocabulary
+// ---------------------------------------------------------------------------
+
+/// Markov text: each token has `FANOUT` likely successors (chosen once per
+/// seed); transitions pick among them Zipf-style with occasional jumps.
+/// Entropy is tunable and well below uniform — a model that learns the
+/// chain beats the ln(V) baseline, giving real loss curves.
+pub struct LmTask {
+    vocab: usize,
+    batch: usize,
+    seq: usize,
+    seed: u64,
+    successors: Vec<u32>, // vocab × FANOUT
+}
+
+const FANOUT: usize = 4;
+const JUMP_P: f64 = 0.1;
+
+impl LmTask {
+    pub fn new(m: &Manifest, seed: u64) -> LmTask {
+        assert_eq!(m.family, "lm");
+        let mut rng = Rng::new(seed ^ 0x11_22);
+        let mut successors = Vec::with_capacity(m.vocab * FANOUT);
+        for _ in 0..m.vocab {
+            for _ in 0..FANOUT {
+                successors.push(rng.below(m.vocab as u64) as u32);
+            }
+        }
+        LmTask {
+            vocab: m.vocab,
+            batch: m.batch,
+            seq: m.seq,
+            seed,
+            successors,
+        }
+    }
+
+    fn gen(&self, rng: &mut Rng) -> Vec<BatchData> {
+        // Generate seq+1 tokens; inputs = [0..seq), targets = [1..seq+1).
+        let n = self.batch * (self.seq + 1);
+        let mut toks = Vec::with_capacity(n);
+        for _ in 0..self.batch {
+            let mut t = rng.below(self.vocab as u64) as u32;
+            toks.push(t as i32);
+            for _ in 0..self.seq {
+                t = if rng.next_f64() < JUMP_P {
+                    rng.below(self.vocab as u64) as u32
+                } else {
+                    let succ = rng.zipf(FANOUT, 1.3);
+                    self.successors[t as usize * FANOUT + succ]
+                };
+                toks.push(t as i32);
+            }
+        }
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut targets = Vec::with_capacity(self.batch * self.seq);
+        for b in 0..self.batch {
+            let row = &toks[b * (self.seq + 1)..(b + 1) * (self.seq + 1)];
+            tokens.extend_from_slice(&row[..self.seq]);
+            targets.extend_from_slice(&row[1..]);
+        }
+        vec![BatchData::I32(tokens), BatchData::I32(targets)]
+    }
+}
+
+impl Task for LmTask {
+    fn train_batch(&self, stream: u64, step: u64) -> Vec<BatchData> {
+        let mut rng = Rng::new(self.seed ^ 0xA5A5)
+            .split(stream)
+            .split(step ^ 0x51ED);
+        self.gen(&mut rng)
+    }
+
+    fn val_batch(&self, i: u64) -> Vec<BatchData> {
+        // Held-out split: a stream tag no training rank ever uses.
+        let mut rng = Rng::new(self.seed ^ 0xA5A5).split(u64::MAX).split(i);
+        self.gen(&mut rng)
+    }
+
+    fn name(&self) -> &'static str {
+        "lm-markov-zipf"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seq2seq: synthetic language pair
+// ---------------------------------------------------------------------------
+
+/// "Translation": the target sentence is the source with (1) every token
+/// remapped through a fixed random bijection, (2) local 2-blocks swapped
+/// (a deterministic reordering), teacher-forced with BOS=0. The model
+/// must learn a token table plus a positional transformation — the same
+/// kind of structure (lexical + reordering) real translation exercises.
+pub struct TranslationTask {
+    vocab: usize,
+    batch: usize,
+    src_seq: usize,
+    tgt_seq: usize,
+    seed: u64,
+    mapping: Vec<u32>,
+}
+
+impl TranslationTask {
+    pub fn new(m: &Manifest, seed: u64) -> TranslationTask {
+        assert_eq!(m.family, "seq2seq");
+        // Random bijection over [2, vocab): 0 = BOS, 1 = reserved.
+        let mut ids: Vec<u32> = (2..m.vocab as u32).collect();
+        Rng::new(seed ^ 0x77_33).shuffle(&mut ids);
+        let mut mapping = vec![0u32; m.vocab];
+        for (i, &v) in ids.iter().enumerate() {
+            mapping[i + 2] = v;
+        }
+        TranslationTask {
+            vocab: m.vocab,
+            batch: m.batch,
+            src_seq: m.src_seq,
+            tgt_seq: m.seq,
+            seed,
+            mapping,
+        }
+    }
+
+    fn gen(&self, rng: &mut Rng) -> Vec<BatchData> {
+        let mut src = Vec::with_capacity(self.batch * self.src_seq);
+        let mut tgt_in = Vec::with_capacity(self.batch * self.tgt_seq);
+        let mut tgt_out = Vec::with_capacity(self.batch * self.tgt_seq);
+        for _ in 0..self.batch {
+            // Zipf source tokens (natural-language-like frequencies).
+            let s: Vec<u32> = (0..self.src_seq)
+                .map(|_| 2 + rng.zipf(self.vocab - 2, 1.1) as u32)
+                .collect();
+            // Translate: remap + swap adjacent pairs.
+            let mut t: Vec<u32> = s.iter().map(|&x| self.mapping[x as usize]).collect();
+            for i in (0..t.len() - 1).step_by(2) {
+                t.swap(i, i + 1);
+            }
+            t.truncate(self.tgt_seq);
+            while t.len() < self.tgt_seq {
+                t.push(1); // pad with reserved token
+            }
+            src.extend(s.iter().map(|&x| x as i32));
+            tgt_in.push(0); // BOS
+            tgt_in.extend(t[..self.tgt_seq - 1].iter().map(|&x| x as i32));
+            tgt_out.extend(t.iter().map(|&x| x as i32));
+        }
+        vec![
+            BatchData::I32(src),
+            BatchData::I32(tgt_in),
+            BatchData::I32(tgt_out),
+        ]
+    }
+}
+
+impl Task for TranslationTask {
+    fn train_batch(&self, stream: u64, step: u64) -> Vec<BatchData> {
+        let mut rng = Rng::new(self.seed ^ 0xBEEF)
+            .split(stream)
+            .split(step ^ 0x7A11);
+        self.gen(&mut rng)
+    }
+
+    fn val_batch(&self, i: u64) -> Vec<BatchData> {
+        let mut rng = Rng::new(self.seed ^ 0xBEEF).split(u64::MAX).split(i);
+        self.gen(&mut rng)
+    }
+
+    fn name(&self) -> &'static str {
+        "seq2seq-synthetic-pair"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vision: procedural texture classes
+// ---------------------------------------------------------------------------
+
+/// Each class is a 2-D sinusoid pattern with class-specific frequency and
+/// phase; images are the pattern over the patch grid plus noise. Patches
+/// arrive pre-extracted (B, P, patch_dim) — patchification is data prep,
+/// not model compute, exactly as ViT treats it.
+pub struct ImageTask {
+    classes: usize,
+    batch: usize,
+    patches: usize,
+    patch_dim: usize,
+    seed: u64,
+    /// Per-class (fx, fy, phase, amp) pattern parameters.
+    class_params: Vec<(f32, f32, f32, f32)>,
+}
+
+impl ImageTask {
+    pub fn new(m: &Manifest, seed: u64) -> ImageTask {
+        assert_eq!(m.family, "vit");
+        let mut rng = Rng::new(seed ^ 0x99_44);
+        let class_params = (0..m.vocab)
+            .map(|_| {
+                (
+                    0.3 + 2.2 * rng.next_f32(),
+                    0.3 + 2.2 * rng.next_f32(),
+                    std::f32::consts::TAU * rng.next_f32(),
+                    0.6 + 0.6 * rng.next_f32(),
+                )
+            })
+            .collect();
+        ImageTask {
+            classes: m.vocab,
+            batch: m.batch,
+            patches: m.seq,
+            patch_dim: m.patch_dim,
+            seed,
+            class_params,
+        }
+    }
+
+    fn gen(&self, rng: &mut Rng) -> Vec<BatchData> {
+        let grid = (self.patches as f64).sqrt().round() as usize;
+        let pside = ((self.patch_dim / 3) as f64).sqrt().round().max(1.0) as usize;
+        let mut patches = Vec::with_capacity(self.batch * self.patches * self.patch_dim);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let cls = rng.below(self.classes as u64) as usize;
+            labels.push(cls as i32);
+            let (fx, fy, phase, amp) = self.class_params[cls];
+            let jitter = rng.normal_f32(0.3);
+            for p in 0..self.patches {
+                let (py, px) = (p / grid.max(1), p % grid.max(1));
+                for d in 0..self.patch_dim {
+                    let ch = d % 3;
+                    let within = d / 3;
+                    let (wy, wx) = (within / pside.max(1), within % pside.max(1));
+                    let y = (py * pside + wy) as f32;
+                    let x = (px * pside + wx) as f32;
+                    let v = amp
+                        * (fx * x * 0.25 + fy * y * 0.25 + phase + jitter
+                            + 0.5 * ch as f32)
+                            .sin();
+                    patches.push(v + rng.normal_f32(0.15));
+                }
+            }
+        }
+        vec![BatchData::F32(patches), BatchData::I32(labels)]
+    }
+}
+
+impl Task for ImageTask {
+    fn train_batch(&self, stream: u64, step: u64) -> Vec<BatchData> {
+        let mut rng = Rng::new(self.seed ^ 0xCAFE)
+            .split(stream)
+            .split(step ^ 0x1017);
+        self.gen(&mut rng)
+    }
+
+    fn val_batch(&self, i: u64) -> Vec<BatchData> {
+        let mut rng = Rng::new(self.seed ^ 0xCAFE).split(u64::MAX).split(i);
+        self.gen(&mut rng)
+    }
+
+    fn name(&self) -> &'static str {
+        "vit-procedural-textures"
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Validate a batch against the manifest's input spec (failure injection
+/// tests use this to assert the runtime rejects malformed data).
+pub fn check_batch(manifest: &Manifest, batch: &[BatchData]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        batch.len() == manifest.batch_inputs.len(),
+        "batch arity {} != {}",
+        batch.len(),
+        manifest.batch_inputs.len()
+    );
+    for (spec, data) in manifest.batch_inputs.iter().zip(batch) {
+        anyhow::ensure!(
+            data.len() == spec.len(),
+            "{}: len {} != {}",
+            spec.name,
+            data.len(),
+            spec.len()
+        );
+        match (spec.dtype, data) {
+            (BatchDtype::I32, BatchData::I32(_)) | (BatchDtype::F32, BatchData::F32(_)) => {}
+            _ => anyhow::bail!("{}: dtype mismatch", spec.name),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn lm_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"name":"t","family":"lm","vocab":64,"d_model":8,"n_heads":2,
+            "n_layers":1,"d_ff":16,"seq":16,"src_seq":0,"patch_dim":0,
+            "batch":4,"param_count":0,"params":[],
+            "batch_inputs":[{"name":"tokens","shape":[4,16],"dtype":"i32"},
+                            {"name":"targets","shape":[4,16],"dtype":"i32"}]}"#,
+        )
+        .unwrap()
+    }
+
+    fn s2s_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"name":"t","family":"seq2seq","vocab":64,"d_model":8,"n_heads":2,
+            "n_layers":1,"d_ff":16,"seq":12,"src_seq":12,"patch_dim":0,
+            "batch":4,"param_count":0,"params":[],
+            "batch_inputs":[{"name":"src","shape":[4,12],"dtype":"i32"},
+                            {"name":"tgt_in","shape":[4,12],"dtype":"i32"},
+                            {"name":"tgt_out","shape":[4,12],"dtype":"i32"}]}"#,
+        )
+        .unwrap()
+    }
+
+    fn vit_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"name":"t","family":"vit","vocab":8,"d_model":8,"n_heads":2,
+            "n_layers":1,"d_ff":16,"seq":16,"src_seq":0,"patch_dim":12,
+            "batch":4,"param_count":0,"params":[],
+            "batch_inputs":[{"name":"patches","shape":[4,16,12],"dtype":"f32"},
+                            {"name":"labels","shape":[4],"dtype":"i32"}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn all_tasks_match_their_manifests() {
+        for (m, _) in [
+            (lm_manifest(), "lm"),
+            (s2s_manifest(), "s2s"),
+            (vit_manifest(), "vit"),
+        ] {
+            let task = task_for(&m, 1);
+            check_batch(&m, &task.train_batch(0, 0)).unwrap();
+            check_batch(&m, &task.val_batch(0)).unwrap();
+        }
+    }
+
+    #[test]
+    fn batches_deterministic_per_stream_and_step() {
+        let m = lm_manifest();
+        let t = LmTask::new(&m, 5);
+        let a = t.train_batch(3, 10);
+        let b = t.train_batch(3, 10);
+        match (&a[0], &b[0]) {
+            (BatchData::I32(x), BatchData::I32(y)) => assert_eq!(x, y),
+            _ => panic!(),
+        }
+        // different streams / steps differ
+        let c = t.train_batch(4, 10);
+        let d = t.train_batch(3, 11);
+        match (&a[0], &c[0], &d[0]) {
+            (BatchData::I32(x), BatchData::I32(y), BatchData::I32(z)) => {
+                assert_ne!(x, y);
+                assert_ne!(x, z);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn lm_targets_are_shifted_inputs() {
+        let m = lm_manifest();
+        let t = LmTask::new(&m, 7);
+        let batch = t.train_batch(0, 0);
+        let (tokens, targets) = match (&batch[0], &batch[1]) {
+            (BatchData::I32(a), BatchData::I32(b)) => (a, b),
+            _ => panic!(),
+        };
+        // within each row, targets[i] == tokens[i+1]
+        for b in 0..4 {
+            let row_t = &tokens[b * 16..(b + 1) * 16];
+            let row_y = &targets[b * 16..(b + 1) * 16];
+            assert_eq!(&row_t[1..], &row_y[..15], "row {b}");
+        }
+    }
+
+    #[test]
+    fn lm_tokens_in_vocab() {
+        let m = lm_manifest();
+        let t = LmTask::new(&m, 9);
+        for step in 0..5 {
+            for data in t.train_batch(1, step) {
+                if let BatchData::I32(v) = data {
+                    assert!(v.iter().all(|&x| (0..64).contains(&x)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn translation_is_learnable_function_of_source() {
+        // Same source (same rng) → same target; mapping is a bijection.
+        let m = s2s_manifest();
+        let t = TranslationTask::new(&m, 11);
+        let mut seen = std::collections::HashSet::new();
+        for (i, &v) in t.mapping.iter().enumerate().skip(2) {
+            assert!(v >= 2 && (v as usize) < 64, "mapping[{i}]={v}");
+            assert!(seen.insert(v), "mapping not injective at {i}");
+        }
+        let b = t.train_batch(0, 0);
+        let (src, tgt_in, tgt_out) = match (&b[0], &b[1], &b[2]) {
+            (BatchData::I32(a), BatchData::I32(b_), BatchData::I32(c)) => (a, b_, c),
+            _ => panic!(),
+        };
+        // teacher forcing: tgt_in is BOS + tgt_out shifted
+        for r in 0..4 {
+            assert_eq!(tgt_in[r * 12], 0);
+            assert_eq!(&tgt_in[r * 12 + 1..(r + 1) * 12], &tgt_out[r * 12..(r + 1) * 12 - 1]);
+        }
+        // target tokens = swapped remap of source
+        for r in 0..4 {
+            let s = &src[r * 12..(r + 1) * 12];
+            let y = &tgt_out[r * 12..(r + 1) * 12];
+            // position 0 holds remap of s[1] (pair swap)
+            assert_eq!(y[0], t.mapping[s[1] as usize] as i32);
+            assert_eq!(y[1], t.mapping[s[0] as usize] as i32);
+        }
+    }
+
+    #[test]
+    fn image_classes_are_separable() {
+        // Mean patch energy must differ across classes more than within —
+        // a crude separability check that the task is learnable.
+        let m = vit_manifest();
+        let t = ImageTask::new(&m, 13);
+        let mut per_class_means: Vec<Vec<f32>> = vec![Vec::new(); 8];
+        for step in 0..40 {
+            let b = t.train_batch(0, step);
+            let (patches, labels) = match (&b[0], &b[1]) {
+                (BatchData::F32(p), BatchData::I32(l)) => (p, l),
+                _ => panic!(),
+            };
+            let per_img = 16 * 12;
+            for (i, &l) in labels.iter().enumerate() {
+                let img = &patches[i * per_img..(i + 1) * per_img];
+                let mean: f32 = img.iter().map(|x| x.abs()).sum::<f32>() / per_img as f32;
+                per_class_means[l as usize].push(mean);
+            }
+        }
+        let filled: Vec<f32> = per_class_means
+            .iter()
+            .filter(|v| !v.is_empty())
+            .map(|v| v.iter().sum::<f32>() / v.len() as f32)
+            .collect();
+        assert!(filled.len() >= 4, "sampled too few classes");
+        let spread = filled
+            .iter()
+            .cloned()
+            .fold(f32::MIN, f32::max)
+            - filled.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread > 0.01, "classes indistinguishable: {filled:?}");
+    }
+
+    #[test]
+    fn val_differs_from_train() {
+        let m = lm_manifest();
+        let t = LmTask::new(&m, 15);
+        let tr = t.train_batch(0, 0);
+        let va = t.val_batch(0);
+        match (&tr[0], &va[0]) {
+            (BatchData::I32(a), BatchData::I32(b)) => assert_ne!(a, b),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn check_batch_rejects_malformed() {
+        let m = lm_manifest();
+        // wrong arity
+        assert!(check_batch(&m, &[BatchData::I32(vec![0; 64])]).is_err());
+        // wrong length
+        assert!(check_batch(
+            &m,
+            &[BatchData::I32(vec![0; 63]), BatchData::I32(vec![0; 64])]
+        )
+        .is_err());
+        // wrong dtype
+        assert!(check_batch(
+            &m,
+            &[BatchData::F32(vec![0.0; 64]), BatchData::I32(vec![0; 64])]
+        )
+        .is_err());
+    }
+}

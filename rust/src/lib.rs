@@ -1,0 +1,34 @@
+//! # DeToNATION — Decoupled Network-Aware Training on Interlinked Online Nodes
+//!
+//! Rust + JAX + Pallas reproduction of *DeToNATION* (From et al., AAAI
+//! 2026): the FlexDeMo hybrid-sharded decoupled-momentum training strategy
+//! and its family of replication schemes (DeMo, Random, Striding, DiLoCo)
+//! plus decoupled optimizers (DeMo-SGD, Decoupled AdamW).
+//!
+//! Architecture (DESIGN.md):
+//! * **Layer 3 (this crate)** — the distributed-training coordinator:
+//!   hybrid sharding mesh, collectives over a simulated cluster with a
+//!   deterministic α–β network cost model, decoupled optimizers,
+//!   replication schemes, metrics, launcher.
+//! * **Layer 2/1 (python/, build-time only)** — JAX transformer models
+//!   whose fwd/bwd lowers through Pallas kernels into HLO-text artifacts.
+//! * **runtime** — loads those artifacts via the PJRT CPU client (`xla`
+//!   crate) and executes them from the training hot path. Python is never
+//!   on the training path.
+
+pub mod collectives;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dct;
+pub mod metrics;
+pub mod net;
+pub mod optim;
+pub mod replicate;
+pub mod runtime;
+pub mod shard;
+pub mod tensor;
+pub mod topk;
+pub mod train;
+pub mod util;

@@ -1,0 +1,187 @@
+//! `detonation` — the launcher CLI.
+//!
+//! Subcommands:
+//!   train        run one training experiment (flags mirror config keys)
+//!   validate     cross-validate the Rust DCT extraction against the AOT
+//!                Pallas artifact (L1↔L3 numerics check)
+//!   models       list available artifacts
+//!   help
+//!
+//! Example:
+//!   detonation train --model lm-tiny --nodes 2 --accels 2 \
+//!       --opt demo-sgd --repl demo:1/8 --steps 200 --val-every 50
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::{results_root, runtime, Experiment};
+use detonation::util::argparse::ArgParser;
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd {
+        "train" => cmd_train(rest),
+        "validate" => cmd_validate(rest),
+        "models" => cmd_models(rest),
+        _ => {
+            println!(
+                "detonation — DeToNATION / FlexDeMo reproduction\n\n\
+                 USAGE: detonation <train|validate|models> [flags]\n\n\
+                 train     run one experiment (see `detonation train --help`)\n\
+                 validate  cross-check Rust DCT vs the Pallas artifact\n\
+                 models    list artifacts in the artifacts directory\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn train_parser() -> ArgParser {
+    ArgParser::new("detonation train", "run one FlexDeMo training experiment")
+        .opt("model", "lm-tiny", "artifact name (see `detonation models`)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("nodes", "2", "number of nodes (replication width)")
+        .opt("accels", "2", "accelerators per node (sharding width)")
+        .opt("opt", "demo-sgd", "optimizer: demo-sgd|decoupled-adamw|adamw|sgd")
+        .opt(
+            "repl",
+            "demo:1/8",
+            "replicator: demo:1/8|random:1/16|striding:1/8|diloco:8|full (+ :nosign :bf16 :chunk=N)",
+        )
+        .opt("lr", "0.001", "learning rate")
+        .opt("warmup", "0", "linear warmup steps")
+        .opt("steps", "100", "training steps")
+        .opt("seed", "3383", "experiment seed")
+        .opt("val-every", "0", "validate every N steps (0 = never)")
+        .opt("val-batches", "8", "validation batches")
+        .opt("inter-mbps", "0", "throttle inter-node bandwidth (Mbps, 0 = HPC default)")
+        .opt("streams", "0", "distinct gradient streams (0 = world size)")
+        .opt("name", "cli", "experiment name (results/<name>/)")
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let args = train_parser().parse(argv);
+    let mut cfg = ExperimentConfig::default();
+    for key in [
+        "model", "artifacts", "nodes", "accels", "opt", "repl", "lr", "warmup", "steps", "seed",
+        "val-every", "val-batches", "streams",
+    ] {
+        cfg.apply_arg(key, args.str(key))?;
+    }
+    let mbps: f64 = args.f64("inter-mbps");
+    if mbps > 0.0 {
+        cfg.apply_arg("inter-mbps", args.str("inter-mbps"))?;
+    }
+    let rt = runtime()?;
+    let mut exp = Experiment::new(args.str("name"), &results_root());
+    let run = exp.run(&rt, &cfg, None)?;
+    println!(
+        "final loss {:.4}{}  sim time {}  inter-node {}",
+        run.final_loss().unwrap_or(f64::NAN),
+        run.final_val_loss()
+            .map(|v| format!("  val {v:.4}"))
+            .unwrap_or_default(),
+        detonation::util::fmt_secs(run.total_sim_time()),
+        detonation::util::fmt_bytes(run.total_inter_bytes()),
+    );
+    println!("{}", exp.finish()?);
+    Ok(())
+}
+
+fn cmd_validate(argv: &[String]) -> Result<()> {
+    let args = ArgParser::new(
+        "detonation validate",
+        "cross-validate Rust DCT extraction against the AOT Pallas artifact",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .parse(argv);
+    let rt = runtime()?;
+    let dir = std::path::PathBuf::from(args.str("artifacts"));
+    let mut checked = 0;
+    for (len, chunk, k, sign) in [
+        (16384usize, 64usize, 8usize, true),
+        (16384, 64, 8, false),
+        (16384, 32, 4, true),
+        (16384, 128, 16, true),
+    ] {
+        let name = format!(
+            "dct_extract_{len}_c{chunk}_k{k}{}",
+            if sign { "_sign" } else { "" }
+        );
+        let path = dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            println!("skip {name} (artifact missing)");
+            continue;
+        }
+        let art = rt.load_hlo(&path)?;
+        let mut rng = detonation::util::rng::Rng::new(42);
+        let m: Vec<f32> = (0..len).map(|_| rng.normal_f32(1.0)).collect();
+        let outs = art.execute_vec(&m)?;
+        anyhow::ensure!(outs.len() == 2, "{name}: expected (q, m_next)");
+
+        // Rust-native extraction (the hot path implementation).
+        let mut buf = m.clone();
+        let mut repl = detonation::replicate::DemoReplicator::new(
+            chunk,
+            k,
+            sign,
+            detonation::tensor::Dtype::F32,
+        );
+        use detonation::replicate::{ReplCtx, Replicator};
+        let ctx = ReplCtx {
+            step: 0,
+            shard: 0,
+            seed: 0,
+        };
+        let (q_rust, _) = repl.extract(&ctx, &mut buf);
+        let max_q = outs[0]
+            .iter()
+            .zip(&q_rust)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let max_m = outs[1]
+            .iter()
+            .zip(&buf)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        anyhow::ensure!(
+            max_q < 2e-3 && max_m < 2e-3,
+            "{name}: mismatch q={max_q} m={max_m}"
+        );
+        println!("{name}: OK (max |Δq|={max_q:.2e}, max |Δm|={max_m:.2e})");
+        checked += 1;
+    }
+    anyhow::ensure!(checked > 0, "no extraction artifacts found in {dir:?}");
+    println!("cross-validation passed for {checked} artifact(s)");
+    Ok(())
+}
+
+fn cmd_models(argv: &[String]) -> Result<()> {
+    let args = ArgParser::new("detonation models", "list available model artifacts")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse(argv);
+    let dir = std::path::PathBuf::from(args.str("artifacts"));
+    let mut found = false;
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().to_string())
+        .collect();
+    entries.sort();
+    for name in entries {
+        if let Some(base) = name.strip_suffix(".meta.json") {
+            let meta = std::fs::read_to_string(dir.join(&name))?;
+            let m = detonation::runtime::Manifest::parse(&meta)?;
+            println!(
+                "{base:<16} family={:<8} params={:>12} batch={}x{}",
+                m.family, m.param_count, m.batch, m.seq
+            );
+            found = true;
+        }
+    }
+    if !found {
+        println!("no artifacts in {dir:?} — run `make artifacts`");
+    }
+    Ok(())
+}

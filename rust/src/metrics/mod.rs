@@ -1,0 +1,242 @@
+//! Metrics collection + CSV/JSON sinks. Every figure bench writes its
+//! series through this module into `results/<experiment>/`.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One training-step record.
+#[derive(Clone, Debug)]
+pub struct StepRow {
+    pub step: u64,
+    /// Simulated wall-clock at the *end* of this step (s).
+    pub sim_time: f64,
+    /// Mean train loss across ranks.
+    pub loss: f64,
+    /// Inter-node bytes sent this step (whole cluster).
+    pub inter_bytes: u64,
+    /// Intra-node bytes this step.
+    pub intra_bytes: u64,
+    /// Real wall time spent computing this step (profiling only).
+    pub wall_time: f64,
+}
+
+/// One validation record.
+#[derive(Clone, Debug)]
+pub struct ValRow {
+    pub step: u64,
+    pub sim_time: f64,
+    pub loss: f64,
+}
+
+/// A finished run's full series.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub label: String,
+    pub steps: Vec<StepRow>,
+    pub val: Vec<ValRow>,
+}
+
+impl RunMetrics {
+    pub fn new(label: impl Into<String>) -> RunMetrics {
+        RunMetrics {
+            label: label.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.steps.last().map(|r| r.loss)
+    }
+
+    pub fn final_val_loss(&self) -> Option<f64> {
+        self.val.last().map(|r| r.loss)
+    }
+
+    pub fn total_sim_time(&self) -> f64 {
+        self.steps.last().map(|r| r.sim_time).unwrap_or(0.0)
+    }
+
+    pub fn total_inter_bytes(&self) -> u64 {
+        self.steps.iter().map(|r| r.inter_bytes).sum()
+    }
+
+    /// Mean simulated time per step.
+    pub fn mean_step_time(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.total_sim_time() / self.steps.len() as f64
+    }
+
+    /// Mean loss over the last `n` steps (smoother end-of-run comparison).
+    pub fn tail_loss(&self, n: usize) -> Option<f64> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn write_csv(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let safe = self.label.replace('/', "-");
+        let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
+        writeln!(f, "step,sim_time,loss,inter_bytes,intra_bytes,wall_time")?;
+        for r in &self.steps {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{},{},{:.6}",
+                r.step, r.sim_time, r.loss, r.inter_bytes, r.intra_bytes, r.wall_time
+            )?;
+        }
+        if !self.val.is_empty() {
+            let mut f = std::fs::File::create(dir.join(format!("{safe}.val.csv")))?;
+            writeln!(f, "step,sim_time,loss")?;
+            for r in &self.val {
+                writeln!(f, "{},{:.6},{:.6}", r.step, r.sim_time, r.loss)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("steps", Json::Num(self.steps.len() as f64)),
+            (
+                "final_loss",
+                self.final_loss().map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "final_val_loss",
+                self.final_val_loss().map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("sim_time_s", Json::Num(self.total_sim_time())),
+            ("mean_step_time_s", Json::Num(self.mean_step_time())),
+            (
+                "inter_bytes_total",
+                Json::Num(self.total_inter_bytes() as f64),
+            ),
+        ])
+    }
+}
+
+/// ASCII sparkline of a loss series (bench output readability).
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    if values.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let width = width.max(1).min(values.len());
+    let mut out = String::with_capacity(width * 3);
+    for w in 0..width {
+        // Evenly sample, always including the first and last values.
+        let i = if width == 1 {
+            0
+        } else {
+            (w as f64 * (values.len() - 1) as f64 / (width - 1) as f64).round() as usize
+        };
+        let v = values[i];
+        let idx = (((v - lo) / span) * 7.0).round() as usize;
+        out.push(BARS[idx.min(7)]);
+    }
+    out
+}
+
+/// Group several runs into one comparison table (one row per run).
+pub fn comparison_table(runs: &[&RunMetrics]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>10} {:>10} {:>12} {:>14} {:>12}\n",
+        "run", "loss", "val_loss", "sim_time", "inter_bytes", "t/step"
+    ));
+    for r in runs {
+        out.push_str(&format!(
+            "{:<28} {:>10} {:>10} {:>12} {:>14} {:>12}\n",
+            r.label,
+            r.final_loss()
+                .map(|l| format!("{l:.4}"))
+                .unwrap_or_else(|| "-".into()),
+            r.final_val_loss()
+                .map(|l| format!("{l:.4}"))
+                .unwrap_or_else(|| "-".into()),
+            crate::util::fmt_secs(r.total_sim_time()),
+            crate::util::fmt_bytes(r.total_inter_bytes()),
+            crate::util::fmt_secs(r.mean_step_time()),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(label: &str, n: u64) -> RunMetrics {
+        let mut m = RunMetrics::new(label);
+        for s in 0..n {
+            m.steps.push(StepRow {
+                step: s,
+                sim_time: (s + 1) as f64 * 0.5,
+                loss: 5.0 - s as f64 * 0.1,
+                inter_bytes: 100,
+                intra_bytes: 200,
+                wall_time: 0.01,
+            });
+        }
+        m.val.push(ValRow {
+            step: n,
+            sim_time: n as f64 * 0.5,
+            loss: 4.2,
+        });
+        m
+    }
+
+    #[test]
+    fn aggregates() {
+        let m = mk("x", 10);
+        assert_eq!(m.final_loss(), Some(5.0 - 0.9));
+        assert_eq!(m.final_val_loss(), Some(4.2));
+        assert_eq!(m.total_inter_bytes(), 1000);
+        assert!((m.total_sim_time() - 5.0).abs() < 1e-9);
+        assert!((m.mean_step_time() - 0.5).abs() < 1e-9);
+        let t = m.tail_loss(3).unwrap();
+        assert!((t - (4.3 + 4.2 + 4.1) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_written_and_parseable() {
+        let dir = std::env::temp_dir().join("detonation-metrics-test");
+        let m = mk("a/b", 5);
+        m.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("a-b.steps.csv")).unwrap();
+        assert!(text.starts_with("step,"));
+        assert_eq!(text.lines().count(), 6);
+        let val = std::fs::read_to_string(dir.join("a-b.val.csv")).unwrap();
+        assert_eq!(val.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparkline_monotone_series() {
+        let vals: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let s = sparkline(&vals, 10);
+        assert_eq!(s.chars().count(), 10);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+        assert_eq!(sparkline(&[], 10), "");
+    }
+
+    #[test]
+    fn table_contains_all_runs() {
+        let a = mk("run-a", 3);
+        let b = mk("run-b", 3);
+        let t = comparison_table(&[&a, &b]);
+        assert!(t.contains("run-a") && t.contains("run-b"));
+    }
+}

@@ -1,0 +1,116 @@
+//! AdamW (Loshchilov & Hutter 2019) — the conventional full-sync baseline.
+//!
+//! Data flow differs from the decoupled optimizers: the replication buffer
+//! is the *raw gradient* (overwritten each step), the Full replicator
+//! averages it across nodes, and the Adam moments are driven by the
+//! synchronized gradient inside [`Optimizer::apply`]. Paired with
+//! `ReplSpec::Full` this reproduces the paper's "Hybrid-FSDP + AdamW"
+//! red baseline curve (Figs 1, 3–6).
+
+use super::Optimizer;
+
+pub struct AdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m1: Vec<f32>,
+    m2: Vec<f32>,
+    buffer: Vec<f32>,
+    t: u64,
+}
+
+impl AdamW {
+    pub fn new(shard_len: usize, beta1: f32, beta2: f32, weight_decay: f32) -> AdamW {
+        AdamW {
+            beta1,
+            beta2,
+            eps: 1e-8,
+            weight_decay,
+            m1: vec![0.0; shard_len],
+            m2: vec![0.0; shard_len],
+            buffer: vec![0.0; shard_len],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn name(&self) -> String {
+        format!("adamw(b1={},b2={})", self.beta1, self.beta2)
+    }
+
+    fn accumulate(&mut self, grad: &[f32]) {
+        // Baseline semantics: ship the gradient itself; no decoupled state.
+        self.buffer.copy_from_slice(grad);
+    }
+
+    fn buffer_mut(&mut self) -> &mut [f32] {
+        &mut self.buffer
+    }
+
+    fn apply(&mut self, params: &mut [f32], q: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), q.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = q[i];
+            self.m1[i] = self.beta1 * self.m1[i] + (1.0 - self.beta1) * g;
+            self.m2[i] = self.beta2 * self.m2[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m1[i] / bc1;
+            let vhat = self.m2[i] / bc2;
+            if self.weight_decay > 0.0 {
+                params[i] *= 1.0 - lr * self.weight_decay;
+            }
+            params[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn state_bytes(&self) -> u64 {
+        ((self.m1.len() + self.m2.len()) * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_is_overwritten_not_accumulated() {
+        let mut o = AdamW::new(2, 0.9, 0.999, 0.0);
+        o.accumulate(&[1.0, 2.0]);
+        o.accumulate(&[3.0, 4.0]);
+        assert_eq!(o.buffer_mut(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn first_apply_steps_by_lr() {
+        let mut o = AdamW::new(1, 0.9, 0.999, 0.0);
+        let mut p = vec![1.0f32];
+        o.apply(&mut p, &[10.0], 0.001);
+        // Adam's first step is ≈ lr regardless of gradient scale.
+        assert!((p[0] - 0.999).abs() < 1e-4, "{}", p[0]);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(x) = (x-3)², grad = 2(x-3)
+        let mut o = AdamW::new(1, 0.9, 0.999, 0.0);
+        let mut x = vec![0.0f32];
+        for _ in 0..2000 {
+            let g = 2.0 * (x[0] - 3.0);
+            o.apply(&mut x, &[g], 0.05);
+        }
+        assert!((x[0] - 3.0).abs() < 0.05, "{}", x[0]);
+    }
+
+    #[test]
+    fn decoupled_weight_decay_not_in_moments() {
+        // With zero gradient, params still shrink by wd but moments stay 0.
+        let mut o = AdamW::new(1, 0.9, 0.999, 0.1);
+        let mut p = vec![5.0f32];
+        o.apply(&mut p, &[0.0], 0.1);
+        assert!((p[0] - 5.0 * 0.99).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,104 @@
+//! DeMo-SGD: SGD with *decoupled* momentum (Peng et al. 2024; the paper's
+//! default underlying optimizer).
+//!
+//! The momentum buffer `m ← βm + Δ` is the replication buffer: replicators
+//! extract the fast components out of it (leaving the residual to keep
+//! accumulating — the "controlled divergence" mechanism), and the final
+//! synchronized Q drives a plain SGD update `θ ← θ − η·Q`.
+
+use super::Optimizer;
+
+pub struct DemoSgd {
+    pub beta: f32,
+    pub weight_decay: f32,
+    momentum: Vec<f32>,
+}
+
+impl DemoSgd {
+    pub fn new(shard_len: usize, beta: f32, weight_decay: f32) -> DemoSgd {
+        assert!((0.0..1.0).contains(&beta), "beta {beta}");
+        DemoSgd {
+            beta,
+            weight_decay,
+            momentum: vec![0.0; shard_len],
+        }
+    }
+}
+
+impl Optimizer for DemoSgd {
+    fn name(&self) -> String {
+        format!("demo-sgd(b={})", self.beta)
+    }
+
+    fn accumulate(&mut self, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.momentum.len());
+        // m ← βm + Δ  (Algorithm 1; note: *not* (1−β)-scaled — DeMo keeps
+        // the raw gradient magnitude so extraction thresholds stay scale-
+        // comparable across β).
+        for (m, g) in self.momentum.iter_mut().zip(grad) {
+            *m = self.beta * *m + g;
+        }
+    }
+
+    fn buffer_mut(&mut self) -> &mut [f32] {
+        &mut self.momentum
+    }
+
+    fn apply(&mut self, params: &mut [f32], q: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), q.len());
+        if self.weight_decay > 0.0 {
+            let decay = 1.0 - lr * self.weight_decay;
+            for p in params.iter_mut() {
+                *p *= decay;
+            }
+        }
+        crate::tensor::axpy(params, -lr, q);
+    }
+
+    fn state_bytes(&self) -> u64 {
+        (self.momentum.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_accumulates_geometrically() {
+        let mut o = DemoSgd::new(3, 0.5, 0.0);
+        o.accumulate(&[1.0, 2.0, 4.0]);
+        o.accumulate(&[1.0, 2.0, 4.0]);
+        // m = 0.5·g + g = 1.5·g
+        assert_eq!(o.buffer_mut(), &[1.5, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn apply_is_sgd_step() {
+        let mut o = DemoSgd::new(2, 0.9, 0.0);
+        let mut p = vec![1.0f32, -1.0];
+        o.apply(&mut p, &[0.5, -0.5], 0.1);
+        assert_eq!(p, vec![0.95, -0.95]);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut o = DemoSgd::new(1, 0.9, 0.1);
+        let mut p = vec![10.0f32];
+        o.apply(&mut p, &[0.0], 0.1);
+        assert!((p[0] - 9.9).abs() < 1e-5);
+    }
+
+    #[test]
+    fn residual_left_by_replicator_keeps_accumulating() {
+        // Simulates the decoupling contract: replicator zeroes part of the
+        // buffer; later gradients still fold in on top of the residual.
+        let mut o = DemoSgd::new(2, 0.9, 0.0);
+        o.accumulate(&[1.0, 1.0]);
+        o.buffer_mut()[0] = 0.0; // extracted
+        o.accumulate(&[1.0, 1.0]);
+        let b = o.buffer_mut();
+        assert!((b[0] - 1.0).abs() < 1e-6);
+        assert!((b[1] - 1.9).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,60 @@
+//! Plain SGD on the synchronized gradient — ablation arm ("we
+//! differentiate [DeMo-SGD] as it accumulates momenta"; this one doesn't).
+
+use super::Optimizer;
+
+pub struct Sgd {
+    pub weight_decay: f32,
+    buffer: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(shard_len: usize, weight_decay: f32) -> Sgd {
+        Sgd {
+            weight_decay,
+            buffer: vec![0.0; shard_len],
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        "sgd".to_string()
+    }
+
+    fn accumulate(&mut self, grad: &[f32]) {
+        self.buffer.copy_from_slice(grad);
+    }
+
+    fn buffer_mut(&mut self) -> &mut [f32] {
+        &mut self.buffer
+    }
+
+    fn apply(&mut self, params: &mut [f32], q: &[f32], lr: f32) {
+        if self.weight_decay > 0.0 {
+            let decay = 1.0 - lr * self.weight_decay;
+            for p in params.iter_mut() {
+                *p *= decay;
+            }
+        }
+        crate::tensor::axpy(params, -lr, q);
+    }
+
+    fn state_bytes(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stateless_step() {
+        let mut o = Sgd::new(2, 0.0);
+        let mut p = vec![1.0f32, 2.0];
+        o.apply(&mut p, &[1.0, -1.0], 0.5);
+        assert_eq!(p, vec![0.5, 2.5]);
+        assert_eq!(o.state_bytes(), 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! DeMo replication: chunked DCT-II → per-chunk top-k → (sign) →
+//! all-gather — the selector from Peng et al. 2024, generalized here to
+//! operate on FSDP shards (FlexDeMo).
+//!
+//! Wire format: per shard, the global coefficient indices (u32) plus the
+//! selected coefficient values (sign-packed ternary or dtype-quantized).
+//! Unlike Random/Striding, the indices depend on the *data* and must be
+//! shipped — this is exactly the 2× bandwidth handicap the paper measures
+//! (Fig 10: "DeMo transferring twice the amount of data, at the same
+//! compression rate").
+
+use super::{ReplCtx, Replicator};
+use crate::compress::Payload;
+use crate::dct::Dct;
+use crate::tensor::Dtype;
+use crate::topk;
+
+#[derive(Debug)]
+pub struct DemoReplicator {
+    pub chunk: usize,
+    pub k: usize,
+    pub sign: bool,
+    pub dtype: Dtype,
+    is_packed: bool,
+}
+
+impl DemoReplicator {
+    pub fn new(chunk: usize, k: usize, sign: bool, dtype: Dtype) -> DemoReplicator {
+        assert!(k >= 1 && k <= chunk, "k={k} chunk={chunk}");
+        DemoReplicator {
+            chunk,
+            k,
+            sign,
+            dtype,
+            is_packed: false,
+        }
+    }
+
+    /// Builder: enable the 2-bit ternary wire extension (see
+    /// `compress::Payload::packed`).
+    pub fn packed(mut self, packed: bool) -> Self {
+        self.is_packed = packed;
+        self
+    }
+
+    fn mk_payload(&self, indices: Option<Vec<u32>>, values: Vec<f32>) -> Payload {
+        let p = Payload::new(indices, values, self.dtype, self.sign);
+        if self.is_packed && self.sign {
+            p.with_packing()
+        } else {
+            p
+        }
+    }
+
+
+    /// Paper parameterization: compression rate = fraction of momentum
+    /// components selected (k/chunk). Fig 8's TopK and Fig 11's chunk-size
+    /// sweeps fix one and vary the other.
+    pub fn from_rate(rate: f64, chunk: usize, sign: bool, dtype: Dtype) -> DemoReplicator {
+        let k = ((chunk as f64 * rate).round() as usize).clamp(1, chunk);
+        DemoReplicator::new(chunk, k, sign, dtype)
+    }
+
+    /// DCT of the buffer → (indices, kept values), and subtract the kept
+    /// components from the buffer (residual momentum).
+    fn transform_select(&self, buf: &mut [f32]) -> (Vec<u32>, Vec<f32>) {
+        let d = Dct::plan(self.chunk);
+        let mut coeffs = vec![0.0f32; buf.len()];
+        d.forward_chunked(buf, &mut coeffs);
+        let indices = topk::topk_per_chunk(&coeffs, self.chunk, self.k);
+        let values: Vec<f32> = indices.iter().map(|&i| coeffs[i as usize]).collect();
+        // Residual: zero all but the kept coefficients, inverse-transform
+        // the kept mass, subtract from the buffer.
+        let mut kept = vec![0.0f32; buf.len()];
+        for (&i, &v) in indices.iter().zip(&values) {
+            kept[i as usize] = v;
+        }
+        let mut removed = vec![0.0f32; buf.len()];
+        d.inverse_chunked(&kept, &mut removed);
+        for (b, r) in buf.iter_mut().zip(&removed) {
+            *b -= r;
+        }
+        (indices, values)
+    }
+}
+
+impl Replicator for DemoReplicator {
+    fn name(&self) -> String {
+        format!(
+            "demo-k{}c{}{}{}",
+            self.k,
+            self.chunk,
+            if self.sign { "-sign" } else { "" },
+            if self.dtype != Dtype::F32 {
+                format!("-{}", self.dtype.name())
+            } else {
+                String::new()
+            }
+        )
+    }
+
+    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
+        assert_eq!(
+            buf.len() % self.chunk,
+            0,
+            "shard {} not divisible by chunk {}",
+            buf.len(),
+            self.chunk
+        );
+        let (indices, values) = self.transform_select(buf);
+        let payload = self.mk_payload(Some(indices), values);
+        let mut q_local = vec![0.0f32; buf.len()];
+        self.decode(ctx, &payload, &mut q_local);
+        (q_local, Some(payload))
+    }
+
+    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
+        let d = Dct::plan(self.chunk);
+        let mut coeffs = vec![0.0f32; out.len()];
+        let indices = payload
+            .indices
+            .as_ref()
+            .expect("demo payload carries indices");
+        for (&i, &v) in indices.iter().zip(&payload.values) {
+            coeffs[i as usize] = v;
+        }
+        d.inverse_chunked(&coeffs, out);
+    }
+
+    fn rate(&self) -> f64 {
+        self.k as f64 / self.chunk as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{approx_slice_eq, prop_assert, proptest};
+    use crate::util::rng::Rng;
+
+    fn ctx() -> ReplCtx {
+        ReplCtx {
+            step: 0,
+            shard: 0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn extract_reduces_buffer_energy() {
+        let mut rng = Rng::new(2);
+        let mut buf: Vec<f32> = (0..512).map(|_| rng.normal_f32(1.0)).collect();
+        let before: f64 = buf.iter().map(|&x| (x as f64).powi(2)).sum();
+        let mut r = DemoReplicator::new(64, 8, true, Dtype::F32);
+        let (_q, p) = r.extract(&ctx(), &mut buf);
+        assert!(p.is_some());
+        let after: f64 = buf.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(after < before, "{after} !< {before}");
+    }
+
+    #[test]
+    fn residual_plus_kept_reconstructs_nosign() {
+        // Without sign, decode(payload) + residual == original buffer.
+        proptest(24, |g| {
+            let chunk = g.pow2(3, 7);
+            let n_chunks = g.usize(1, 6);
+            let k = g.usize(1, chunk);
+            let orig = g.vec_normal(chunk * n_chunks, 1.0);
+            let mut buf = orig.clone();
+            let mut r = DemoReplicator::new(chunk, k, false, Dtype::F32);
+            let (q, _) = r.extract(&ctx(), &mut buf);
+            let recon: Vec<f32> = buf.iter().zip(&q).map(|(r, q)| r + q).collect();
+            prop_assert(
+                approx_slice_eq(&recon, &orig, 2e-3),
+                format!("chunk={chunk} k={k}"),
+            );
+        });
+    }
+
+    #[test]
+    fn k_equals_chunk_extracts_everything() {
+        let mut rng = Rng::new(3);
+        let mut buf: Vec<f32> = (0..256).map(|_| rng.normal_f32(1.0)).collect();
+        let mut r = DemoReplicator::new(64, 64, false, Dtype::F32);
+        let _ = r.extract(&ctx(), &mut buf);
+        assert!(buf.iter().all(|&x| x.abs() < 1e-4));
+    }
+
+    #[test]
+    fn payload_carries_k_per_chunk_indices() {
+        let mut rng = Rng::new(4);
+        let mut buf: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
+        let mut r = DemoReplicator::new(128, 16, true, Dtype::F32);
+        let (_, p) = r.extract(&ctx(), &mut buf);
+        let p = p.unwrap();
+        assert_eq!(p.indices.as_ref().unwrap().len(), 8 * 16);
+        assert_eq!(p.values.len(), 8 * 16);
+        // signed: values ternary
+        assert!(p.values.iter().all(|&v| v == 1.0 || v == -1.0 || v == 0.0));
+    }
+
+    #[test]
+    fn from_rate_picks_k() {
+        let r = DemoReplicator::from_rate(1.0 / 8.0, 64, true, Dtype::F32);
+        assert_eq!(r.k, 8);
+        let r = DemoReplicator::from_rate(1.0 / 128.0, 64, true, Dtype::F32);
+        assert_eq!(r.k, 1); // clamped to at least one component
+        assert!((r.rate() - 1.0 / 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_matches_q_local() {
+        let mut rng = Rng::new(5);
+        let mut buf: Vec<f32> = (0..256).map(|_| rng.normal_f32(1.0)).collect();
+        let mut r = DemoReplicator::new(32, 4, true, Dtype::F32);
+        let c = ctx();
+        let (q, p) = r.extract(&c, &mut buf);
+        let mut out = vec![0.0f32; 256];
+        r.decode(&c, &p.unwrap(), &mut out);
+        assert_eq!(q, out);
+    }
+
+    #[test]
+    fn matches_python_oracle_structure() {
+        // The sign payload decodes to a vector whose DCT is ternary with
+        // exactly k nonzeros per chunk (mirrors the python kernel test
+        // test_extract_transmit_is_ternary_decode_when_signed).
+        let mut rng = Rng::new(6);
+        let mut buf: Vec<f32> = (0..512).map(|_| rng.normal_f32(1.0)).collect();
+        let mut r = DemoReplicator::new(64, 8, true, Dtype::F32);
+        let c = ctx();
+        let (q, _) = r.extract(&c, &mut buf);
+        let d = Dct::plan(64);
+        let mut coeffs = vec![0.0f32; 512];
+        d.forward_chunked(&q, &mut coeffs);
+        for ch in coeffs.chunks_exact(64) {
+            let nz = ch.iter().filter(|v| v.abs() > 1e-4).count();
+            assert_eq!(nz, 8);
+            for &v in ch.iter().filter(|v| v.abs() > 1e-4) {
+                assert!((v.abs() - 1.0).abs() < 1e-3, "{v}");
+            }
+        }
+    }
+}

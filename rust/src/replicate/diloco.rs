@@ -1,0 +1,217 @@
+//! DiLoCo replication (Douillard et al. 2023, recast as a DeToNATION
+//! replication scheme): workers step locally and synchronize every n-th
+//! optimization step.
+//!
+//! Mechanics here follow the federated-averaging identity: a worker that
+//! applied local updates δ_i since the last sync can jump onto the
+//! averaged trajectory by applying `mean_j(δ_j) − δ_i` at the sync point.
+//! The replicator therefore
+//! * on non-sync steps: extracts the whole buffer as a *local* update
+//!   (no payload) and accumulates it into `delta_acc`;
+//! * on sync steps: ships `delta_acc + q_t` and finalizes with
+//!   `mean − delta_acc_own` so every rank lands on the average trajectory
+//!   (exact for unsigned f32; approximate under sign/dtype quantization,
+//!   which the paper also applies).
+//!
+//! Average bandwidth = full buffer / period → "compression rate" 1/period.
+
+use super::{ReplCtx, Replicator};
+use crate::compress::Payload;
+use crate::tensor::Dtype;
+
+pub struct DiLoCoReplicator {
+    pub period: u64,
+    pub sign: bool,
+    pub dtype: Dtype,
+    is_packed: bool,
+    /// Sum of locally-applied updates since the last synchronization.
+    delta_acc: Vec<f32>,
+}
+
+impl DiLoCoReplicator {
+    pub fn new(period: u64, sign: bool, dtype: Dtype, shard_len: usize) -> DiLoCoReplicator {
+        assert!(period >= 1);
+        DiLoCoReplicator {
+            period,
+            sign,
+            dtype,
+            is_packed: false,
+            delta_acc: vec![0.0; shard_len],
+        }
+    }
+
+    /// Builder: enable the 2-bit ternary wire extension (see
+    /// `compress::Payload::packed`).
+    pub fn packed(mut self, packed: bool) -> Self {
+        self.is_packed = packed;
+        self
+    }
+
+    fn mk_payload(&self, indices: Option<Vec<u32>>, values: Vec<f32>) -> Payload {
+        let p = Payload::new(indices, values, self.dtype, self.sign);
+        if self.is_packed && self.sign {
+            p.with_packing()
+        } else {
+            p
+        }
+    }
+
+
+    pub fn is_sync_step(&self, step: u64) -> bool {
+        (step + 1) % self.period == 0
+    }
+}
+
+impl Replicator for DiLoCoReplicator {
+    fn name(&self) -> String {
+        format!(
+            "diloco-n{}{}",
+            self.period,
+            if self.sign { "-sign" } else { "" }
+        )
+    }
+
+    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
+        assert_eq!(buf.len(), self.delta_acc.len());
+        // Local step: the whole buffer becomes this step's update.
+        let q_local: Vec<f32> = buf.to_vec();
+        buf.fill(0.0);
+        crate::tensor::axpy(&mut self.delta_acc, 1.0, &q_local);
+        if self.is_sync_step(ctx.step) {
+            let payload = self.mk_payload(None, self.delta_acc.clone());
+            (q_local, Some(payload))
+        } else {
+            (q_local, None)
+        }
+    }
+
+    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
+        out.copy_from_slice(&payload.values);
+    }
+
+    fn finalize(&mut self, ctx: &ReplCtx, q_local: Vec<f32>, mean: Option<Vec<f32>>) -> Vec<f32> {
+        match mean {
+            None => q_local, // local-only step
+            Some(mean_delta) => {
+                // Jump from the local trajectory onto the averaged one:
+                //   θ has already absorbed (delta_acc − q_local); applying
+                //   q_final = mean(δ) − delta_acc + q_local lands θ on
+                //   θ_start − η·mean(δ) (for the SGD-style apply θ−=η·q).
+                debug_assert!(self.is_sync_step(ctx.step));
+                let mut q = mean_delta;
+                crate::tensor::axpy(&mut q, -1.0, &self.delta_acc);
+                crate::tensor::axpy(&mut q, 1.0, &q_local);
+                self.delta_acc.fill(0.0);
+                q
+            }
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        1.0 / self.period as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replicate::mean_decoded;
+    use crate::util::proptest::{approx_slice_eq, prop_assert, proptest};
+
+    fn ctx(step: u64) -> ReplCtx {
+        ReplCtx {
+            step,
+            shard: 0,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn syncs_exactly_every_period() {
+        let mut r = DiLoCoReplicator::new(4, false, Dtype::F32, 8);
+        let mut synced = Vec::new();
+        for step in 0..12 {
+            let mut buf = vec![1.0f32; 8];
+            let (_, p) = r.extract(&ctx(step), &mut buf);
+            if let Some(p) = p {
+                synced.push(step);
+                // keep state consistent for the next window
+                let _ = r.finalize(&ctx(step), vec![1.0; 8], Some(p.values));
+            }
+        }
+        assert_eq!(synced, vec![3, 7, 11]);
+    }
+
+    #[test]
+    fn local_steps_apply_whole_buffer() {
+        let mut r = DiLoCoReplicator::new(10, false, Dtype::F32, 4);
+        let mut buf = vec![2.0f32, -1.0, 0.5, 0.0];
+        let (q, p) = r.extract(&ctx(0), &mut buf);
+        assert!(p.is_none());
+        assert_eq!(q, vec![2.0, -1.0, 0.5, 0.0]);
+        assert_eq!(buf, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn two_workers_land_on_average_trajectory() {
+        // Simulate 2 ranks over one sync window with distinct updates and
+        // check the federated-averaging identity: Σ applied updates equals
+        // the mean of the two workers' total displacements.
+        proptest(16, |g| {
+            let period = g.usize(1, 6) as u64;
+            let len = g.usize(1, 40);
+            let mut ra = DiLoCoReplicator::new(period, false, Dtype::F32, len);
+            let mut rb = DiLoCoReplicator::new(period, false, Dtype::F32, len);
+            let mut applied_a = vec![0.0f32; len];
+            let mut applied_b = vec![0.0f32; len];
+            let mut total_a = vec![0.0f32; len];
+            let mut total_b = vec![0.0f32; len];
+            for step in 0..period {
+                let ua = g.vec_normal(len, 1.0);
+                let ub = g.vec_normal(len, 1.0);
+                crate::tensor::axpy(&mut total_a, 1.0, &ua);
+                crate::tensor::axpy(&mut total_b, 1.0, &ub);
+                let mut bufa = ua.clone();
+                let mut bufb = ub.clone();
+                let c = ctx(step);
+                let (qa, pa) = ra.extract(&c, &mut bufa);
+                let (qb, pb) = rb.extract(&c, &mut bufb);
+                let (fa, fb) = match (pa, pb) {
+                    (Some(pa), Some(pb)) => {
+                        let payloads = vec![pa, pb];
+                        let ma = mean_decoded(&ra, &c, &payloads, len);
+                        let mb = ma.clone();
+                        (
+                            ra.finalize(&c, qa, Some(ma)),
+                            rb.finalize(&c, qb, Some(mb)),
+                        )
+                    }
+                    (None, None) => (ra.finalize(&c, qa, None), rb.finalize(&c, qb, None)),
+                    _ => panic!("ranks must agree on sync steps"),
+                };
+                crate::tensor::axpy(&mut applied_a, 1.0, &fa);
+                crate::tensor::axpy(&mut applied_b, 1.0, &fb);
+            }
+            // After the window both ranks applied the same total: the mean.
+            let mean: Vec<f32> = total_a
+                .iter()
+                .zip(&total_b)
+                .map(|(a, b)| 0.5 * (a + b))
+                .collect();
+            prop_assert(
+                approx_slice_eq(&applied_a, &mean, 1e-4),
+                format!("rank a off average (period={period})"),
+            );
+            prop_assert(
+                approx_slice_eq(&applied_b, &mean, 1e-4),
+                format!("rank b off average (period={period})"),
+            );
+        });
+    }
+
+    #[test]
+    fn average_bandwidth_matches_rate() {
+        let r = DiLoCoReplicator::new(32, false, Dtype::F32, 64);
+        assert!((r.rate() - 1.0 / 32.0).abs() < 1e-12);
+    }
+}

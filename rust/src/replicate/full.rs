@@ -1,0 +1,122 @@
+//! Full replication: the whole buffer crosses the wire every step.
+//!
+//! With the AdamW optimizer this is the paper's conventional Hybrid-FSDP
+//! baseline (full inter-node gradient synchronization); with sign enabled
+//! it doubles as the "Decoupled-AdamW full replication" arm of Fig 10b.
+
+use super::{ReplCtx, Replicator};
+use crate::compress::Payload;
+use crate::tensor::Dtype;
+
+#[derive(Debug)]
+pub struct FullReplicator {
+    pub sign: bool,
+    pub dtype: Dtype,
+    is_packed: bool,
+}
+
+impl FullReplicator {
+    pub fn new(sign: bool, dtype: Dtype) -> FullReplicator {
+        FullReplicator {
+            sign,
+            dtype,
+            is_packed: false,
+        }
+    }
+
+    /// Builder: enable the 2-bit ternary wire extension (see
+    /// `compress::Payload::packed`).
+    pub fn packed(mut self, packed: bool) -> Self {
+        self.is_packed = packed;
+        self
+    }
+
+    fn mk_payload(&self, indices: Option<Vec<u32>>, values: Vec<f32>) -> Payload {
+        let p = Payload::new(indices, values, self.dtype, self.sign);
+        if self.is_packed && self.sign {
+            p.with_packing()
+        } else {
+            p
+        }
+    }
+
+}
+
+impl Replicator for FullReplicator {
+    fn name(&self) -> String {
+        format!(
+            "full{}{}",
+            if self.sign { "-sign" } else { "" },
+            if self.dtype != Dtype::F32 {
+                format!("-{}", self.dtype.name())
+            } else {
+                String::new()
+            }
+        )
+    }
+
+    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
+        let values = buf.to_vec();
+        buf.fill(0.0);
+        let payload = self.mk_payload(None, values);
+        let mut q_local = vec![0.0f32; payload.values.len()];
+        self.decode(ctx, &payload, &mut q_local);
+        (q_local, Some(payload))
+    }
+
+    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
+        out.copy_from_slice(&payload.values);
+    }
+
+    fn rate(&self) -> f64 {
+        1.0
+    }
+
+    fn gather_mode(&self) -> super::GatherMode {
+        // Dense full-gradient sync rides the ring (NCCL all-reduce), which
+        // is why the conventional baseline *does* scale in Figs 5/6.
+        super::GatherMode::RingAllReduce
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ships_everything() {
+        let mut r = FullReplicator::new(false, Dtype::F32);
+        let mut buf = vec![1.0f32, -2.0, 3.0];
+        let c = ReplCtx {
+            step: 0,
+            shard: 0,
+            seed: 0,
+        };
+        let (q, p) = r.extract(&c, &mut buf);
+        let p = p.unwrap();
+        assert_eq!(q, vec![1.0, -2.0, 3.0]);
+        assert_eq!(buf, vec![0.0; 3]);
+        assert_eq!(p.wire_bytes(), 12);
+        assert!(p.indices.is_none());
+    }
+
+    #[test]
+    fn signed_full_is_ternary() {
+        // Paper wire format: signs as ±1.0 in dtype (4096 B), unless the
+        // ternary packing extension is on (2 bits → 256 B).
+        let c = ReplCtx {
+            step: 0,
+            shard: 0,
+            seed: 0,
+        };
+        let mut r = FullReplicator::new(true, Dtype::F32);
+        let (_, p) = r.extract(&c, &mut vec![0.5f32; 1024]);
+        let p = p.unwrap();
+        assert_eq!(p.wire_bytes(), 4096);
+        assert!(p.values.iter().all(|&v| v == 1.0));
+
+        let mut r = FullReplicator::new(true, Dtype::F32).packed(true);
+        let (_, p) = r.extract(&c, &mut vec![0.5f32; 1024]);
+        assert_eq!(p.unwrap().wire_bytes(), 256); // 2 bits/value
+    }
+}

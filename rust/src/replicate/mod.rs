@@ -1,0 +1,353 @@
+//! Replication schemes — the DeToNATION framework's core abstraction
+//! (paper §Methods, §Replication Schemes).
+//!
+//! A [`Replicator`] decides *which components* of a rank's decoupled
+//! update buffer are exchanged across the replication group R (one group
+//! per shard index, spanning nodes) and *when*. The framework ships:
+//!
+//! | scheme   | selection                         | indices on wire? | when        |
+//! |----------|-----------------------------------|------------------|-------------|
+//! | DeMo     | chunked DCT-II → top-k per chunk  | yes (4 B each)   | every step  |
+//! | Random   | seeded random subset              | no (regenerated) | every step  |
+//! | Striding | every n-th index (rotating offset)| no (regenerated) | every step  |
+//! | DiLoCo   | everything                        | no               | every n-th  |
+//! | Full     | everything                        | no               | every step  |
+//!
+//! Random/Striding regenerate their index sets from `(seed, step, shard)`
+//! on every rank of the R-group — bit-identical by construction (tested) —
+//! which is the paper's "share double the amount of data, on the same
+//! bandwidth" property.
+//!
+//! ## Protocol per training step (per shard / R-group)
+//!
+//! 1. [`Replicator::extract`] pulls this step's components out of the
+//!    buffer (mutating it to keep the *residual* — decoupling) and returns
+//!    `(q_local, Option<Payload>)`;
+//! 2. if `Some(payload)`, the trainer all-gathers payloads across R
+//!    (naive blocking gather — DeMo's primitive, the Fig 6 bottleneck),
+//!    decodes each via [`Replicator::decode`], and averages;
+//! 3. [`Replicator::finalize`] turns `(q_local, mean)` into the update Q
+//!    the optimizer applies. DiLoCo uses this hook to re-synchronize
+//!    parameter trajectories after local-only steps.
+
+mod demo;
+mod diloco;
+mod full;
+mod random;
+mod striding;
+
+pub use demo::DemoReplicator;
+pub use diloco::DiLoCoReplicator;
+pub use full::FullReplicator;
+pub use random::RandomReplicator;
+pub use striding::StridingReplicator;
+
+use crate::compress::Payload;
+use crate::tensor::Dtype;
+
+/// Per-step, per-shard context. Everything a replicator may condition on
+/// must come from here so all ranks of an R-group agree.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplCtx {
+    pub step: u64,
+    /// Shard index (= accelerator index in the hybrid mesh).
+    pub shard: usize,
+    /// Experiment seed (shared across ranks).
+    pub seed: u64,
+}
+
+impl ReplCtx {
+    /// The RNG stream shared by every rank replicating this shard at this
+    /// step (the fixed-seed reproducibility trick from the paper).
+    pub fn shared_rng(&self) -> crate::util::rng::Rng {
+        crate::util::rng::Rng::new(
+            self.seed
+                ^ self.step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (self.shard as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        )
+    }
+}
+
+/// A replication scheme instance (one per rank; may hold rank-local state
+/// such as DiLoCo's displacement accumulator).
+pub trait Replicator: Send {
+    /// Human-readable name used in metrics/figures (e.g. "demo-1/8").
+    fn name(&self) -> String;
+
+    /// Extract this step's update from the buffer (mutating it to the
+    /// residual). Returns the locally-decoded dense update `q_local` and
+    /// the wire payload if this step replicates.
+    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>);
+
+    /// Decode one gathered payload into a dense shard-sized vector
+    /// (`out` is zeroed by the caller).
+    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32]);
+
+    /// Produce the final update from the local extraction and the mean of
+    /// all decoded payloads across R (None when this step didn't sync).
+    /// Default: synchronized mean when present, else the local update.
+    fn finalize(&mut self, _ctx: &ReplCtx, q_local: Vec<f32>, mean: Option<Vec<f32>>) -> Vec<f32> {
+        mean.unwrap_or(q_local)
+    }
+
+    /// Fraction of components selected per replicating step (reporting).
+    fn rate(&self) -> f64;
+
+    /// How payloads cross the replication group. Sparse schemes use DeMo's
+    /// naive blocking all-gather (the Fig 6 non-scaling primitive); the
+    /// Full baseline uses the ring all-reduce NCCL/RCCL would.
+    fn gather_mode(&self) -> GatherMode {
+        GatherMode::NaiveAllGather
+    }
+}
+
+/// Transport algorithm for replication payloads (cost model selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GatherMode {
+    /// Every rank sends its payload to every peer: received volume grows
+    /// linearly with |R| — matches `dist.all_gather` of opaque tensors.
+    NaiveAllGather,
+    /// Ring all-reduce of the dense buffer: per-rank volume ~2·B,
+    /// group-size independent — what full gradient sync uses.
+    RingAllReduce,
+}
+
+/// Which scheme to build (config / CLI surface).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplSpec {
+    Demo {
+        rate: f64,
+        chunk: usize,
+        sign: bool,
+        dtype: Dtype,
+        packed: bool,
+    },
+    Random {
+        rate: f64,
+        sign: bool,
+        dtype: Dtype,
+        packed: bool,
+    },
+    Striding {
+        rate: f64,
+        sign: bool,
+        dtype: Dtype,
+        packed: bool,
+    },
+    DiLoCo {
+        /// Sync every `period` steps (paper: rate = 1/period).
+        period: u64,
+        sign: bool,
+        dtype: Dtype,
+        packed: bool,
+    },
+    Full {
+        sign: bool,
+        dtype: Dtype,
+        packed: bool,
+    },
+}
+
+impl ReplSpec {
+    /// Parse "demo:1/8", "random:1/16", "striding:1/32", "diloco:32",
+    /// "full" (+ optional ":nosign" / ":sign" / ":bf16" / ":chunk=128").
+    pub fn parse(s: &str) -> anyhow::Result<ReplSpec> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        let mut rate = 1.0 / 8.0;
+        let mut period = 8u64;
+        let mut sign = true;
+        let mut dtype = Dtype::F32;
+        let mut chunk = 64usize;
+        let mut packed = false;
+        for p in parts {
+            if let Some(r) = p.strip_prefix("1/") {
+                let c: f64 = r.parse()?;
+                rate = 1.0 / c;
+                period = c as u64;
+            } else if let Some(c) = p.strip_prefix("chunk=") {
+                chunk = c.parse()?;
+            } else if p == "nosign" {
+                sign = false;
+            } else if p == "sign" {
+                sign = true;
+            } else if p == "packed" {
+                // Extension: 2-bit ternary wire format (paper future work).
+                packed = true;
+            } else if let Some(d) = Dtype::parse(p) {
+                dtype = d;
+            } else if let Ok(c) = p.parse::<u64>() {
+                period = c;
+                rate = 1.0 / c as f64;
+            } else {
+                anyhow::bail!("bad replicator component {p:?} in {s:?}");
+            }
+        }
+        Ok(match kind {
+            "demo" => ReplSpec::Demo {
+                rate,
+                chunk,
+                sign,
+                dtype,
+                packed,
+            },
+            "random" => ReplSpec::Random {
+                rate,
+                sign,
+                dtype,
+                packed,
+            },
+            "striding" => ReplSpec::Striding {
+                rate,
+                sign,
+                dtype,
+                packed,
+            },
+            "diloco" => ReplSpec::DiLoCo {
+                period,
+                sign,
+                dtype,
+                packed,
+            },
+            // Full-sync baseline ships raw gradients (no sign) by default;
+            // "full:sign" gives the signed variant (Fig 10's full-repl arm).
+            "full" => ReplSpec::Full {
+                sign: s.contains(":sign"),
+                dtype,
+                packed,
+            },
+            _ => anyhow::bail!("unknown replicator {kind:?} (demo|random|striding|diloco|full)"),
+        })
+    }
+
+    /// Instantiate for a shard of `shard_len` elements.
+    pub fn build(&self, shard_len: usize) -> Box<dyn Replicator> {
+        match *self {
+            ReplSpec::Demo {
+                rate,
+                chunk,
+                sign,
+                dtype,
+                packed,
+            } => Box::new(DemoReplicator::from_rate(rate, chunk, sign, dtype).packed(packed)),
+            ReplSpec::Random {
+                rate,
+                sign,
+                dtype,
+                packed,
+            } => Box::new(RandomReplicator::new(rate, sign, dtype).packed(packed)),
+            ReplSpec::Striding {
+                rate,
+                sign,
+                dtype,
+                packed,
+            } => Box::new(StridingReplicator::new(rate, sign, dtype).packed(packed)),
+            ReplSpec::DiLoCo {
+                period,
+                sign,
+                dtype,
+                packed,
+            } => Box::new(DiLoCoReplicator::new(period, sign, dtype, shard_len).packed(packed)),
+            ReplSpec::Full {
+                sign,
+                dtype,
+                packed,
+            } => Box::new(FullReplicator::new(sign, dtype).packed(packed)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ReplSpec::Demo { rate, .. } => format!("demo-1/{:.0}", 1.0 / rate),
+            ReplSpec::Random { rate, .. } => format!("random-1/{:.0}", 1.0 / rate),
+            ReplSpec::Striding { rate, .. } => format!("striding-1/{:.0}", 1.0 / rate),
+            ReplSpec::DiLoCo { period, .. } => format!("diloco-1/{period}"),
+            ReplSpec::Full { .. } => "full".to_string(),
+        }
+    }
+}
+
+/// Dense mean of decoded payloads (helper used by the trainer).
+pub fn mean_decoded(
+    repl: &dyn Replicator,
+    ctx: &ReplCtx,
+    payloads: &[Payload],
+    shard_len: usize,
+) -> Vec<f32> {
+    let mut acc = vec![0.0f32; shard_len];
+    let mut tmp = vec![0.0f32; shard_len];
+    for p in payloads {
+        tmp.fill(0.0);
+        repl.decode(ctx, p, &mut tmp);
+        crate::tensor::axpy(&mut acc, 1.0, &tmp);
+    }
+    let inv = 1.0 / payloads.len().max(1) as f32;
+    for x in acc.iter_mut() {
+        *x *= inv;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            ReplSpec::parse("demo:1/8").unwrap(),
+            ReplSpec::Demo {
+                rate: 0.125,
+                chunk: 64,
+                sign: true,
+                dtype: Dtype::F32,
+                packed: false
+            }
+        );
+        assert_eq!(
+            ReplSpec::parse("random:1/16:nosign:bf16").unwrap(),
+            ReplSpec::Random {
+                rate: 1.0 / 16.0,
+                sign: false,
+                dtype: Dtype::Bf16,
+                packed: false
+            }
+        );
+        assert!(matches!(
+            ReplSpec::parse("diloco:32").unwrap(),
+            ReplSpec::DiLoCo { period: 32, .. }
+        ));
+        assert!(matches!(
+            ReplSpec::parse("full").unwrap(),
+            ReplSpec::Full { .. }
+        ));
+        assert!(matches!(
+            ReplSpec::parse("demo:1/8:chunk=128").unwrap(),
+            ReplSpec::Demo { chunk: 128, .. }
+        ));
+        assert!(ReplSpec::parse("bogus:1/2").is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(ReplSpec::parse("demo:1/8").unwrap().label(), "demo-1/8");
+        assert_eq!(ReplSpec::parse("diloco:16").unwrap().label(), "diloco-1/16");
+        assert_eq!(ReplSpec::parse("full").unwrap().label(), "full");
+    }
+
+    #[test]
+    fn shared_rng_agrees_across_ctx_copies() {
+        let a = ReplCtx {
+            step: 7,
+            shard: 3,
+            seed: 42,
+        };
+        let b = a;
+        assert_eq!(a.shared_rng().next_u64(), b.shared_rng().next_u64());
+        // and differs across steps/shards
+        let c = ReplCtx { step: 8, ..a };
+        assert_ne!(a.shared_rng().next_u64(), c.shared_rng().next_u64());
+        let d = ReplCtx { shard: 4, ..a };
+        assert_ne!(a.shared_rng().next_u64(), d.shared_rng().next_u64());
+    }
+}

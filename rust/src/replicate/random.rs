@@ -1,0 +1,192 @@
+//! Random replication (introduced by DeToNATION): a seeded random subset
+//! of buffer components is exchanged each step.
+//!
+//! The index set is regenerated from `(seed, step, shard)` on every rank
+//! (see [`ReplCtx::shared_rng`]) so **no indices cross the wire** — at the
+//! same component count Random ships half of DeMo's f32 bytes ("enabling
+//! us to share double the amount of data, on the same bandwidth").
+//! The paper finds this scheme superior for encoder-decoder translation
+//! (Figs 1, 2a) and competitive-but-worse for ViT/causal-LM (Figs 2b, 3).
+
+use super::{ReplCtx, Replicator};
+use crate::compress::Payload;
+use crate::tensor::Dtype;
+
+#[derive(Debug)]
+pub struct RandomReplicator {
+    pub rate: f64,
+    pub sign: bool,
+    pub dtype: Dtype,
+    is_packed: bool,
+}
+
+impl RandomReplicator {
+    pub fn new(rate: f64, sign: bool, dtype: Dtype) -> RandomReplicator {
+        assert!(rate > 0.0 && rate <= 1.0, "rate {rate}");
+        RandomReplicator {
+            rate,
+            sign,
+            dtype,
+            is_packed: false,
+        }
+    }
+
+    /// Builder: enable the 2-bit ternary wire extension (see
+    /// `compress::Payload::packed`).
+    pub fn packed(mut self, packed: bool) -> Self {
+        self.is_packed = packed;
+        self
+    }
+
+    fn mk_payload(&self, indices: Option<Vec<u32>>, values: Vec<f32>) -> Payload {
+        let p = Payload::new(indices, values, self.dtype, self.sign);
+        if self.is_packed && self.sign {
+            p.with_packing()
+        } else {
+            p
+        }
+    }
+
+
+    /// The deterministic per-(step, shard) index set: every rank of the
+    /// R-group computes the identical set.
+    pub fn indices(&self, ctx: &ReplCtx, len: usize) -> Vec<usize> {
+        let k = ((len as f64 * self.rate).round() as usize).clamp(1, len);
+        ctx.shared_rng().sample_indices(len, k)
+    }
+}
+
+impl Replicator for RandomReplicator {
+    fn name(&self) -> String {
+        format!(
+            "random-1/{:.0}{}",
+            1.0 / self.rate,
+            if self.sign { "-sign" } else { "" }
+        )
+    }
+
+    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
+        let idx = self.indices(ctx, buf.len());
+        let values: Vec<f32> = idx.iter().map(|&i| buf[i]).collect();
+        for &i in &idx {
+            buf[i] = 0.0; // residual: selected components leave the buffer
+        }
+        let payload = self.mk_payload(None, values);
+        let mut q_local = vec![0.0f32; buf.len()];
+        self.decode(ctx, &payload, &mut q_local);
+        (q_local, Some(payload))
+    }
+
+    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
+        let idx = self.indices(ctx, out.len());
+        debug_assert_eq!(idx.len(), payload.values.len());
+        for (&i, &v) in idx.iter().zip(&payload.values) {
+            out[i] = v;
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        self.rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, proptest};
+    use crate::util::rng::Rng;
+
+    fn ctx(step: u64) -> ReplCtx {
+        ReplCtx {
+            step,
+            shard: 2,
+            seed: 99,
+        }
+    }
+
+    #[test]
+    fn indices_identical_across_ranks_differ_across_steps() {
+        let r = RandomReplicator::new(1.0 / 16.0, true, Dtype::F32);
+        // "Two ranks" = two independent calls with the same ctx.
+        let a = r.indices(&ctx(5), 4096);
+        let b = r.indices(&ctx(5), 4096);
+        assert_eq!(a, b);
+        let c = r.indices(&ctx(6), 4096);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn extract_zeroes_selected_keeps_rest() {
+        let mut rng = Rng::new(1);
+        let orig: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0) + 3.0).collect();
+        let mut buf = orig.clone();
+        let mut r = RandomReplicator::new(1.0 / 8.0, false, Dtype::F32);
+        let c = ctx(0);
+        let (q, p) = r.extract(&c, &mut buf);
+        let idx = r.indices(&c, 1024);
+        assert_eq!(idx.len(), 128);
+        for i in 0..1024 {
+            if idx.contains(&i) {
+                assert_eq!(buf[i], 0.0);
+                assert_eq!(q[i], orig[i]);
+            } else {
+                assert_eq!(buf[i], orig[i]);
+                assert_eq!(q[i], 0.0);
+            }
+        }
+        assert!(p.unwrap().indices.is_none(), "random ships no indices");
+    }
+
+    #[test]
+    fn roundtrip_extract_decode_property() {
+        proptest(32, |g| {
+            let len = g.usize(8, 2000);
+            let rate = 1.0 / g.pow2(0, 5) as f64;
+            let sign = g.bool();
+            let orig = g.vec_normal(len, 1.0);
+            let mut buf = orig.clone();
+            let mut r = RandomReplicator::new(rate, sign, Dtype::F32);
+            let c = ReplCtx {
+                step: g.u64() % 1000,
+                shard: g.usize(0, 8),
+                seed: 7,
+            };
+            let (q, p) = r.extract(&c, &mut buf);
+            let mut out = vec![0.0f32; len];
+            r.decode(&c, &p.unwrap(), &mut out);
+            prop_assert(out == q, "decode must equal local q");
+            // residual + q == original when unsigned
+            if !sign {
+                for i in 0..len {
+                    prop_assert(
+                        (buf[i] + q[i] - orig[i]).abs() < 1e-6,
+                        format!("i={i}"),
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn signed_values_are_ternary() {
+        let mut rng = Rng::new(2);
+        let mut buf: Vec<f32> = (0..512).map(|_| rng.normal_f32(1.0)).collect();
+        let mut r = RandomReplicator::new(1.0 / 4.0, true, Dtype::F32);
+        let (_, p) = r.extract(&ctx(3), &mut buf);
+        assert!(p
+            .unwrap()
+            .values
+            .iter()
+            .all(|&v| v == 1.0 || v == -1.0 || v == 0.0));
+    }
+
+    #[test]
+    fn wire_bytes_half_of_demo_at_same_count() {
+        // 128 components: random = 128·4 B; demo would be 128·(4+4) B.
+        let mut rng = Rng::new(3);
+        let mut buf: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
+        let mut r = RandomReplicator::new(1.0 / 8.0, false, Dtype::F32);
+        let (_, p) = r.extract(&ctx(0), &mut buf);
+        assert_eq!(p.unwrap().wire_bytes(), 128 * 4);
+    }
+}

@@ -1,0 +1,167 @@
+//! Striding replication (introduced by DeToNATION): every n-th component,
+//! with a step-rotating offset so all components are visited every n
+//! steps.
+//!
+//! Like Random, the index set is reproducible from `(step, stride)` alone
+//! — no indices on the wire. The paper finds Striding weakest on
+//! translation (Fig 2a), competitive on highly-structured image data
+//! (Fig 2b "the structure provided by this scheme works in highly
+//! structured data"), and unstable on causal LM (Fig 3).
+
+use super::{ReplCtx, Replicator};
+use crate::compress::Payload;
+use crate::tensor::Dtype;
+
+#[derive(Debug)]
+pub struct StridingReplicator {
+    /// Select one of every `stride` components.
+    pub stride: usize,
+    pub sign: bool,
+    pub dtype: Dtype,
+    is_packed: bool,
+}
+
+impl StridingReplicator {
+    pub fn new(rate: f64, sign: bool, dtype: Dtype) -> StridingReplicator {
+        assert!(rate > 0.0 && rate <= 1.0);
+        let stride = (1.0 / rate).round().max(1.0) as usize;
+        StridingReplicator {
+            stride,
+            sign,
+            dtype,
+            is_packed: false,
+        }
+    }
+
+    /// Builder: enable the 2-bit ternary wire extension (see
+    /// `compress::Payload::packed`).
+    pub fn packed(mut self, packed: bool) -> Self {
+        self.is_packed = packed;
+        self
+    }
+
+    fn mk_payload(&self, indices: Option<Vec<u32>>, values: Vec<f32>) -> Payload {
+        let p = Payload::new(indices, values, self.dtype, self.sign);
+        if self.is_packed && self.sign {
+            p.with_packing()
+        } else {
+            p
+        }
+    }
+
+
+    /// Offset rotates with the step: offset = step mod stride.
+    fn offset(&self, ctx: &ReplCtx) -> usize {
+        (ctx.step % self.stride as u64) as usize
+    }
+
+    pub fn indices(&self, ctx: &ReplCtx, len: usize) -> impl Iterator<Item = usize> + '_ {
+        (self.offset(ctx)..len).step_by(self.stride)
+    }
+}
+
+impl Replicator for StridingReplicator {
+    fn name(&self) -> String {
+        format!(
+            "striding-1/{}{}",
+            self.stride,
+            if self.sign { "-sign" } else { "" }
+        )
+    }
+
+    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
+        let idx: Vec<usize> = self.indices(ctx, buf.len()).collect();
+        let values: Vec<f32> = idx.iter().map(|&i| buf[i]).collect();
+        for &i in &idx {
+            buf[i] = 0.0;
+        }
+        let payload = self.mk_payload(None, values);
+        let mut q_local = vec![0.0f32; buf.len()];
+        self.decode(ctx, &payload, &mut q_local);
+        (q_local, Some(payload))
+    }
+
+    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
+        let n = out.len();
+        for (i, &v) in self.indices(ctx, n).zip(&payload.values) {
+            out[i] = v;
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        1.0 / self.stride as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ctx(step: u64) -> ReplCtx {
+        ReplCtx {
+            step,
+            shard: 0,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn stride_from_rate() {
+        assert_eq!(StridingReplicator::new(1.0 / 8.0, true, Dtype::F32).stride, 8);
+        assert_eq!(StridingReplicator::new(1.0, true, Dtype::F32).stride, 1);
+    }
+
+    #[test]
+    fn offset_rotates_and_covers_everything() {
+        let r = StridingReplicator::new(1.0 / 4.0, false, Dtype::F32);
+        let mut seen = vec![false; 64];
+        for step in 0..4 {
+            for i in r.indices(&ctx(step), 64) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "4 steps at stride 4 cover all");
+    }
+
+    #[test]
+    fn extract_selects_strided_components() {
+        let mut rng = Rng::new(1);
+        let orig: Vec<f32> = (0..64).map(|_| rng.normal_f32(1.0) + 2.0).collect();
+        let mut buf = orig.clone();
+        let mut r = StridingReplicator::new(1.0 / 8.0, false, Dtype::F32);
+        let c = ctx(3); // offset 3
+        let (q, _) = r.extract(&c, &mut buf);
+        for i in 0..64 {
+            if i % 8 == 3 {
+                assert_eq!(buf[i], 0.0);
+                assert_eq!(q[i], orig[i]);
+            } else {
+                assert_eq!(buf[i], orig[i]);
+                assert_eq!(q[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_equals_local_q() {
+        let mut rng = Rng::new(2);
+        let mut buf: Vec<f32> = (0..100).map(|_| rng.normal_f32(1.0)).collect();
+        let mut r = StridingReplicator::new(1.0 / 4.0, true, Dtype::F32);
+        let c = ctx(1);
+        let (q, p) = r.extract(&c, &mut buf);
+        let mut out = vec![0.0f32; 100];
+        r.decode(&c, &p.unwrap(), &mut out);
+        assert_eq!(q, out);
+    }
+
+    #[test]
+    fn no_indices_on_wire() {
+        let mut buf = vec![1.0f32; 32];
+        let mut r = StridingReplicator::new(1.0 / 2.0, false, Dtype::F32);
+        let (_, p) = r.extract(&ctx(0), &mut buf);
+        let p = p.unwrap();
+        assert!(p.indices.is_none());
+        assert_eq!(p.wire_bytes(), 16 * 4);
+    }
+}

@@ -1,0 +1,495 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the Python↔Rust bridge (DESIGN.md §3): `python/compile/aot.py`
+//! lowers each model's `train_step`/`eval_step` to **HLO text** + a JSON
+//! manifest; this module parses the manifest, initializes parameters in
+//! Rust (python never owns runtime state), compiles the HLO on the PJRT
+//! CPU client, and marshals flat f32/i32 buffers in and out of the
+//! executable on the training hot path.
+//!
+//! HLO *text* (not serialized proto) is load-bearing: jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self};
+use crate::util::rng::Rng;
+
+/// Parameter initializer description (mirrors model.py `init_spec`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Init {
+    Normal(f32),
+    Zeros,
+    Ones,
+}
+
+/// One named parameter tensor in artifact order.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Batch input dtype.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchDtype {
+    I32,
+    F32,
+}
+
+/// One batch input in artifact argument order (after the parameters).
+#[derive(Clone, Debug)]
+pub struct BatchInputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: BatchDtype,
+}
+
+impl BatchInputSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Concrete batch data matching a `BatchInputSpec`.
+#[derive(Clone, Debug)]
+pub enum BatchData {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl BatchData {
+    pub fn len(&self) -> usize {
+        match self {
+            BatchData::I32(v) => v.len(),
+            BatchData::F32(v) => v.len(),
+        }
+    }
+}
+
+/// Parsed `<name>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub family: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub src_seq: usize,
+    pub patch_dim: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub batch_inputs: Vec<BatchInputSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let usz = |key: &str| -> Result<usize> {
+            j.req(key)
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_usize()
+                .with_context(|| format!("{key} not a usize"))
+        };
+        let str_field = |key: &str| -> Result<String> {
+            Ok(j.req(key)
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_str()
+                .with_context(|| format!("{key} not a string"))?
+                .to_string())
+        };
+
+        let mut params = Vec::new();
+        for p in j
+            .req("params")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .context("params not an array")?
+        {
+            let name = p
+                .req("name")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_str()
+                .context("param name")?
+                .to_string();
+            let shape: Vec<usize> = p
+                .req("shape")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().context("dim"))
+                .collect::<Result<_>>()?;
+            let init_arr = p
+                .req("init")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_arr()
+                .context("init")?;
+            let kind = init_arr[0].as_str().context("init kind")?;
+            let init = match kind {
+                "normal" => Init::Normal(init_arr[1].as_f64().context("std")? as f32),
+                "zeros" => Init::Zeros,
+                "ones" => Init::Ones,
+                other => bail!("unknown init {other:?}"),
+            };
+            params.push(ParamSpec { name, shape, init });
+        }
+
+        let mut batch_inputs = Vec::new();
+        for b in j
+            .req("batch_inputs")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .context("batch_inputs")?
+        {
+            let name = b
+                .req("name")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_str()
+                .context("batch name")?
+                .to_string();
+            let shape: Vec<usize> = b
+                .req("shape")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_arr()
+                .context("batch shape")?
+                .iter()
+                .map(|x| x.as_usize().context("dim"))
+                .collect::<Result<_>>()?;
+            let dtype = match b
+                .req("dtype")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_str()
+                .context("dtype")?
+            {
+                "i32" => BatchDtype::I32,
+                "f32" => BatchDtype::F32,
+                other => bail!("unknown batch dtype {other:?}"),
+            };
+            batch_inputs.push(BatchInputSpec { name, shape, dtype });
+        }
+
+        Ok(Manifest {
+            name: str_field("name")?,
+            family: str_field("family")?,
+            vocab: usz("vocab")?,
+            d_model: usz("d_model")?,
+            n_heads: usz("n_heads")?,
+            n_layers: usz("n_layers")?,
+            d_ff: usz("d_ff")?,
+            seq: usz("seq")?,
+            src_seq: usz("src_seq")?,
+            patch_dim: usz("patch_dim")?,
+            batch: usz("batch")?,
+            param_count: usz("param_count")?,
+            params,
+            batch_inputs,
+        })
+    }
+
+    /// Flat parameter ordering as (name, shape) pairs for `shard::FlatLayout`.
+    pub fn flat_params(&self) -> Vec<(String, Vec<usize>)> {
+        self.params
+            .iter()
+            .map(|p| (p.name.clone(), p.shape.clone()))
+            .collect()
+    }
+
+    /// Initialize a flat parameter vector (manifest order) from the init
+    /// specs. Deterministic in `seed`; every node calls this with the same
+    /// seed so replicas start identical (as FSDP replicas do).
+    pub fn init_flat(&self, seed: u64) -> Vec<f32> {
+        let rng = Rng::new(seed);
+        let total: usize = self.params.iter().map(|p| p.len()).sum();
+        let mut flat = Vec::with_capacity(total);
+        for p in &self.params {
+            let mut chunk = vec![0.0f32; p.len()];
+            match p.init {
+                Init::Normal(std) => rng.split(hash_name(&p.name)).fill_normal(&mut chunk, std),
+                Init::Zeros => {}
+                Init::Ones => chunk.fill(1.0),
+            }
+            flat.extend_from_slice(&chunk);
+        }
+        flat
+    }
+
+    /// Tokens (or patches) consumed per train step — the unit for the
+    /// compute-time model.
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.seq.max(1)
+    }
+
+    /// Rough fwd+bwd FLOPs per step: the standard 6·N·T transformer
+    /// estimate (used only by the simulated step clock, not numerics).
+    pub fn step_flops(&self) -> f64 {
+        6.0 * self.param_count as f64 * self.tokens_per_step() as f64
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a — stable across runs/platforms (std hasher is randomized).
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// A compiled HLO artifact (train or eval entry point).
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_outputs: usize,
+}
+
+impl Artifact {
+    /// Execute with raw literals and unpack the output tuple.
+    pub fn execute_raw(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let items = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        if self.n_outputs > 0 {
+            anyhow::ensure!(
+                items.len() == self.n_outputs,
+                "expected {} outputs, got {}",
+                self.n_outputs,
+                items.len()
+            );
+        }
+        Ok(items)
+    }
+
+    /// Execute a single-vector-in / tuple-of-vectors-out artifact (the
+    /// `dct_extract_*` cross-validation artifacts).
+    pub fn execute_vec(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let lit = xla::Literal::vec1(input);
+        let out = self.execute_raw(&[lit])?;
+        out.iter()
+            .map(|l| {
+                l.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+/// The manifest + compiled train/eval executables for one model config.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub train: Artifact,
+    pub eval: Artifact,
+}
+
+/// Owns the PJRT CPU client. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    /// Compile one HLO-text file.
+    pub fn load_hlo(&self, path: &std::path::Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Artifact { exe, n_outputs: 0 })
+    }
+
+    /// Load manifest + train + eval artifacts for `name` from `dir`.
+    pub fn load_model(&self, dir: &std::path::Path, name: &str) -> Result<ModelRuntime> {
+        let meta_path = dir.join(format!("{name}.meta.json"));
+        let meta = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&meta)?;
+        let mut train = self.load_hlo(&dir.join(format!("{name}.train.hlo.txt")))?;
+        train.n_outputs = 1 + manifest.params.len();
+        let mut eval = self.load_hlo(&dir.join(format!("{name}.eval.hlo.txt")))?;
+        eval.n_outputs = 1;
+        log::info!(
+            "loaded model {name}: {} params ({} tensors), batch {}x{}",
+            manifest.param_count,
+            manifest.params.len(),
+            manifest.batch,
+            manifest.seq
+        );
+        Ok(ModelRuntime {
+            manifest,
+            train,
+            eval,
+        })
+    }
+}
+
+impl ModelRuntime {
+    /// Build the literal argument list: parameters (from a flat buffer +
+    /// manifest shapes) followed by batch inputs.
+    fn marshal_args(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<Vec<xla::Literal>> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            batch.len() == m.batch_inputs.len(),
+            "expected {} batch inputs, got {}",
+            m.batch_inputs.len(),
+            batch.len()
+        );
+        let mut args = Vec::with_capacity(m.params.len() + batch.len());
+        let mut offset = 0usize;
+        for p in &m.params {
+            let end = offset + p.len();
+            anyhow::ensure!(end <= flat_params.len(), "flat params too short at {}", p.name);
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&flat_params[offset..end])
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", p.name))?;
+            args.push(lit);
+            offset = end;
+        }
+        for (spec, data) in m.batch_inputs.iter().zip(batch) {
+            anyhow::ensure!(
+                data.len() == spec.len(),
+                "batch input {} length {} != {}",
+                spec.name,
+                data.len(),
+                spec.len()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (spec.dtype, data) {
+                (BatchDtype::I32, BatchData::I32(v)) => xla::Literal::vec1(v.as_slice()),
+                (BatchDtype::F32, BatchData::F32(v)) => xla::Literal::vec1(v.as_slice()),
+                _ => bail!("batch input {} dtype mismatch", spec.name),
+            }
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", spec.name))?;
+            args.push(lit);
+        }
+        Ok(args)
+    }
+
+    /// One fwd+bwd: returns (loss, flat gradient in manifest order).
+    /// `flat_params` may be longer than the logical parameter count (the
+    /// trainer hands in the padded FSDP buffer); the pad tail is ignored
+    /// and the returned gradient is logical-length.
+    pub fn train_step(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<(f32, Vec<f32>)> {
+        let args = self.marshal_args(flat_params, batch)?;
+        let out = self.train.execute_raw(&args)?;
+        let loss: f32 = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?[0];
+        let total: usize = self.manifest.params.iter().map(|p| p.len()).sum();
+        let mut grads = Vec::with_capacity(total);
+        for (p, lit) in self.manifest.params.iter().zip(&out[1..]) {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("grad {}: {e:?}", p.name))?;
+            anyhow::ensure!(v.len() == p.len(), "grad {} len {}", p.name, v.len());
+            grads.extend_from_slice(&v);
+        }
+        Ok((loss, grads))
+    }
+
+    /// Loss only (validation).
+    pub fn eval_step(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<f32> {
+        let args = self.marshal_args(flat_params, batch)?;
+        let out = self.eval.execute_raw(&args)?;
+        Ok(out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI_MANIFEST: &str = r#"{
+      "name": "m", "family": "lm", "vocab": 8, "d_model": 4, "n_heads": 1,
+      "n_layers": 1, "d_ff": 8, "seq": 4, "src_seq": 0, "patch_dim": 0,
+      "batch": 2, "param_count": 20,
+      "params": [
+        {"name": "a", "shape": [2, 3], "init": ["normal", 0.02]},
+        {"name": "b", "shape": [14], "init": ["ones"]}
+      ],
+      "batch_inputs": [
+        {"name": "tokens", "shape": [2, 4], "dtype": "i32"}
+      ]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MINI_MANIFEST).unwrap();
+        assert_eq!(m.name, "m");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].shape, vec![2, 3]);
+        assert_eq!(m.params[0].init, Init::Normal(0.02));
+        assert_eq!(m.params[1].init, Init::Ones);
+        assert_eq!(m.batch_inputs[0].dtype, BatchDtype::I32);
+        assert_eq!(m.tokens_per_step(), 8);
+        assert!(m.step_flops() > 0.0);
+    }
+
+    #[test]
+    fn init_flat_deterministic_and_respects_spec() {
+        let m = Manifest::parse(MINI_MANIFEST).unwrap();
+        let a = m.init_flat(7);
+        let b = m.init_flat(7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20);
+        // "b" is all-ones
+        assert!(a[6..].iter().all(|&x| x == 1.0));
+        // normal part is not constant and scaled by std
+        assert!(a[..6].iter().any(|&x| x != a[0]));
+        assert!(a[..6].iter().all(|&x| x.abs() < 0.2));
+        // different seeds differ
+        assert_ne!(m.init_flat(8)[..6], a[..6]);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        let bad = MINI_MANIFEST.replace("\"ones\"", "\"sevens\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn name_hash_stable() {
+        assert_eq!(hash_name("embed/tok"), hash_name("embed/tok"));
+        assert_ne!(hash_name("embed/tok"), hash_name("embed/pos"));
+    }
+}

@@ -1,0 +1,261 @@
+//! FSDP-style flat-parameter sharding + the FlexDeMo hybrid mesh.
+//!
+//! PyTorch FSDP flattens a wrapped module's parameters into one
+//! contiguous buffer and splits it evenly across the sharding group; we do
+//! the same: `FlatLayout` maps named tensors into a flat buffer (manifest
+//! order), and `ShardSpec` cuts the (padded) buffer into |S| equal ranges.
+//!
+//! Padding: shard lengths are rounded up to a multiple of
+//! [`SHARD_ALIGN`] = 768 = lcm{16,32,64,96,128,192,256} so every chunk
+//! size in the paper's Fig 11 sweep divides every shard exactly — the DeMo
+//! replicator never sees a ragged tail chunk.
+//!
+//! The hybrid mesh (paper Appendix A): rank (node n, accel a) shards
+//! within its node (group S = all accels of node n) and replicates with
+//! the ranks holding *the same shard index* on other nodes (group R =
+//! accel a of every node). |R|=1 degrades to pure FSDP, |S|=1 to DeMo-DDP.
+
+use crate::net::Topology;
+
+/// Pad shards so all paper chunk sizes divide them: lcm(16..256 sweep).
+pub const SHARD_ALIGN: usize = 768;
+
+/// One named tensor's slot in the flat buffer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FlatSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Flat packing of a parameter list (manifest order).
+#[derive(Clone, Debug)]
+pub struct FlatLayout {
+    pub slots: Vec<FlatSlot>,
+    /// Unpadded logical length (sum of tensor sizes).
+    pub logical_len: usize,
+    /// Padded length (multiple of `SHARD_ALIGN · shards` when sharded via
+    /// `ShardSpec::even`).
+    pub padded_len: usize,
+}
+
+impl FlatLayout {
+    pub fn new(params: &[(String, Vec<usize>)]) -> FlatLayout {
+        let mut slots = Vec::with_capacity(params.len());
+        let mut offset = 0usize;
+        for (name, shape) in params {
+            let len = shape.iter().product();
+            slots.push(FlatSlot {
+                name: name.clone(),
+                shape: shape.clone(),
+                offset,
+                len,
+            });
+            offset += len;
+        }
+        FlatLayout {
+            slots,
+            logical_len: offset,
+            padded_len: offset, // finalized by `pad_for`
+        }
+    }
+
+    /// Round the padded length up so `shards` equal shards are each a
+    /// multiple of `SHARD_ALIGN`.
+    pub fn pad_for(mut self, shards: usize) -> FlatLayout {
+        let unit = SHARD_ALIGN * shards.max(1);
+        self.padded_len = self.logical_len.div_ceil(unit) * unit;
+        self
+    }
+
+    pub fn slot(&self, name: &str) -> Option<&FlatSlot> {
+        self.slots.iter().find(|s| s.name == name)
+    }
+
+    /// View of one tensor inside a flat buffer.
+    pub fn tensor<'a>(&self, flat: &'a [f32], name: &str) -> Option<&'a [f32]> {
+        let s = self.slot(name)?;
+        Some(&flat[s.offset..s.offset + s.len])
+    }
+}
+
+/// Even partition of `[0, padded_len)` into `count` contiguous ranges.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub ranges: Vec<(usize, usize)>,
+    pub padded_len: usize,
+}
+
+impl ShardSpec {
+    pub fn even(padded_len: usize, count: usize) -> ShardSpec {
+        assert!(count >= 1);
+        assert_eq!(
+            padded_len % (SHARD_ALIGN * count),
+            0,
+            "padded_len {padded_len} not aligned for {count} shards — call FlatLayout::pad_for"
+        );
+        let per = padded_len / count;
+        ShardSpec {
+            ranges: (0..count).map(|i| (i * per, (i + 1) * per)).collect(),
+            padded_len,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn range(&self, shard: usize) -> (usize, usize) {
+        self.ranges[shard]
+    }
+
+    pub fn shard_len(&self) -> usize {
+        let (lo, hi) = self.ranges[0];
+        hi - lo
+    }
+
+    /// Which shard owns flat index `i`.
+    pub fn owner_of(&self, i: usize) -> usize {
+        assert!(i < self.padded_len);
+        i / self.shard_len()
+    }
+}
+
+/// The full FlexDeMo process mesh: topology × shard layout.
+#[derive(Clone, Debug)]
+pub struct HybridMesh {
+    pub topo: Topology,
+    pub shards: ShardSpec,
+}
+
+impl HybridMesh {
+    pub fn new(topo: Topology, layout: &FlatLayout) -> HybridMesh {
+        let shards = ShardSpec::even(layout.padded_len, topo.accels_per_node);
+        HybridMesh { topo, shards }
+    }
+
+    /// Shard range owned by a rank (determined by its accel index).
+    pub fn shard_of(&self, rank: usize) -> (usize, usize) {
+        self.shards.range(self.topo.accel_of(rank))
+    }
+
+    /// The ranks that replicate shard index `a` (R-group of accel a).
+    pub fn repl_group_of_shard(&self, a: usize) -> Vec<usize> {
+        self.topo.repl_group(self.topo.rank(0, a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, proptest};
+
+    fn params(sizes: &[usize]) -> Vec<(String, Vec<usize>)> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (format!("p{i}"), vec![s]))
+            .collect()
+    }
+
+    #[test]
+    fn layout_offsets_are_contiguous() {
+        let l = FlatLayout::new(&params(&[10, 20, 30]));
+        assert_eq!(l.logical_len, 60);
+        assert_eq!(l.slots[0].offset, 0);
+        assert_eq!(l.slots[1].offset, 10);
+        assert_eq!(l.slots[2].offset, 30);
+    }
+
+    #[test]
+    fn layout_handles_multidim_shapes() {
+        let l = FlatLayout::new(&[
+            ("w".into(), vec![4, 8]),
+            ("b".into(), vec![8]),
+        ]);
+        assert_eq!(l.logical_len, 40);
+        assert_eq!(l.slot("b").unwrap().offset, 32);
+    }
+
+    #[test]
+    fn padding_makes_aligned_shards() {
+        for shards in [1usize, 2, 3, 4, 8] {
+            let l = FlatLayout::new(&params(&[1000, 37])).pad_for(shards);
+            assert_eq!(l.padded_len % (SHARD_ALIGN * shards), 0);
+            assert!(l.padded_len >= l.logical_len);
+            assert!(l.padded_len - l.logical_len < SHARD_ALIGN * shards);
+            let spec = ShardSpec::even(l.padded_len, shards);
+            assert_eq!(spec.shard_len() % SHARD_ALIGN, 0);
+        }
+    }
+
+    #[test]
+    fn shards_partition_range_property() {
+        proptest(64, |g| {
+            let shards = g.usize(1, 9);
+            let len = g.usize(1, 100_000);
+            let l = FlatLayout::new(&params(&[len])).pad_for(shards);
+            let spec = ShardSpec::even(l.padded_len, shards);
+            // union of ranges = [0, padded), disjoint, ordered
+            let mut cursor = 0;
+            for &(lo, hi) in &spec.ranges {
+                prop_assert(lo == cursor, format!("gap at {lo}"));
+                prop_assert(hi > lo, "empty shard");
+                cursor = hi;
+            }
+            prop_assert(cursor == l.padded_len, "ranges don't cover");
+            // owner_of agrees with ranges
+            for s in 0..shards {
+                let (lo, hi) = spec.range(s);
+                prop_assert(spec.owner_of(lo) == s, "owner lo");
+                prop_assert(spec.owner_of(hi - 1) == s, "owner hi-1");
+            }
+        });
+    }
+
+    #[test]
+    fn every_chunk_size_divides_shards() {
+        let l = FlatLayout::new(&params(&[12345])).pad_for(4);
+        let spec = ShardSpec::even(l.padded_len, 4);
+        for chunk in [16usize, 32, 64, 96, 128, 192, 256] {
+            assert_eq!(spec.shard_len() % chunk, 0, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn tensor_view_reads_correct_slice() {
+        let l = FlatLayout::new(&params(&[3, 2]));
+        let flat = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(l.tensor(&flat, "p0").unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(l.tensor(&flat, "p1").unwrap(), &[4.0, 5.0]);
+        assert!(l.tensor(&flat, "nope").is_none());
+    }
+
+    #[test]
+    fn hybrid_mesh_shard_by_accel_index() {
+        let topo = Topology::new(2, 4);
+        let l = FlatLayout::new(&params(&[10_000])).pad_for(4);
+        let mesh = HybridMesh::new(topo, &l);
+        // same accel index on both nodes owns the same range
+        for a in 0..4 {
+            let r0 = mesh.shard_of(mesh.topo.rank(0, a));
+            let r1 = mesh.shard_of(mesh.topo.rank(1, a));
+            assert_eq!(r0, r1);
+            assert_eq!(mesh.repl_group_of_shard(a), vec![a, 4 + a]);
+        }
+    }
+
+    #[test]
+    fn degenerate_meshes() {
+        // |R| = 1 (single node): pure FSDP.
+        let l = FlatLayout::new(&params(&[5000])).pad_for(4);
+        let mesh = HybridMesh::new(Topology::new(1, 4), &l);
+        assert_eq!(mesh.repl_group_of_shard(0), vec![0]);
+        // |S| = 1 (one accel per node): DeMo-style DDP.
+        let l = FlatLayout::new(&params(&[5000])).pad_for(1);
+        let mesh = HybridMesh::new(Topology::new(4, 1), &l);
+        assert_eq!(mesh.shard_of(2), (0, l.padded_len));
+        assert_eq!(mesh.repl_group_of_shard(0), vec![0, 1, 2, 3]);
+    }
+}

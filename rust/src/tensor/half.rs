@@ -1,0 +1,177 @@
+//! bf16 / f16 conversion primitives (substrate — no `half` crate offline).
+//!
+//! Used by `compress` to model and perform the paper's transfer-dtype
+//! reduction (Figs 13/14). Conversions use round-to-nearest-even, the
+//! same rounding NCCL/RCCL reductions and PyTorch `.to(bfloat16)` apply.
+
+/// f32 → bf16 bits, round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Quiet NaN, preserve sign.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE on the low 16 bits.
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(round_bit - 1 + lsb)) >> 16) as u16
+}
+
+/// bf16 bits → f32 (exact).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even, with proper
+/// subnormal and overflow (→ inf) handling.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    // Unbiased exponent, rebiased for f16 (bias 15 vs 127).
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if e <= 0 {
+        // Subnormal or underflow to zero.
+        if e < -10 {
+            return sign;
+        }
+        // Add implicit leading 1, shift into subnormal position with RNE.
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half_ulp = 1u32 << (shift - 1);
+        let rounded = man + half_ulp - 1 + ((man >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    // Normal: RNE on the 13 dropped mantissa bits.
+    let half_ulp = 0x0000_0FFFu32;
+    let rounded = man + half_ulp + ((man >> 13) & 1);
+    let mut e16 = e as u32;
+    let mut m16 = rounded >> 13;
+    if m16 & 0x0400 != 0 {
+        // Mantissa overflow from rounding bumps the exponent.
+        m16 = 0;
+        e16 += 1;
+        if e16 >= 0x1F {
+            return sign | 0x7C00;
+        }
+    }
+    sign | ((e16 as u16) << 10) | (m16 as u16 & 0x03FF)
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut m = m;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            // value = m·2⁻²⁴; after s = -1-e shifts m sits at bit 10, so the
+            // unbiased exponent is -14-s = e-13 ⇒ field = 127-15+e+2.
+            sign | (((127 - 15 + e + 2) as u32) << 23) | ((m & 0x03FF) << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bf16_exact_values_roundtrip() {
+        // Values exactly representable in bf16 survive untouched.
+        for x in [0.0f32, -0.0, 1.0, -2.0, 0.5, 1.5, 256.0, -1024.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn f16_exact_values_roundtrip() {
+        for x in [0.0f32, -0.0, 1.0, -2.0, 0.5, 0.25, 2048.0, -65504.0] {
+            assert_eq!(f16_to_f32(f32_to_f16(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn bf16_relative_error_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = (rng.next_f32() - 0.5) * 100.0;
+            let y = bf16_to_f32(f32_to_bf16(x));
+            let rel = ((x - y) / x.abs().max(1e-20)).abs();
+            assert!(rel <= 1.0 / 128.0, "x={x} y={y} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = (rng.next_f32() - 0.5) * 100.0;
+            let y = f16_to_f32(f32_to_f16(x));
+            let rel = ((x - y) / x.abs().max(1e-20)).abs();
+            assert!(rel <= 1.0 / 1024.0, "x={x} y={y} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert!(f16_to_f32(f32_to_f16(1e6)).is_infinite());
+        assert!(f16_to_f32(f32_to_f16(-1e6)).is_infinite());
+        assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0); // f16 max
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 6e-8f32; // within f16 subnormal range
+        let y = f16_to_f32(f32_to_f16(tiny));
+        assert!(y > 0.0 && (y - tiny).abs() / tiny < 0.05, "{tiny} -> {y}");
+        assert_eq!(f16_to_f32(f32_to_f16(1e-12)), 0.0); // underflow
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn infinities_preserved() {
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn rne_ties_to_even_bf16() {
+        // 1.0 + 2^-8 is exactly halfway between two bf16 values around 1.0;
+        // RNE must choose the even mantissa (1.0).
+        let x = f32::from_bits(0x3F80_8000);
+        let y = bf16_to_f32(f32_to_bf16(x));
+        assert_eq!(y, 1.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Flat f32 tensors + half-precision conversions.
+//!
+//! The coordinator's state (parameters, gradients, momenta) lives in flat
+//! `Tensor` buffers; named shapes come from the artifact manifest
+//! (`runtime::Manifest`). Half-precision (`bf16`/`f16`) conversion is
+//! needed for the transfer-dtype experiments (paper Figs 13/14) and is a
+//! from-scratch substrate (no `half` crate offline).
+
+pub mod half;
+
+pub use half::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16};
+
+/// Transfer data type for replicated payloads (paper Fig 13/14).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    Bf16,
+    F16,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 | Dtype::F16 => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" | "float32" => Some(Dtype::F32),
+            "bf16" | "bfloat16" => Some(Dtype::Bf16),
+            "f16" | "float16" => Some(Dtype::F16),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+            Dtype::F16 => "f16",
+        }
+    }
+
+    /// Round-trip a value through this dtype (quantize to transfer
+    /// precision). F32 is identity.
+    #[inline]
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            Dtype::F32 => x,
+            Dtype::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+            Dtype::F16 => f16_to_f32(f32_to_f16(x)),
+        }
+    }
+}
+
+/// A dense f32 tensor: flat data + shape. Row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "shape {shape:?} does not match len {}",
+            data.len()
+        );
+        Tensor {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Squared L2 norm.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.sq_norm().sqrt()
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.len(), other.len());
+        axpy(&mut self.data, alpha, &other.data);
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+}
+
+/// y += alpha * x over slices (the hot axpy used everywhere).
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// Elementwise mean of many equally-sized slices into `out`.
+pub fn mean_into(out: &mut [f32], parts: &[&[f32]]) {
+    assert!(!parts.is_empty());
+    let inv = 1.0 / parts.len() as f32;
+    out.copy_from_slice(parts[0]);
+    for p in &parts[1..] {
+        axpy(out, 1.0, p);
+    }
+    for x in out.iter_mut() {
+        *x *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_product() {
+        let t = Tensor::zeros(&[3, 4, 5]);
+        assert_eq!(t.len(), 60);
+        assert_eq!(t.shape, vec![3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn from_vec_rejects_mismatch() {
+        Tensor::from_vec(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut t = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let u = Tensor::from_vec(vec![10.0, 20.0], &[2]);
+        t.axpy(0.5, &u);
+        assert_eq!(t.data, vec![6.0, 12.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        assert!((t.l2() - 5.0).abs() < 1e-9);
+        assert!((t.sq_norm() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_into_averages() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_into(&mut out, &[&a, &b]);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn dtype_quantize_f32_identity() {
+        for x in [0.0f32, -1.5, 3.25e-8, 1e30] {
+            assert_eq!(Dtype::F32.quantize(x), x);
+        }
+    }
+
+    #[test]
+    fn dtype_parse_names() {
+        assert_eq!(Dtype::parse("bf16"), Some(Dtype::Bf16));
+        assert_eq!(Dtype::parse("float16"), Some(Dtype::F16));
+        assert_eq!(Dtype::parse("nope"), None);
+        for d in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+        }
+    }
+}

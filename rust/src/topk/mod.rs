@@ -1,0 +1,169 @@
+//! Per-chunk top-k selection by magnitude (the DeMo "TopK" hyperparameter,
+//! paper Fig 8).
+//!
+//! Selection uses an in-place quickselect over (|value| desc, index asc) —
+//! the index tiebreak matches `jax.lax.top_k` / the Python oracle so both
+//! sides of the stack keep identical components.
+
+/// Indices of the k largest-|.| entries of `xs`, ascending index order.
+pub fn topk_indices(xs: &[f32], k: usize) -> Vec<u32> {
+    let n = xs.len();
+    if k >= n {
+        return (0..n as u32).collect();
+    }
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    select_top(&mut idx, xs, k);
+    let mut out = idx[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// Rank key: larger |x| first; ties prefer the smaller index.
+#[inline]
+fn better(xs: &[f32], a: u32, b: u32) -> bool {
+    let (xa, xb) = (xs[a as usize].abs(), xs[b as usize].abs());
+    xa > xb || (xa == xb && a < b)
+}
+
+/// Partially order `idx` so its first k entries are the top-k (quickselect,
+/// median-of-three pivot, expected O(n)).
+fn select_top(idx: &mut [u32], xs: &[f32], k: usize) {
+    let (mut lo, mut hi) = (0usize, idx.len());
+    let mut want = k;
+    while hi - lo > 1 {
+        // median-of-three pivot on (lo, mid, hi-1)
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (idx[lo], idx[mid], idx[hi - 1]);
+        let pivot = if better(xs, a, b) == better(xs, a, c) {
+            // a is either best or worst of the three -> median is b or c
+            if better(xs, b, c) == better(xs, b, a) { c } else { b }
+        } else {
+            a
+        };
+        // Partition: entries better than pivot to the left.
+        let mut i = lo;
+        let mut j = hi;
+        let mut p = lo;
+        // three-way partition around pivot value
+        while p < j {
+            if better(xs, idx[p], pivot) {
+                idx.swap(i, p);
+                i += 1;
+                p += 1;
+            } else if better(xs, pivot, idx[p]) {
+                j -= 1;
+                idx.swap(p, j);
+            } else {
+                p += 1;
+            }
+        }
+        // [lo, i) better; [i, j) equal-to-pivot (only the pivot itself,
+        // since keys are unique by index tiebreak); [j, hi) worse.
+        let n_better = i - lo;
+        let n_eq = j - i;
+        if want < n_better {
+            hi = i;
+        } else if want < n_better + n_eq {
+            return; // boundary falls inside the pivot block — done
+        } else {
+            want -= n_better + n_eq;
+            lo = j;
+        }
+        if want == 0 {
+            return;
+        }
+    }
+}
+
+/// Per-chunk top-k over a flat coefficient buffer.
+/// Returns (chunk_index, within-chunk indices) pairs flattened as global
+/// indices, ascending.
+pub fn topk_per_chunk(coeffs: &[f32], chunk: usize, k: usize) -> Vec<u32> {
+    assert_eq!(coeffs.len() % chunk, 0);
+    let mut out = Vec::with_capacity(coeffs.len() / chunk * k.min(chunk));
+    for (ci, ch) in coeffs.chunks_exact(chunk).enumerate() {
+        let base = (ci * chunk) as u32;
+        for i in topk_indices(ch, k) {
+            out.push(base + i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, proptest};
+
+    fn brute_topk(xs: &[f32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            xs[b as usize]
+                .abs()
+                .partial_cmp(&xs[a as usize].abs())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut out = idx[..k.min(xs.len())].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn simple_cases() {
+        assert_eq!(topk_indices(&[1.0, -5.0, 3.0], 1), vec![1]);
+        assert_eq!(topk_indices(&[1.0, -5.0, 3.0], 2), vec![1, 2]);
+        assert_eq!(topk_indices(&[1.0, -5.0, 3.0], 3), vec![0, 1, 2]);
+        assert_eq!(topk_indices(&[1.0, -5.0, 3.0], 9), vec![0, 1, 2]);
+        assert_eq!(topk_indices(&[1.0, 2.0], 0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn ties_prefer_lower_index() {
+        assert_eq!(topk_indices(&[2.0, -2.0, 2.0, 1.0], 2), vec![0, 1]);
+        assert_eq!(topk_indices(&[0.0, 0.0, 0.0], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn matches_brute_force_property() {
+        proptest(128, |g| {
+            let n = g.usize(1, 300);
+            let k = g.usize(0, n);
+            // Coarse values force plenty of |.| ties.
+            let xs: Vec<f32> = (0..n).map(|_| (g.usize(0, 8) as f32) - 4.0).collect();
+            let got = topk_indices(&xs, k);
+            let want = brute_topk(&xs, k);
+            prop_assert(got == want, format!("n={n} k={k}: {got:?} vs {want:?}"));
+        });
+    }
+
+    #[test]
+    fn per_chunk_selects_in_every_chunk() {
+        let mut xs = vec![0.0f32; 64];
+        xs[3] = 9.0; // chunk 0
+        xs[17] = -8.0; // chunk 1
+        xs[40] = 7.0; // chunk 2
+        xs[63] = 6.5; // chunk 3
+        let got = topk_per_chunk(&xs, 16, 1);
+        assert_eq!(got, vec![3, 17, 40, 63]);
+    }
+
+    #[test]
+    fn per_chunk_counts() {
+        proptest(32, |g| {
+            let chunk = g.pow2(2, 7);
+            let n_chunks = g.usize(1, 12);
+            let k = g.usize(1, chunk);
+            let xs = g.vec_normal(chunk * n_chunks, 1.0);
+            let got = topk_per_chunk(&xs, chunk, k);
+            prop_assert(got.len() == n_chunks * k, format!("{} != {}", got.len(), n_chunks * k));
+            // indices ascend and stay within their chunk
+            for w in got.windows(2) {
+                prop_assert(w[0] < w[1], "not ascending");
+            }
+        });
+    }
+}

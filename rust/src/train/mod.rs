@@ -1,0 +1,384 @@
+//! The FlexDeMo training loop — Algorithm 1 of the paper, end to end.
+//!
+//! Per step, over the hybrid mesh (S = intra-node sharding groups,
+//! R = inter-node replication groups):
+//!
+//! 1. every rank runs fwd+bwd on its own microbatch through the AOT HLO
+//!    artifact (`runtime::ModelRuntime::train_step`) — full parameters,
+//!    full gradient (`p.grad` in the paper's PyTorch framing);
+//! 2. `GradReduceScatter(θ_t, S)`: ring reduce-scatter averages gradients
+//!    intra-node; each rank keeps its shard;
+//! 3. the optimizer folds the gradient shard into the decoupled buffer
+//!    (`m ← βm + Δ`);
+//! 4. the replicator extracts the fast components `q` (buffer keeps the
+//!    residual) and, on sync steps, the compressed payloads cross R via
+//!    the naive blocking all-gather (ring all-reduce for the Full
+//!    baseline); decoded payloads are averaged;
+//! 5. `θ ← θ − η·Q` on the shard; intra-node all-gather unshards the
+//!    updated parameters for the next forward pass.
+//!
+//! Edge cases degrade exactly as the paper states: |R|=1 → pure FSDP,
+//! |S|=1 → DeMo-style DDP, |S|=|R|=1 → single-accelerator training.
+//!
+//! Everything is deterministic: data streams, init, and the Random/
+//! Striding index sets all derive from `config.seed`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::collectives::{self, CollCtx};
+use crate::compress::WireStats;
+use crate::config::ExperimentConfig;
+use crate::data::{task_for, Task};
+use crate::metrics::{RunMetrics, StepRow, ValRow};
+use crate::net::{SimClock, Topology, TrafficMatrix};
+use crate::optim::Optimizer;
+use crate::replicate::{mean_decoded, GatherMode, ReplCtx, Replicator};
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::shard::{FlatLayout, HybridMesh};
+
+/// Per-rank state (optimizer + replicator own shard-sized buffers).
+struct RankState {
+    opt: Box<dyn Optimizer>,
+    repl: Box<dyn Replicator>,
+}
+
+/// The assembled training system.
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    pub model: ModelRuntime,
+    pub layout: FlatLayout,
+    pub mesh: HybridMesh,
+    task: Box<dyn Task>,
+    /// Per-node padded flat parameter buffer (nodes may diverge under
+    /// DiLoCo between syncs; otherwise they stay bit-identical — tested).
+    params: Vec<Vec<f32>>,
+    /// Per-rank gradient buffers (padded).
+    grads: Vec<Vec<f32>>,
+    ranks: Vec<RankState>,
+    pub clock: SimClock,
+    pub traffic: TrafficMatrix,
+    /// Cumulative inter/intra byte counters at the last step boundary.
+    last_inter: u64,
+    last_intra: u64,
+    step: u64,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, cfg: ExperimentConfig) -> Result<Trainer> {
+        let model = rt
+            .load_model(&cfg.artifacts_dir, &cfg.model)
+            .with_context(|| format!("loading model {}", cfg.model))?;
+        let topo = Topology::new(cfg.nodes, cfg.accels_per_node);
+        let layout = FlatLayout::new(&model.manifest.flat_params()).pad_for(cfg.accels_per_node);
+        let mesh = HybridMesh::new(topo, &layout);
+        let task = task_for(&model.manifest, cfg.seed);
+
+        // Identical init on every node (FSDP replicas start in sync).
+        let mut flat = model.manifest.init_flat(cfg.seed);
+        flat.resize(layout.padded_len, 0.0);
+        let params = vec![flat; cfg.nodes];
+        let grads = vec![vec![0.0f32; layout.padded_len]; topo.world_size()];
+
+        let shard_len = mesh.shards.shard_len();
+        let ranks = (0..topo.world_size())
+            .map(|_| RankState {
+                opt: cfg.opt.build(shard_len),
+                repl: cfg.repl.build(shard_len),
+            })
+            .collect();
+
+        let traffic = TrafficMatrix::new(cfg.nodes);
+        Ok(Trainer {
+            model,
+            layout,
+            mesh,
+            task,
+            params,
+            grads,
+            ranks,
+            clock: SimClock::new(),
+            traffic,
+            last_inter: 0,
+            last_intra: 0,
+            cfg,
+            step: 0,
+        })
+    }
+
+    /// Number of distinct gradient streams (DESIGN.md §2 scaling rule).
+    fn n_streams(&self) -> usize {
+        let world = self.mesh.topo.world_size();
+        if self.cfg.compute_streams == 0 {
+            world
+        } else {
+            self.cfg.compute_streams.min(world)
+        }
+    }
+
+    /// One full FlexDeMo step. Returns the mean train loss across ranks.
+    pub fn step(&mut self) -> Result<f64> {
+        let world = self.mesh.topo.world_size();
+        let accels = self.cfg.accels_per_node;
+        let step = self.step;
+        let ctx = CollCtx {
+            topo: &self.mesh.topo,
+            model: &self.cfg.net,
+            traffic: &self.traffic,
+        };
+
+        // -- 0. FSDP unshard accounting: within each node, parameters are
+        // all-gathered from shards before the forward pass. Data-wise the
+        // node buffer is already whole; charge the wire time.
+        let shard_bytes = (self.mesh.shards.shard_len() * 4) as u64;
+        if accels > 1 {
+            for node in 0..self.cfg.nodes {
+                for a in 0..accels {
+                    for b in 0..accels {
+                        if a != b {
+                            // ring all-gather neighbor traffic, recorded once
+                            let _ = (a, b);
+                        }
+                    }
+                }
+                self.traffic
+                    .record(node, node, (accels - 1) as u64 * shard_bytes * accels as u64);
+            }
+            let t_unshard = (accels as f64 - 1.0)
+                * self
+                    .cfg
+                    .net
+                    .xfer_time(crate::net::LinkClass::IntraNode, shard_bytes);
+            self.clock.advance(t_unshard);
+        }
+
+        // -- 1. fwd/bwd per rank (deduplicated by gradient stream).
+        let n_streams = self.n_streams();
+        let mut stream_results: Vec<Option<(f32, Vec<f32>)>> = vec![None; n_streams];
+        let mut loss_sum = 0.0f64;
+        for rank in 0..world {
+            let node = self.mesh.topo.node_of(rank);
+            let stream = rank % n_streams;
+            if stream_results[stream].is_none() {
+                let batch = self.task.train_batch(stream as u64, step);
+                let out = self
+                    .model
+                    .train_step(&self.params[node], &batch)
+                    .with_context(|| format!("rank {rank} step {step}"))?;
+                stream_results[stream] = Some(out);
+            }
+            let (loss, grads) = stream_results[stream].as_ref().unwrap();
+            loss_sum += *loss as f64;
+            let g = &mut self.grads[rank];
+            g[..grads.len()].copy_from_slice(grads);
+            g[grads.len()..].fill(0.0); // pad region carries no gradient
+        }
+        // Compute time: all ranks run in parallel; advance once.
+        self.clock
+            .advance(self.cfg.net.compute_time(self.model.manifest.step_flops()));
+
+        // -- 2. intra-node reduce-scatter (S groups run in parallel).
+        let mut t_rs_max = 0.0f64;
+        for node in 0..self.cfg.nodes {
+            let group = self.mesh.topo.shard_group(self.mesh.topo.rank(node, 0));
+            let shards: Vec<(usize, usize)> =
+                (0..accels).map(|a| self.mesh.shards.range(a)).collect();
+            let (head, tail) = self.grads.split_at_mut(node * accels);
+            let _ = head;
+            let bufs_vec = &mut tail[..accels];
+            let mut bufs: Vec<&mut [f32]> =
+                bufs_vec.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let t = collectives::ring_reduce_scatter_avg(&ctx, &group, &mut bufs, &shards);
+            t_rs_max = t_rs_max.max(t);
+        }
+        self.clock.advance(t_rs_max);
+
+        // -- 3+4. decoupled accumulate, extract, replicate per R-group.
+        let mut t_repl_max = 0.0f64;
+        for a in 0..accels {
+            let (lo, hi) = self.mesh.shards.range(a);
+            let rctx = ReplCtx {
+                step,
+                shard: a,
+                seed: self.cfg.seed,
+            };
+            let group = self.mesh.repl_group_of_shard(a);
+
+            // accumulate + extract on every rank of the group
+            let mut locals: Vec<Vec<f32>> = Vec::with_capacity(group.len());
+            let mut payloads = Vec::with_capacity(group.len());
+            let mut any_payload = false;
+            for &rank in &group {
+                let grad_shard = &self.grads[rank][lo..hi];
+                let st = &mut self.ranks[rank];
+                st.opt.accumulate(grad_shard);
+                let (q_local, payload) = st.repl.extract(&rctx, st.opt.buffer_mut());
+                any_payload |= payload.is_some();
+                locals.push(q_local);
+                payloads.push(payload);
+            }
+
+            // gather + decode + finalize + apply
+            if any_payload {
+                anyhow::ensure!(
+                    payloads.iter().all(|p| p.is_some()),
+                    "ranks disagree on sync step {step} shard {a}"
+                );
+                let payloads: Vec<crate::compress::Payload> =
+                    payloads.into_iter().map(|p| p.unwrap()).collect();
+                let mode = self.ranks[group[0]].repl.gather_mode();
+                let t = match mode {
+                    GatherMode::NaiveAllGather => {
+                        let sized: Vec<((), u64)> =
+                            payloads.iter().map(|p| ((), p.wire_bytes())).collect();
+                        let (_, t) = collectives::naive_all_gather_bytes(&ctx, &group, &sized);
+                        t
+                    }
+                    GatherMode::RingAllReduce => {
+                        // Dense ring over the payload bytes; record ring traffic.
+                        let g = group.len();
+                        let bytes = payloads[0].wire_bytes();
+                        if g > 1 {
+                            let chunk = bytes / g as u64;
+                            for sidx in 0..g {
+                                for _ in 0..2 * (g - 1) {
+                                    ctx.traffic.record(
+                                        self.mesh.topo.node_of(group[sidx]),
+                                        self.mesh.topo.node_of(group[(sidx + 1) % g]),
+                                        chunk,
+                                    );
+                                }
+                            }
+                            2.0 * (g as f64 - 1.0)
+                                * self.cfg.net.xfer_time(
+                                    self.mesh.topo.group_link_class(&group),
+                                    chunk,
+                                )
+                        } else {
+                            0.0
+                        }
+                    }
+                };
+                t_repl_max = t_repl_max.max(t);
+
+                let lr = self.cfg.lr_at(step);
+                for (gi, &rank) in group.iter().enumerate() {
+                    let st = &mut self.ranks[rank];
+                    let mean = mean_decoded(st.repl.as_ref(), &rctx, &payloads, hi - lo);
+                    let q = st
+                        .repl
+                        .finalize(&rctx, std::mem::take(&mut locals[gi]), Some(mean));
+                    let node = self.mesh.topo.node_of(rank);
+                    st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
+                }
+            } else {
+                // Local-only step (DiLoCo between syncs).
+                let lr = self.cfg.lr_at(step);
+                for (gi, &rank) in group.iter().enumerate() {
+                    let st = &mut self.ranks[rank];
+                    let q = st
+                        .repl
+                        .finalize(&rctx, std::mem::take(&mut locals[gi]), None);
+                    let node = self.mesh.topo.node_of(rank);
+                    st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
+                }
+            }
+        }
+        self.clock.advance(t_repl_max);
+
+        self.step += 1;
+        Ok(loss_sum / world as f64)
+    }
+
+    /// Validation loss on the held-out split (node-0 parameters).
+    pub fn validate(&self, batches: u64) -> Result<f64> {
+        let mut total = 0.0f64;
+        for i in 0..batches {
+            let batch = self.task.val_batch(i);
+            total += self.model.eval_step(&self.params[0], &batch)? as f64;
+        }
+        Ok(total / batches.max(1) as f64)
+    }
+
+    /// Drift between node parameter replicas (max |θ_0 − θ_n|∞); zero for
+    /// every-step schemes, bounded for DiLoCo between syncs.
+    pub fn replica_drift(&self) -> f32 {
+        let mut worst = 0.0f32;
+        for n in 1..self.params.len() {
+            for (a, b) in self.params[0].iter().zip(&self.params[n]) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        worst
+    }
+
+    /// Wire stats of a hypothetical payload from rank 0's current state
+    /// (used by the bandwidth figures without running a gather).
+    pub fn probe_payload(&mut self) -> Option<WireStats> {
+        let rctx = ReplCtx {
+            step: self.step,
+            shard: 0,
+            seed: self.cfg.seed,
+        };
+        let st = &mut self.ranks[0];
+        let mut buf = st.opt.buffer_mut().to_vec();
+        let (_, p) = st.repl.extract(&rctx, &mut buf);
+        p.map(|p| WireStats::of(&p))
+    }
+
+    /// Run the configured number of steps, collecting metrics.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        let label = format!(
+            "{}-{}-{}",
+            self.cfg.model,
+            self.cfg.opt.label(),
+            self.cfg.repl.label()
+        );
+        let mut metrics = RunMetrics::new(label);
+        for _ in 0..self.cfg.steps {
+            let wall0 = Instant::now();
+            let loss = self.step()?;
+            let inter = self.traffic.inter_node_bytes();
+            let intra = self.traffic.intra_node_bytes();
+            metrics.steps.push(StepRow {
+                step: self.step - 1,
+                sim_time: self.clock.now(),
+                loss,
+                inter_bytes: inter - self.last_inter,
+                intra_bytes: intra - self.last_intra,
+                wall_time: wall0.elapsed().as_secs_f64(),
+            });
+            self.last_inter = inter;
+            self.last_intra = intra;
+
+            if self.cfg.val_every > 0 && self.step % self.cfg.val_every == 0 {
+                let vloss = self.validate(self.cfg.val_batches)?;
+                log::info!(
+                    "step {:>5}  loss {:.4}  val {:.4}  sim {}",
+                    self.step,
+                    loss,
+                    vloss,
+                    crate::util::fmt_secs(self.clock.now())
+                );
+                metrics.val.push(ValRow {
+                    step: self.step,
+                    sim_time: self.clock.now(),
+                    loss: vloss,
+                });
+            } else if self.step % 50 == 0 {
+                log::debug!("step {:>5}  loss {loss:.4}", self.step);
+            }
+        }
+        Ok(metrics)
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    /// Parameters of node 0 (inspection / examples).
+    pub fn params_node0(&self) -> &[f32] {
+        &self.params[0]
+    }
+}

@@ -1,0 +1,336 @@
+//! Declarative CLI argument parser (substrate — no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, defaults,
+//! required args, and auto-generated `--help`. Used by the `detonation`
+//! launcher, every example, and the bench harness.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+    required: bool,
+}
+
+/// Builder-style argument parser.
+#[derive(Debug, Default)]
+pub struct ArgParser {
+    program: String,
+    about: String,
+    opts: Vec<Spec>,
+    positionals: Vec<Spec>,
+}
+
+/// Parsed argument values.
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// Extra positionals beyond the declared ones (e.g. bench filters).
+    pub rest: Vec<String>,
+}
+
+impl ArgParser {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+            required: true,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+            required: false,
+        });
+        self
+    }
+
+    /// Declared positional argument (optional; parsed in order).
+    pub fn pos(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [OPTIONS]", self.program, self.about, self.program);
+        for p in &self.positionals {
+            s.push_str(&format!(" [{}]", p.name));
+        }
+        s.push_str("\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else if let Some(d) = &o.default {
+                format!("  --{} <v={}>", o.name, d)
+            } else {
+                format!("  --{} <v> (required)", o.name)
+            };
+            s.push_str(&format!("{left:<34} {}\n", o.help));
+        }
+        for p in &self.positionals {
+            s.push_str(&format!("  [{}]{:<28} {}\n", p.name, "", p.help));
+        }
+        s
+    }
+
+    /// Parse; on `--help` prints usage and exits 0; on error prints and
+    /// exits 2 (launcher behaviour). Use `try_parse` in tests.
+    pub fn parse(self, argv: &[String]) -> Args {
+        match self.try_parse(argv) {
+            Ok(a) => a,
+            Err(ParseOutcome::Help(u)) => {
+                println!("{u}");
+                std::process::exit(0);
+            }
+            Err(ParseOutcome::Error(e)) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse std::env::args() (skipping argv[0]).
+    pub fn parse_env(self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&argv)
+    }
+
+    pub fn try_parse(&self, argv: &[String]) -> Result<Args, ParseOutcome> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut rest = Vec::new();
+        let mut pos_idx = 0usize;
+
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(ParseOutcome::Help(self.usage()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| ParseOutcome::Error(format!("unknown option --{key}")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(ParseOutcome::Error(format!("--{key} takes no value")));
+                    }
+                    flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| ParseOutcome::Error(format!("--{key} needs a value")))?
+                        }
+                    };
+                    values.insert(key, val);
+                }
+            } else if pos_idx < self.positionals.len() {
+                values.insert(self.positionals[pos_idx].name.clone(), a.clone());
+                pos_idx += 1;
+            } else {
+                rest.push(a.clone());
+            }
+            i += 1;
+        }
+
+        for o in &self.opts {
+            if o.required && !values.contains_key(&o.name) {
+                return Err(ParseOutcome::Error(format!("missing required --{}", o.name)));
+            }
+        }
+        Ok(Args { values, flags, rest })
+    }
+}
+
+#[derive(Debug)]
+pub enum ParseOutcome {
+    Help(String),
+    Error(String),
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("argument --{name} not declared/set"))
+    }
+
+    pub fn string(&self, name: &str) -> String {
+        self.str(name).to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_num(name)
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.parse_num(name)
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name);
+        raw.parse().unwrap_or_else(|e| {
+            eprintln!("error: --{name}={raw}: {e}");
+            std::process::exit(2);
+        })
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        let raw = self.str(name);
+        if raw.is_empty() {
+            return vec![];
+        }
+        raw.split(',').map(|s| s.trim().to_string()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn parser() -> ArgParser {
+        ArgParser::new("t", "test")
+            .opt("steps", "100", "steps")
+            .opt("model", "lm-tiny", "model")
+            .flag("verbose", "chatty")
+            .req("out", "output dir")
+            .pos("figure", "figure id")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parser()
+            .try_parse(&argv(&["--out", "/tmp/x", "--steps=5"]))
+            .unwrap();
+        assert_eq!(a.usize("steps"), 5);
+        assert_eq!(a.str("model"), "lm-tiny");
+        assert_eq!(a.str("out"), "/tmp/x");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parser()
+            .try_parse(&argv(&["fig3", "--verbose", "--out", "o", "extra"]))
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.str("figure"), "fig3");
+        assert_eq!(a.rest, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(matches!(
+            parser().try_parse(&argv(&[])),
+            Err(ParseOutcome::Error(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(matches!(
+            parser().try_parse(&argv(&["--nope", "1", "--out", "o"])),
+            Err(ParseOutcome::Error(_))
+        ));
+    }
+
+    #[test]
+    fn help_requested() {
+        assert!(matches!(
+            parser().try_parse(&argv(&["--help"])),
+            Err(ParseOutcome::Help(_))
+        ));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = ArgParser::new("t", "x")
+            .opt("rates", "2,4,8", "rates")
+            .try_parse(&argv(&[]))
+            .unwrap();
+        assert_eq!(a.list("rates"), vec!["2", "4", "8"]);
+    }
+}

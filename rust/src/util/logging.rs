@@ -1,0 +1,64 @@
+//! Leveled stderr logger wired into the `log` facade.
+//!
+//! `DETONATION_LOG={error|warn|info|debug|trace}` controls verbosity
+//! (default `info`). Timestamps are relative to process start — this is a
+//! simulator, the interesting clock is `net::SimTime`.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent). Call once from every entrypoint.
+pub fn init() {
+    let level = match std::env::var("DETONATION_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger {
+        start: Instant::now(),
+        level,
+    });
+    // Ignore AlreadySet — tests may init several times.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

