@@ -185,9 +185,11 @@ fn fig3(rt: &Runtime) -> Result<()> {
     let full_t = exp.runs.last().unwrap().mean_step_time();
     for r in &exp.runs[..exp.runs.len() - 1] {
         println!(
-            "  {:<14} {:.2}x faster per step than full-sync AdamW",
+            "  {:<14} {:.2}x faster per step than full-sync AdamW  (exposed comm {}, {:.0}% hidden)",
             r.label,
-            full_t / r.mean_step_time()
+            full_t / r.mean_step_time(),
+            fmt_secs(r.total_exposed_comm()),
+            r.overlap_efficiency() * 100.0,
         );
     }
     println!("  [paper: all replicators ~2.6x faster than Hybrid-FSDP AdamW; DeMo 1/32 best loss]");
@@ -317,6 +319,7 @@ fn fig10(rt: &Runtime) -> Result<()> {
     for (panel, model) in [("a-t5", "seq2seq-tiny"), ("b-vit", "vit-tiny")] {
         let mut exp = Experiment::new(&format!("fig10{panel}"), &results_root());
         let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+        let mut exposed_at_10 = Vec::new();
         for (opt, repl) in [
             ("demo-sgd", "demo:1/16"),
             ("demo-sgd", "demo:1/32"),
@@ -335,6 +338,15 @@ fn fig10(rt: &Runtime) -> Result<()> {
                 cfg.apply_arg("repl", repl)?;
                 let run = exp.run(rt, &cfg, Some(&format!("{}-{}mbps", cfg.repl.label(), mbps)))?;
                 times.push(run.mean_step_time());
+                if mbps == bandwidths[0] {
+                    // overlap breakdown at the most throttled point: the
+                    // exposed_comm/hidden_comm CSV columns, aggregated
+                    exposed_at_10.push((
+                        format!("{opt}+{repl}"),
+                        run.total_exposed_comm(),
+                        run.overlap_efficiency(),
+                    ));
+                }
             }
             rows.push((format!("{opt}+{repl}"), times));
         }
@@ -358,6 +370,10 @@ fn fig10(rt: &Runtime) -> Result<()> {
             at10(1) / at10(3),
             at10(4) / at10(3)
         );
+        println!("overlap breakdown at 10 Mbps (exposed comm | hidden fraction):");
+        for (label, exposed, eff) in &exposed_at_10 {
+            println!("  {label:<36} {:>12} | {:.0}% hidden", fmt_secs(*exposed), eff * 100.0);
+        }
         exp.finish()?;
     }
     Ok(())

@@ -1,0 +1,111 @@
+//! Overlap-engine bench: what the event-driven scheduler buys.
+//!
+//!     cargo bench --bench overlap
+//!
+//! Two comparisons, across replication schemes on a throttled (100 Mbps)
+//! two-node link with the synthetic surrogate model:
+//!
+//! * **serialized vs overlapped sim-time** — the simulated speedup from
+//!   hiding phase 0/2 intra-node traffic behind backward compute and the
+//!   replication gather behind the next forward;
+//! * **threaded vs single-thread wall-clock** — the real speedup from
+//!   fanning the deduplicated per-stream fwd/bwd calls out to
+//!   `std::thread::scope` workers.
+//!
+//! Results land in `BENCH_overlap.json` at the repo root (the perf
+//! trajectory artifact) and are printed as a table.
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::runtime;
+use detonation::net::NetModel;
+use detonation::train::Trainer;
+use detonation::util::fmt_secs;
+use detonation::util::json::Json;
+
+fn cfg(repl: &str, overlap: bool, threads: usize) -> Result<ExperimentConfig> {
+    let mut c = ExperimentConfig {
+        model: "synthetic-lm".into(),
+        nodes: 2,
+        accels_per_node: 2,
+        steps: 24,
+        lr: 0.02,
+        seed: 7,
+        net: NetModel::throttled(100.0),
+        overlap,
+        threads,
+        ..Default::default()
+    };
+    c.apply_arg("repl", repl)?;
+    Ok(c)
+}
+
+fn sim_time(repl: &str, overlap: bool) -> Result<(f64, f64, f64)> {
+    let rt = runtime()?;
+    let mut t = Trainer::new(&rt, cfg(repl, overlap, 1)?)?;
+    let m = t.run()?;
+    Ok((
+        m.mean_step_time(),
+        m.total_exposed_comm(),
+        m.total_hidden_comm(),
+    ))
+}
+
+fn wall_time(repl: &str, threads: usize) -> Result<f64> {
+    let rt = runtime()?;
+    let mut t = Trainer::new(&rt, cfg(repl, true, threads)?)?;
+    let t0 = std::time::Instant::now();
+    t.run()?;
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let schemes = ["full", "demo:1/8", "random:1/16", "diloco:8"];
+    let mut rows = Vec::new();
+    println!(
+        "{:<14} {:>12} {:>12} {:>8} {:>10} {:>10} {:>10} {:>8}",
+        "scheme", "serial/step", "overlap/step", "speedup", "hidden", "wall 1t", "wall 4t", "wallx"
+    );
+    for repl in schemes {
+        let (ser, _, _) = sim_time(repl, false)?;
+        let (ovl, exposed, hidden) = sim_time(repl, true)?;
+        let w1 = wall_time(repl, 1)?;
+        let w4 = wall_time(repl, 4)?;
+        println!(
+            "{:<14} {:>12} {:>12} {:>7.2}x {:>10} {:>10} {:>10} {:>7.2}x",
+            repl,
+            fmt_secs(ser),
+            fmt_secs(ovl),
+            ser / ovl,
+            fmt_secs(hidden),
+            fmt_secs(w1),
+            fmt_secs(w4),
+            w1 / w4,
+        );
+        rows.push(Json::obj(vec![
+            ("scheme", Json::Str(repl.to_string())),
+            ("serialized_step_s", Json::Num(ser)),
+            ("overlapped_step_s", Json::Num(ovl)),
+            ("sim_speedup", Json::Num(ser / ovl)),
+            ("exposed_comm_s", Json::Num(exposed)),
+            ("hidden_comm_s", Json::Num(hidden)),
+            ("wall_1_thread_s", Json::Num(w1)),
+            ("wall_4_threads_s", Json::Num(w4)),
+            ("wall_speedup", Json::Num(w1 / w4)),
+        ]));
+    }
+    let out = Json::obj(vec![
+        ("bench", Json::Str("overlap".into())),
+        ("model", Json::Str("synthetic-lm".into())),
+        ("inter_mbps", Json::Num(100.0)),
+        ("schemes", Json::Arr(rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_overlap.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

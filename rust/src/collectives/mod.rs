@@ -14,11 +14,183 @@
 //!   grows linearly with the group — the paper's Fig 6 "DeMo does not
 //!   scale" mechanism falls straight out of this cost model.
 //!
-//! All functions return the elapsed `SimTime` for the op; the caller
-//! advances the shared clock (groups that run in parallel advance by the
-//! max across groups).
+//! ## Cost events
+//!
+//! Every collective's α–β cost is described by a [`CommEvent`] — start,
+//! duration, link class, wire bytes, dependency ids — built by the
+//! `*_event` constructors below. The legacy scalar entry points still
+//! return an elapsed `SimTime` (callers under `--no-overlap` advance a
+//! barrier clock by the max across groups); the event engine in
+//! `train::engine` instead schedules the same events onto per-rank NIC
+//! timelines so communication can hide behind compute. Both paths share
+//! one duration formula per algorithm, so serialized totals are identical
+//! bit-for-bit between the old and new clocks.
 
 use crate::net::{LinkClass, NetModel, SimTime, Topology, TrafficMatrix};
+
+/// One collective's cost description: what moves, over which link class,
+/// how long it occupies the participants' NICs once started, and (after
+/// scheduling) when it starts and which earlier events gated it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommEvent {
+    /// Engine-assigned id (0 until scheduled); `deps` entries refer to
+    /// these ids, so a dependency graph survives across steps.
+    pub id: u64,
+    /// Algorithm tag ("reduce-scatter", "all-gather", "naive-gather", ...).
+    pub label: &'static str,
+    pub class: LinkClass,
+    /// Cost-bearing per-rank wire volume (the bytes the busiest NIC moves).
+    pub bytes: u64,
+    /// α–β duration once started.
+    pub duration: SimTime,
+    /// Scheduled start time (0 until a scheduler places the event).
+    pub start: SimTime,
+    /// Ids of the events whose completion gated this start.
+    pub deps: Vec<u64>,
+}
+
+impl CommEvent {
+    pub fn new(label: &'static str, class: LinkClass, bytes: u64, duration: SimTime) -> CommEvent {
+        CommEvent {
+            id: 0,
+            label,
+            class,
+            bytes,
+            duration,
+            start: 0.0,
+            deps: Vec::new(),
+        }
+    }
+
+    pub fn end(&self) -> SimTime {
+        self.start + self.duration
+    }
+
+    /// Fill in scheduling results (used by the event engine).
+    pub fn scheduled(mut self, start: SimTime, deps: Vec<u64>) -> CommEvent {
+        self.start = start;
+        self.deps = deps;
+        self
+    }
+}
+
+/// An effective point-to-point link: class + α + β. Heterogeneous
+/// clusters (per-node NIC overrides) inject a reduced `bw` here; the
+/// homogeneous case is `Link::of(model, class)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    pub class: LinkClass,
+    pub lat: f64,
+    pub bw: f64,
+}
+
+impl Link {
+    pub fn of(model: &NetModel, class: LinkClass) -> Link {
+        Link {
+            class,
+            lat: model.lat(class),
+            bw: model.bw(class),
+        }
+    }
+
+    /// α–β time of one message (identical formula to `NetModel::xfer_time`).
+    pub fn xfer(&self, bytes: u64) -> SimTime {
+        self.lat + bytes as f64 / self.bw
+    }
+}
+
+/// Ring reduce-scatter cost: (g−1) steps of the largest shard.
+pub fn ring_reduce_scatter_event(link: &Link, g: usize, max_shard_bytes: u64) -> CommEvent {
+    let dur = if g <= 1 {
+        0.0
+    } else {
+        (g as f64 - 1.0) * link.xfer(max_shard_bytes)
+    };
+    let bytes = if g <= 1 { 0 } else { (g as u64 - 1) * max_shard_bytes };
+    CommEvent::new("reduce-scatter", link.class, bytes, dur)
+}
+
+/// Ring all-gather cost: same wire shape as reduce-scatter.
+pub fn ring_all_gather_event(link: &Link, g: usize, max_shard_bytes: u64) -> CommEvent {
+    let dur = if g <= 1 {
+        0.0
+    } else {
+        (g as f64 - 1.0) * link.xfer(max_shard_bytes)
+    };
+    let bytes = if g <= 1 { 0 } else { (g as u64 - 1) * max_shard_bytes };
+    CommEvent::new("all-gather", link.class, bytes, dur)
+}
+
+/// Ring all-reduce cost over a dense buffer of `total_bytes`:
+/// reduce-scatter + all-gather, each (g−1) steps of `total_bytes/g`.
+pub fn ring_all_reduce_event(link: &Link, g: usize, total_bytes: u64) -> CommEvent {
+    if g <= 1 {
+        return CommEvent::new("all-reduce", link.class, 0, 0.0);
+    }
+    let chunk = total_bytes / g as u64;
+    let dur = 2.0 * (g as f64 - 1.0) * link.xfer(chunk);
+    CommEvent::new("all-reduce", link.class, 2 * (g as u64 - 1) * chunk, dur)
+}
+
+/// Naive blocking all-gather cost (DeMo's `dist.all_gather` of opaque
+/// payloads): each rank serializes (g−1) sends of its payload on its own
+/// NIC; the event lasts as long as the worst rank's send queue. The
+/// repeated-addition form is kept deliberately — it is bit-identical to
+/// the legacy accounting.
+pub fn naive_all_gather_event(link: &Link, payload_bytes: &[u64]) -> CommEvent {
+    let g = payload_bytes.len();
+    if g <= 1 {
+        return CommEvent::new("naive-gather", link.class, 0, 0.0);
+    }
+    let mut worst: SimTime = 0.0;
+    let mut worst_bytes = 0u64;
+    for (i, &bytes_i) in payload_bytes.iter().enumerate() {
+        let mut t_send: SimTime = 0.0;
+        for j in 0..g {
+            if i != j {
+                t_send += link.xfer(bytes_i);
+            }
+        }
+        if t_send > worst {
+            worst = t_send;
+            worst_bytes = (g as u64 - 1) * bytes_i;
+        }
+    }
+    CommEvent::new("naive-gather", link.class, worst_bytes, worst)
+}
+
+/// Tree broadcast cost: ⌈log2 g⌉ rounds of the full buffer.
+pub fn broadcast_event(link: &Link, g: usize, bytes: u64) -> CommEvent {
+    if g <= 1 {
+        return CommEvent::new("broadcast", link.class, 0, 0.0);
+    }
+    let rounds = (g as f64).log2().ceil();
+    CommEvent::new("broadcast", link.class, bytes, rounds * link.xfer(bytes))
+}
+
+/// Record the neighbor traffic of a ring pass (`msgs_per_link` messages of
+/// `bytes` from every group member to its ring successor).
+pub fn record_ring_traffic(
+    traffic: &TrafficMatrix,
+    topo: &Topology,
+    group: &[usize],
+    msgs_per_link: usize,
+    bytes: u64,
+) {
+    let g = group.len();
+    if g <= 1 {
+        return;
+    }
+    for i in 0..g {
+        for _ in 0..msgs_per_link {
+            traffic.record(
+                topo.node_of(group[i]),
+                topo.node_of(group[(i + 1) % g]),
+                bytes,
+            );
+        }
+    }
+}
 
 /// Context threaded through every collective call.
 pub struct CollCtx<'a> {
@@ -71,14 +243,9 @@ pub fn ring_all_reduce_avg(
     // Cost: ring all-reduce = reduce-scatter + all-gather, each (g-1)
     // steps of N/g elements; record ring-neighbor traffic.
     let chunk_bytes = (n * 4 / g) as u64;
-    for step in 0..2 * (g - 1) {
-        let _ = step;
-        for i in 0..g {
-            ctx.record(group[i], group[(i + 1) % g], chunk_bytes);
-        }
-    }
+    record_ring_traffic(ctx.traffic, ctx.topo, group, 2 * (g - 1), chunk_bytes);
     let class = ctx.class(group);
-    2.0 * (g as f64 - 1.0) * ctx.model.xfer_time(class, chunk_bytes)
+    ring_all_reduce_event(&Link::of(ctx.model, class), g, (n * 4) as u64).duration
 }
 
 /// Ring reduce-scatter (average): after the call, `bufs[i]` holds the mean
@@ -113,13 +280,9 @@ pub fn ring_reduce_scatter_avg(
     }
 
     let max_shard_bytes = shards.iter().map(|&(lo, hi)| (hi - lo) * 4).max().unwrap() as u64;
-    for i in 0..g {
-        for _ in 0..g - 1 {
-            ctx.record(group[i], group[(i + 1) % g], max_shard_bytes);
-        }
-    }
+    record_ring_traffic(ctx.traffic, ctx.topo, group, g - 1, max_shard_bytes);
     let class = ctx.class(group);
-    (g as f64 - 1.0) * ctx.model.xfer_time(class, max_shard_bytes)
+    ring_reduce_scatter_event(&Link::of(ctx.model, class), g, max_shard_bytes).duration
 }
 
 /// Ring all-gather: rank i contributes `bufs[i][shards[i]]`; afterwards
@@ -150,13 +313,9 @@ pub fn ring_all_gather(
     }
 
     let max_shard_bytes = shards.iter().map(|&(lo, hi)| (hi - lo) * 4).max().unwrap() as u64;
-    for i in 0..g {
-        for _ in 0..g - 1 {
-            ctx.record(group[i], group[(i + 1) % g], max_shard_bytes);
-        }
-    }
+    record_ring_traffic(ctx.traffic, ctx.topo, group, g - 1, max_shard_bytes);
     let class = ctx.class(group);
-    (g as f64 - 1.0) * ctx.model.xfer_time(class, max_shard_bytes)
+    ring_all_gather_event(&Link::of(ctx.model, class), g, max_shard_bytes).duration
 }
 
 /// Naive blocking all-gather of opaque payloads (DeMo's replication
@@ -174,20 +333,18 @@ pub fn naive_all_gather_bytes<T: Clone>(
         return (gathered, 0.0);
     }
     let class = ctx.class(group);
-    let mut worst: SimTime = 0.0;
     for (i, &(_, bytes_i)) in payloads.iter().enumerate() {
         // rank i sends its payload to every peer (blocking, serialized on
         // its NIC — the paper's non-scaling mechanism).
-        let mut t_send: SimTime = 0.0;
         for (j, _) in group.iter().enumerate() {
             if i != j {
                 ctx.record(group[i], group[j], bytes_i);
-                t_send += ctx.model.xfer_time(class, bytes_i);
             }
         }
-        worst = worst.max(t_send);
     }
-    (gathered, worst)
+    let sizes: Vec<u64> = payloads.iter().map(|&(_, b)| b).collect();
+    let ev = naive_all_gather_event(&Link::of(ctx.model, class), &sizes);
+    (gathered, ev.duration)
 }
 
 /// Broadcast `src_buf` (group index `src`) into every buffer (tree cost).
@@ -216,8 +373,7 @@ pub fn broadcast(
         }
     }
     let class = ctx.class(group);
-    let rounds = (g as f64).log2().ceil();
-    rounds * ctx.model.xfer_time(class, bytes)
+    broadcast_event(&Link::of(ctx.model, class), g, bytes).duration
 }
 
 #[cfg(test)]
@@ -390,6 +546,73 @@ mod tests {
         for b in &bufs {
             assert_eq!(b, &vec![7.0; 8]);
         }
+    }
+
+    #[test]
+    fn event_durations_bit_match_scalar_collectives() {
+        // The event constructors are the single source of truth for cost;
+        // the scalar entry points must return exactly the same floats.
+        let topo = Topology::new(2, 1);
+        let model = NetModel::hpc();
+        let traffic = TrafficMatrix::new(2);
+        let c = ctx(&topo, &model, &traffic);
+        let group = [0usize, 1];
+        let link = Link::of(&model, LinkClass::InterNode);
+
+        let n = 1000usize;
+        let mut a = vec![1.0f32; n];
+        let mut b = vec![2.0f32; n];
+        let t = ring_all_reduce_avg(&c, &group, &mut [&mut a, &mut b]);
+        assert_eq!(t, ring_all_reduce_event(&link, 2, (n * 4) as u64).duration);
+
+        let shards = [(0usize, 500usize), (500, 1000)];
+        let t = ring_reduce_scatter_avg(&c, &group, &mut [&mut a, &mut b], &shards);
+        assert_eq!(t, ring_reduce_scatter_event(&link, 2, 2000).duration);
+
+        let t = ring_all_gather(&c, &group, &mut [&mut a, &mut b], &shards);
+        assert_eq!(t, ring_all_gather_event(&link, 2, 2000).duration);
+
+        let payloads: Vec<((), u64)> = vec![((), 777), ((), 99)];
+        let (_, t) = naive_all_gather_bytes(&c, &group, &payloads);
+        assert_eq!(t, naive_all_gather_event(&link, &[777, 99]).duration);
+    }
+
+    #[test]
+    fn event_metadata_and_scheduling() {
+        let link = Link {
+            class: LinkClass::InterNode,
+            lat: 1.0,
+            bw: 100.0,
+        };
+        let ev = naive_all_gather_event(&link, &[200, 100, 100]);
+        assert_eq!(ev.label, "naive-gather");
+        assert_eq!(ev.class, LinkClass::InterNode);
+        // worst rank sends its 200 B payload to 2 peers
+        assert_eq!(ev.bytes, 400);
+        assert!((ev.duration - 2.0 * (1.0 + 2.0)).abs() < 1e-12);
+        assert_eq!(ev.start, 0.0);
+        let ev = ev.scheduled(5.0, vec![3, 4]);
+        assert_eq!(ev.start, 5.0);
+        assert!((ev.end() - 11.0).abs() < 1e-12);
+        assert_eq!(ev.deps, vec![3, 4]);
+
+        // singleton groups are free in every constructor
+        assert_eq!(ring_all_reduce_event(&link, 1, 4096).duration, 0.0);
+        assert_eq!(naive_all_gather_event(&link, &[4096]).duration, 0.0);
+        assert_eq!(broadcast_event(&link, 1, 4096).duration, 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_link_slows_event() {
+        let model = NetModel::hpc();
+        let fast = Link::of(&model, LinkClass::InterNode);
+        let slow = Link {
+            bw: model.inter_bw / 10.0,
+            ..fast
+        };
+        let f = ring_all_reduce_event(&fast, 4, 1 << 20).duration;
+        let s = ring_all_reduce_event(&slow, 4, 1 << 20).duration;
+        assert!(s > f * 5.0, "slow NIC must dominate: {f} vs {s}");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use crate::net::NetModel;
+use crate::net::{ClusterModel, NetModel};
 use crate::optim::OptSpec;
 use crate::replicate::ReplSpec;
 use crate::util::json::Json;
@@ -37,6 +37,15 @@ pub struct ExperimentConfig {
     /// size). Large-scale sims (Fig 5/6) compute a few real streams and
     /// mirror them — the comm clock still models every rank (DESIGN.md §2).
     pub compute_streams: usize,
+    /// Event-engine scheduling: true = overlap communication with compute
+    /// (the default); false = legacy barrier-serialized phases
+    /// (`--no-overlap`, bit-parity with the old `SimClock`).
+    pub overlap: bool,
+    /// Worker threads for the per-stream fwd/bwd fan-out (1 = sequential,
+    /// 0 = one worker per stream). Never changes numerics.
+    pub threads: usize,
+    /// Per-node stragglers + NIC bandwidth overrides (empty = uniform).
+    pub cluster: ClusterModel,
 }
 
 impl Default for ExperimentConfig {
@@ -59,6 +68,9 @@ impl Default for ExperimentConfig {
             val_batches: 8,
             net: NetModel::hpc(),
             compute_streams: 0,
+            overlap: true,
+            threads: 1,
+            cluster: ClusterModel::uniform(),
         }
     }
 }
@@ -99,6 +111,22 @@ impl ExperimentConfig {
             ("intra_bw_bytes_per_s", Json::Num(self.net.intra_bw)),
             ("device_flops", Json::Num(self.net.device_flops)),
             ("compute_streams", Json::Num(self.compute_streams as f64)),
+            ("overlap", Json::Bool(self.overlap)),
+            ("threads", Json::Num(self.threads as f64)),
+            (
+                "stragglers",
+                Json::Arr(self.cluster.slowdown.iter().map(|&s| Json::Num(s)).collect()),
+            ),
+            (
+                "node_inter_bw",
+                Json::Arr(
+                    self.cluster
+                        .node_inter_bw
+                        .iter()
+                        .map(|&b| Json::Num(b))
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -121,6 +149,10 @@ impl ExperimentConfig {
                 self.net.inter_bw = value.parse::<f64>()? * 1e6 / 8.0;
             }
             "streams" => self.compute_streams = value.parse()?,
+            "overlap" => self.overlap = value.parse()?,
+            "threads" => self.threads = value.parse()?,
+            "straggler" => self.cluster.slowdown = ClusterModel::parse_slowdown(value)?,
+            "node-mbps" => self.cluster.node_inter_bw = ClusterModel::parse_node_mbps(value)?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -173,5 +205,25 @@ mod tests {
         assert_eq!(j.get("model").unwrap().as_str(), Some("lm-tiny"));
         assert_eq!(j.get("nodes").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("repl").unwrap().as_str(), Some("demo-1/8"));
+        assert!(j.get("overlap").is_some());
+        assert!(j.get("stragglers").is_some());
+    }
+
+    #[test]
+    fn overlap_and_scenario_args() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.overlap);
+        assert_eq!(c.threads, 1);
+        assert!(c.cluster.is_uniform());
+        c.apply_arg("overlap", "false").unwrap();
+        c.apply_arg("threads", "4").unwrap();
+        c.apply_arg("straggler", "1:2.0").unwrap();
+        c.apply_arg("node-mbps", "0:100").unwrap();
+        assert!(!c.overlap);
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.cluster.slowdown_of(1), 2.0);
+        assert!((c.cluster.node_bw(&c.net, 0) - 12.5e6).abs() < 1.0);
+        assert!(c.apply_arg("straggler", "1:-2").is_err());
+        assert!(c.apply_arg("overlap", "maybe").is_err());
     }
 }

@@ -1,8 +1,10 @@
 //! Experiment coordinator: the leader that turns configs into runs.
 //!
-//! One [`Runtime`] (PJRT client) is shared across a whole sweep; each
-//! experiment builds a fresh [`Trainer`] (cluster + optimizer + replicator
-//! state), runs it, and lands metrics + config in `results/<name>/`.
+//! One [`Runtime`] (PJRT client under the `xla` feature, the pure-Rust
+//! surrogate otherwise) is shared across a whole sweep; each experiment
+//! builds a fresh [`Trainer`] (cluster + optimizer + replicator state,
+//! event-engine clock), runs it, and lands metrics + config in
+//! `results/<name>/`.
 //! Every figure bench and example drives this module, so the behaviour of
 //! "an experiment" is defined in exactly one place.
 
@@ -35,14 +37,15 @@ impl Experiment {
     /// Run one configuration (label defaults to opt+repl) and collect it.
     pub fn run(&mut self, rt: &Runtime, cfg: &ExperimentConfig, label: Option<&str>) -> Result<&RunMetrics> {
         log::info!(
-            "[{}] run {} model={} mesh={}x{} opt={} repl={}",
+            "[{}] run {} model={} mesh={}x{} opt={} repl={} sched={}",
             self.name,
             label.unwrap_or("-"),
             cfg.model,
             cfg.nodes,
             cfg.accels_per_node,
             cfg.opt.label(),
-            cfg.repl.label()
+            cfg.repl.label(),
+            if cfg.overlap { "overlap" } else { "serialized" }
         );
         let mut trainer = Trainer::new(rt, cfg.clone())?;
         let mut metrics = trainer.run()?;
@@ -91,7 +94,8 @@ impl Experiment {
     }
 }
 
-/// Shared entry: build the PJRT runtime once.
+/// Shared entry: build the model runtime once (PJRT with `--features
+/// xla`, the pure-Rust surrogate backend otherwise).
 pub fn runtime() -> Result<Runtime> {
     crate::util::logging::init();
     Runtime::cpu()
@@ -120,6 +124,9 @@ mod tests {
                 loss,
                 inter_bytes: 0,
                 intra_bytes: 0,
+                compute_time: 0.0,
+                exposed_comm: 0.0,
+                hidden_comm: 0.0,
                 wall_time: 0.0,
             });
             m.val.push(crate::metrics::ValRow {

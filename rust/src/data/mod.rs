@@ -16,7 +16,9 @@ use crate::runtime::{BatchData, BatchDtype, Manifest};
 use crate::util::rng::Rng;
 
 /// A task generates per-rank training batches and a fixed validation set.
-pub trait Task: Send {
+/// `Sync` because the trainer fans per-stream batch generation out to
+/// `std::thread::scope` workers (generators are stateless given args).
+pub trait Task: Send + Sync {
     /// Batch for `(rank_stream, step)`; deterministic in its arguments.
     fn train_batch(&self, stream: u64, step: u64) -> Vec<BatchData>;
     /// The `i`-th validation batch (held-out split; same for all ranks).

@@ -12,9 +12,30 @@
 //!   replication schemes, metrics, launcher.
 //! * **Layer 2/1 (python/, build-time only)** — JAX transformer models
 //!   whose fwd/bwd lowers through Pallas kernels into HLO-text artifacts.
-//! * **runtime** — loads those artifacts via the PJRT CPU client (`xla`
-//!   crate) and executes them from the training hot path. Python is never
-//!   on the training path.
+//! * **runtime** — two backends behind one API: the PJRT CPU client
+//!   (cargo feature `xla`) executing the AOT artifacts, and a pure-Rust
+//!   surrogate (default) so the whole simulator builds and tests offline.
+//!   Python is never on the training path.
+//!
+//! ## Time model: the event engine
+//!
+//! Numerics and time are decoupled. Data always moves in program order
+//! (bit-deterministic); *when* it moves is decided by the discrete-event
+//! engine (`train::engine`):
+//!
+//! * every rank owns a **compute lane** and a **NIC lane**
+//!   ([`net::Timeline`] — monotone per-rank ready-times);
+//! * collectives describe their cost as [`collectives::CommEvent`]s
+//!   (start, duration, link class, bytes, dependency ids), built by one
+//!   shared set of `*_event` constructors;
+//! * with overlap on (default), phase 0/2 intra-node traffic hides behind
+//!   backward compute and the replication gather overlaps the next
+//!   step's forward (DeMo's async-all-gather decoupling); `--no-overlap`
+//!   reproduces the legacy barrier-synchronous totals bit-for-bit;
+//! * [`net::ClusterModel`] adds per-node straggler slowdowns and NIC
+//!   bandwidth overrides on top of the homogeneous α–β [`net::NetModel`];
+//! * metrics split each step into compute vs exposed-comm vs hidden-comm
+//!   on the critical rank (`results/*.steps.csv` columns).
 
 pub mod collectives;
 pub mod compress;

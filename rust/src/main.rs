@@ -58,6 +58,10 @@ fn train_parser() -> ArgParser {
         .opt("val-batches", "8", "validation batches")
         .opt("inter-mbps", "0", "throttle inter-node bandwidth (Mbps, 0 = HPC default)")
         .opt("streams", "0", "distinct gradient streams (0 = world size)")
+        .opt("threads", "1", "fwd/bwd worker threads (0 = one per stream)")
+        .opt("straggler", "", "per-node compute slowdown, NODE:FACTOR[,..]")
+        .opt("node-mbps", "", "per-node NIC bandwidth override, NODE:MBPS[,..]")
+        .flag("no-overlap", "serialize phases (legacy barrier clock)")
         .opt("name", "cli", "experiment name (results/<name>/)")
 }
 
@@ -66,7 +70,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let mut cfg = ExperimentConfig::default();
     for key in [
         "model", "artifacts", "nodes", "accels", "opt", "repl", "lr", "warmup", "steps", "seed",
-        "val-every", "val-batches", "streams",
+        "val-every", "val-batches", "streams", "threads",
     ] {
         cfg.apply_arg(key, args.str(key))?;
     }
@@ -74,17 +78,27 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if mbps > 0.0 {
         cfg.apply_arg("inter-mbps", args.str("inter-mbps"))?;
     }
+    if args.flag("no-overlap") {
+        cfg.overlap = false;
+    }
+    for key in ["straggler", "node-mbps"] {
+        if !args.str(key).is_empty() {
+            cfg.apply_arg(key, args.str(key))?;
+        }
+    }
     let rt = runtime()?;
     let mut exp = Experiment::new(args.str("name"), &results_root());
     let run = exp.run(&rt, &cfg, None)?;
     println!(
-        "final loss {:.4}{}  sim time {}  inter-node {}",
+        "final loss {:.4}{}  sim time {}  inter-node {}  exposed comm {} (hidden {:.0}%)",
         run.final_loss().unwrap_or(f64::NAN),
         run.final_val_loss()
             .map(|v| format!("  val {v:.4}"))
             .unwrap_or_default(),
         detonation::util::fmt_secs(run.total_sim_time()),
         detonation::util::fmt_bytes(run.total_inter_bytes()),
+        detonation::util::fmt_secs(run.total_exposed_comm()),
+        run.overlap_efficiency() * 100.0,
     );
     println!("{}", exp.finish()?);
     Ok(())

@@ -18,6 +18,12 @@ pub struct StepRow {
     pub inter_bytes: u64,
     /// Intra-node bytes this step.
     pub intra_bytes: u64,
+    /// Critical rank's compute busy-time this step (s, simulated).
+    pub compute_time: f64,
+    /// Communication the critical rank could not hide behind compute (s).
+    pub exposed_comm: f64,
+    /// Communication overlapped with compute on the critical rank (s).
+    pub hidden_comm: f64,
     /// Real wall time spent computing this step (profiling only).
     pub wall_time: f64,
 }
@@ -62,6 +68,27 @@ impl RunMetrics {
         self.steps.iter().map(|r| r.inter_bytes).sum()
     }
 
+    /// Total communication time the critical path could not hide (s).
+    pub fn total_exposed_comm(&self) -> f64 {
+        self.steps.iter().map(|r| r.exposed_comm).sum()
+    }
+
+    /// Total communication time overlapped behind compute (s).
+    pub fn total_hidden_comm(&self) -> f64 {
+        self.steps.iter().map(|r| r.hidden_comm).sum()
+    }
+
+    /// Fraction of the run's communication that was hidden by overlap.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let hidden = self.total_hidden_comm();
+        let total = hidden + self.total_exposed_comm();
+        if total <= 0.0 {
+            0.0
+        } else {
+            hidden / total
+        }
+    }
+
     /// Mean simulated time per step.
     pub fn mean_step_time(&self) -> f64 {
         if self.steps.is_empty() {
@@ -83,12 +110,23 @@ impl RunMetrics {
         std::fs::create_dir_all(dir)?;
         let safe = self.label.replace('/', "-");
         let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
-        writeln!(f, "step,sim_time,loss,inter_bytes,intra_bytes,wall_time")?;
+        writeln!(
+            f,
+            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,wall_time"
+        )?;
         for r in &self.steps {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{:.6}",
-                r.step, r.sim_time, r.loss, r.inter_bytes, r.intra_bytes, r.wall_time
+                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{:.6}",
+                r.step,
+                r.sim_time,
+                r.loss,
+                r.inter_bytes,
+                r.intra_bytes,
+                r.compute_time,
+                r.exposed_comm,
+                r.hidden_comm,
+                r.wall_time
             )?;
         }
         if !self.val.is_empty() {
@@ -119,6 +157,9 @@ impl RunMetrics {
                 "inter_bytes_total",
                 Json::Num(self.total_inter_bytes() as f64),
             ),
+            ("exposed_comm_s", Json::Num(self.total_exposed_comm())),
+            ("hidden_comm_s", Json::Num(self.total_hidden_comm())),
+            ("overlap_efficiency", Json::Num(self.overlap_efficiency())),
         ])
     }
 }
@@ -152,12 +193,12 @@ pub fn sparkline(values: &[f64], width: usize) -> String {
 pub fn comparison_table(runs: &[&RunMetrics]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<28} {:>10} {:>10} {:>12} {:>14} {:>12}\n",
-        "run", "loss", "val_loss", "sim_time", "inter_bytes", "t/step"
+        "{:<28} {:>10} {:>10} {:>12} {:>14} {:>12} {:>12} {:>8}\n",
+        "run", "loss", "val_loss", "sim_time", "inter_bytes", "t/step", "exposed", "hidden%"
     ));
     for r in runs {
         out.push_str(&format!(
-            "{:<28} {:>10} {:>10} {:>12} {:>14} {:>12}\n",
+            "{:<28} {:>10} {:>10} {:>12} {:>14} {:>12} {:>12} {:>7.0}%\n",
             r.label,
             r.final_loss()
                 .map(|l| format!("{l:.4}"))
@@ -168,6 +209,8 @@ pub fn comparison_table(runs: &[&RunMetrics]) -> String {
             crate::util::fmt_secs(r.total_sim_time()),
             crate::util::fmt_bytes(r.total_inter_bytes()),
             crate::util::fmt_secs(r.mean_step_time()),
+            crate::util::fmt_secs(r.total_exposed_comm()),
+            r.overlap_efficiency() * 100.0,
         ));
     }
     out
@@ -186,6 +229,9 @@ mod tests {
                 loss: 5.0 - s as f64 * 0.1,
                 inter_bytes: 100,
                 intra_bytes: 200,
+                compute_time: 0.3,
+                exposed_comm: 0.15,
+                hidden_comm: 0.05,
                 wall_time: 0.01,
             });
         }
@@ -216,10 +262,27 @@ mod tests {
         m.write_csv(&dir).unwrap();
         let text = std::fs::read_to_string(dir.join("a-b.steps.csv")).unwrap();
         assert!(text.starts_with("step,"));
+        assert!(text.lines().next().unwrap().contains("exposed_comm,hidden_comm"));
         assert_eq!(text.lines().count(), 6);
+        // every data row carries the full column set
+        let cols = text.lines().next().unwrap().split(',').count();
+        for line in text.lines().skip(1) {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
         let val = std::fs::read_to_string(dir.join("a-b.val.csv")).unwrap();
         assert_eq!(val.lines().count(), 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn comm_breakdown_aggregates() {
+        let m = mk("x", 10);
+        assert!((m.total_exposed_comm() - 1.5).abs() < 1e-9);
+        assert!((m.total_hidden_comm() - 0.5).abs() < 1e-9);
+        assert!((m.overlap_efficiency() - 0.25).abs() < 1e-9);
+        assert!(m.summary_json().get("overlap_efficiency").is_some());
+        // empty run: defined, not NaN
+        assert_eq!(RunMetrics::new("e").overlap_efficiency(), 0.0);
     }
 
     #[test]

@@ -19,6 +19,24 @@
 //! `TrafficMatrix` additionally records who-sent-how-much-to-whom, which
 //! regenerates the paper's Appendix-A communication-pattern figure
 //! (`figures -- fig7`).
+//!
+//! ## Time substrate
+//!
+//! Two clocks live here:
+//!
+//! * [`SimClock`] — the original barrier-synchronous global clock (kept
+//!   for `--no-overlap` parity and unit tests);
+//! * [`Timeline`] — a set of per-lane ready-times (one lane per rank per
+//!   resource) that the event engine in `train::engine` schedules onto.
+//!   Lanes only ever move forward: `reserve` places work at
+//!   `max(earliest, lane_ready)` and advances the lane to the end of the
+//!   reservation, so per-rank timelines are monotone by construction
+//!   (property-tested below).
+//!
+//! [`ClusterModel`] adds scenario diversity on top of the homogeneous
+//! α–β [`NetModel`]: per-node straggler slowdown factors (multiplying
+//! compute durations) and per-node NIC bandwidth overrides (a group's
+//! inter-node transfers run at the slowest member NIC).
 
 use std::sync::Mutex;
 
@@ -294,6 +312,176 @@ impl SimClock {
     }
 }
 
+/// Per-node scenario knobs layered over the homogeneous [`NetModel`]:
+/// straggler compute-slowdown factors and NIC bandwidth overrides.
+/// Empty vectors mean "uniform cluster" — the event engine then matches
+/// the legacy cost model bit-for-bit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterModel {
+    /// `slowdown[node]` multiplies every compute duration on that node
+    /// (1.0 = nominal; 2.0 = half-speed straggler). Shorter than `nodes`
+    /// is fine: missing entries default to 1.0.
+    pub slowdown: Vec<f64>,
+    /// Per-node NIC bandwidth override in bytes/s (0.0 or missing =
+    /// use `NetModel::inter_bw`). An inter-node transfer runs at the
+    /// minimum bandwidth across the nodes it touches.
+    pub node_inter_bw: Vec<f64>,
+}
+
+impl ClusterModel {
+    pub fn uniform() -> ClusterModel {
+        ClusterModel::default()
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.slowdown.iter().all(|&s| s == 1.0)
+            && self.node_inter_bw.iter().all(|&b| b == 0.0)
+    }
+
+    /// Compute-slowdown factor of a node (≥ 1.0 nominal; values below
+    /// 1.0 are allowed and model a faster-than-nominal node).
+    pub fn slowdown_of(&self, node: usize) -> f64 {
+        match self.slowdown.get(node) {
+            Some(&s) if s > 0.0 => s,
+            _ => 1.0,
+        }
+    }
+
+    /// Effective NIC bandwidth of one node under `net`.
+    pub fn node_bw(&self, net: &NetModel, node: usize) -> f64 {
+        match self.node_inter_bw.get(node) {
+            Some(&b) if b > 0.0 => b,
+            _ => net.inter_bw,
+        }
+    }
+
+    /// Effective bandwidth for a transfer over `class` touching `nodes`
+    /// (inter-node = slowest member NIC; intra-node is never overridden).
+    pub fn group_bw(&self, net: &NetModel, class: LinkClass, nodes: &[usize]) -> f64 {
+        match class {
+            LinkClass::IntraNode => net.intra_bw,
+            LinkClass::InterNode => nodes
+                .iter()
+                .map(|&n| self.node_bw(net, n))
+                .fold(net.inter_bw, f64::min),
+        }
+    }
+
+    /// Parse "NODE:FACTOR[,NODE:FACTOR...]" into a slowdown table.
+    pub fn parse_slowdown(spec: &str) -> anyhow::Result<Vec<f64>> {
+        parse_node_table(spec, 1.0)
+    }
+
+    /// Parse "NODE:MBPS[,NODE:MBPS...]" into a bytes/s NIC table.
+    pub fn parse_node_mbps(spec: &str) -> anyhow::Result<Vec<f64>> {
+        let mut t = parse_node_table(spec, 0.0)?;
+        for b in t.iter_mut() {
+            *b *= 1e6 / 8.0; // Mbps → bytes/s
+        }
+        Ok(t)
+    }
+}
+
+/// Largest node index accepted in a NODE:VALUE spec — bounds the table
+/// allocation against typo'd inputs (the simulator tops out far below
+/// this anyway).
+const MAX_SPEC_NODE: usize = 65_536;
+
+fn parse_node_table(spec: &str, fill: f64) -> anyhow::Result<Vec<f64>> {
+    let mut table = Vec::new();
+    if spec.trim().is_empty() {
+        return Ok(table);
+    }
+    for part in spec.split(',') {
+        let (node, value) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad entry {part:?}, want NODE:VALUE"))?;
+        let node: usize = node.trim().parse()?;
+        anyhow::ensure!(
+            node < MAX_SPEC_NODE,
+            "node index {node} out of range (max {MAX_SPEC_NODE})"
+        );
+        let value: f64 = value.trim().parse()?;
+        anyhow::ensure!(value > 0.0, "value for node {node} must be positive");
+        if table.len() <= node {
+            table.resize(node + 1, fill);
+        }
+        table[node] = value;
+    }
+    Ok(table)
+}
+
+/// Monotone per-lane ready-times — the discrete-event substrate.
+///
+/// One lane per (rank, resource); the engine keeps one `Timeline` for
+/// compute lanes and one for NIC lanes. All operations preserve the
+/// invariant `ready[lane]` never decreases, and every reservation's
+/// busy interval is accumulated per lane (for utilisation metrics).
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    ready: Vec<SimTime>,
+    busy: Vec<f64>,
+}
+
+impl Timeline {
+    pub fn new(lanes: usize) -> Timeline {
+        Timeline {
+            ready: vec![0.0; lanes],
+            busy: vec![0.0; lanes],
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Current ready-time of a lane.
+    pub fn now(&self, lane: usize) -> SimTime {
+        self.ready[lane]
+    }
+
+    /// Latest ready-time across a set of lanes (join/max semantics —
+    /// the earliest instant a collective over those lanes may start).
+    pub fn join(&self, lanes: &[usize]) -> SimTime {
+        lanes.iter().fold(0.0, |m, &l| m.max(self.ready[l]))
+    }
+
+    /// Latest ready-time across all lanes.
+    pub fn horizon(&self) -> SimTime {
+        self.ready.iter().fold(0.0, |m, &t| m.max(t))
+    }
+
+    /// Reserve `dur` on `lane` starting no earlier than `earliest`.
+    /// Returns the (start, end) actually scheduled; the lane advances to
+    /// `end` and its busy counter accumulates `dur`.
+    pub fn reserve(&mut self, lane: usize, earliest: SimTime, dur: SimTime) -> (SimTime, SimTime) {
+        let dur = dur.max(0.0);
+        let start = self.ready[lane].max(earliest);
+        let end = start + dur;
+        self.ready[lane] = end;
+        self.busy[lane] += dur;
+        (start, end)
+    }
+
+    /// Push a lane's ready-time forward to at least `t` (a dependency
+    /// stall — no busy time accumulates).
+    pub fn stall_until(&mut self, lane: usize, t: SimTime) {
+        if t > self.ready[lane] {
+            self.ready[lane] = t;
+        }
+    }
+
+    /// Busy time accumulated on a lane since construction / reset.
+    pub fn busy(&self, lane: usize) -> f64 {
+        self.busy[lane]
+    }
+
+    pub fn reset(&mut self) {
+        self.ready.fill(0.0);
+        self.busy.fill(0.0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -413,5 +601,96 @@ mod tests {
         tm.record(0, 1, 2048);
         let s = tm.render();
         assert!(s.contains("node0") && s.contains("2.00 KiB"));
+    }
+
+    #[test]
+    fn timeline_reserve_and_join() {
+        let mut tl = Timeline::new(3);
+        let (s, e) = tl.reserve(0, 0.0, 2.0);
+        assert_eq!((s, e), (0.0, 2.0));
+        // earliest below ready is clamped up
+        let (s, e) = tl.reserve(0, 1.0, 1.0);
+        assert_eq!((s, e), (2.0, 3.0));
+        // earliest above ready wins (dependency wait, no busy time)
+        let (s, e) = tl.reserve(1, 5.0, 0.5);
+        assert_eq!((s, e), (5.0, 5.5));
+        assert_eq!(tl.join(&[0, 1, 2]), 5.5);
+        assert_eq!(tl.horizon(), 5.5);
+        assert!((tl.busy(0) - 3.0).abs() < 1e-12);
+        assert!((tl.busy(1) - 0.5).abs() < 1e-12);
+        tl.stall_until(2, 9.0);
+        assert_eq!(tl.now(2), 9.0);
+        assert_eq!(tl.busy(2), 0.0);
+        tl.stall_until(2, 1.0); // never moves backwards
+        assert_eq!(tl.now(2), 9.0);
+    }
+
+    #[test]
+    fn timeline_monotone_under_random_ops() {
+        // Engine invariant: per-lane ready-times never decrease, whatever
+        // interleaving of reservations/stalls the scheduler produces.
+        crate::util::proptest::proptest(64, |g| {
+            let lanes = g.usize(1, 6);
+            let mut tl = Timeline::new(lanes);
+            let mut prev: Vec<SimTime> = vec![0.0; lanes];
+            for _ in 0..g.usize(1, 40) {
+                let lane = g.usize(0, lanes - 1);
+                let t = g.f32(0.0, 10.0) as f64;
+                if g.bool() {
+                    let (start, end) = tl.reserve(lane, t, g.f32(0.0, 3.0) as f64);
+                    crate::util::proptest::prop_assert(start >= prev[lane], "start regressed");
+                    crate::util::proptest::prop_assert(end >= start, "end before start");
+                } else {
+                    tl.stall_until(lane, t);
+                }
+                for l in 0..lanes {
+                    crate::util::proptest::prop_assert(
+                        tl.now(l) >= prev[l],
+                        format!("lane {l} moved backwards"),
+                    );
+                    prev[l] = tl.now(l);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cluster_model_defaults_are_uniform() {
+        let c = ClusterModel::uniform();
+        assert!(c.is_uniform());
+        assert_eq!(c.slowdown_of(7), 1.0);
+        let m = NetModel::hpc();
+        assert_eq!(c.node_bw(&m, 3), m.inter_bw);
+        assert_eq!(c.group_bw(&m, LinkClass::InterNode, &[0, 1]), m.inter_bw);
+        assert_eq!(c.group_bw(&m, LinkClass::IntraNode, &[0]), m.intra_bw);
+    }
+
+    #[test]
+    fn cluster_model_straggler_and_nic_overrides() {
+        let c = ClusterModel {
+            slowdown: ClusterModel::parse_slowdown("1:2.5").unwrap(),
+            node_inter_bw: ClusterModel::parse_node_mbps("0:100").unwrap(),
+        };
+        assert!(!c.is_uniform());
+        assert_eq!(c.slowdown_of(0), 1.0);
+        assert_eq!(c.slowdown_of(1), 2.5);
+        let m = NetModel::hpc();
+        assert!((c.node_bw(&m, 0) - 12.5e6).abs() < 1.0);
+        assert_eq!(c.node_bw(&m, 1), m.inter_bw);
+        // group runs at the slowest member NIC
+        assert!((c.group_bw(&m, LinkClass::InterNode, &[0, 1]) - 12.5e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn cluster_model_parse_rejects_garbage() {
+        assert!(ClusterModel::parse_slowdown("1:0").is_err());
+        assert!(ClusterModel::parse_slowdown("nope").is_err());
+        assert!(ClusterModel::parse_slowdown("1:abc").is_err());
+        // typo'd huge node index errors instead of allocating gigabytes
+        assert!(ClusterModel::parse_slowdown("4000000000:2.0").is_err());
+        assert_eq!(ClusterModel::parse_slowdown("").unwrap(), Vec::<f64>::new());
+        // sparse spec fills the gaps with the neutral value
+        let t = ClusterModel::parse_slowdown("2:3.0").unwrap();
+        assert_eq!(t, vec![1.0, 1.0, 3.0]);
     }
 }

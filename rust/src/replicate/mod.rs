@@ -112,6 +112,62 @@ pub enum GatherMode {
     RingAllReduce,
 }
 
+impl GatherMode {
+    /// Build the replication-phase cost event for `payload_bytes[i]` owned
+    /// by group member `i`, crossing `link`. This is the single place a
+    /// replicator's transport choice turns into a schedulable
+    /// [`crate::collectives::CommEvent`].
+    pub fn comm_event(
+        self,
+        link: &crate::collectives::Link,
+        payload_bytes: &[u64],
+    ) -> crate::collectives::CommEvent {
+        match self {
+            GatherMode::NaiveAllGather => {
+                crate::collectives::naive_all_gather_event(link, payload_bytes)
+            }
+            GatherMode::RingAllReduce => crate::collectives::ring_all_reduce_event(
+                link,
+                payload_bytes.len(),
+                payload_bytes.first().copied().unwrap_or(0),
+            ),
+        }
+    }
+
+    /// Record this transport's who-sends-to-whom byte pattern.
+    pub fn record_traffic(
+        self,
+        traffic: &crate::net::TrafficMatrix,
+        topo: &crate::net::Topology,
+        group: &[usize],
+        payload_bytes: &[u64],
+    ) {
+        let g = group.len();
+        if g <= 1 {
+            return;
+        }
+        match self {
+            GatherMode::NaiveAllGather => {
+                for (i, &bytes_i) in payload_bytes.iter().enumerate() {
+                    for j in 0..g {
+                        if i != j {
+                            traffic.record(
+                                topo.node_of(group[i]),
+                                topo.node_of(group[j]),
+                                bytes_i,
+                            );
+                        }
+                    }
+                }
+            }
+            GatherMode::RingAllReduce => {
+                let chunk = payload_bytes.first().copied().unwrap_or(0) / g as u64;
+                crate::collectives::record_ring_traffic(traffic, topo, group, 2 * (g - 1), chunk);
+            }
+        }
+    }
+}
+
 /// Which scheme to build (config / CLI surface).
 #[derive(Clone, Debug, PartialEq)]
 pub enum ReplSpec {
@@ -333,6 +389,31 @@ mod tests {
         assert_eq!(ReplSpec::parse("demo:1/8").unwrap().label(), "demo-1/8");
         assert_eq!(ReplSpec::parse("diloco:16").unwrap().label(), "diloco-1/16");
         assert_eq!(ReplSpec::parse("full").unwrap().label(), "full");
+    }
+
+    #[test]
+    fn gather_modes_emit_matching_events() {
+        use crate::collectives::{Link, naive_all_gather_event, ring_all_reduce_event};
+        use crate::net::{LinkClass, NetModel, Topology, TrafficMatrix};
+        let link = Link::of(&NetModel::hpc(), LinkClass::InterNode);
+        let sizes = [1000u64, 1000, 1000];
+
+        let ev = GatherMode::NaiveAllGather.comm_event(&link, &sizes);
+        assert_eq!(ev, naive_all_gather_event(&link, &sizes));
+        let ev = GatherMode::RingAllReduce.comm_event(&link, &sizes);
+        assert_eq!(ev, ring_all_reduce_event(&link, 3, 1000));
+
+        // traffic: naive is all-to-all of full payloads, ring is
+        // neighbor-chunked — the ring moves fewer inter-node bytes at g=3.
+        let topo = Topology::new(3, 1);
+        let group = [0usize, 1, 2];
+        let naive = TrafficMatrix::new(3);
+        GatherMode::NaiveAllGather.record_traffic(&naive, &topo, &group, &sizes);
+        assert_eq!(naive.inter_node_bytes(), 6 * 1000);
+        let ring = TrafficMatrix::new(3);
+        GatherMode::RingAllReduce.record_traffic(&ring, &topo, &group, &sizes);
+        assert_eq!(ring.inter_node_bytes(), 3 * 4 * (1000 / 3));
+        assert!(ring.inter_node_bytes() < naive.inter_node_bytes());
     }
 
     #[test]

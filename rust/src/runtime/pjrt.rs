@@ -1,0 +1,192 @@
+//! PJRT backend: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (cargo feature `xla`).
+//!
+//! This is the Python↔Rust bridge (DESIGN.md §3): `python/compile/aot.py`
+//! lowers each model's `train_step`/`eval_step` to **HLO text** + a JSON
+//! manifest; this module compiles the HLO on the PJRT CPU client and
+//! marshals flat f32/i32 buffers in and out of the executable on the
+//! training hot path. Python is never on the training path.
+
+use anyhow::{bail, Context, Result};
+
+use super::{BatchData, BatchDtype, Manifest};
+
+/// A compiled HLO artifact (train or eval entry point).
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_outputs: usize,
+}
+
+impl Artifact {
+    /// Execute with raw literals and unpack the output tuple.
+    pub fn execute_raw(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let items = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        if self.n_outputs > 0 {
+            anyhow::ensure!(
+                items.len() == self.n_outputs,
+                "expected {} outputs, got {}",
+                self.n_outputs,
+                items.len()
+            );
+        }
+        Ok(items)
+    }
+
+    /// Execute a single-vector-in / tuple-of-vectors-out artifact (the
+    /// `dct_extract_*` cross-validation artifacts).
+    pub fn execute_vec(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let lit = xla::Literal::vec1(input);
+        let out = self.execute_raw(&[lit])?;
+        out.iter()
+            .map(|l| {
+                l.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+/// The manifest + compiled train/eval executables for one model config.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub train: Artifact,
+    pub eval: Artifact,
+}
+
+/// Owns the PJRT CPU client. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    /// Compile one HLO-text file.
+    pub fn load_hlo(&self, path: &std::path::Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Artifact { exe, n_outputs: 0 })
+    }
+
+    /// Load manifest + train + eval artifacts for `name` from `dir`.
+    pub fn load_model(&self, dir: &std::path::Path, name: &str) -> Result<ModelRuntime> {
+        let meta_path = dir.join(format!("{name}.meta.json"));
+        let meta = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&meta)?;
+        let mut train = self.load_hlo(&dir.join(format!("{name}.train.hlo.txt")))?;
+        train.n_outputs = 1 + manifest.params.len();
+        let mut eval = self.load_hlo(&dir.join(format!("{name}.eval.hlo.txt")))?;
+        eval.n_outputs = 1;
+        log::info!(
+            "loaded model {name}: {} params ({} tensors), batch {}x{}",
+            manifest.param_count,
+            manifest.params.len(),
+            manifest.batch,
+            manifest.seq
+        );
+        Ok(ModelRuntime {
+            manifest,
+            train,
+            eval,
+        })
+    }
+}
+
+impl ModelRuntime {
+    /// Build the literal argument list: parameters (from a flat buffer +
+    /// manifest shapes) followed by batch inputs.
+    fn marshal_args(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<Vec<xla::Literal>> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            batch.len() == m.batch_inputs.len(),
+            "expected {} batch inputs, got {}",
+            m.batch_inputs.len(),
+            batch.len()
+        );
+        let mut args = Vec::with_capacity(m.params.len() + batch.len());
+        let mut offset = 0usize;
+        for p in &m.params {
+            let end = offset + p.len();
+            anyhow::ensure!(end <= flat_params.len(), "flat params too short at {}", p.name);
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&flat_params[offset..end])
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", p.name))?;
+            args.push(lit);
+            offset = end;
+        }
+        for (spec, data) in m.batch_inputs.iter().zip(batch) {
+            anyhow::ensure!(
+                data.len() == spec.len(),
+                "batch input {} length {} != {}",
+                spec.name,
+                data.len(),
+                spec.len()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (spec.dtype, data) {
+                (BatchDtype::I32, BatchData::I32(v)) => xla::Literal::vec1(v.as_slice()),
+                (BatchDtype::F32, BatchData::F32(v)) => xla::Literal::vec1(v.as_slice()),
+                _ => bail!("batch input {} dtype mismatch", spec.name),
+            }
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", spec.name))?;
+            args.push(lit);
+        }
+        Ok(args)
+    }
+
+    /// One fwd+bwd: returns (loss, flat gradient in manifest order).
+    /// `flat_params` may be longer than the logical parameter count (the
+    /// trainer hands in the padded FSDP buffer); the pad tail is ignored
+    /// and the returned gradient is logical-length.
+    pub fn train_step(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<(f32, Vec<f32>)> {
+        let args = self.marshal_args(flat_params, batch)?;
+        let out = self.train.execute_raw(&args)?;
+        let loss: f32 = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?[0];
+        let total: usize = self.manifest.params.iter().map(|p| p.len()).sum();
+        let mut grads = Vec::with_capacity(total);
+        for (p, lit) in self.manifest.params.iter().zip(&out[1..]) {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("grad {}: {e:?}", p.name))?;
+            anyhow::ensure!(v.len() == p.len(), "grad {} len {}", p.name, v.len());
+            grads.extend_from_slice(&v);
+        }
+        Ok((loss, grads))
+    }
+
+    /// Loss only (validation).
+    pub fn eval_step(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<f32> {
+        let args = self.marshal_args(flat_params, batch)?;
+        let out = self.eval.execute_raw(&args)?;
+        Ok(out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?[0])
+    }
+}

@@ -1,0 +1,321 @@
+//! Reference backend (default build): a pure-Rust surrogate model.
+//!
+//! The surrogate is a *stochastic quadratic well*: for a model with flat
+//! parameters θ and a per-model target θ\* (derived deterministically from
+//! the manifest), one fwd+bwd returns
+//!
+//! ```text
+//! g_i   = (θ_i − θ*_i) + σ·ε_i(batch)      ε deterministic in the batch
+//! loss  = mean_i ½·g_i²
+//! ```
+//!
+//! This keeps everything the coordinator studies *real*: gradients differ
+//! per data stream (so replicas diverge without sync, DiLoCo drifts, and
+//! compressed replication loses information), loss decreases under any of
+//! the optimizers, and results are bit-deterministic in (params, batch) —
+//! while needing no PJRT, no artifacts, and no network. `ModelRuntime` is
+//! `Send + Sync` (plain data), which is what lets the trainer run
+//! per-stream fwd/bwd on `std::thread::scope` workers.
+//!
+//! Models named `synthetic-*` are manufactured via
+//! [`Manifest::synthetic`]; any other name still loads its
+//! `<name>.meta.json` manifest from the artifacts dir if present, so the
+//! figure benches run (with surrogate numerics) on a checkout that has
+//! artifacts but no XLA toolchain.
+
+use anyhow::{bail, Context, Result};
+
+use super::{hash_name, BatchData, BatchDtype, Manifest};
+use crate::util::rng::Rng;
+
+/// Gradient noise scale σ of the surrogate (fraction of the deviation
+/// term; large enough that compression/averaging effects are visible).
+const NOISE_STD: f32 = 0.05;
+
+/// Placeholder for compiled-HLO artifacts — only the PJRT backend can
+/// execute them. Kept so `Runtime::load_hlo` has a stable signature.
+pub struct Artifact {
+    pub n_outputs: usize,
+}
+
+impl Artifact {
+    pub fn execute_vec(&self, _input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        bail!("HLO execution requires the `xla` cargo feature (PJRT backend)")
+    }
+}
+
+/// The surrogate "executable": manifest + target point of the quadratic.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    /// θ\* (logical length, manifest order).
+    target: Vec<f32>,
+}
+
+/// Backend handle (no external client to own).
+pub struct Runtime;
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        log::info!("reference runtime up (pure-Rust surrogate; build with --features xla for PJRT)");
+        Ok(Runtime)
+    }
+
+    /// HLO compilation is a PJRT-only capability.
+    pub fn load_hlo(&self, path: &std::path::Path) -> Result<Artifact> {
+        bail!(
+            "cannot compile {path:?}: HLO artifacts require the `xla` cargo feature \
+             (this build uses the pure-Rust reference runtime)"
+        )
+    }
+
+    /// Load `name` from `dir` (manifest file), or manufacture it when the
+    /// name is `synthetic-*`.
+    pub fn load_model(&self, dir: &std::path::Path, name: &str) -> Result<ModelRuntime> {
+        let meta_path = dir.join(format!("{name}.meta.json"));
+        let manifest = if meta_path.exists() {
+            let meta = std::fs::read_to_string(&meta_path)
+                .with_context(|| format!("reading {meta_path:?}"))?;
+            Manifest::parse(&meta)?
+        } else if name.starts_with("synthetic") {
+            Manifest::synthetic(name)
+        } else {
+            bail!(
+                "no artifact {meta_path:?} for model {name:?} — run `make artifacts`, \
+                 or use a synthetic-* model name with the reference runtime"
+            );
+        };
+        log::info!(
+            "surrogate model {name}: {} params ({} tensors), batch {}x{}",
+            manifest.param_count,
+            manifest.params.len(),
+            manifest.batch,
+            manifest.seq
+        );
+        let target = target_of(&manifest);
+        Ok(ModelRuntime { manifest, target })
+    }
+}
+
+/// θ\* for a manifest: per-tensor seeded normals — fixed across the run,
+/// identical on every node, independent of the experiment seed (the
+/// *data*, not the init, is what varies with the seed).
+fn target_of(manifest: &Manifest) -> Vec<f32> {
+    let rng = Rng::new(hash_name(&manifest.name) ^ 0x7A95_EED5_0BAD_F00D);
+    let total: usize = manifest.params.iter().map(|p| p.len()).sum();
+    let mut target = Vec::with_capacity(total);
+    for p in &manifest.params {
+        let mut chunk = vec![0.0f32; p.len()];
+        rng.split(hash_name(&p.name)).fill_normal(&mut chunk, 0.25);
+        target.extend_from_slice(&chunk);
+    }
+    target
+}
+
+/// Deterministic content hash of a batch (FNV-1a over dtype-tagged bits).
+fn hash_batch(batch: &[BatchData]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |word: u32| {
+        for b in word.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    for data in batch {
+        match data {
+            BatchData::I32(v) => {
+                mix(0x1111);
+                for &x in v {
+                    mix(x as u32);
+                }
+            }
+            BatchData::F32(v) => {
+                mix(0x2222);
+                for &x in v {
+                    mix(x.to_bits());
+                }
+            }
+        }
+    }
+    h
+}
+
+impl ModelRuntime {
+    /// Mirror the PJRT backend's argument validation so shape/dtype bugs
+    /// fail identically under both backends.
+    fn check_batch(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<()> {
+        let m = &self.manifest;
+        let total: usize = m.params.iter().map(|p| p.len()).sum();
+        anyhow::ensure!(
+            flat_params.len() >= total,
+            "flat params too short: {} < {total}",
+            flat_params.len()
+        );
+        anyhow::ensure!(
+            batch.len() == m.batch_inputs.len(),
+            "expected {} batch inputs, got {}",
+            m.batch_inputs.len(),
+            batch.len()
+        );
+        for (spec, data) in m.batch_inputs.iter().zip(batch) {
+            anyhow::ensure!(
+                data.len() == spec.len(),
+                "batch input {} length {} != {}",
+                spec.name,
+                data.len(),
+                spec.len()
+            );
+            let ok = matches!(
+                (spec.dtype, data),
+                (BatchDtype::I32, BatchData::I32(_)) | (BatchDtype::F32, BatchData::F32(_))
+            );
+            anyhow::ensure!(ok, "batch input {} dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    /// One fwd+bwd: returns (loss, flat gradient in manifest order).
+    /// The pad tail of an FSDP-padded buffer is ignored and the returned
+    /// gradient is logical-length — same contract as the PJRT backend.
+    pub fn train_step(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<(f32, Vec<f32>)> {
+        self.check_batch(flat_params, batch)?;
+        let n = self.target.len();
+        let mut rng = Rng::new(hash_batch(batch) ^ hash_name(&self.manifest.name));
+        let mut grads = Vec::with_capacity(n);
+        let mut loss_acc = 0.0f64;
+        for (&p, &t) in flat_params[..n].iter().zip(&self.target) {
+            let g = (p - t) + NOISE_STD * rng.normal_f32(1.0);
+            grads.push(g);
+            loss_acc += 0.5 * (g as f64) * (g as f64);
+        }
+        Ok(((loss_acc / n.max(1) as f64) as f32, grads))
+    }
+
+    /// Loss only (validation): the noise-free well depth.
+    pub fn eval_step(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<f32> {
+        self.check_batch(flat_params, batch)?;
+        let n = self.target.len();
+        let mut loss_acc = 0.0f64;
+        for (&p, &t) in flat_params[..n].iter().zip(&self.target) {
+            let dev = (p - t) as f64;
+            loss_acc += 0.5 * dev * dev;
+        }
+        Ok((loss_acc / n.max(1) as f64) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelRuntime {
+        Runtime::cpu()
+            .unwrap()
+            .load_model(std::path::Path::new("no-such-dir"), "synthetic-lm")
+            .unwrap()
+    }
+
+    fn batch_for(m: &Manifest, tag: i32) -> Vec<BatchData> {
+        m.batch_inputs
+            .iter()
+            .map(|s| BatchData::I32(vec![tag; s.len()]))
+            .collect()
+    }
+
+    #[test]
+    fn synthetic_model_loads_without_artifacts() {
+        let m = model();
+        assert_eq!(m.manifest.name, "synthetic-lm");
+        assert_eq!(m.target.len(), m.manifest.param_count);
+    }
+
+    #[test]
+    fn unknown_model_fails_with_hint() {
+        let err = Runtime::cpu()
+            .unwrap()
+            .load_model(std::path::Path::new("artifacts"), "no-such-model")
+            .err()
+            .expect("should fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts") && msg.contains("no-such-model"), "{msg}");
+    }
+
+    #[test]
+    fn train_step_deterministic_and_batch_sensitive() {
+        let m = model();
+        let params = m.manifest.init_flat(1);
+        let b1 = batch_for(&m.manifest, 1);
+        let (l1, g1) = m.train_step(&params, &b1).unwrap();
+        let (l2, g2) = m.train_step(&params, &b1).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        // a different batch gives a different stochastic gradient
+        let (_, g3) = m.train_step(&params, &batch_for(&m.manifest, 2)).unwrap();
+        assert_ne!(g1, g3);
+        assert!(l1.is_finite() && g1.len() == m.manifest.param_count);
+    }
+
+    #[test]
+    fn gradient_descent_reduces_eval_loss() {
+        let m = model();
+        let mut params = m.manifest.init_flat(7);
+        let batch = batch_for(&m.manifest, 0);
+        let before = m.eval_step(&params, &batch).unwrap();
+        for step in 0..30 {
+            let (_, g) = m
+                .train_step(&params, &batch_for(&m.manifest, step))
+                .unwrap();
+            for (p, gi) in params.iter_mut().zip(&g) {
+                *p -= 0.3 * gi;
+            }
+        }
+        let after = m.eval_step(&params, &batch).unwrap();
+        assert!(after < before * 0.5, "no learning: {before} -> {after}");
+    }
+
+    #[test]
+    fn pad_tail_is_ignored() {
+        let m = model();
+        let mut params = m.manifest.init_flat(1);
+        let batch = batch_for(&m.manifest, 1);
+        let (l1, g1) = m.train_step(&params, &batch).unwrap();
+        params.extend_from_slice(&[123.0; 64]); // FSDP pad region
+        let (l2, g2) = m.train_step(&params, &batch).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1.len(), g2.len());
+    }
+
+    #[test]
+    fn bad_batches_rejected() {
+        let m = model();
+        let params = m.manifest.init_flat(1);
+        let spec_len = m.manifest.batch_inputs[0].len();
+        // wrong length
+        let bad = vec![
+            BatchData::I32(vec![0; spec_len - 1]),
+            BatchData::I32(vec![0; spec_len]),
+        ];
+        assert!(m.train_step(&params, &bad).is_err());
+        // wrong dtype
+        let bad = vec![
+            BatchData::F32(vec![0.0; spec_len]),
+            BatchData::I32(vec![0; spec_len]),
+        ];
+        assert!(m.train_step(&params, &bad).is_err());
+        // wrong arity
+        assert!(m.train_step(&params, &[]).is_err());
+        // short param buffer
+        assert!(m
+            .train_step(&params[..10], &batch_for(&m.manifest, 0))
+            .is_err());
+    }
+
+    #[test]
+    fn load_hlo_unsupported() {
+        let err = Runtime::cpu()
+            .unwrap()
+            .load_hlo(std::path::Path::new("x.hlo.txt"))
+            .err()
+            .expect("unsupported");
+        assert!(format!("{err:#}").contains("xla"));
+    }
+}

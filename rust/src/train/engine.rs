@@ -1,0 +1,524 @@
+//! The discrete-event overlap engine — the simulator's spine.
+//!
+//! Each rank owns two resource lanes: a **compute** lane (the accelerator)
+//! and a **NIC** lane. A training step is a DAG of reservations on those
+//! lanes; [`StepEngine`] schedules them and the step's duration is
+//! whatever the critical path says, instead of the old barrier-synchronous
+//! sum of phase maxima.
+//!
+//! ## Dependency model (one FlexDeMo step)
+//!
+//! ```text
+//! compute lane:   fwd(t) ──────────── bwd(t) ─────────────── fwd(t+1) …
+//!                  │  (no comm dep:     ▲ needs update(t-1)
+//!                  │   stale-params     │ visible = unshard end)
+//! NIC lane:        │   pipelining)      │
+//!   unshard(t) ────┘  [≥ gather(t-1)]───┘
+//!   reduce-scatter(t)  [starts with bwd(t), ends ≥ bwd(t) end]
+//!   gather(t)          [after reduce-scatter(t); overlaps fwd(t+1)]
+//! ```
+//!
+//! * the **replication gather** of step *t* overlaps the next step's
+//!   forward: the forward runs on parameters that receive the averaged
+//!   update when the gather lands (DeMo's async `dist.all_gather`
+//!   decoupling), and only the next *backward* requires the update to be
+//!   visible;
+//! * the **intra-node reduce-scatter** streams gradient buckets while the
+//!   backward produces them: it may start with the backward but cannot
+//!   finish before it;
+//! * the **unshard all-gather** (phase 0) rides the NIC after the gather
+//!   and likewise only gates the next backward.
+//!
+//! ## `--no-overlap` parity
+//!
+//! In serialized mode every phase is fenced by a global barrier and the
+//! engine reproduces the legacy `SimClock` arithmetic *bit-for-bit*: the
+//! horizon advances by (unshard + compute + max reduce-scatter +
+//! max gather) per step, in that order, using the same duration formulas
+//! (they live in `collectives::*_event`, shared by both paths). The
+//! `serialized_time()` accumulator tracks that sum in *both* modes, so
+//! `now() == serialized_time()` under `--no-overlap` and
+//! `now() ≤ serialized_time()` with overlap on — both are asserted in the
+//! integration tests.
+//!
+//! ## Scenario knobs
+//!
+//! [`ClusterModel`] supplies per-node straggler slowdowns (scaling that
+//! node's compute reservations) and per-node NIC bandwidth overrides
+//! (a replication group's link runs at its slowest member NIC).
+
+use crate::collectives::{ring_all_gather_event, ring_reduce_scatter_event, CommEvent, Link};
+use crate::net::{ClusterModel, LinkClass, NetModel, SimTime, Timeline, Topology, TrafficMatrix};
+use crate::replicate::GatherMode;
+
+/// Fraction of a step's compute spent in the forward pass (fwd:bwd ≈ 1:2,
+/// the standard transformer estimate).
+pub const FWD_FRACTION: f64 = 1.0 / 3.0;
+
+/// Per-step timing summary for metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    /// Global sim-time horizon after the step.
+    pub sim_time: SimTime,
+    /// Critical rank's compute busy-time this step.
+    pub compute_time: f64,
+    /// Communication the critical rank could not hide behind compute.
+    pub exposed_comm: f64,
+    /// Communication the critical rank overlapped with compute.
+    pub hidden_comm: f64,
+}
+
+pub struct StepEngine {
+    topo: Topology,
+    net: NetModel,
+    cluster: ClusterModel,
+    overlap: bool,
+    /// One lane per rank on each resource.
+    compute: Timeline,
+    nic: Timeline,
+    /// When rank r's parameters carry the latest optimizer update
+    /// (gather/unshard landing time) — the next backward's dependency.
+    update_visible: Vec<SimTime>,
+    /// End of this step's reduce-scatter per rank (gather dependency).
+    rs_done: Vec<SimTime>,
+    bwd_start: Vec<SimTime>,
+    bwd_end: Vec<SimTime>,
+    /// What the legacy barrier-synchronous clock would read.
+    serialized: SimTime,
+    /// Scheduled events of the current/last step (debug + tests).
+    pub events: Vec<CommEvent>,
+    next_event_id: u64,
+    last_nic_event: Vec<Option<u64>>,
+    // per-step bookkeeping
+    step_start_horizon: SimTime,
+    step_compute_busy0: Vec<f64>,
+    step_nic_busy0: Vec<f64>,
+    step_gather_max: f64,
+    gather_phase_start: Option<SimTime>,
+}
+
+impl StepEngine {
+    pub fn new(topo: Topology, net: NetModel, cluster: ClusterModel, overlap: bool) -> StepEngine {
+        let world = topo.world_size();
+        StepEngine {
+            topo,
+            net,
+            cluster,
+            overlap,
+            compute: Timeline::new(world),
+            nic: Timeline::new(world),
+            update_visible: vec![0.0; world],
+            rs_done: vec![0.0; world],
+            bwd_start: vec![0.0; world],
+            bwd_end: vec![0.0; world],
+            serialized: 0.0,
+            events: Vec::new(),
+            next_event_id: 0,
+            last_nic_event: vec![None; world],
+            step_start_horizon: 0.0,
+            step_compute_busy0: vec![0.0; world],
+            step_nic_busy0: vec![0.0; world],
+            step_gather_max: 0.0,
+            gather_phase_start: None,
+        }
+    }
+
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
+    /// Global sim-time horizon (latest lane across both resources).
+    pub fn now(&self) -> SimTime {
+        self.compute.horizon().max(self.nic.horizon())
+    }
+
+    /// What the legacy barrier clock would read for the same run — equals
+    /// `now()` under `--no-overlap`, upper-bounds it with overlap on.
+    pub fn serialized_time(&self) -> SimTime {
+        self.serialized
+    }
+
+    /// Latest lane end of one rank.
+    pub fn rank_end(&self, rank: usize) -> SimTime {
+        self.compute.now(rank).max(self.nic.now(rank))
+    }
+
+    /// The rank on the step's critical path: latest end, ties broken by
+    /// compute busy-time (so a barrier-fenced straggler still wins).
+    pub fn critical_rank(&self) -> usize {
+        let mut best = 0usize;
+        for r in 1..self.topo.world_size() {
+            let (e, b) = (self.rank_end(r), self.compute.busy(r));
+            let (be, bb) = (self.rank_end(best), self.compute.busy(best));
+            if e > be || (e == be && b > bb) {
+                best = r;
+            }
+        }
+        best
+    }
+
+    /// Per-rank compute/NIC timelines (read-only; invariants tested).
+    pub fn timelines(&self) -> (&Timeline, &Timeline) {
+        (&self.compute, &self.nic)
+    }
+
+    fn world(&self) -> usize {
+        self.topo.world_size()
+    }
+
+    /// Fence every lane at the current horizon (serialized mode only).
+    fn barrier(&mut self) -> SimTime {
+        let h = self.now();
+        for r in 0..self.world() {
+            self.compute.stall_until(r, h);
+            self.nic.stall_until(r, h);
+        }
+        h
+    }
+
+    fn push_event(&mut self, mut ev: CommEvent, members: &[usize]) -> u64 {
+        let id = self.next_event_id;
+        self.next_event_id += 1;
+        ev.id = id;
+        for &r in members {
+            self.last_nic_event[r] = Some(id);
+        }
+        self.events.push(ev);
+        id
+    }
+
+    fn nic_deps(&self, members: &[usize]) -> Vec<u64> {
+        let mut deps: Vec<u64> = members
+            .iter()
+            .filter_map(|&r| self.last_nic_event[r])
+            .collect();
+        deps.sort_unstable();
+        deps.dedup();
+        deps
+    }
+
+    pub fn begin_step(&mut self) {
+        self.events.clear();
+        self.step_gather_max = 0.0;
+        self.gather_phase_start = None;
+        self.step_start_horizon = self.now();
+        for r in 0..self.world() {
+            self.step_compute_busy0[r] = self.compute.busy(r);
+            self.step_nic_busy0[r] = self.nic.busy(r);
+        }
+    }
+
+    /// Phase 0: intra-node all-gather that unshards the updated parameters
+    /// (per node group). Records the phase's intra-node traffic — this is
+    /// where the old trainer's hand-rolled unshard accounting now lives.
+    pub fn unshard(&mut self, shard_bytes: u64, traffic: &TrafficMatrix) {
+        let accels = self.topo.accels_per_node;
+        if accels <= 1 {
+            return;
+        }
+        for node in 0..self.topo.nodes {
+            traffic.record(node, node, (accels - 1) as u64 * shard_bytes * accels as u64);
+        }
+        let link = Link::of(&self.net, LinkClass::IntraNode);
+        let proto = ring_all_gather_event(&link, accels, shard_bytes);
+        let dur = proto.duration;
+        if !self.overlap {
+            let h = self.barrier();
+            for node in 0..self.topo.nodes {
+                let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
+                for &r in &members {
+                    self.nic.reserve(r, h, dur);
+                    self.update_visible[r] = h + dur;
+                }
+                self.push_event(proto.clone().scheduled(h, Vec::new()), &members);
+            }
+        } else {
+            for node in 0..self.topo.nodes {
+                let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
+                let earliest = members
+                    .iter()
+                    .fold(0.0f64, |m, &r| m.max(self.update_visible[r]));
+                let start = earliest.max(self.nic.join(&members));
+                let deps = self.nic_deps(&members);
+                for &r in &members {
+                    self.nic.reserve(r, start, dur);
+                    self.update_visible[r] = start + dur;
+                }
+                self.push_event(proto.clone().scheduled(start, deps), &members);
+            }
+        }
+        self.serialized += dur;
+    }
+
+    /// Phase 1: fwd+bwd on every rank. The forward has no communication
+    /// dependency (stale-params pipelining); the backward waits until the
+    /// previous step's update is visible on this rank.
+    pub fn compute(&mut self, flops: f64) {
+        let ct = self.net.compute_time(flops);
+        let mut dmax = 0.0f64;
+        if !self.overlap {
+            let h = self.barrier();
+            for r in 0..self.world() {
+                let tc = ct * self.cluster.slowdown_of(self.topo.node_of(r));
+                // Unsplit in serialized mode so the lane end is exactly
+                // h + tc (bit-parity with the legacy clock).
+                let (start, end) = self.compute.reserve(r, h, tc);
+                self.bwd_start[r] = start;
+                self.bwd_end[r] = end;
+                dmax = dmax.max(tc);
+            }
+        } else {
+            for r in 0..self.world() {
+                let tc = ct * self.cluster.slowdown_of(self.topo.node_of(r));
+                let tf = tc * FWD_FRACTION;
+                let tb = tc - tf;
+                self.compute.reserve(r, 0.0, tf);
+                let (bs, be) = self.compute.reserve(r, self.update_visible[r], tb);
+                self.bwd_start[r] = bs;
+                self.bwd_end[r] = be;
+                dmax = dmax.max(tc);
+            }
+        }
+        self.serialized += dmax;
+    }
+
+    /// Phase 2: intra-node ring reduce-scatter of the gradients. Streams
+    /// behind the backward: may start with it, cannot finish before it.
+    pub fn reduce_scatter(&mut self, max_shard_bytes: u64) {
+        let accels = self.topo.accels_per_node;
+        if accels <= 1 {
+            // No reduction needed; the local update is ready when the
+            // backward is.
+            for r in 0..self.world() {
+                self.rs_done[r] = self.bwd_end[r];
+                self.update_visible[r] = self.bwd_end[r];
+            }
+            self.serialized += 0.0;
+            return;
+        }
+        let link = Link::of(&self.net, LinkClass::IntraNode);
+        let proto = ring_reduce_scatter_event(&link, accels, max_shard_bytes);
+        let dur = proto.duration;
+        if !self.overlap {
+            let h = self.barrier();
+            for node in 0..self.topo.nodes {
+                let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
+                for &r in &members {
+                    self.nic.reserve(r, h, dur);
+                    self.rs_done[r] = h + dur;
+                    self.update_visible[r] = h + dur;
+                }
+                self.push_event(proto.clone().scheduled(h, Vec::new()), &members);
+            }
+        } else {
+            for node in 0..self.topo.nodes {
+                let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
+                let bwd_start_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_start[r]));
+                let bwd_end_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_end[r]));
+                let start = self.nic.join(&members).max(bwd_start_max);
+                let fin = (start + dur).max(bwd_end_max);
+                let deps = self.nic_deps(&members);
+                for &r in &members {
+                    self.nic.reserve(r, start, dur);
+                    // the last gradient bucket lands only when bwd ends
+                    self.nic.stall_until(r, fin);
+                    self.rs_done[r] = fin;
+                    self.update_visible[r] = fin;
+                }
+                self.push_event(proto.clone().scheduled(start, deps), &members);
+            }
+        }
+        self.serialized += dur;
+    }
+
+    /// Phase 3/4: replication gather across one R-group (called once per
+    /// shard that syncs this step). Overlaps the next step's forward; the
+    /// group's inter-node link runs at its slowest member NIC.
+    pub fn gather(
+        &mut self,
+        group: &[usize],
+        mode: GatherMode,
+        payload_bytes: &[u64],
+        traffic: &TrafficMatrix,
+    ) {
+        let class = self.topo.group_link_class(group);
+        let nodes: Vec<usize> = group.iter().map(|&r| self.topo.node_of(r)).collect();
+        let link = Link {
+            class,
+            lat: self.net.lat(class),
+            bw: self.cluster.group_bw(&self.net, class, &nodes),
+        };
+        let ev = mode.comm_event(&link, payload_bytes);
+        mode.record_traffic(traffic, &self.topo, group, payload_bytes);
+        let dur = ev.duration;
+        self.step_gather_max = self.step_gather_max.max(dur);
+        if !self.overlap {
+            let h = match self.gather_phase_start {
+                Some(h) => h,
+                None => {
+                    let h = self.barrier();
+                    self.gather_phase_start = Some(h);
+                    h
+                }
+            };
+            for &r in group {
+                self.nic.reserve(r, h, dur);
+                self.update_visible[r] = h + dur;
+            }
+            self.push_event(ev.scheduled(h, Vec::new()), group);
+        } else {
+            let earliest = group.iter().fold(0.0f64, |m, &r| m.max(self.rs_done[r]));
+            let start = self.nic.join(group).max(earliest);
+            let deps = self.nic_deps(group);
+            for &r in group {
+                self.nic.reserve(r, start, dur);
+                self.update_visible[r] = start + dur;
+            }
+            self.push_event(ev.scheduled(start, deps), group);
+        }
+    }
+
+    /// Close the step: settle barriers (serialized mode), fold the gather
+    /// phase into the serialized accumulator, and summarize timing.
+    pub fn end_step(&mut self) -> StepTiming {
+        self.serialized += self.step_gather_max;
+        if !self.overlap {
+            self.barrier();
+        }
+        let sim_time = self.now();
+        let crit = self.critical_rank();
+        let compute_time = self.compute.busy(crit) - self.step_compute_busy0[crit];
+        let comm = self.nic.busy(crit) - self.step_nic_busy0[crit];
+        let span = (sim_time - self.step_start_horizon).max(0.0);
+        let exposed_comm = (span - compute_time).clamp(0.0, comm.max(0.0));
+        let hidden_comm = (comm - exposed_comm).max(0.0);
+        StepTiming {
+            sim_time,
+            compute_time,
+            exposed_comm,
+            hidden_comm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(nodes: usize, accels: usize, overlap: bool) -> StepEngine {
+        StepEngine::new(
+            Topology::new(nodes, accels),
+            NetModel::hpc(),
+            ClusterModel::uniform(),
+            overlap,
+        )
+    }
+
+    fn drive(e: &mut StepEngine, steps: usize, with_gather: bool) -> StepTiming {
+        let topo = Topology::new(e.topo.nodes, e.topo.accels_per_node);
+        let traffic = TrafficMatrix::new(topo.nodes);
+        let mut last = StepTiming::default();
+        for _ in 0..steps {
+            e.begin_step();
+            e.unshard(4096, &traffic);
+            e.compute(1e9);
+            e.reduce_scatter(4096);
+            if with_gather {
+                for a in 0..topo.accels_per_node {
+                    let group: Vec<usize> = (0..topo.nodes).map(|n| topo.rank(n, a)).collect();
+                    let sizes = vec![2048u64; group.len()];
+                    e.gather(&group, GatherMode::NaiveAllGather, &sizes, &traffic);
+                }
+            }
+            last = e.end_step();
+        }
+        last
+    }
+
+    #[test]
+    fn serialized_now_equals_serialized_accumulator() {
+        let mut e = engine(2, 2, false);
+        drive(&mut e, 5, true);
+        // bit-equality: the event engine under --no-overlap IS the legacy
+        // barrier clock.
+        assert_eq!(e.now(), e.serialized_time());
+    }
+
+    #[test]
+    fn overlap_is_never_slower_and_hides_comm() {
+        let mut ser = engine(2, 2, false);
+        let t_ser = drive(&mut ser, 8, true);
+        let mut ovl = engine(2, 2, true);
+        let t_ovl = drive(&mut ovl, 8, true);
+        assert!(
+            ovl.now() <= ser.now() * (1.0 + 1e-12),
+            "overlap slower: {} vs {}",
+            ovl.now(),
+            ser.now()
+        );
+        // the serialized accumulator upper-bounds the overlapped horizon
+        assert!(ovl.now() <= ovl.serialized_time() * (1.0 + 1e-12));
+        // serialized mode hides (essentially) nothing; overlap does
+        assert!(
+            t_ser.hidden_comm <= 1e-9 * ser.now(),
+            "serialized hid comm: {t_ser:?}"
+        );
+        assert!(t_ovl.hidden_comm > 1e-7 * ovl.now(), "{t_ovl:?}");
+    }
+
+    #[test]
+    fn timelines_stay_monotone_across_steps() {
+        let mut e = engine(2, 4, true);
+        let mut prev = vec![0.0f64; 8];
+        let traffic = TrafficMatrix::new(2);
+        for _ in 0..6 {
+            e.begin_step();
+            e.unshard(1024, &traffic);
+            e.compute(1e8);
+            e.reduce_scatter(1024);
+            e.end_step();
+            let (c, n) = e.timelines();
+            for r in 0..8 {
+                let t = c.now(r).max(n.now(r));
+                assert!(t >= prev[r], "rank {r} went backwards");
+                prev[r] = t;
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_owns_critical_path() {
+        let cluster = ClusterModel {
+            slowdown: vec![1.0, 3.0],
+            node_inter_bw: vec![],
+        };
+        let topo = Topology::new(2, 2);
+        let mut e = StepEngine::new(topo, NetModel::hpc(), cluster, true);
+        drive(&mut e, 4, true);
+        let crit = e.critical_rank();
+        assert_eq!(topo.node_of(crit), 1, "critical rank {crit} not on straggler node");
+        // and the run is strictly slower than the uniform cluster
+        let mut u = engine(2, 2, true);
+        drive(&mut u, 4, true);
+        assert!(e.now() > u.now());
+    }
+
+    #[test]
+    fn events_carry_schedule_and_deps() {
+        let mut e = engine(2, 2, true);
+        drive(&mut e, 2, true);
+        assert!(!e.events.is_empty());
+        // per-step events: 2 unshard + 2 reduce-scatter + 2 gathers
+        assert_eq!(e.events.len(), 6);
+        let labels: Vec<&str> = e.events.iter().map(|ev| ev.label).collect();
+        assert!(labels.contains(&"all-gather"));
+        assert!(labels.contains(&"reduce-scatter"));
+        assert!(labels.contains(&"naive-gather"));
+        for ev in &e.events {
+            assert!(ev.duration > 0.0);
+            assert!(ev.end() >= ev.start);
+        }
+        // the second step's events depend on the first step's (ids exist)
+        assert!(e.events.iter().any(|ev| !ev.deps.is_empty()));
+    }
+}

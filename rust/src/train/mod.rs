@@ -3,9 +3,9 @@
 //! Per step, over the hybrid mesh (S = intra-node sharding groups,
 //! R = inter-node replication groups):
 //!
-//! 1. every rank runs fwd+bwd on its own microbatch through the AOT HLO
-//!    artifact (`runtime::ModelRuntime::train_step`) — full parameters,
-//!    full gradient (`p.grad` in the paper's PyTorch framing);
+//! 1. every rank runs fwd+bwd on its own microbatch (deduplicated by
+//!    gradient stream and fanned out to `std::thread::scope` workers —
+//!    full parameters, full gradient, `p.grad` in the paper's framing);
 //! 2. `GradReduceScatter(θ_t, S)`: ring reduce-scatter averages gradients
 //!    intra-node; each rank keeps its shard;
 //! 3. the optimizer folds the gradient shard into the decoupled buffer
@@ -17,11 +17,23 @@
 //! 5. `θ ← θ − η·Q` on the shard; intra-node all-gather unshards the
 //!    updated parameters for the next forward pass.
 //!
+//! **Numerics vs time are decoupled.** The data movement above always
+//! executes in program order, bit-identically whatever the schedule; the
+//! *clock* is the discrete-event [`engine::StepEngine`], which either
+//! serializes the phases (`--no-overlap`, legacy `SimClock` parity) or
+//! overlaps phase 0/2 intra-node traffic with backward compute and the
+//! replication gather with the next step's forward. See `engine` for the
+//! dependency model.
+//!
 //! Edge cases degrade exactly as the paper states: |R|=1 → pure FSDP,
 //! |S|=1 → DeMo-style DDP, |S|=|R|=1 → single-accelerator training.
 //!
 //! Everything is deterministic: data streams, init, and the Random/
-//! Striding index sets all derive from `config.seed`.
+//! Striding index sets all derive from `config.seed` — and the worker
+//! threads only parallelize *independent* stream computations, so
+//! `--threads N` never changes a single bit of the result (tested).
+
+pub mod engine;
 
 use std::time::Instant;
 
@@ -32,11 +44,13 @@ use crate::compress::WireStats;
 use crate::config::ExperimentConfig;
 use crate::data::{task_for, Task};
 use crate::metrics::{RunMetrics, StepRow, ValRow};
-use crate::net::{SimClock, Topology, TrafficMatrix};
+use crate::net::{Topology, TrafficMatrix};
 use crate::optim::Optimizer;
-use crate::replicate::{mean_decoded, GatherMode, ReplCtx, Replicator};
+use crate::replicate::{mean_decoded, ReplCtx, Replicator};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::shard::{FlatLayout, HybridMesh};
+
+use engine::{StepEngine, StepTiming};
 
 /// Per-rank state (optimizer + replicator own shard-sized buffers).
 struct RankState {
@@ -57,8 +71,11 @@ pub struct Trainer {
     /// Per-rank gradient buffers (padded).
     grads: Vec<Vec<f32>>,
     ranks: Vec<RankState>,
-    pub clock: SimClock,
+    /// The discrete-event clock (per-rank compute + NIC timelines).
+    pub engine: StepEngine,
     pub traffic: TrafficMatrix,
+    /// Timing summary of the most recent step.
+    pub last_timing: StepTiming,
     /// Cumulative inter/intra byte counters at the last step boundary.
     last_inter: u64,
     last_intra: u64,
@@ -90,6 +107,7 @@ impl Trainer {
             .collect();
 
         let traffic = TrafficMatrix::new(cfg.nodes);
+        let engine = StepEngine::new(topo, cfg.net, cfg.cluster.clone(), cfg.overlap);
         Ok(Trainer {
             model,
             layout,
@@ -98,8 +116,9 @@ impl Trainer {
             params,
             grads,
             ranks,
-            clock: SimClock::new(),
+            engine,
             traffic,
+            last_timing: StepTiming::default(),
             last_inter: 0,
             last_intra: 0,
             cfg,
@@ -117,6 +136,95 @@ impl Trainer {
         }
     }
 
+    /// Worker threads for the per-stream fwd/bwd fan-out.
+    fn n_workers(&self, n_streams: usize) -> usize {
+        if cfg!(feature = "xla") {
+            // The PJRT client is not Sync; execute streams sequentially.
+            if self.cfg.threads != 1 && self.step == 0 {
+                log::warn!(
+                    "--threads {} ignored: the PJRT (xla) backend is not Sync; \
+                     streams run sequentially",
+                    self.cfg.threads
+                );
+            }
+            1
+        } else {
+            match self.cfg.threads {
+                0 => n_streams,
+                t => t.min(n_streams),
+            }
+        }
+    }
+
+    /// Run the deduplicated per-stream fwd/bwd calls, possibly on scoped
+    /// worker threads. Stream `s` trains on node `node_of(s)`'s replica —
+    /// the same assignment the sequential loop has always used, so the
+    /// results are bit-identical at any worker count.
+    #[cfg(not(feature = "xla"))]
+    fn run_streams(&self, n_streams: usize, workers: usize) -> Result<Vec<(f32, Vec<f32>)>> {
+        let step = self.step;
+        if workers <= 1 {
+            return (0..n_streams)
+                .map(|s| {
+                    let node = self.mesh.topo.node_of(s);
+                    let batch = self.task.train_batch(s as u64, step);
+                    self.model
+                        .train_step(&self.params[node], &batch)
+                        .with_context(|| format!("stream {s} step {step}"))
+                })
+                .collect();
+        }
+        let mut results: Vec<Option<Result<(f32, Vec<f32>)>>> =
+            (0..n_streams).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    let model = &self.model;
+                    let task = &self.task;
+                    let params = &self.params;
+                    let topo = self.mesh.topo;
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut s = w;
+                        while s < n_streams {
+                            let node = topo.node_of(s);
+                            let batch = task.train_batch(s as u64, step);
+                            let r = model
+                                .train_step(&params[node], &batch)
+                                .with_context(|| format!("stream {s} step {step}"));
+                            out.push((s, r));
+                            s += workers;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (s, r) in h.join().expect("stream worker panicked") {
+                    results[s] = Some(r);
+                }
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("stream not computed"))
+            .collect()
+    }
+
+    #[cfg(feature = "xla")]
+    fn run_streams(&self, n_streams: usize, _workers: usize) -> Result<Vec<(f32, Vec<f32>)>> {
+        let step = self.step;
+        (0..n_streams)
+            .map(|s| {
+                let node = self.mesh.topo.node_of(s);
+                let batch = self.task.train_batch(s as u64, step);
+                self.model
+                    .train_step(&self.params[node], &batch)
+                    .with_context(|| format!("stream {s} step {step}"))
+            })
+            .collect()
+    }
+
     /// One full FlexDeMo step. Returns the mean train loss across ranks.
     pub fn step(&mut self) -> Result<f64> {
         let world = self.mesh.topo.world_size();
@@ -127,75 +235,46 @@ impl Trainer {
             model: &self.cfg.net,
             traffic: &self.traffic,
         };
+        self.engine.begin_step();
 
-        // -- 0. FSDP unshard accounting: within each node, parameters are
-        // all-gathered from shards before the forward pass. Data-wise the
-        // node buffer is already whole; charge the wire time.
+        // -- 0. FSDP unshard: within each node, updated parameters are
+        // all-gathered from shards before they are next used. Data-wise
+        // the node buffer is already whole; the engine charges the wire
+        // time and traffic (overlapped behind backward compute when
+        // overlap is on).
         let shard_bytes = (self.mesh.shards.shard_len() * 4) as u64;
-        if accels > 1 {
-            for node in 0..self.cfg.nodes {
-                for a in 0..accels {
-                    for b in 0..accels {
-                        if a != b {
-                            // ring all-gather neighbor traffic, recorded once
-                            let _ = (a, b);
-                        }
-                    }
-                }
-                self.traffic
-                    .record(node, node, (accels - 1) as u64 * shard_bytes * accels as u64);
-            }
-            let t_unshard = (accels as f64 - 1.0)
-                * self
-                    .cfg
-                    .net
-                    .xfer_time(crate::net::LinkClass::IntraNode, shard_bytes);
-            self.clock.advance(t_unshard);
-        }
+        self.engine.unshard(shard_bytes, &self.traffic);
 
-        // -- 1. fwd/bwd per rank (deduplicated by gradient stream).
+        // -- 1. fwd/bwd per rank (deduplicated by gradient stream, fanned
+        // out to scoped worker threads).
         let n_streams = self.n_streams();
-        let mut stream_results: Vec<Option<(f32, Vec<f32>)>> = vec![None; n_streams];
+        let workers = self.n_workers(n_streams);
+        let stream_results = self.run_streams(n_streams, workers)?;
         let mut loss_sum = 0.0f64;
         for rank in 0..world {
-            let node = self.mesh.topo.node_of(rank);
-            let stream = rank % n_streams;
-            if stream_results[stream].is_none() {
-                let batch = self.task.train_batch(stream as u64, step);
-                let out = self
-                    .model
-                    .train_step(&self.params[node], &batch)
-                    .with_context(|| format!("rank {rank} step {step}"))?;
-                stream_results[stream] = Some(out);
-            }
-            let (loss, grads) = stream_results[stream].as_ref().unwrap();
+            let (loss, grads) = &stream_results[rank % n_streams];
             loss_sum += *loss as f64;
             let g = &mut self.grads[rank];
             g[..grads.len()].copy_from_slice(grads);
             g[grads.len()..].fill(0.0); // pad region carries no gradient
         }
-        // Compute time: all ranks run in parallel; advance once.
-        self.clock
-            .advance(self.cfg.net.compute_time(self.model.manifest.step_flops()));
+        self.engine.compute(self.model.manifest.step_flops());
 
-        // -- 2. intra-node reduce-scatter (S groups run in parallel).
-        let mut t_rs_max = 0.0f64;
+        // -- 2. intra-node reduce-scatter (S groups run in parallel; the
+        // engine streams the event behind the backward).
         for node in 0..self.cfg.nodes {
             let group = self.mesh.topo.shard_group(self.mesh.topo.rank(node, 0));
             let shards: Vec<(usize, usize)> =
                 (0..accels).map(|a| self.mesh.shards.range(a)).collect();
-            let (head, tail) = self.grads.split_at_mut(node * accels);
-            let _ = head;
+            let (_, tail) = self.grads.split_at_mut(node * accels);
             let bufs_vec = &mut tail[..accels];
             let mut bufs: Vec<&mut [f32]> =
                 bufs_vec.iter_mut().map(|v| v.as_mut_slice()).collect();
-            let t = collectives::ring_reduce_scatter_avg(&ctx, &group, &mut bufs, &shards);
-            t_rs_max = t_rs_max.max(t);
+            let _ = collectives::ring_reduce_scatter_avg(&ctx, &group, &mut bufs, &shards);
         }
-        self.clock.advance(t_rs_max);
+        self.engine.reduce_scatter(shard_bytes);
 
         // -- 3+4. decoupled accumulate, extract, replicate per R-group.
-        let mut t_repl_max = 0.0f64;
         for a in 0..accels {
             let (lo, hi) = self.mesh.shards.range(a);
             let rctx = ReplCtx {
@@ -228,39 +307,8 @@ impl Trainer {
                 let payloads: Vec<crate::compress::Payload> =
                     payloads.into_iter().map(|p| p.unwrap()).collect();
                 let mode = self.ranks[group[0]].repl.gather_mode();
-                let t = match mode {
-                    GatherMode::NaiveAllGather => {
-                        let sized: Vec<((), u64)> =
-                            payloads.iter().map(|p| ((), p.wire_bytes())).collect();
-                        let (_, t) = collectives::naive_all_gather_bytes(&ctx, &group, &sized);
-                        t
-                    }
-                    GatherMode::RingAllReduce => {
-                        // Dense ring over the payload bytes; record ring traffic.
-                        let g = group.len();
-                        let bytes = payloads[0].wire_bytes();
-                        if g > 1 {
-                            let chunk = bytes / g as u64;
-                            for sidx in 0..g {
-                                for _ in 0..2 * (g - 1) {
-                                    ctx.traffic.record(
-                                        self.mesh.topo.node_of(group[sidx]),
-                                        self.mesh.topo.node_of(group[(sidx + 1) % g]),
-                                        chunk,
-                                    );
-                                }
-                            }
-                            2.0 * (g as f64 - 1.0)
-                                * self.cfg.net.xfer_time(
-                                    self.mesh.topo.group_link_class(&group),
-                                    chunk,
-                                )
-                        } else {
-                            0.0
-                        }
-                    }
-                };
-                t_repl_max = t_repl_max.max(t);
+                let sizes: Vec<u64> = payloads.iter().map(|p| p.wire_bytes()).collect();
+                self.engine.gather(&group, mode, &sizes, &self.traffic);
 
                 let lr = self.cfg.lr_at(step);
                 for (gi, &rank) in group.iter().enumerate() {
@@ -285,10 +333,15 @@ impl Trainer {
                 }
             }
         }
-        self.clock.advance(t_repl_max);
+        self.last_timing = self.engine.end_step();
 
         self.step += 1;
         Ok(loss_sum / world as f64)
+    }
+
+    /// Current simulated time (the event horizon across all ranks).
+    pub fn sim_now(&self) -> f64 {
+        self.engine.now()
     }
 
     /// Validation loss on the held-out split (node-0 parameters).
@@ -343,10 +396,13 @@ impl Trainer {
             let intra = self.traffic.intra_node_bytes();
             metrics.steps.push(StepRow {
                 step: self.step - 1,
-                sim_time: self.clock.now(),
+                sim_time: self.sim_now(),
                 loss,
                 inter_bytes: inter - self.last_inter,
                 intra_bytes: intra - self.last_intra,
+                compute_time: self.last_timing.compute_time,
+                exposed_comm: self.last_timing.exposed_comm,
+                hidden_comm: self.last_timing.hidden_comm,
                 wall_time: wall0.elapsed().as_secs_f64(),
             });
             self.last_inter = inter;
@@ -359,11 +415,11 @@ impl Trainer {
                     self.step,
                     loss,
                     vloss,
-                    crate::util::fmt_secs(self.clock.now())
+                    crate::util::fmt_secs(self.sim_now())
                 );
                 metrics.val.push(ValRow {
                     step: self.step,
-                    sim_time: self.clock.now(),
+                    sim_time: self.sim_now(),
                     loss: vloss,
                 });
             } else if self.step % 50 == 0 {

@@ -56,6 +56,12 @@ impl Gen {
         lo + self.rng.next_f32() * (hi - lo)
     }
 
+    /// Uniform f64 in [lo, hi) — used by the event-engine properties
+    /// (durations, bandwidths, slowdown factors).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
         (0..len).map(|_| self.f32(lo, hi)).collect()
     }
@@ -168,5 +174,13 @@ mod tests {
     fn approx_eq_tolerates_scale() {
         assert!(approx_eq(1000.0, 1000.01, 1e-4));
         assert!(!approx_eq(1.0, 1.1, 1e-4));
+    }
+
+    #[test]
+    fn f64_generator_respects_bounds() {
+        proptest(64, |g| {
+            let x = g.f64(2.5, 7.5);
+            prop_assert((2.5..7.5).contains(&x), format!("{x} out of range"));
+        });
     }
 }

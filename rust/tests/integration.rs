@@ -1,8 +1,10 @@
 //! Integration tests: the full three-layer stack (artifacts → PJRT →
 //! FlexDeMo coordinator) on tiny models.
 //!
-//! Requires `make artifacts` (skips gracefully when artifacts are absent
-//! so `cargo test` works in a fresh checkout, but CI runs with them).
+//! Artifact-backed tests require `make artifacts` (they skip gracefully
+//! when artifacts are absent so `cargo test` works in a fresh checkout).
+//! The event-engine invariant suite at the bottom runs everywhere: it
+//! drives the pure-Rust surrogate runtime on `synthetic-*` models.
 
 use detonation::config::ExperimentConfig;
 use detonation::optim::OptSpec;
@@ -17,7 +19,11 @@ fn runtime() -> Runtime {
 }
 
 fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/lm-tiny.meta.json").exists()
+    // The artifact suite's learning-curve thresholds are calibrated for
+    // the real PJRT-executed models: only run it when the xla backend is
+    // actually compiled in (the surrogate backend has its own suite in
+    // `engine_invariants` below).
+    cfg!(feature = "xla") && std::path::Path::new("artifacts/lm-tiny.meta.json").exists()
 }
 
 macro_rules! require_artifacts {
@@ -350,6 +356,230 @@ fn wrong_batch_shape_rejected() {
         detonation::runtime::BatchData::I32(vec![0; 512]),
     ];
     assert!(model.train_step(&params, &bad).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// event-engine invariants (surrogate runtime; no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "xla"))]
+mod engine_invariants {
+    use super::*;
+    use detonation::metrics::RunMetrics;
+    use detonation::net::{ClusterModel, NetModel};
+
+    /// 2×2 mesh on a 100 Mbps inter-node link (the paper's Fig 10 regime)
+    /// with the in-process synthetic LM.
+    fn synth_cfg(repl: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            model: "synthetic-lm".into(),
+            nodes: 2,
+            accels_per_node: 2,
+            steps: 6,
+            lr: 0.05,
+            seed: 99,
+            repl: ReplSpec::parse(repl).unwrap(),
+            net: NetModel::throttled(100.0),
+            ..Default::default()
+        }
+    }
+
+    /// Run to completion; returns (trainer, metrics).
+    fn run(cfg: ExperimentConfig) -> (Trainer, RunMetrics) {
+        let mut t = Trainer::new(&runtime(), cfg).unwrap();
+        let m = t.run().unwrap();
+        (t, m)
+    }
+
+    #[test]
+    fn no_overlap_bit_matches_the_serialized_clock() {
+        // --no-overlap must reproduce the legacy SimClock totals exactly:
+        // the engine's horizon and its serialized accumulator (the sum of
+        // phase maxima in legacy order) are the same float chain.
+        for repl in ["full", "demo:1/8", "diloco:4"] {
+            let mut cfg = synth_cfg(repl);
+            cfg.overlap = false;
+            let (t, m) = run(cfg);
+            assert_eq!(
+                t.engine.now(),
+                t.engine.serialized_time(),
+                "{repl}: serialized engine diverged from barrier clock"
+            );
+            assert_eq!(m.total_sim_time(), t.engine.now(), "{repl}");
+        }
+    }
+
+    #[test]
+    fn overlapped_step_time_never_exceeds_serialized() {
+        for repl in ["full", "demo:1/8", "random:1/8", "diloco:4"] {
+            let (t_ovl, m_ovl) = run(synth_cfg(repl));
+            let mut cfg = synth_cfg(repl);
+            cfg.overlap = false;
+            let (_, m_ser) = run(cfg);
+            // within one run, the engine's own serialized bound holds...
+            assert!(
+                t_ovl.engine.now() <= t_ovl.engine.serialized_time() * (1.0 + 1e-12),
+                "{repl}: overlap exceeded its serialized bound"
+            );
+            // ...and it matches an actual --no-overlap run of the same cfg
+            assert!(
+                m_ovl.total_sim_time() <= m_ser.total_sim_time() * (1.0 + 1e-12),
+                "{repl}: overlap slower than serialized"
+            );
+            // scheduling must never change numerics
+            let l_ovl: Vec<f64> = m_ovl.steps.iter().map(|r| r.loss).collect();
+            let l_ser: Vec<f64> = m_ser.steps.iter().map(|r| r.loss).collect();
+            assert_eq!(l_ovl, l_ser, "{repl}: overlap changed the numerics");
+        }
+    }
+
+    #[test]
+    fn per_rank_timelines_are_monotone() {
+        let mut t = Trainer::new(&runtime(), synth_cfg("demo:1/8")).unwrap();
+        let world = t.cfg.world_size();
+        let mut prev = vec![0.0f64; world];
+        for _ in 0..8 {
+            t.step().unwrap();
+            let (compute, nic) = t.engine.timelines();
+            for r in 0..world {
+                let now = compute.now(r).max(nic.now(r));
+                assert!(now >= prev[r], "rank {r} timeline went backwards");
+                prev[r] = now;
+            }
+        }
+    }
+
+    /// The PR's acceptance criterion: on a ≤100 Mbps inter-node link,
+    /// overlap makes DeMo/FlexDeMo strictly faster per step, while the
+    /// Full all-reduce baseline stays communication-bound — the paper's
+    /// "FlexDeMo is substantially faster" ordering.
+    #[test]
+    fn flexdemo_overlap_is_strictly_faster_and_full_stays_comm_bound() {
+        let time_of = |repl: &str, overlap: bool| {
+            let mut cfg = synth_cfg(repl);
+            cfg.overlap = overlap;
+            run(cfg)
+        };
+        for repl in ["demo:1/8", "demo:1/32"] {
+            let (_, m_ovl) = time_of(repl, true);
+            let (_, m_ser) = time_of(repl, false);
+            assert!(
+                m_ovl.mean_step_time() < m_ser.mean_step_time(),
+                "{repl}: overlap not strictly faster: {} vs {}",
+                m_ovl.mean_step_time(),
+                m_ser.mean_step_time()
+            );
+            assert!(m_ovl.total_hidden_comm() > 0.0, "{repl}: nothing hidden");
+        }
+        // Full replication: the ring all-reduce dwarfs compute at
+        // 100 Mbps, so even overlapped it remains comm-bound...
+        let (_, m_full) = time_of("full", true);
+        assert!(
+            m_full.total_exposed_comm() > 0.5 * m_full.total_sim_time(),
+            "full should be comm-bound: exposed {} of {}",
+            m_full.total_exposed_comm(),
+            m_full.total_sim_time()
+        );
+        // ...and FlexDeMo is substantially faster than Full per step.
+        let (_, m_demo) = time_of("demo:1/8", true);
+        assert!(
+            m_full.mean_step_time() > 3.0 * m_demo.mean_step_time(),
+            "paper ordering violated: full {} vs demo {}",
+            m_full.mean_step_time(),
+            m_demo.mean_step_time()
+        );
+    }
+
+    #[test]
+    fn straggler_node_dominates_critical_path() {
+        let mut cfg = synth_cfg("demo:1/8");
+        // make compute dominant so the straggler is the long pole
+        cfg.net.device_flops = 1e9;
+        cfg.cluster = ClusterModel {
+            slowdown: ClusterModel::parse_slowdown("1:3.0").unwrap(),
+            node_inter_bw: vec![],
+        };
+        let (t_strag, m_strag) = run(cfg);
+        let crit = t_strag.engine.critical_rank();
+        assert_eq!(
+            crit / t_strag.cfg.accels_per_node,
+            1,
+            "critical rank {crit} not on the straggler node"
+        );
+
+        let mut uni = synth_cfg("demo:1/8");
+        uni.net.device_flops = 1e9;
+        let (_, m_uni) = run(uni);
+        // a 3× straggler on compute-dominant steps costs ≈3×; demand >2×
+        // to keep the assertion robust yet strict.
+        assert!(
+            m_strag.total_sim_time() > 2.0 * m_uni.total_sim_time(),
+            "straggler did not dominate: {} vs {}",
+            m_strag.total_sim_time(),
+            m_uni.total_sim_time()
+        );
+    }
+
+    #[test]
+    fn heterogeneous_nic_slows_replication() {
+        let mut cfg = synth_cfg("full");
+        cfg.cluster.node_inter_bw = ClusterModel::parse_node_mbps("0:10").unwrap();
+        let (_, m_het) = run(cfg);
+        let (_, m_uni) = run(synth_cfg("full"));
+        assert!(
+            m_het.total_sim_time() > m_uni.total_sim_time() * 2.0,
+            "10 Mbps NIC on node 0 should throttle the gather: {} vs {}",
+            m_het.total_sim_time(),
+            m_uni.total_sim_time()
+        );
+    }
+
+    #[test]
+    fn worker_threads_do_not_change_numerics() {
+        let losses = |threads: usize| {
+            let mut cfg = synth_cfg("demo:1/8");
+            cfg.threads = threads;
+            run(cfg).1.steps.iter().map(|r| r.loss).collect::<Vec<_>>()
+        };
+        let serial = losses(1);
+        assert_eq!(serial, losses(4));
+        assert_eq!(serial, losses(0)); // one worker per stream
+    }
+
+    #[test]
+    fn replicas_stay_in_sync_on_surrogate() {
+        for repl in ["demo:1/8", "random:1/8", "full"] {
+            let mut t = Trainer::new(&runtime(), synth_cfg(repl)).unwrap();
+            for _ in 0..4 {
+                t.step().unwrap();
+            }
+            assert_eq!(t.replica_drift(), 0.0, "{repl} drifted");
+        }
+    }
+
+    #[test]
+    fn prop_overlap_bounded_across_random_meshes() {
+        detonation::util::proptest::proptest(10, |g| {
+            let nodes = g.usize(1, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&["full", "demo:1/8", "diloco:2"]);
+            let mbps = g.f64(10.0, 1000.0);
+            let mk = |overlap: bool| {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 2;
+                cfg.net = NetModel::throttled(mbps);
+                cfg.overlap = overlap;
+                run(cfg).1.total_sim_time()
+            };
+            let (ovl, ser) = (mk(true), mk(false));
+            detonation::util::proptest::prop_assert(
+                ovl <= ser * (1.0 + 1e-12),
+                format!("{nodes}x{accels} {repl} @{mbps:.0}Mbps: {ovl} > {ser}"),
+            );
+        });
+    }
 }
 
 // ---------------------------------------------------------------------------
