@@ -1,33 +1,107 @@
 //! Compression micro-bench: sign/ternary packing, dtype casts, top-k
-//! selection (perf deliverable; target ≥ 4 GB/s sign-pack).
+//! selection, and the full extract pipeline old-vs-new (perf
+//! deliverable; acceptance: ≥2× extract throughput at paper settings
+//! chunk=64, k=8, sign, and **zero steady-state heap allocations**,
+//! asserted here with a counting global allocator).
 //!
 //!     cargo bench --bench compress
+//!
+//! Results (elements/sec + allocation counts) land in
+//! `BENCH_compress.json` at the repo root — the perf-trajectory
+//! artifact.
 
-use detonation::compress::{pack_ternary, unpack_ternary};
-use detonation::tensor::{f32_to_bf16, f32_to_f16};
-use detonation::topk::topk_per_chunk;
-use detonation::util::rng::Rng;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, bytes_per_iter: u64, mut f: F) {
+use detonation::compress::{pack_ternary, unpack_ternary, Payload, Scratch};
+use detonation::dct::Dct;
+use detonation::replicate::{DemoReplicator, ReplCtx, Replicator};
+use detonation::tensor::{f32_to_bf16, f32_to_f16, Dtype};
+use detonation::topk::topk_per_chunk;
+use detonation::util::json::Json;
+use detonation::util::rng::Rng;
+
+#[path = "util/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::{alloc_count, CountingAlloc};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Time `f` and return (micros/iter, iters, allocs/iter).
+fn bench<F: FnMut()>(mut f: F) -> (f64, u64, f64) {
     for _ in 0..3 {
         f();
     }
+    let a0 = alloc_count();
     let t0 = Instant::now();
     let mut iters = 0u64;
-    while t0.elapsed().as_secs_f64() < 0.5 {
+    while t0.elapsed().as_secs_f64() < 0.4 {
         f();
         iters += 1;
     }
     let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "{name:<32} {:>10.1} µs/iter {:>8.2} GB/s",
-        dt / iters as f64 * 1e6,
-        (bytes_per_iter * iters) as f64 / dt / 1e9
-    );
+    let allocs = (alloc_count() - a0) as f64 / iters as f64;
+    (dt / iters as f64 * 1e6, iters, allocs)
 }
 
-fn main() {
+fn report(name: &str, elems_per_iter: u64, bytes_per_iter: u64, res: (f64, u64, f64)) -> Json {
+    let (us, _iters, allocs) = res;
+    let eps = elems_per_iter as f64 / (us / 1e6);
+    println!(
+        "{name:<34} {us:>10.1} µs/iter {:>9.1} Melem/s {:>8.2} GB/s {allocs:>8.1} allocs",
+        eps / 1e6,
+        bytes_per_iter as f64 / (us / 1e6) / 1e9,
+    );
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("micros_per_iter", Json::Num(us)),
+        ("elements_per_sec", Json::Num(eps)),
+        ("allocs_per_iter", Json::Num(allocs)),
+    ])
+}
+
+/// The pre-PR extract pipeline, spelled out: dense scratch buffers
+/// allocated per call, dense kept-mass materialization, recursive
+/// per-chunk transforms. This is the baseline the tentpole replaces;
+/// numerics match the new path bit-for-bit (tested in `replicate::demo`).
+fn baseline_extract(
+    chunk: usize,
+    k: usize,
+    sign: bool,
+    buf: &mut [f32],
+) -> (Vec<f32>, Payload) {
+    let d = Dct::plan(chunk);
+    let mut coeffs = vec![0.0f32; buf.len()];
+    d.forward_chunked_recursive(buf, &mut coeffs);
+    let indices = topk_per_chunk(&coeffs, chunk, k);
+    let values: Vec<f32> = indices.iter().map(|&i| coeffs[i as usize]).collect();
+    let mut kept = vec![0.0f32; buf.len()];
+    for (&i, &v) in indices.iter().zip(&values) {
+        kept[i as usize] = v;
+    }
+    let mut removed = vec![0.0f32; buf.len()];
+    d.inverse_chunked_recursive(&kept, &mut removed);
+    for (b, r) in buf.iter_mut().zip(&removed) {
+        *b -= r;
+    }
+    let payload = Payload::new(Some(indices), values, Dtype::F32, sign);
+    // decode q_local from the payload via a dense coefficient buffer
+    let mut dense = vec![0.0f32; buf.len()];
+    for (&i, &v) in payload
+        .indices
+        .as_ref()
+        .unwrap()
+        .iter()
+        .zip(&payload.values)
+    {
+        dense[i as usize] = v;
+    }
+    let mut q = vec![0.0f32; buf.len()];
+    d.inverse_chunked_recursive(&dense, &mut q);
+    (q, payload)
+}
+
+fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(2);
     let n = 1 << 20;
     let vals: Vec<f32> = (0..n)
@@ -35,25 +109,116 @@ fn main() {
         .collect();
     let dense: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
     let bytes = (n * 4) as u64;
+    let mut rows = Vec::new();
 
     let packed = pack_ternary(&vals);
-    bench("pack_ternary", bytes, || {
+    let r = bench(|| {
         std::hint::black_box(pack_ternary(&vals));
     });
-    bench("unpack_ternary", bytes, || {
+    rows.push(report("pack_ternary", n as u64, bytes, r));
+    let r = bench(|| {
         std::hint::black_box(unpack_ternary(&packed, n));
     });
-    bench("f32->bf16 cast", bytes, || {
+    rows.push(report("unpack_ternary", n as u64, bytes, r));
+    let r = bench(|| {
         let v: Vec<u16> = dense.iter().map(|&x| f32_to_bf16(x)).collect();
         std::hint::black_box(v);
     });
-    bench("f32->f16 cast", bytes, || {
+    rows.push(report("f32->bf16 cast", n as u64, bytes, r));
+    let r = bench(|| {
         let v: Vec<u16> = dense.iter().map(|&x| f32_to_f16(x)).collect();
         std::hint::black_box(v);
     });
+    rows.push(report("f32->f16 cast", n as u64, bytes, r));
     for (chunk, k) in [(64usize, 8usize), (256, 8), (64, 32)] {
-        bench(&format!("topk_per_chunk c{chunk} k{k}"), bytes, || {
+        let r = bench(|| {
             std::hint::black_box(topk_per_chunk(&dense, chunk, k));
         });
+        rows.push(report(&format!("topk_per_chunk c{chunk} k{k}"), n as u64, bytes, r));
     }
+    // partial selection into reused buffers — the hot-path variant
+    {
+        let mut perm = Vec::new();
+        let mut out = Vec::new();
+        let r = bench(|| {
+            detonation::topk::topk_per_chunk_into(&dense, 64, 8, &mut perm, &mut out);
+            std::hint::black_box(out.len());
+        });
+        rows.push(report("topk_per_chunk_into c64 k8", n as u64, bytes, r));
+    }
+
+    // -- extract pipeline, paper settings (chunk=64, k=8, sign) ----------
+    let shard = 1usize << 18; // 256k elements ≈ 1 MiB shard
+    let momentum: Vec<f32> = {
+        let mut r = Rng::new(7);
+        (0..shard).map(|_| r.normal_f32(1.0)).collect()
+    };
+    let ctx = ReplCtx {
+        step: 0,
+        shard: 0,
+        seed: 1,
+    };
+
+    let mut buf = momentum.clone();
+    let old = bench(|| {
+        buf.copy_from_slice(&momentum);
+        std::hint::black_box(baseline_extract(64, 8, true, &mut buf));
+    });
+    let old_row = report("extract OLD c64 k8 sign", shard as u64, (shard * 4) as u64, old);
+
+    let mut repl = DemoReplicator::new(64, 8, true, Dtype::F32);
+    let mut scratch = Scratch::new();
+    let new = bench(|| {
+        buf.copy_from_slice(&momentum);
+        let (q, p) = repl.extract(&ctx, &mut buf, &mut scratch);
+        if let Some(p) = p {
+            scratch.recycle_payload(p);
+        }
+        scratch.put_f32(q);
+    });
+    let new_row = report("extract NEW c64 k8 sign", shard as u64, (shard * 4) as u64, new);
+
+    let speedup = old.0 / new.0;
+    println!("extract speedup: {speedup:.2}x (target >= 2x)");
+
+    // -- zero-alloc assertion (steady state, counting allocator) ---------
+    buf.copy_from_slice(&momentum);
+    let a0 = alloc_count();
+    let (q, p) = repl.extract(&ctx, &mut buf, &mut scratch);
+    let steady_allocs = alloc_count() - a0;
+    if let Some(p) = p {
+        scratch.recycle_payload(p);
+    }
+    scratch.put_f32(q);
+    assert_eq!(
+        steady_allocs, 0,
+        "steady-state extract allocated {steady_allocs} times"
+    );
+    println!("steady-state extract allocations: {steady_allocs} (asserted 0)");
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("compress".into())),
+        ("elements", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
+        (
+            "extract",
+            Json::obj(vec![
+                ("chunk", Json::Num(64.0)),
+                ("k", Json::Num(8.0)),
+                ("sign", Json::Bool(true)),
+                ("shard_elements", Json::Num(shard as f64)),
+                ("old", old_row),
+                ("new", new_row),
+                ("speedup", Json::Num(speedup)),
+                ("steady_state_allocs", Json::Num(steady_allocs as f64)),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_compress.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
 }

@@ -1,53 +1,87 @@
 //! DCT micro-bench: encode/decode throughput across chunk sizes — the L3
 //! extraction hot path (perf deliverable; target ≥ 1 GB/s/core encode).
+//! Compares the blocked multi-chunk kernel against the recursive
+//! per-chunk reference and writes element-throughput + allocation counts
+//! to `BENCH_dct.json` (the perf-trajectory artifact).
 //!
 //!     cargo bench --bench dct
 
-use detonation::dct::Dct;
-use detonation::util::rng::Rng;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, bytes_per_iter: u64, mut f: F) {
-    // warmup
+use detonation::dct::{Dct, DctScratch};
+use detonation::util::json::Json;
+use detonation::util::rng::Rng;
+
+#[path = "util/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::{alloc_count, CountingAlloc};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Time `f`; returns (micros/iter, allocs/iter).
+fn bench<F: FnMut()>(name: &str, elems_per_iter: u64, mut f: F) -> (f64, f64) {
     for _ in 0..3 {
         f();
     }
+    let a0 = alloc_count();
     let t0 = Instant::now();
     let mut iters = 0u64;
-    while t0.elapsed().as_secs_f64() < 0.5 {
+    while t0.elapsed().as_secs_f64() < 0.4 {
         f();
         iters += 1;
     }
     let dt = t0.elapsed().as_secs_f64();
-    let gbps = (bytes_per_iter * iters) as f64 / dt / 1e9;
+    let us = dt / iters as f64 * 1e6;
+    let allocs = (alloc_count() - a0) as f64 / iters as f64;
     println!(
-        "{name:<32} {:>10.1} µs/iter {:>8.2} GB/s",
-        dt / iters as f64 * 1e6,
-        gbps
+        "{name:<34} {us:>10.1} µs/iter {:>9.1} Melem/s {:>8.2} GB/s {allocs:>8.1} allocs",
+        elems_per_iter as f64 / (us / 1e6) / 1e6,
+        (elems_per_iter * 4) as f64 / (us / 1e6) / 1e9,
     );
+    (us, allocs)
 }
 
-fn main() {
+fn row(name: &str, chunk: usize, elems: u64, (us, allocs): (f64, f64)) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("chunk", Json::Num(chunk as f64)),
+        ("micros_per_iter", Json::Num(us)),
+        ("elements_per_sec", Json::Num(elems as f64 / (us / 1e6))),
+        ("allocs_per_iter", Json::Num(allocs)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(1);
     let n = 1 << 20; // 1M elements = 4 MiB
     let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
     let mut out = vec![0.0f32; n];
     println!("chunked DCT over {} MiB buffer:", n * 4 / (1 << 20));
+    let mut rows = Vec::new();
 
     for chunk in [16usize, 32, 64, 128, 256] {
         let d = Dct::plan(chunk);
-        bench(&format!("dct2 chunk={chunk}"), (n * 4) as u64, || {
-            d.forward_chunked(&x, &mut out);
+        let mut s = DctScratch::new();
+        let r = bench(&format!("dct2 blocked chunk={chunk}"), n as u64, || {
+            d.forward_chunked_with(&x, &mut out, &mut s);
         });
+        rows.push(row("dct2_blocked", chunk, n as u64, r));
+        let r = bench(&format!("dct2 recursive chunk={chunk}"), n as u64, || {
+            d.forward_chunked_recursive(&x, &mut out);
+        });
+        rows.push(row("dct2_recursive", chunk, n as u64, r));
     }
     for chunk in [64usize, 256] {
         let d = Dct::plan(chunk);
         // dense inverse
         let c = out.clone();
         let mut back = vec![0.0f32; n];
-        bench(&format!("dct3 dense chunk={chunk}"), (n * 4) as u64, || {
-            d.inverse_chunked(&c, &mut back);
+        let mut s = DctScratch::new();
+        let r = bench(&format!("dct3 dense chunk={chunk}"), n as u64, || {
+            d.inverse_chunked_with(&c, &mut back, &mut s);
         });
+        rows.push(row("dct3_dense_blocked", chunk, n as u64, r));
         // sparse inverse (k=chunk/8 nonzero) — the real decode workload
         let mut sparse = vec![0.0f32; n];
         for ch in 0..n / chunk {
@@ -55,8 +89,22 @@ fn main() {
                 sparse[ch * chunk + k * 7 % chunk] = 1.0;
             }
         }
-        bench(&format!("dct3 sparse chunk={chunk}"), (n * 4) as u64, || {
-            d.inverse_chunked(&sparse, &mut back);
+        let r = bench(&format!("dct3 sparse chunk={chunk}"), n as u64, || {
+            d.inverse_chunked_with(&sparse, &mut back, &mut s);
         });
+        rows.push(row("dct3_sparse", chunk, n as u64, r));
     }
+
+    let out_json = Json::obj(vec![
+        ("bench", Json::Str("dct".into())),
+        ("elements", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_dct.json");
+    std::fs::write(&path, out_json.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
 }

@@ -10,7 +10,11 @@
 //!   replication gather behind the next forward;
 //! * **threaded vs single-thread wall-clock** — the real speedup from
 //!   fanning the deduplicated per-stream fwd/bwd calls out to
-//!   `std::thread::scope` workers.
+//!   `std::thread::scope` workers;
+//! * **whole-phase vs bucketed (`--bucket-mb`) exposure** — on a
+//!   compute-rich arm, how much exposed communication the per-bucket
+//!   pipeline shaves by starting the first gather bucket inside the
+//!   backward window.
 //!
 //! Results land in `BENCH_overlap.json` at the repo root (the perf
 //! trajectory artifact) and are printed as a table.
@@ -95,11 +99,48 @@ fn main() -> Result<()> {
             ("wall_speedup", Json::Num(w1 / w4)),
         ]));
     }
+    // -- bucketed pipeline: exposed-comm comparison on a compute-rich arm
+    let bucket_run = |bucket_mb: f64| -> Result<(f64, f64, f64)> {
+        let rt = runtime()?;
+        let mut c = cfg("demo:1/8", true, 1)?;
+        c.net.device_flops = 5e10; // backward window ≫ per-bucket α
+        c.bucket_mb = bucket_mb;
+        let mut t = Trainer::new(&rt, c)?;
+        let m = t.run()?;
+        Ok((
+            m.mean_step_time(),
+            m.total_exposed_comm(),
+            m.total_hidden_comm(),
+        ))
+    };
+    let (whole_step, whole_exposed, _) = bucket_run(0.0)?;
+    let (bucket_step, bucket_exposed, _) = bucket_run(0.01)?;
+    println!(
+        "bucketed demo:1/8 @0.01 MiB: step {} -> {} ({:.2}x), exposed {} -> {}",
+        fmt_secs(whole_step),
+        fmt_secs(bucket_step),
+        whole_step / bucket_step,
+        fmt_secs(whole_exposed),
+        fmt_secs(bucket_exposed),
+    );
+
     let out = Json::obj(vec![
         ("bench", Json::Str("overlap".into())),
         ("model", Json::Str("synthetic-lm".into())),
         ("inter_mbps", Json::Num(100.0)),
         ("schemes", Json::Arr(rows)),
+        (
+            "bucketed",
+            Json::obj(vec![
+                ("scheme", Json::Str("demo:1/8".into())),
+                ("bucket_mb", Json::Num(0.01)),
+                ("whole_step_s", Json::Num(whole_step)),
+                ("bucketed_step_s", Json::Num(bucket_step)),
+                ("step_speedup", Json::Num(whole_step / bucket_step)),
+                ("whole_exposed_s", Json::Num(whole_exposed)),
+                ("bucketed_exposed_s", Json::Num(bucket_exposed)),
+            ]),
+        ),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

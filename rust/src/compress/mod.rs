@@ -12,6 +12,13 @@
 //! Every payload knows its exact `wire_bytes()`, which is what the
 //! simulated network charges (`net::Link::transfer`). Tests pin the
 //! paper's claimed ratios (e.g. sign ≈ 16× smaller than f32 values).
+//!
+//! [`Scratch`] is the per-worker arena threaded through the whole
+//! extract→select→encode→decode pipeline: named workspace buffers for
+//! the DCT/top-k stages plus small free-lists that payload vectors are
+//! drawn from and recycled into, so the steady-state hot path performs
+//! **zero heap allocations** (asserted by `benches/compress.rs` with a
+//! counting allocator).
 
 use crate::tensor::Dtype;
 
@@ -188,6 +195,92 @@ impl WireStats {
     }
 }
 
+/// Pool size cap — enough for every vector the pipeline keeps in flight
+/// per step without letting a pathological caller hoard memory.
+const POOL_CAP: usize = 16;
+
+/// Reusable per-worker workspace for the compression pipeline.
+///
+/// One instance per rank (the trainer keeps one in each `RankState`),
+/// threaded through [`crate::replicate::Replicator::extract`]/`decode`.
+/// Two kinds of storage live here:
+///
+/// * **named stage buffers** (`coeffs`, `removed`, `sel`, `perm`, `idx`,
+///   `dct`) that a single extract/decode call owns for its duration;
+/// * **free-lists** (`take_f32`/`take_u32` + `put_*`) that outliving
+///   vectors — payload values/indices, the locally-decoded `q` — are
+///   drawn from. Callers return consumed payloads via
+///   [`Scratch::recycle_payload`] so the next step reuses the capacity.
+///
+/// After one warm-up step every buffer has reached steady-state capacity
+/// and extraction allocates nothing.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Chunked DCT-II coefficients of the buffer being extracted.
+    pub coeffs: Vec<f32>,
+    /// Dense reconstruction of the kept mass (residual subtraction).
+    pub removed: Vec<f32>,
+    /// Selected global indices of the current extraction.
+    pub sel: Vec<u32>,
+    /// Per-chunk permutation workspace for partial top-k selection.
+    pub perm: Vec<u32>,
+    /// Index-set workspace for seed-regenerated schemes (Random).
+    pub idx: Vec<usize>,
+    /// Blocked-transform workspace for the DCT.
+    pub dct: crate::dct::DctScratch,
+    pool_f32: Vec<Vec<f32>>,
+    pool_u32: Vec<Vec<u32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// An empty f32 vector from the pool (capacity retained across reuse).
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        let mut v = self.pool_f32.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// A zero-filled f32 vector of `len` from the pool.
+    pub fn take_f32_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_f32();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// An empty u32 vector from the pool.
+    pub fn take_u32(&mut self) -> Vec<u32> {
+        let mut v = self.pool_u32.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return an f32 vector to the pool (dropped if the pool is full).
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        if self.pool_f32.len() < POOL_CAP {
+            self.pool_f32.push(v);
+        }
+    }
+
+    /// Return a u32 vector to the pool.
+    pub fn put_u32(&mut self, v: Vec<u32>) {
+        if self.pool_u32.len() < POOL_CAP {
+            self.pool_u32.push(v);
+        }
+    }
+
+    /// Return a consumed payload's buffers to the pools.
+    pub fn recycle_payload(&mut self, p: Payload) {
+        if let Some(ix) = p.indices {
+            self.put_u32(ix);
+        }
+        self.put_f32(p.values);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,5 +386,32 @@ mod tests {
         assert_eq!(s.index_bytes, 12);
         assert_eq!(s.payload_bytes, 12 + 6);
         assert_eq!(s.value_count, 3);
+    }
+
+    #[test]
+    fn scratch_pool_recycles_capacity() {
+        let mut s = Scratch::new();
+        let mut v = s.take_f32();
+        v.extend_from_slice(&[1.0; 100]);
+        let cap = v.capacity();
+        s.put_f32(v);
+        let v2 = s.take_f32();
+        assert!(v2.is_empty());
+        assert_eq!(v2.capacity(), cap, "pooled capacity lost");
+        // zeroed take really zeroes reused storage
+        let mut v3 = s.take_f32_zeroed(8);
+        assert_eq!(v3, vec![0.0; 8]);
+        v3[0] = 5.0;
+        s.put_f32(v3);
+        assert_eq!(s.take_f32_zeroed(8), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn scratch_recycles_payload_buffers() {
+        let mut s = Scratch::new();
+        let p = Payload::new(Some(vec![1, 2, 3]), vec![1.0, 2.0, 3.0], Dtype::F32, false);
+        s.recycle_payload(p);
+        assert!(s.take_u32().capacity() >= 3);
+        assert!(s.take_f32().capacity() >= 3);
     }
 }

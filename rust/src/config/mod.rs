@@ -44,6 +44,12 @@ pub struct ExperimentConfig {
     /// Worker threads for the per-stream fwd/bwd fan-out (1 = sequential,
     /// 0 = one worker per stream). Never changes numerics.
     pub threads: usize,
+    /// Pipelined-comm bucket size in MiB (`--bucket-mb`): reduce-scatter
+    /// and replication-gather traffic splits into per-bucket events so
+    /// the first bucket's communication overlaps the remaining buckets'
+    /// compression. 0 = whole-phase events (default). Only affects the
+    /// overlapped schedule — never numerics, never `--no-overlap` totals.
+    pub bucket_mb: f64,
     /// Per-node stragglers + NIC bandwidth overrides (empty = uniform).
     pub cluster: ClusterModel,
 }
@@ -70,6 +76,7 @@ impl Default for ExperimentConfig {
             compute_streams: 0,
             overlap: true,
             threads: 1,
+            bucket_mb: 0.0,
             cluster: ClusterModel::uniform(),
         }
     }
@@ -78,6 +85,11 @@ impl Default for ExperimentConfig {
 impl ExperimentConfig {
     pub fn world_size(&self) -> usize {
         self.nodes * self.accels_per_node
+    }
+
+    /// Comm-pipelining bucket size in bytes (0 = whole-phase events).
+    pub fn bucket_bytes(&self) -> u64 {
+        (self.bucket_mb * (1u64 << 20) as f64).round() as u64
     }
 
     /// Effective LR at a step (linear warmup → constant).
@@ -113,6 +125,7 @@ impl ExperimentConfig {
             ("compute_streams", Json::Num(self.compute_streams as f64)),
             ("overlap", Json::Bool(self.overlap)),
             ("threads", Json::Num(self.threads as f64)),
+            ("bucket_mb", Json::Num(self.bucket_mb)),
             (
                 "stragglers",
                 Json::Arr(self.cluster.slowdown.iter().map(|&s| Json::Num(s)).collect()),
@@ -151,6 +164,11 @@ impl ExperimentConfig {
             "streams" => self.compute_streams = value.parse()?,
             "overlap" => self.overlap = value.parse()?,
             "threads" => self.threads = value.parse()?,
+            "bucket-mb" => {
+                let mb: f64 = value.parse()?;
+                anyhow::ensure!(mb >= 0.0 && mb.is_finite(), "bucket-mb must be >= 0");
+                self.bucket_mb = mb;
+            }
             "straggler" => self.cluster.slowdown = ClusterModel::parse_slowdown(value)?,
             "node-mbps" => self.cluster.node_inter_bw = ClusterModel::parse_node_mbps(value)?,
             other => anyhow::bail!("unknown config key {other:?}"),
@@ -221,6 +239,14 @@ mod tests {
         c.apply_arg("node-mbps", "0:100").unwrap();
         assert!(!c.overlap);
         assert_eq!(c.threads, 4);
+        // bucket knob: defaults off, parses MiB, rejects negatives
+        assert_eq!(c.bucket_mb, 0.0);
+        assert_eq!(c.bucket_bytes(), 0);
+        c.apply_arg("bucket-mb", "0.5").unwrap();
+        assert_eq!(c.bucket_bytes(), 1 << 19);
+        assert!(c.apply_arg("bucket-mb", "-1").is_err());
+        assert!(c.apply_arg("bucket-mb", "nan").is_err());
+        c.apply_arg("bucket-mb", "0").unwrap();
         assert_eq!(c.cluster.slowdown_of(1), 2.0);
         assert!((c.cluster.node_bw(&c.net, 0) - 12.5e6).abs() < 1.0);
         assert!(c.apply_arg("straggler", "1:-2").is_err());

@@ -127,6 +127,7 @@ mod tests {
                 compute_time: 0.0,
                 exposed_comm: 0.0,
                 hidden_comm: 0.0,
+                comm_events: 0,
                 wall_time: 0.0,
             });
             m.val.push(crate::metrics::ValRow {

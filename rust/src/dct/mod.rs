@@ -1,11 +1,23 @@
 //! Orthonormal DCT-II / DCT-III transforms, chunked — the DeMo momentum
 //! transform (paper §Methods; DeMo `ExtractFastComponents`).
 //!
-//! Two paths:
+//! Three paths:
 //! * `Dct::naive` — O(n²) matrix product against the precomputed basis,
 //!   simple and exact; fine for small chunks.
 //! * `Dct::fast` — Lee's recursive O(n log n) split (power-of-two sizes),
-//!   which is what the hot path uses for paper chunk sizes {16..256}.
+//!   kept as the single-chunk reference implementation.
+//! * the **blocked multi-chunk** kernels behind `forward_chunked_with` /
+//!   `inverse_chunked_with` — the hot path. They run the same Lee
+//!   butterflies level-by-level over a whole block of chunks at once, so
+//!   each level's twiddle slice is loaded once per block (cache-resident)
+//!   instead of once per chunk, and all scratch lives in a reusable
+//!   [`DctScratch`] arena: the steady state performs zero heap
+//!   allocations. Per chunk the floating-point dag is identical to the
+//!   recursive path, so results are bit-identical (tested).
+//!
+//! `Dct::plan` is lock-free for power-of-two sizes (one `OnceLock` slot
+//! per size — the paper's chunk sizes {16..256} all live there); only
+//! exotic non-power-of-two sizes fall back to a mutexed map.
 //!
 //! The basis convention matches `python/compile/kernels/ref.py` exactly
 //! (orthonormal: `B Bᵀ = I`, inverse = transpose); a pinned-constant test
@@ -31,18 +43,49 @@ pub fn dct_basis(n: usize) -> Vec<f32> {
     b
 }
 
+/// Reusable workspace for the blocked chunked transforms: two ping-pong
+/// f64 blocks for the level passes, an f32 segment for sparse scatter,
+/// and the dense-chunk batch list. Hold one per worker (it lives inside
+/// `compress::Scratch`) and thread it through the `_with` entry points —
+/// after warm-up no call allocates.
+#[derive(Debug, Default)]
+pub struct DctScratch {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    seg: Vec<f32>,
+    pending: Vec<usize>,
+}
+
+impl DctScratch {
+    pub fn new() -> DctScratch {
+        DctScratch::default()
+    }
+}
+
+/// Target f64 elements per blocked pass: two ~64 KiB ping-pong buffers
+/// stay cache-resident while `BLOCK_F64 / n` chunks share each pass over
+/// the per-level twiddle slice.
+const BLOCK_F64: usize = 8192;
+
 /// Transform plan for one chunk size (caches the basis + twiddles).
 #[derive(Debug)]
 pub struct Dct {
     pub n: usize,
     basis: Vec<f32>,
     /// Precomputed butterfly factors 1/(2·cos(π(2i+1)/2m)) for every
-    /// recursion level m = n, n/2, …, 2, concatenated largest-first.
-    /// Computing these cosines per element dominated the original
-    /// profile (perf pass iteration 5).
+    /// recursion level m = n, n/2, …, 2, concatenated largest-first
+    /// (level m starts at offset n−m). Computing these cosines per
+    /// element dominated the original profile (perf pass iteration 5).
     twiddles: Vec<f64>,
 }
 
+/// Lock-free plan slots for power-of-two sizes up to 2^12 — every hot
+/// caller (the paper's chunk sizes are 16..256) takes this path without
+/// ever touching a lock after initialization.
+const POW2_SLOTS: usize = 13;
+static POW2_PLANS: [OnceLock<&'static Dct>; POW2_SLOTS] =
+    [const { OnceLock::new() }; POW2_SLOTS];
+/// Fallback for non-power-of-two sizes (cold path only).
 static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, &'static Dct>>> = OnceLock::new();
 
 impl Dct {
@@ -68,10 +111,24 @@ impl Dct {
     }
 
     /// Shared, leaked plan (basis tables are small and reused everywhere).
+    /// Power-of-two sizes resolve through a dedicated `OnceLock` slot —
+    /// no lock, no contention, safe to hammer from any number of threads
+    /// (tested below); other sizes fall back to a mutexed map.
     pub fn plan(n: usize) -> &'static Dct {
+        if n.is_power_of_two() {
+            let slot = n.trailing_zeros() as usize;
+            if slot < POW2_SLOTS {
+                return POW2_PLANS[slot].get_or_init(|| Box::leak(Box::new(Dct::new(n))));
+            }
+        }
         let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
         let mut map = cache.lock().unwrap();
         map.entry(n).or_insert_with(|| Box::leak(Box::new(Dct::new(n))))
+    }
+
+    /// Chunks per blocked pass for this size.
+    fn block_chunks(&self) -> usize {
+        (BLOCK_F64 / self.n).max(1)
     }
 
     /// DCT-II of one chunk: `out[k] = Σ_i x[i]·B[k,i]`.
@@ -134,10 +191,7 @@ impl Dct {
 
     fn forward_fast(&self, x: &[f32], out: &mut [f32]) {
         // Scratch arena sized 3n: n for the working buffer + 2n for the
-        // recursion (n at the top level, n/2 below, … < n total). One
-        // allocation per call — and `forward_chunked` reuses it across
-        // chunks (perf pass: the per-level Vec allocations dominated the
-        // original profile, 0.08 → >0.4 GB/s after this change).
+        // recursion (n at the top level, n/2 below, … < n total).
         let mut arena = vec![0.0f64; 3 * self.n];
         self.forward_fast_with(x, out, &mut arena);
     }
@@ -160,11 +214,9 @@ impl Dct {
 
     fn inverse_fast(&self, c: &[f32], out: &mut [f32]) {
         let n = self.n;
-        // Undo orthonormal scaling, then run the unnormalized DCT-III
-        // (the transpose recursion), then scale by 2/n? — Simpler and still
-        // O(n log n)-ish in practice for our sparse inputs: inverse_naive
-        // skips zero coefficients, and DeMo inverse inputs are k-sparse
-        // (k ≤ 16 of 256). Dense inverse falls back to the naive product.
+        // DeMo inverse inputs are k-sparse (k ≤ 16 of 256): inverse_naive
+        // skips zero coefficients, so the sparse case is O(nnz·n). Dense
+        // inverse falls back to the O(n log n) transpose recursion.
         let nnz = c.iter().filter(|&&v| v != 0.0).count();
         if nnz * 4 <= n {
             self.inverse_naive(c, out);
@@ -184,9 +236,205 @@ impl Dct {
     }
 
     /// Chunked forward: `x.len()` must divide into chunks of n.
-    /// One scratch arena is shared across every chunk (hot-path: no
-    /// allocation inside the loop).
+    /// Allocates a fresh [`DctScratch`] — hot callers should hold one and
+    /// use [`Dct::forward_chunked_with`] instead.
     pub fn forward_chunked(&self, x: &[f32], out: &mut [f32]) {
+        let mut s = DctScratch::new();
+        self.forward_chunked_with(x, out, &mut s);
+    }
+
+    /// Blocked chunked forward: processes `BLOCK_F64 / n` chunks per pass
+    /// over the basis/twiddles. Bit-identical to the recursive per-chunk
+    /// path; zero allocations once `s` is warm.
+    pub fn forward_chunked_with(&self, x: &[f32], out: &mut [f32], s: &mut DctScratch) {
+        assert_eq!(x.len() % self.n, 0);
+        assert_eq!(x.len(), out.len());
+        let n = self.n;
+        if !(n.is_power_of_two() && n >= 8) {
+            for (xi, oi) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+                self.forward(xi, oi);
+            }
+            return;
+        }
+        let block = self.block_chunks();
+        let n_chunks = x.len() / n;
+        let mut base = 0usize;
+        while base < n_chunks {
+            let cnt = block.min(n_chunks - base);
+            let (lo, hi) = (base * n, (base + cnt) * n);
+            self.forward_block(&x[lo..hi], &mut out[lo..hi], s);
+            base += cnt;
+        }
+    }
+
+    /// One blocked DCT-II pass over `cnt = x.len()/n` chunks at once,
+    /// level by level: each level's twiddle slice is loaded once per
+    /// block instead of once per chunk. Per chunk the float dag equals
+    /// the recursive `unnormalized_dct2`, so outputs are bit-identical.
+    fn forward_block(&self, x: &[f32], out: &mut [f32], s: &mut DctScratch) {
+        let n = self.n;
+        let total = x.len();
+        let DctScratch { a, b, .. } = s;
+        a.clear();
+        a.resize(total, 0.0);
+        b.clear();
+        b.resize(total, 0.0);
+        for (dst, &v) in a.iter_mut().zip(x) {
+            *dst = v as f64;
+        }
+        dct2_block_passes(n, &self.twiddles, a, b);
+        // Orthonormal scaling into the f32 output (result lands in `a`:
+        // the pass count 2·log2(n) is even).
+        let s0 = (1.0 / n as f64).sqrt();
+        let sk = (2.0 / n as f64).sqrt();
+        for (cseg, oseg) in a.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            oseg[0] = (cseg[0] * s0) as f32;
+            for k in 1..n {
+                oseg[k] = (cseg[k] * sk) as f32;
+            }
+        }
+    }
+
+    /// Chunked inverse. Allocates a fresh [`DctScratch`] — hot callers
+    /// should hold one and use [`Dct::inverse_chunked_with`].
+    pub fn inverse_chunked(&self, c: &[f32], out: &mut [f32]) {
+        let mut s = DctScratch::new();
+        self.inverse_chunked_with(c, out, &mut s);
+    }
+
+    /// Chunked inverse with reusable scratch: k-sparse chunks use the
+    /// zero-skipping accumulation immediately, dense chunks batch into
+    /// blocked DCT-III passes. Dispatch (and therefore every float) is
+    /// identical to calling [`Dct::inverse`] per chunk.
+    pub fn inverse_chunked_with(&self, c: &[f32], out: &mut [f32], s: &mut DctScratch) {
+        assert_eq!(c.len() % self.n, 0);
+        assert_eq!(c.len(), out.len());
+        let n = self.n;
+        if !(n.is_power_of_two() && n >= 8) {
+            for (ci, oi) in c.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+                self.inverse_naive(ci, oi);
+            }
+            return;
+        }
+        let block = self.block_chunks();
+        s.pending.clear();
+        let n_chunks = c.len() / n;
+        for ci in 0..n_chunks {
+            let cseg = &c[ci * n..(ci + 1) * n];
+            let nnz = cseg.iter().filter(|&&v| v != 0.0).count();
+            if nnz * 4 <= n {
+                self.inverse_naive(cseg, &mut out[ci * n..(ci + 1) * n]);
+            } else {
+                s.pending.push(ci);
+                if s.pending.len() == block {
+                    self.flush_dense_block(c, out, s);
+                }
+            }
+        }
+        self.flush_dense_block(c, out, s);
+    }
+
+    /// Run the batched dense DCT-III over the chunks queued in
+    /// `s.pending` (gather → blocked passes → scatter).
+    fn flush_dense_block(&self, c: &[f32], out: &mut [f32], s: &mut DctScratch) {
+        if s.pending.is_empty() {
+            return;
+        }
+        let n = self.n;
+        let total = s.pending.len() * n;
+        let DctScratch { a, b, pending, .. } = s;
+        a.clear();
+        a.resize(total, 0.0);
+        b.clear();
+        b.resize(total, 0.0);
+        let s0 = (1.0 / n as f64).sqrt();
+        let sk = (2.0 / n as f64).sqrt();
+        for (slot, &ci) in pending.iter().enumerate() {
+            let cseg = &c[ci * n..(ci + 1) * n];
+            let aseg = &mut a[slot * n..(slot + 1) * n];
+            aseg[0] = cseg[0] as f64 * s0;
+            for k in 1..n {
+                aseg[k] = cseg[k] as f64 * sk;
+            }
+        }
+        dct3_block_passes(n, &self.twiddles, a, b);
+        for (slot, &ci) in pending.iter().enumerate() {
+            let aseg = &a[slot * n..(slot + 1) * n];
+            let oseg = &mut out[ci * n..(ci + 1) * n];
+            for i in 0..n {
+                oseg[i] = aseg[i] as f32;
+            }
+        }
+        pending.clear();
+    }
+
+    /// Sparse DCT-III of one chunk from (global index, value) pairs whose
+    /// indices fall in `[base, base+n)` and ascend (debug-asserted) — the
+    /// direct k-term basis accumulation the extract residual uses:
+    /// O(k·n) instead of materializing a dense coefficient chunk.
+    ///
+    /// Bit-identical to [`Dct::inverse`] on the equivalent dense chunk:
+    /// k-sparse inputs run the same zero-skipping accumulation as
+    /// `inverse_naive`, dense ones (nnz·4 > n) take the O(n log n) path
+    /// through the scratch arena.
+    pub fn inverse_sparse(
+        &self,
+        base: u32,
+        idx: &[u32],
+        vals: &[f32],
+        out: &mut [f32],
+        s: &mut DctScratch,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(out.len(), n);
+        debug_assert_eq!(idx.len(), vals.len());
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must ascend");
+        debug_assert!(idx.iter().all(|&i| i >= base && ((i - base) as usize) < n));
+        let nnz = vals.iter().filter(|&&v| v != 0.0).count();
+        if n.is_power_of_two() && n >= 8 && nnz * 4 > n {
+            // Dense fallback — identical float chain to `inverse`.
+            let DctScratch { a, b, seg, .. } = s;
+            seg.clear();
+            seg.resize(n, 0.0);
+            for (&i, &v) in idx.iter().zip(vals) {
+                seg[(i - base) as usize] = v;
+            }
+            a.clear();
+            a.resize(n, 0.0);
+            b.clear();
+            b.resize(n, 0.0);
+            let s0 = (1.0 / n as f64).sqrt();
+            let sk = (2.0 / n as f64).sqrt();
+            a[0] = seg[0] as f64 * s0;
+            for k in 1..n {
+                a[k] = seg[k] as f64 * sk;
+            }
+            dct3_block_passes(n, &self.twiddles, a, b);
+            for (o, &v) in out.iter_mut().zip(a.iter()) {
+                *o = v as f32;
+            }
+        } else {
+            // Zero-skipping accumulation — the same float chain as
+            // `inverse_naive` on the dense chunk (selected indices ascend,
+            // matching its ascending-k accumulation order).
+            out.fill(0.0);
+            for (&i, &v) in idx.iter().zip(vals) {
+                if v == 0.0 {
+                    continue;
+                }
+                let k = (i - base) as usize;
+                let row = &self.basis[k * n..(k + 1) * n];
+                for (o, &r) in out.iter_mut().zip(row) {
+                    *o += v * r;
+                }
+            }
+        }
+    }
+
+    /// Pre-blocked reference: recursive per-chunk forward with one shared
+    /// arena (the original `forward_chunked`). Kept public so tests and
+    /// benches can pin the blocked kernel against it.
+    pub fn forward_chunked_recursive(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len() % self.n, 0);
         assert_eq!(x.len(), out.len());
         if self.n.is_power_of_two() && self.n >= 8 {
@@ -201,13 +449,111 @@ impl Dct {
         }
     }
 
-    /// Chunked inverse.
-    pub fn inverse_chunked(&self, c: &[f32], out: &mut [f32]) {
+    /// Pre-blocked reference: per-chunk `inverse` (the original
+    /// `inverse_chunked`); allocates on dense chunks.
+    pub fn inverse_chunked_recursive(&self, c: &[f32], out: &mut [f32]) {
         assert_eq!(c.len() % self.n, 0);
         assert_eq!(c.len(), out.len());
         for (ci, oi) in c.chunks_exact(self.n).zip(out.chunks_exact_mut(self.n)) {
             self.inverse(ci, oi);
         }
+    }
+}
+
+/// Blocked unnormalized DCT-II over packed segments of size n
+/// (power-of-two, ≥ 2). Input in `a`; result lands back in `a` (the pass
+/// count 2·log2(n) is even). Per segment this performs exactly the
+/// recursion's butterflies (top-down) and interleaves (bottom-up), so the
+/// per-chunk float dag — and therefore every output bit — matches
+/// [`unnormalized_dct2`].
+fn dct2_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
+    let total = a.len();
+    debug_assert_eq!(total, b.len());
+    debug_assert_eq!(total % n, 0);
+    let (mut cur, mut nxt): (&mut [f64], &mut [f64]) = (a, b);
+    // Butterfly passes, top-down (segment size n, n/2, …, 2):
+    //   s[i] = x[i] + x[m−1−i];  d[i] = (x[i] − x[m−1−i])·tw_m[i]
+    let mut m = n;
+    while m >= 2 {
+        let h = m / 2;
+        let tw = &twiddles[n - m..n - m + h];
+        let mut seg = 0usize;
+        while seg < total {
+            for i in 0..h {
+                let av = cur[seg + i];
+                let bv = cur[seg + m - 1 - i];
+                nxt[seg + i] = av + bv;
+                nxt[seg + h + i] = (av - bv) * tw[i];
+            }
+            seg += m;
+        }
+        std::mem::swap(&mut cur, &mut nxt);
+        m /= 2;
+    }
+    // Interleave passes, bottom-up (2, 4, …, n):
+    //   X[2k] = S[k];  X[2k+1] = D[k] + D[k+1]  (D[h] := 0)
+    m = 2;
+    while m <= n {
+        let h = m / 2;
+        let mut seg = 0usize;
+        while seg < total {
+            for k in 0..h {
+                nxt[seg + 2 * k] = cur[seg + k];
+                let next = if k + 1 < h { cur[seg + h + k + 1] } else { 0.0 };
+                nxt[seg + 2 * k + 1] = cur[seg + h + k] + next;
+            }
+            seg += m;
+        }
+        std::mem::swap(&mut cur, &mut nxt);
+        m *= 2;
+    }
+}
+
+/// Blocked unnormalized DCT-III (transpose of [`dct2_block_passes`]):
+/// de-interleave top-down, butterfly bottom-up. Input in `a`; result
+/// lands back in `a`. Per segment the float dag matches
+/// [`unnormalized_dct3`] bit-for-bit.
+fn dct3_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
+    let total = a.len();
+    debug_assert_eq!(total, b.len());
+    debug_assert_eq!(total % n, 0);
+    let (mut cur, mut nxt): (&mut [f64], &mut [f64]) = (a, b);
+    // De-interleave passes, top-down:
+    //   s[k] = x[2k];  d[0] = x[1];  d[k] = x[2k−1] + x[2k+1]
+    let mut m = n;
+    while m >= 2 {
+        let h = m / 2;
+        let mut seg = 0usize;
+        while seg < total {
+            for k in 0..h {
+                nxt[seg + k] = cur[seg + 2 * k];
+            }
+            nxt[seg + h] = cur[seg + 1];
+            for k in 1..h {
+                nxt[seg + h + k] = cur[seg + 2 * k - 1] + cur[seg + 2 * k + 1];
+            }
+            seg += m;
+        }
+        std::mem::swap(&mut cur, &mut nxt);
+        m /= 2;
+    }
+    // Butterfly passes, bottom-up:
+    //   x[i] = s[i] + d[i]·tw;  x[m−1−i] = s[i] − d[i]·tw
+    m = 2;
+    while m <= n {
+        let h = m / 2;
+        let tw = &twiddles[n - m..n - m + h];
+        let mut seg = 0usize;
+        while seg < total {
+            for i in 0..h {
+                let di = cur[seg + h + i] * tw[i];
+                nxt[seg + i] = cur[seg + i] + di;
+                nxt[seg + m - 1 - i] = cur[seg + i] - di;
+            }
+            seg += m;
+        }
+        std::mem::swap(&mut cur, &mut nxt);
+        m *= 2;
     }
 }
 
@@ -404,6 +750,79 @@ mod tests {
     }
 
     #[test]
+    fn blocked_forward_bit_matches_recursive() {
+        // The blocked kernel must reproduce the recursive reference
+        // bit-for-bit, including across multiple block flushes.
+        proptest(24, |g| {
+            let n = g.pow2(3, 8);
+            let n_chunks = g.usize(1, 2 * (BLOCK_F64 / n).max(1) + 3);
+            let x = g.vec_normal(n * n_chunks, 1.0);
+            let d = Dct::plan(n);
+            let mut blocked = vec![0.0f32; x.len()];
+            let mut recursive = vec![0.0f32; x.len()];
+            d.forward_chunked(&x, &mut blocked);
+            d.forward_chunked_recursive(&x, &mut recursive);
+            prop_assert(
+                blocked == recursive,
+                format!("n={n} chunks={n_chunks}: blocked forward diverged"),
+            );
+        });
+    }
+
+    #[test]
+    fn blocked_inverse_bit_matches_recursive() {
+        // Mixed sparse/dense chunks: dispatch and floats must match the
+        // per-chunk `inverse` exactly.
+        proptest(24, |g| {
+            let n = g.pow2(3, 7);
+            let n_chunks = g.usize(1, 2 * (BLOCK_F64 / n).max(1) + 3);
+            let mut c = vec![0.0f32; n * n_chunks];
+            for ci in 0..n_chunks {
+                // some chunks sparse, some dense
+                let nnz = if g.bool() { g.usize(0, n / 8) } else { g.usize(n / 2, n) };
+                for _ in 0..nnz {
+                    c[ci * n + g.usize(0, n - 1)] = g.f32(-2.0, 2.0);
+                }
+            }
+            let d = Dct::plan(n);
+            let mut blocked = vec![0.0f32; c.len()];
+            let mut recursive = vec![0.0f32; c.len()];
+            d.inverse_chunked(&c, &mut blocked);
+            d.inverse_chunked_recursive(&c, &mut recursive);
+            prop_assert(
+                blocked == recursive,
+                format!("n={n} chunks={n_chunks}: blocked inverse diverged"),
+            );
+        });
+    }
+
+    #[test]
+    fn inverse_sparse_bit_matches_dense_inverse() {
+        proptest(32, |g| {
+            let n = g.pow2(3, 7);
+            let k = g.usize(1, n);
+            let base = (g.usize(0, 7) * n) as u32;
+            // ascending distinct local indices, spread across the chunk
+            let idx: Vec<u32> = (0..k).map(|j| (j * n / k) as u32).collect();
+            let vals: Vec<f32> = (0..k)
+                .map(|_| if g.bool() { g.f32(-2.0, 2.0) } else { 0.0 })
+                .collect();
+            let d = Dct::plan(n);
+            let mut dense = vec![0.0f32; n];
+            for (&i, &v) in idx.iter().zip(&vals) {
+                dense[i as usize] = v;
+            }
+            let mut want = vec![0.0f32; n];
+            d.inverse(&dense, &mut want);
+            let gidx: Vec<u32> = idx.iter().map(|&i| i + base).collect();
+            let mut got = vec![0.0f32; n];
+            let mut s = DctScratch::new();
+            d.inverse_sparse(base, &gidx, &vals, &mut got, &mut s);
+            prop_assert(got == want, format!("n={n} k={k}: sparse inverse diverged"));
+        });
+    }
+
+    #[test]
     fn sparse_inverse_skips_zeros_correctly() {
         let d = Dct::new(128);
         let mut c = vec![0.0f32; 128];
@@ -422,6 +841,45 @@ mod tests {
         let b = Dct::plan(64) as *const Dct;
         assert_eq!(a, b);
         assert_eq!(Dct::plan(32).n, 32);
+        // non-power-of-two fallback also caches
+        let c = Dct::plan(24) as *const Dct;
+        let d = Dct::plan(24) as *const Dct;
+        assert_eq!(c, d);
+        // huge power of two beyond the slot table still works
+        assert_eq!(Dct::plan(1 << 14).n, 1 << 14);
+    }
+
+    #[test]
+    fn plan_survives_thread_hammer_lock_free() {
+        // Satellite: hammer `plan()` from scoped workers across the
+        // paper's chunk sizes (plus a mutexed-fallback size) and check
+        // every thread resolves each size to the same leaked instance.
+        let sizes = [16usize, 32, 64, 128, 256, 24];
+        let results: Vec<Vec<(usize, usize)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|t| {
+                    scope.spawn(move || {
+                        let mut seen = Vec::new();
+                        for i in 0..200 {
+                            let n = sizes[(t + i) % sizes.len()];
+                            let d = Dct::plan(n);
+                            assert_eq!(d.n, n);
+                            seen.push((n, d as *const Dct as usize));
+                        }
+                        seen
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut canonical: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::new();
+        for thread_seen in results {
+            for (n, ptr) in thread_seen {
+                let entry = canonical.entry(n).or_insert(ptr);
+                assert_eq!(*entry, ptr, "plan({n}) returned a second instance");
+            }
+        }
     }
 
     #[test]

@@ -23,7 +23,8 @@
 //! (bit-deterministic); *when* it moves is decided by the discrete-event
 //! engine (`train::engine`):
 //!
-//! * every rank owns a **compute lane** and a **NIC lane**
+//! * every rank owns a **compute lane**, an **intra-node fabric lane**
+//!   (unshard + reduce-scatter), and an inter-node **NIC lane**
 //!   ([`net::Timeline`] — monotone per-rank ready-times);
 //! * collectives describe their cost as [`collectives::CommEvent`]s
 //!   (start, duration, link class, bytes, dependency ids), built by one
@@ -32,6 +33,10 @@
 //!   backward compute and the replication gather overlaps the next
 //!   step's forward (DeMo's async-all-gather decoupling); `--no-overlap`
 //!   reproduces the legacy barrier-synchronous totals bit-for-bit;
+//! * `--bucket-mb` splits reduce-scatter/gather into per-bucket events
+//!   so the first bucket's communication overlaps the remaining buckets'
+//!   compression (pipelined gradient buckets; schedule-only — numerics
+//!   and serialized totals are untouched);
 //! * [`net::ClusterModel`] adds per-node straggler slowdowns and NIC
 //!   bandwidth overrides on top of the homogeneous α–β [`net::NetModel`];
 //! * metrics split each step into compute vs exposed-comm vs hidden-comm

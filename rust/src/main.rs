@@ -59,6 +59,12 @@ fn train_parser() -> ArgParser {
         .opt("inter-mbps", "0", "throttle inter-node bandwidth (Mbps, 0 = HPC default)")
         .opt("streams", "0", "distinct gradient streams (0 = world size)")
         .opt("threads", "1", "fwd/bwd worker threads (0 = one per stream)")
+        .opt(
+            "bucket-mb",
+            "0",
+            "pipeline reduce-scatter/gather into buckets of this many MiB \
+             (0 = whole-phase; overlap mode only)",
+        )
         .opt("straggler", "", "per-node compute slowdown, NODE:FACTOR[,..]")
         .opt("node-mbps", "", "per-node NIC bandwidth override, NODE:MBPS[,..]")
         .flag("no-overlap", "serialize phases (legacy barrier clock)")
@@ -70,7 +76,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let mut cfg = ExperimentConfig::default();
     for key in [
         "model", "artifacts", "nodes", "accels", "opt", "repl", "lr", "warmup", "steps", "seed",
-        "val-every", "val-batches", "streams", "threads",
+        "val-every", "val-batches", "streams", "threads", "bucket-mb",
     ] {
         cfg.apply_arg(key, args.str(key))?;
     }
@@ -149,7 +155,8 @@ fn cmd_validate(argv: &[String]) -> Result<()> {
             shard: 0,
             seed: 0,
         };
-        let (q_rust, _) = repl.extract(&ctx, &mut buf);
+        let mut scratch = detonation::compress::Scratch::new();
+        let (q_rust, _) = repl.extract(&ctx, &mut buf, &mut scratch);
         let max_q = outs[0]
             .iter()
             .zip(&q_rust)

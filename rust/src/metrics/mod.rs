@@ -24,6 +24,10 @@ pub struct StepRow {
     pub exposed_comm: f64,
     /// Communication overlapped with compute on the critical rank (s).
     pub hidden_comm: f64,
+    /// Comm events the engine scheduled this step (grows with
+    /// `--bucket-mb` bucketing; whole-phase schedules emit one per phase
+    /// per group).
+    pub comm_events: u64,
     /// Real wall time spent computing this step (profiling only).
     pub wall_time: f64,
 }
@@ -112,12 +116,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
         writeln!(
             f,
-            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,wall_time"
+            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,wall_time"
         )?;
         for r in &self.steps {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{:.6}",
+                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{:.6}",
                 r.step,
                 r.sim_time,
                 r.loss,
@@ -126,6 +130,7 @@ impl RunMetrics {
                 r.compute_time,
                 r.exposed_comm,
                 r.hidden_comm,
+                r.comm_events,
                 r.wall_time
             )?;
         }
@@ -232,6 +237,7 @@ mod tests {
                 compute_time: 0.3,
                 exposed_comm: 0.15,
                 hidden_comm: 0.05,
+                comm_events: 6,
                 wall_time: 0.01,
             });
         }

@@ -27,11 +27,12 @@
 //! * [`SimClock`] — the original barrier-synchronous global clock (kept
 //!   for `--no-overlap` parity and unit tests);
 //! * [`Timeline`] — a set of per-lane ready-times (one lane per rank per
-//!   resource) that the event engine in `train::engine` schedules onto.
-//!   Lanes only ever move forward: `reserve` places work at
-//!   `max(earliest, lane_ready)` and advances the lane to the end of the
-//!   reservation, so per-rank timelines are monotone by construction
-//!   (property-tested below).
+//!   resource) that the event engine in `train::engine` schedules onto;
+//!   the engine keeps one per resource class (compute, intra-node
+//!   fabric, inter-node NIC). Lanes only ever move forward: `reserve`
+//!   places work at `max(earliest, lane_ready)` and advances the lane to
+//!   the end of the reservation, so per-rank timelines are monotone by
+//!   construction (property-tested below).
 //!
 //! [`ClusterModel`] adds scenario diversity on top of the homogeneous
 //! α–β [`NetModel`]: per-node straggler slowdown factors (multiplying

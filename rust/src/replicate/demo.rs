@@ -8,9 +8,18 @@
 //! shipped — this is exactly the 2× bandwidth handicap the paper measures
 //! (Fig 10: "DeMo transferring twice the amount of data, at the same
 //! compression rate").
+//!
+//! The whole extract path runs allocation-free in steady state: the
+//! chunked forward uses the blocked DCT kernel over `Scratch`'s arena,
+//! selection is partial (`select_nth_unstable_by`) into reused index
+//! buffers, and the kept-mass residual is reconstructed by **direct
+//! k-term basis accumulation** (`Dct::inverse_sparse`, O(k·chunk) per
+//! chunk) instead of materializing a dense coefficient buffer — all
+//! bit-identical to the original dense pipeline (pinned by
+//! `extract_bit_identical_to_dense_reference`).
 
 use super::{ReplCtx, Replicator};
-use crate::compress::Payload;
+use crate::compress::{Payload, Scratch};
 use crate::dct::Dct;
 use crate::tensor::Dtype;
 use crate::topk;
@@ -52,35 +61,12 @@ impl DemoReplicator {
         }
     }
 
-
     /// Paper parameterization: compression rate = fraction of momentum
     /// components selected (k/chunk). Fig 8's TopK and Fig 11's chunk-size
     /// sweeps fix one and vary the other.
     pub fn from_rate(rate: f64, chunk: usize, sign: bool, dtype: Dtype) -> DemoReplicator {
         let k = ((chunk as f64 * rate).round() as usize).clamp(1, chunk);
         DemoReplicator::new(chunk, k, sign, dtype)
-    }
-
-    /// DCT of the buffer → (indices, kept values), and subtract the kept
-    /// components from the buffer (residual momentum).
-    fn transform_select(&self, buf: &mut [f32]) -> (Vec<u32>, Vec<f32>) {
-        let d = Dct::plan(self.chunk);
-        let mut coeffs = vec![0.0f32; buf.len()];
-        d.forward_chunked(buf, &mut coeffs);
-        let indices = topk::topk_per_chunk(&coeffs, self.chunk, self.k);
-        let values: Vec<f32> = indices.iter().map(|&i| coeffs[i as usize]).collect();
-        // Residual: zero all but the kept coefficients, inverse-transform
-        // the kept mass, subtract from the buffer.
-        let mut kept = vec![0.0f32; buf.len()];
-        for (&i, &v) in indices.iter().zip(&values) {
-            kept[i as usize] = v;
-        }
-        let mut removed = vec![0.0f32; buf.len()];
-        d.inverse_chunked(&kept, &mut removed);
-        for (b, r) in buf.iter_mut().zip(&removed) {
-            *b -= r;
-        }
-        (indices, values)
     }
 }
 
@@ -99,32 +85,91 @@ impl Replicator for DemoReplicator {
         )
     }
 
-    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
+    fn extract(
+        &mut self,
+        ctx: &ReplCtx,
+        buf: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> (Vec<f32>, Option<Payload>) {
+        let n = self.chunk;
         assert_eq!(
-            buf.len() % self.chunk,
+            buf.len() % n,
             0,
             "shard {} not divisible by chunk {}",
             buf.len(),
-            self.chunk
+            n
         );
-        let (indices, values) = self.transform_select(buf);
+        let d = Dct::plan(n);
+
+        // 1. chunked DCT-II into the reusable coefficient buffer.
+        scratch.coeffs.clear();
+        scratch.coeffs.resize(buf.len(), 0.0);
+        d.forward_chunked_with(buf, &mut scratch.coeffs, &mut scratch.dct);
+
+        // 2. partial-select top-k per chunk (pinned tie-breaking).
+        topk::topk_per_chunk_into(
+            &scratch.coeffs,
+            n,
+            self.k,
+            &mut scratch.perm,
+            &mut scratch.sel,
+        );
+        let mut values = scratch.take_f32();
+        values.extend(scratch.sel.iter().map(|&i| scratch.coeffs[i as usize]));
+
+        // 3. residual: reconstruct the kept mass chunk-by-chunk via the
+        // direct k-term accumulation and subtract it from the buffer.
+        scratch.removed.clear();
+        scratch.removed.resize(buf.len(), 0.0);
+        let kk = self.k.min(n);
+        for ci in 0..buf.len() / n {
+            let lo = ci * kk;
+            d.inverse_sparse(
+                (ci * n) as u32,
+                &scratch.sel[lo..lo + kk],
+                &values[lo..lo + kk],
+                &mut scratch.removed[ci * n..(ci + 1) * n],
+                &mut scratch.dct,
+            );
+        }
+        for (b, r) in buf.iter_mut().zip(&scratch.removed) {
+            *b -= r;
+        }
+
+        // 4. wire payload + locally-decoded dense update, pool-backed.
+        let mut indices = scratch.take_u32();
+        indices.extend_from_slice(&scratch.sel);
         let payload = self.mk_payload(Some(indices), values);
-        let mut q_local = vec![0.0f32; buf.len()];
-        self.decode(ctx, &payload, &mut q_local);
+        let mut q_local = scratch.take_f32_zeroed(buf.len());
+        self.decode(ctx, &payload, &mut q_local, scratch);
         (q_local, Some(payload))
     }
 
-    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
-        let d = Dct::plan(self.chunk);
-        let mut coeffs = vec![0.0f32; out.len()];
+    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32], scratch: &mut Scratch) {
+        let n = self.chunk;
+        assert_eq!(out.len() % n, 0);
+        let d = Dct::plan(n);
         let indices = payload
             .indices
             .as_ref()
             .expect("demo payload carries indices");
-        for (&i, &v) in indices.iter().zip(&payload.values) {
-            coeffs[i as usize] = v;
+        // Indices ascend (the selection emits them that way), so one
+        // pointer walk splits them into per-chunk slices.
+        let mut p = 0usize;
+        for (ci, oseg) in out.chunks_exact_mut(n).enumerate() {
+            let hi = ((ci + 1) * n) as u32;
+            let lo = p;
+            while p < indices.len() && indices[p] < hi {
+                p += 1;
+            }
+            d.inverse_sparse(
+                (ci * n) as u32,
+                &indices[lo..p],
+                &payload.values[lo..p],
+                oseg,
+                &mut scratch.dct,
+            );
         }
-        d.inverse_chunked(&coeffs, out);
     }
 
     fn rate(&self) -> f64 {
@@ -152,7 +197,7 @@ mod tests {
         let mut buf: Vec<f32> = (0..512).map(|_| rng.normal_f32(1.0)).collect();
         let before: f64 = buf.iter().map(|&x| (x as f64).powi(2)).sum();
         let mut r = DemoReplicator::new(64, 8, true, Dtype::F32);
-        let (_q, p) = r.extract(&ctx(), &mut buf);
+        let (_q, p) = r.extract(&ctx(), &mut buf, &mut Scratch::new());
         assert!(p.is_some());
         let after: f64 = buf.iter().map(|&x| (x as f64).powi(2)).sum();
         assert!(after < before, "{after} !< {before}");
@@ -168,7 +213,7 @@ mod tests {
             let orig = g.vec_normal(chunk * n_chunks, 1.0);
             let mut buf = orig.clone();
             let mut r = DemoReplicator::new(chunk, k, false, Dtype::F32);
-            let (q, _) = r.extract(&ctx(), &mut buf);
+            let (q, _) = r.extract(&ctx(), &mut buf, &mut Scratch::new());
             let recon: Vec<f32> = buf.iter().zip(&q).map(|(r, q)| r + q).collect();
             prop_assert(
                 approx_slice_eq(&recon, &orig, 2e-3),
@@ -178,11 +223,57 @@ mod tests {
     }
 
     #[test]
+    fn extract_bit_identical_to_dense_reference() {
+        // The zero-alloc pipeline (blocked forward, partial selection,
+        // k-term residual accumulation) must match the original dense
+        // reference — dense kept-mass buffer + chunked inverse — to the
+        // last bit, payload and residual alike.
+        proptest(16, |g| {
+            let chunk = g.pow2(3, 7);
+            let n_chunks = g.usize(1, 5);
+            let k = g.usize(1, chunk);
+            let orig = g.vec_normal(chunk * n_chunks, 1.0);
+
+            // Reference: the pre-Scratch pipeline, spelled out.
+            let d = Dct::plan(chunk);
+            let mut coeffs = vec![0.0f32; orig.len()];
+            d.forward_chunked(&orig, &mut coeffs);
+            let indices = crate::topk::topk_per_chunk(&coeffs, chunk, k);
+            let values: Vec<f32> = indices.iter().map(|&i| coeffs[i as usize]).collect();
+            let mut kept = vec![0.0f32; orig.len()];
+            for (&i, &v) in indices.iter().zip(&values) {
+                kept[i as usize] = v;
+            }
+            let mut removed = vec![0.0f32; orig.len()];
+            d.inverse_chunked(&kept, &mut removed);
+            let mut want_buf = orig.clone();
+            for (b, r) in want_buf.iter_mut().zip(&removed) {
+                *b -= r;
+            }
+            let mut want_q = vec![0.0f32; orig.len()];
+            d.inverse_chunked(&kept, &mut want_q);
+
+            // New pipeline (nosign so payload values stay raw).
+            let mut buf = orig.clone();
+            let mut r = DemoReplicator::new(chunk, k, false, Dtype::F32);
+            let (q, p) = r.extract(&ctx(), &mut buf, &mut Scratch::new());
+            let p = p.unwrap();
+            prop_assert(buf == want_buf, format!("chunk={chunk} k={k}: residual"));
+            prop_assert(
+                *p.indices.as_ref().unwrap() == indices,
+                format!("chunk={chunk} k={k}: indices"),
+            );
+            prop_assert(p.values == values, format!("chunk={chunk} k={k}: values"));
+            prop_assert(q == want_q, format!("chunk={chunk} k={k}: q"));
+        });
+    }
+
+    #[test]
     fn k_equals_chunk_extracts_everything() {
         let mut rng = Rng::new(3);
         let mut buf: Vec<f32> = (0..256).map(|_| rng.normal_f32(1.0)).collect();
         let mut r = DemoReplicator::new(64, 64, false, Dtype::F32);
-        let _ = r.extract(&ctx(), &mut buf);
+        let _ = r.extract(&ctx(), &mut buf, &mut Scratch::new());
         assert!(buf.iter().all(|&x| x.abs() < 1e-4));
     }
 
@@ -191,7 +282,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let mut buf: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
         let mut r = DemoReplicator::new(128, 16, true, Dtype::F32);
-        let (_, p) = r.extract(&ctx(), &mut buf);
+        let (_, p) = r.extract(&ctx(), &mut buf, &mut Scratch::new());
         let p = p.unwrap();
         assert_eq!(p.indices.as_ref().unwrap().len(), 8 * 16);
         assert_eq!(p.values.len(), 8 * 16);
@@ -214,9 +305,10 @@ mod tests {
         let mut buf: Vec<f32> = (0..256).map(|_| rng.normal_f32(1.0)).collect();
         let mut r = DemoReplicator::new(32, 4, true, Dtype::F32);
         let c = ctx();
-        let (q, p) = r.extract(&c, &mut buf);
+        let mut s = Scratch::new();
+        let (q, p) = r.extract(&c, &mut buf, &mut s);
         let mut out = vec![0.0f32; 256];
-        r.decode(&c, &p.unwrap(), &mut out);
+        r.decode(&c, &p.unwrap(), &mut out, &mut s);
         assert_eq!(q, out);
     }
 
@@ -229,7 +321,7 @@ mod tests {
         let mut buf: Vec<f32> = (0..512).map(|_| rng.normal_f32(1.0)).collect();
         let mut r = DemoReplicator::new(64, 8, true, Dtype::F32);
         let c = ctx();
-        let (q, _) = r.extract(&c, &mut buf);
+        let (q, _) = r.extract(&c, &mut buf, &mut Scratch::new());
         let d = Dct::plan(64);
         let mut coeffs = vec![0.0f32; 512];
         d.forward_chunked(&q, &mut coeffs);

@@ -16,7 +16,7 @@
 //! Average bandwidth = full buffer / period → "compression rate" 1/period.
 
 use super::{ReplCtx, Replicator};
-use crate::compress::Payload;
+use crate::compress::{Payload, Scratch};
 use crate::tensor::Dtype;
 
 pub struct DiLoCoReplicator {
@@ -71,25 +71,39 @@ impl Replicator for DiLoCoReplicator {
         )
     }
 
-    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
+    fn extract(
+        &mut self,
+        ctx: &ReplCtx,
+        buf: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> (Vec<f32>, Option<Payload>) {
         assert_eq!(buf.len(), self.delta_acc.len());
         // Local step: the whole buffer becomes this step's update.
-        let q_local: Vec<f32> = buf.to_vec();
+        let mut q_local = scratch.take_f32();
+        q_local.extend_from_slice(buf);
         buf.fill(0.0);
         crate::tensor::axpy(&mut self.delta_acc, 1.0, &q_local);
         if self.is_sync_step(ctx.step) {
-            let payload = self.mk_payload(None, self.delta_acc.clone());
+            let mut values = scratch.take_f32();
+            values.extend_from_slice(&self.delta_acc);
+            let payload = self.mk_payload(None, values);
             (q_local, Some(payload))
         } else {
             (q_local, None)
         }
     }
 
-    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
+    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32], _scratch: &mut Scratch) {
         out.copy_from_slice(&payload.values);
     }
 
-    fn finalize(&mut self, ctx: &ReplCtx, q_local: Vec<f32>, mean: Option<Vec<f32>>) -> Vec<f32> {
+    fn finalize(
+        &mut self,
+        ctx: &ReplCtx,
+        q_local: Vec<f32>,
+        mean: Option<Vec<f32>>,
+        scratch: &mut Scratch,
+    ) -> Vec<f32> {
         match mean {
             None => q_local, // local-only step
             Some(mean_delta) => {
@@ -102,6 +116,7 @@ impl Replicator for DiLoCoReplicator {
                 crate::tensor::axpy(&mut q, -1.0, &self.delta_acc);
                 crate::tensor::axpy(&mut q, 1.0, &q_local);
                 self.delta_acc.fill(0.0);
+                scratch.put_f32(q_local);
                 q
             }
         }
@@ -129,14 +144,15 @@ mod tests {
     #[test]
     fn syncs_exactly_every_period() {
         let mut r = DiLoCoReplicator::new(4, false, Dtype::F32, 8);
+        let mut s = Scratch::new();
         let mut synced = Vec::new();
         for step in 0..12 {
             let mut buf = vec![1.0f32; 8];
-            let (_, p) = r.extract(&ctx(step), &mut buf);
+            let (_, p) = r.extract(&ctx(step), &mut buf, &mut s);
             if let Some(p) = p {
                 synced.push(step);
                 // keep state consistent for the next window
-                let _ = r.finalize(&ctx(step), vec![1.0; 8], Some(p.values));
+                let _ = r.finalize(&ctx(step), vec![1.0; 8], Some(p.values), &mut s);
             }
         }
         assert_eq!(synced, vec![3, 7, 11]);
@@ -146,7 +162,7 @@ mod tests {
     fn local_steps_apply_whole_buffer() {
         let mut r = DiLoCoReplicator::new(10, false, Dtype::F32, 4);
         let mut buf = vec![2.0f32, -1.0, 0.5, 0.0];
-        let (q, p) = r.extract(&ctx(0), &mut buf);
+        let (q, p) = r.extract(&ctx(0), &mut buf, &mut Scratch::new());
         assert!(p.is_none());
         assert_eq!(q, vec![2.0, -1.0, 0.5, 0.0]);
         assert_eq!(buf, vec![0.0; 4]);
@@ -162,6 +178,8 @@ mod tests {
             let len = g.usize(1, 40);
             let mut ra = DiLoCoReplicator::new(period, false, Dtype::F32, len);
             let mut rb = DiLoCoReplicator::new(period, false, Dtype::F32, len);
+            let mut sa = Scratch::new();
+            let mut sb = Scratch::new();
             let mut applied_a = vec![0.0f32; len];
             let mut applied_b = vec![0.0f32; len];
             let mut total_a = vec![0.0f32; len];
@@ -174,19 +192,22 @@ mod tests {
                 let mut bufa = ua.clone();
                 let mut bufb = ub.clone();
                 let c = ctx(step);
-                let (qa, pa) = ra.extract(&c, &mut bufa);
-                let (qb, pb) = rb.extract(&c, &mut bufb);
+                let (qa, pa) = ra.extract(&c, &mut bufa, &mut sa);
+                let (qb, pb) = rb.extract(&c, &mut bufb, &mut sb);
                 let (fa, fb) = match (pa, pb) {
                     (Some(pa), Some(pb)) => {
                         let payloads = vec![pa, pb];
-                        let ma = mean_decoded(&ra, &c, &payloads, len);
+                        let ma = mean_decoded(&ra, &c, &payloads, len, &mut sa);
                         let mb = ma.clone();
                         (
-                            ra.finalize(&c, qa, Some(ma)),
-                            rb.finalize(&c, qb, Some(mb)),
+                            ra.finalize(&c, qa, Some(ma), &mut sa),
+                            rb.finalize(&c, qb, Some(mb), &mut sb),
                         )
                     }
-                    (None, None) => (ra.finalize(&c, qa, None), rb.finalize(&c, qb, None)),
+                    (None, None) => (
+                        ra.finalize(&c, qa, None, &mut sa),
+                        rb.finalize(&c, qb, None, &mut sb),
+                    ),
                     _ => panic!("ranks must agree on sync steps"),
                 };
                 crate::tensor::axpy(&mut applied_a, 1.0, &fa);

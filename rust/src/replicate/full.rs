@@ -5,7 +5,7 @@
 //! it doubles as the "Decoupled-AdamW full replication" arm of Fig 10b.
 
 use super::{ReplCtx, Replicator};
-use crate::compress::Payload;
+use crate::compress::{Payload, Scratch};
 use crate::tensor::Dtype;
 
 #[derive(Debug)]
@@ -55,16 +55,22 @@ impl Replicator for FullReplicator {
         )
     }
 
-    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
-        let values = buf.to_vec();
+    fn extract(
+        &mut self,
+        ctx: &ReplCtx,
+        buf: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> (Vec<f32>, Option<Payload>) {
+        let mut values = scratch.take_f32();
+        values.extend_from_slice(buf);
         buf.fill(0.0);
         let payload = self.mk_payload(None, values);
-        let mut q_local = vec![0.0f32; payload.values.len()];
-        self.decode(ctx, &payload, &mut q_local);
+        let mut q_local = scratch.take_f32_zeroed(payload.values.len());
+        self.decode(ctx, &payload, &mut q_local, scratch);
         (q_local, Some(payload))
     }
 
-    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
+    fn decode(&self, _ctx: &ReplCtx, payload: &Payload, out: &mut [f32], _scratch: &mut Scratch) {
         out.copy_from_slice(&payload.values);
     }
 
@@ -92,7 +98,7 @@ mod tests {
             shard: 0,
             seed: 0,
         };
-        let (q, p) = r.extract(&c, &mut buf);
+        let (q, p) = r.extract(&c, &mut buf, &mut Scratch::new());
         let p = p.unwrap();
         assert_eq!(q, vec![1.0, -2.0, 3.0]);
         assert_eq!(buf, vec![0.0; 3]);
@@ -110,13 +116,13 @@ mod tests {
             seed: 0,
         };
         let mut r = FullReplicator::new(true, Dtype::F32);
-        let (_, p) = r.extract(&c, &mut vec![0.5f32; 1024]);
+        let (_, p) = r.extract(&c, &mut vec![0.5f32; 1024], &mut Scratch::new());
         let p = p.unwrap();
         assert_eq!(p.wire_bytes(), 4096);
         assert!(p.values.iter().all(|&v| v == 1.0));
 
         let mut r = FullReplicator::new(true, Dtype::F32).packed(true);
-        let (_, p) = r.extract(&c, &mut vec![0.5f32; 1024]);
+        let (_, p) = r.extract(&c, &mut vec![0.5f32; 1024], &mut Scratch::new());
         assert_eq!(p.unwrap().wire_bytes(), 256); // 2 bits/value
     }
 }

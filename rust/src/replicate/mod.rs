@@ -29,6 +29,14 @@
 //! 3. [`Replicator::finalize`] turns `(q_local, mean)` into the update Q
 //!    the optimizer applies. DiLoCo uses this hook to re-synchronize
 //!    parameter trajectories after local-only steps.
+//!
+//! Every hook threads a per-worker [`Scratch`] arena: extraction draws
+//! its payload/`q` vectors from the arena's pools and hot-path stage
+//! buffers, and the caller recycles consumed payloads back
+//! ([`Scratch::recycle_payload`]). The DeMo hot path is allocation-free
+//! in steady state (asserted by `benches/compress.rs`); Random still
+//! builds its seeded sample set internally (`Rng::sample_indices_into`
+//! is honest about this), so only its output vectors are pooled.
 
 mod demo;
 mod diloco;
@@ -42,7 +50,7 @@ pub use full::FullReplicator;
 pub use random::RandomReplicator;
 pub use striding::StridingReplicator;
 
-use crate::compress::Payload;
+use crate::compress::{Payload, Scratch};
 use crate::tensor::Dtype;
 
 /// Per-step, per-shard context. Everything a replicator may condition on
@@ -76,18 +84,37 @@ pub trait Replicator: Send {
 
     /// Extract this step's update from the buffer (mutating it to the
     /// residual). Returns the locally-decoded dense update `q_local` and
-    /// the wire payload if this step replicates.
-    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>);
+    /// the wire payload if this step replicates. Payload and `q_local`
+    /// vectors come from `scratch`'s pools — recycle them when consumed.
+    fn extract(
+        &mut self,
+        ctx: &ReplCtx,
+        buf: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> (Vec<f32>, Option<Payload>);
 
     /// Decode one gathered payload into a dense shard-sized vector
     /// (`out` is zeroed by the caller).
-    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32]);
+    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32], scratch: &mut Scratch);
 
     /// Produce the final update from the local extraction and the mean of
     /// all decoded payloads across R (None when this step didn't sync).
-    /// Default: synchronized mean when present, else the local update.
-    fn finalize(&mut self, _ctx: &ReplCtx, q_local: Vec<f32>, mean: Option<Vec<f32>>) -> Vec<f32> {
-        mean.unwrap_or(q_local)
+    /// Default: synchronized mean when present, else the local update;
+    /// the vector not returned goes back to the scratch pool.
+    fn finalize(
+        &mut self,
+        _ctx: &ReplCtx,
+        q_local: Vec<f32>,
+        mean: Option<Vec<f32>>,
+        scratch: &mut Scratch,
+    ) -> Vec<f32> {
+        match mean {
+            Some(m) => {
+                scratch.put_f32(q_local);
+                m
+            }
+            None => q_local,
+        }
     }
 
     /// Fraction of components selected per replicating step (reporting).
@@ -323,20 +350,23 @@ impl ReplSpec {
     }
 }
 
-/// Dense mean of decoded payloads (helper used by the trainer).
+/// Dense mean of decoded payloads (helper used by the trainer). The
+/// result vector comes from `scratch`'s pool — recycle it after applying.
 pub fn mean_decoded(
     repl: &dyn Replicator,
     ctx: &ReplCtx,
     payloads: &[Payload],
     shard_len: usize,
+    scratch: &mut Scratch,
 ) -> Vec<f32> {
-    let mut acc = vec![0.0f32; shard_len];
-    let mut tmp = vec![0.0f32; shard_len];
+    let mut acc = scratch.take_f32_zeroed(shard_len);
+    let mut tmp = scratch.take_f32_zeroed(shard_len);
     for p in payloads {
         tmp.fill(0.0);
-        repl.decode(ctx, p, &mut tmp);
+        repl.decode(ctx, p, &mut tmp, scratch);
         crate::tensor::axpy(&mut acc, 1.0, &tmp);
     }
+    scratch.put_f32(tmp);
     let inv = 1.0 / payloads.len().max(1) as f32;
     for x in acc.iter_mut() {
         *x *= inv;
@@ -414,6 +444,55 @@ mod tests {
         GatherMode::RingAllReduce.record_traffic(&ring, &topo, &group, &sizes);
         assert_eq!(ring.inter_node_bytes(), 3 * 4 * (1000 / 3));
         assert!(ring.inter_node_bytes() < naive.inter_node_bytes());
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch_for_all_replicators() {
+        // Satellite: a Scratch reused across steps (the trainer's steady
+        // state) must produce bit-identical extractions/decodes to a
+        // fresh arena per call, for every scheme.
+        use crate::util::proptest::{prop_assert, proptest};
+        proptest(10, |g| {
+            for spec in ["demo:1/8", "random:1/8", "striding:1/8", "diloco:2", "full"] {
+                let len = 128 * g.usize(1, 3);
+                let mut reused = Scratch::new();
+                let mut ra = ReplSpec::parse(spec).unwrap().build(len);
+                let mut rb = ReplSpec::parse(spec).unwrap().build(len);
+                for step in 0..4u64 {
+                    let data = g.vec_normal(len, 1.0);
+                    let ctx = ReplCtx {
+                        step,
+                        shard: 0,
+                        seed: 9,
+                    };
+                    let mut buf_a = data.clone();
+                    let mut buf_b = data;
+                    let (qa, pa) = ra.extract(&ctx, &mut buf_a, &mut reused);
+                    let (qb, pb) = rb.extract(&ctx, &mut buf_b, &mut Scratch::new());
+                    prop_assert(qa == qb, format!("{spec} step {step}: q diverged"));
+                    prop_assert(buf_a == buf_b, format!("{spec} step {step}: residual"));
+                    match (&pa, &pb) {
+                        (Some(a), Some(b)) => {
+                            prop_assert(
+                                a.values == b.values && a.indices == b.indices,
+                                format!("{spec} step {step}: payload diverged"),
+                            );
+                            let mut da = vec![0.0f32; len];
+                            let mut db = vec![0.0f32; len];
+                            ra.decode(&ctx, a, &mut da, &mut reused);
+                            rb.decode(&ctx, b, &mut db, &mut Scratch::new());
+                            prop_assert(da == db, format!("{spec} step {step}: decode"));
+                        }
+                        (None, None) => {}
+                        _ => prop_assert(false, format!("{spec} step {step}: sync split")),
+                    }
+                    if let Some(p) = pa {
+                        reused.recycle_payload(p);
+                    }
+                    reused.put_f32(qa);
+                }
+            }
+        });
     }
 
     #[test]

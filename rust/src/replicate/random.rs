@@ -9,7 +9,7 @@
 //! (Figs 1, 2a) and competitive-but-worse for ViT/causal-LM (Figs 2b, 3).
 
 use super::{ReplCtx, Replicator};
-use crate::compress::Payload;
+use crate::compress::{Payload, Scratch};
 use crate::tensor::Dtype;
 
 #[derive(Debug)]
@@ -51,8 +51,15 @@ impl RandomReplicator {
     /// The deterministic per-(step, shard) index set: every rank of the
     /// R-group computes the identical set.
     pub fn indices(&self, ctx: &ReplCtx, len: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.indices_into(ctx, len, &mut out);
+        out
+    }
+
+    /// [`RandomReplicator::indices`] into a reusable buffer.
+    pub fn indices_into(&self, ctx: &ReplCtx, len: usize, out: &mut Vec<usize>) {
         let k = ((len as f64 * self.rate).round() as usize).clamp(1, len);
-        ctx.shared_rng().sample_indices(len, k)
+        ctx.shared_rng().sample_indices_into(len, k, out);
     }
 }
 
@@ -65,22 +72,28 @@ impl Replicator for RandomReplicator {
         )
     }
 
-    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
-        let idx = self.indices(ctx, buf.len());
-        let values: Vec<f32> = idx.iter().map(|&i| buf[i]).collect();
-        for &i in &idx {
+    fn extract(
+        &mut self,
+        ctx: &ReplCtx,
+        buf: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> (Vec<f32>, Option<Payload>) {
+        self.indices_into(ctx, buf.len(), &mut scratch.idx);
+        let mut values = scratch.take_f32();
+        values.extend(scratch.idx.iter().map(|&i| buf[i]));
+        for &i in &scratch.idx {
             buf[i] = 0.0; // residual: selected components leave the buffer
         }
         let payload = self.mk_payload(None, values);
-        let mut q_local = vec![0.0f32; buf.len()];
-        self.decode(ctx, &payload, &mut q_local);
+        let mut q_local = scratch.take_f32_zeroed(buf.len());
+        self.decode(ctx, &payload, &mut q_local, scratch);
         (q_local, Some(payload))
     }
 
-    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
-        let idx = self.indices(ctx, out.len());
-        debug_assert_eq!(idx.len(), payload.values.len());
-        for (&i, &v) in idx.iter().zip(&payload.values) {
+    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32], scratch: &mut Scratch) {
+        self.indices_into(ctx, out.len(), &mut scratch.idx);
+        debug_assert_eq!(scratch.idx.len(), payload.values.len());
+        for (&i, &v) in scratch.idx.iter().zip(&payload.values) {
             out[i] = v;
         }
     }
@@ -122,7 +135,7 @@ mod tests {
         let mut buf = orig.clone();
         let mut r = RandomReplicator::new(1.0 / 8.0, false, Dtype::F32);
         let c = ctx(0);
-        let (q, p) = r.extract(&c, &mut buf);
+        let (q, p) = r.extract(&c, &mut buf, &mut Scratch::new());
         let idx = r.indices(&c, 1024);
         assert_eq!(idx.len(), 128);
         for i in 0..1024 {
@@ -151,9 +164,10 @@ mod tests {
                 shard: g.usize(0, 8),
                 seed: 7,
             };
-            let (q, p) = r.extract(&c, &mut buf);
+            let mut s = Scratch::new();
+            let (q, p) = r.extract(&c, &mut buf, &mut s);
             let mut out = vec![0.0f32; len];
-            r.decode(&c, &p.unwrap(), &mut out);
+            r.decode(&c, &p.unwrap(), &mut out, &mut s);
             prop_assert(out == q, "decode must equal local q");
             // residual + q == original when unsigned
             if !sign {
@@ -172,7 +186,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut buf: Vec<f32> = (0..512).map(|_| rng.normal_f32(1.0)).collect();
         let mut r = RandomReplicator::new(1.0 / 4.0, true, Dtype::F32);
-        let (_, p) = r.extract(&ctx(3), &mut buf);
+        let (_, p) = r.extract(&ctx(3), &mut buf, &mut Scratch::new());
         assert!(p
             .unwrap()
             .values
@@ -186,7 +200,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let mut buf: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
         let mut r = RandomReplicator::new(1.0 / 8.0, false, Dtype::F32);
-        let (_, p) = r.extract(&ctx(0), &mut buf);
+        let (_, p) = r.extract(&ctx(0), &mut buf, &mut Scratch::new());
         assert_eq!(p.unwrap().wire_bytes(), 128 * 4);
     }
 }

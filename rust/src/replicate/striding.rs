@@ -9,7 +9,7 @@
 //! structured data"), and unstable on causal LM (Fig 3).
 
 use super::{ReplCtx, Replicator};
-use crate::compress::Payload;
+use crate::compress::{Payload, Scratch};
 use crate::tensor::Dtype;
 
 #[derive(Debug)]
@@ -69,19 +69,25 @@ impl Replicator for StridingReplicator {
         )
     }
 
-    fn extract(&mut self, ctx: &ReplCtx, buf: &mut [f32]) -> (Vec<f32>, Option<Payload>) {
-        let idx: Vec<usize> = self.indices(ctx, buf.len()).collect();
-        let values: Vec<f32> = idx.iter().map(|&i| buf[i]).collect();
-        for &i in &idx {
+    fn extract(
+        &mut self,
+        ctx: &ReplCtx,
+        buf: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> (Vec<f32>, Option<Payload>) {
+        let len = buf.len();
+        let mut values = scratch.take_f32();
+        values.extend(self.indices(ctx, len).map(|i| buf[i]));
+        for i in self.indices(ctx, len) {
             buf[i] = 0.0;
         }
         let payload = self.mk_payload(None, values);
-        let mut q_local = vec![0.0f32; buf.len()];
-        self.decode(ctx, &payload, &mut q_local);
+        let mut q_local = scratch.take_f32_zeroed(len);
+        self.decode(ctx, &payload, &mut q_local, scratch);
         (q_local, Some(payload))
     }
 
-    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32]) {
+    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32], _scratch: &mut Scratch) {
         let n = out.len();
         for (i, &v) in self.indices(ctx, n).zip(&payload.values) {
             out[i] = v;
@@ -131,7 +137,7 @@ mod tests {
         let mut buf = orig.clone();
         let mut r = StridingReplicator::new(1.0 / 8.0, false, Dtype::F32);
         let c = ctx(3); // offset 3
-        let (q, _) = r.extract(&c, &mut buf);
+        let (q, _) = r.extract(&c, &mut buf, &mut Scratch::new());
         for i in 0..64 {
             if i % 8 == 3 {
                 assert_eq!(buf[i], 0.0);
@@ -149,9 +155,10 @@ mod tests {
         let mut buf: Vec<f32> = (0..100).map(|_| rng.normal_f32(1.0)).collect();
         let mut r = StridingReplicator::new(1.0 / 4.0, true, Dtype::F32);
         let c = ctx(1);
-        let (q, p) = r.extract(&c, &mut buf);
+        let mut s = Scratch::new();
+        let (q, p) = r.extract(&c, &mut buf, &mut s);
         let mut out = vec![0.0f32; 100];
-        r.decode(&c, &p.unwrap(), &mut out);
+        r.decode(&c, &p.unwrap(), &mut out, &mut s);
         assert_eq!(q, out);
     }
 
@@ -159,7 +166,7 @@ mod tests {
     fn no_indices_on_wire() {
         let mut buf = vec![1.0f32; 32];
         let mut r = StridingReplicator::new(1.0 / 2.0, false, Dtype::F32);
-        let (_, p) = r.extract(&ctx(0), &mut buf);
+        let (_, p) = r.extract(&ctx(0), &mut buf, &mut Scratch::new());
         let p = p.unwrap();
         assert!(p.indices.is_none());
         assert_eq!(p.wire_bytes(), 16 * 4);

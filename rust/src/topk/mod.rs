@@ -1,96 +1,100 @@
 //! Per-chunk top-k selection by magnitude (the DeMo "TopK" hyperparameter,
 //! paper Fig 8).
 //!
-//! Selection uses an in-place quickselect over (|value| desc, index asc) —
-//! the index tiebreak matches `jax.lax.top_k` / the Python oracle so both
-//! sides of the stack keep identical components.
+//! Selection is `select_nth_unstable_by` partial selection (expected O(n)
+//! per chunk, no full sort) over the **pinned, deterministic total order**
+//!
+//! > larger `|value|` first; equal magnitudes prefer the **lowest index**.
+//!
+//! The index tie-break makes the comparator a total order, so partial
+//! selection returns the same component set on every platform and at
+//! every optimization level — payloads can never silently reorder across
+//! ranks (tested below; matches `jax.lax.top_k` / the Python oracle).
+//!
+//! The `_into` variants reuse caller-owned buffers so the extraction hot
+//! path performs zero heap allocations in steady state.
+
+use std::cmp::Ordering;
+
+/// The pinned rank order: descending `|x|`, ties broken toward the lower
+/// index. A total order for finite inputs (NaNs degrade to index order).
+#[inline]
+fn rank(xs: &[f32], a: u32, b: u32) -> Ordering {
+    let (xa, xb) = (xs[a as usize].abs(), xs[b as usize].abs());
+    match xb.partial_cmp(&xa) {
+        Some(Ordering::Less) => Ordering::Less,
+        Some(Ordering::Greater) => Ordering::Greater,
+        _ => a.cmp(&b),
+    }
+}
 
 /// Indices of the k largest-|.| entries of `xs`, ascending index order.
 pub fn topk_indices(xs: &[f32], k: usize) -> Vec<u32> {
-    let n = xs.len();
-    if k >= n {
-        return (0..n as u32).collect();
-    }
-    if k == 0 {
-        return Vec::new();
-    }
-    let mut idx: Vec<u32> = (0..n as u32).collect();
-    select_top(&mut idx, xs, k);
-    let mut out = idx[..k].to_vec();
-    out.sort_unstable();
+    let mut perm = Vec::new();
+    let mut out = Vec::new();
+    topk_indices_into(xs, k, &mut perm, &mut out);
     out
 }
 
-/// Rank key: larger |x| first; ties prefer the smaller index.
-#[inline]
-fn better(xs: &[f32], a: u32, b: u32) -> bool {
-    let (xa, xb) = (xs[a as usize].abs(), xs[b as usize].abs());
-    xa > xb || (xa == xb && a < b)
-}
-
-/// Partially order `idx` so its first k entries are the top-k (quickselect,
-/// median-of-three pivot, expected O(n)).
-fn select_top(idx: &mut [u32], xs: &[f32], k: usize) {
-    let (mut lo, mut hi) = (0usize, idx.len());
-    let mut want = k;
-    while hi - lo > 1 {
-        // median-of-three pivot on (lo, mid, hi-1)
-        let mid = lo + (hi - lo) / 2;
-        let (a, b, c) = (idx[lo], idx[mid], idx[hi - 1]);
-        let pivot = if better(xs, a, b) == better(xs, a, c) {
-            // a is either best or worst of the three -> median is b or c
-            if better(xs, b, c) == better(xs, b, a) { c } else { b }
-        } else {
-            a
-        };
-        // Partition: entries better than pivot to the left.
-        let mut i = lo;
-        let mut j = hi;
-        let mut p = lo;
-        // three-way partition around pivot value
-        while p < j {
-            if better(xs, idx[p], pivot) {
-                idx.swap(i, p);
-                i += 1;
-                p += 1;
-            } else if better(xs, pivot, idx[p]) {
-                j -= 1;
-                idx.swap(p, j);
-            } else {
-                p += 1;
-            }
-        }
-        // [lo, i) better; [i, j) equal-to-pivot (only the pivot itself,
-        // since keys are unique by index tiebreak); [j, hi) worse.
-        let n_better = i - lo;
-        let n_eq = j - i;
-        if want < n_better {
-            hi = i;
-        } else if want < n_better + n_eq {
-            return; // boundary falls inside the pivot block — done
-        } else {
-            want -= n_better + n_eq;
-            lo = j;
-        }
-        if want == 0 {
-            return;
-        }
+/// [`topk_indices`] into reusable buffers: `perm` is the selection
+/// workspace, `out` receives the ascending result. No allocation once
+/// both have warmed to capacity.
+pub fn topk_indices_into(xs: &[f32], k: usize, perm: &mut Vec<u32>, out: &mut Vec<u32>) {
+    let n = xs.len();
+    out.clear();
+    if k == 0 {
+        return;
     }
+    if k >= n {
+        out.extend(0..n as u32);
+        return;
+    }
+    perm.clear();
+    perm.extend(0..n as u32);
+    // Partial selection: everything in perm[..k] ranks before perm[k..].
+    perm.select_nth_unstable_by(k - 1, |&a, &b| rank(xs, a, b));
+    let top = &mut perm[..k];
+    top.sort_unstable();
+    out.extend_from_slice(top);
 }
 
 /// Per-chunk top-k over a flat coefficient buffer.
-/// Returns (chunk_index, within-chunk indices) pairs flattened as global
-/// indices, ascending.
+/// Returns the selected global indices, ascending (k per chunk).
 pub fn topk_per_chunk(coeffs: &[f32], chunk: usize, k: usize) -> Vec<u32> {
+    let mut perm = Vec::new();
+    let mut out = Vec::new();
+    topk_per_chunk_into(coeffs, chunk, k, &mut perm, &mut out);
+    out
+}
+
+/// [`topk_per_chunk`] into reusable buffers (the extraction hot path —
+/// zero allocations in steady state).
+pub fn topk_per_chunk_into(
+    coeffs: &[f32],
+    chunk: usize,
+    k: usize,
+    perm: &mut Vec<u32>,
+    out: &mut Vec<u32>,
+) {
     assert_eq!(coeffs.len() % chunk, 0);
-    let mut out = Vec::with_capacity(coeffs.len() / chunk * k.min(chunk));
+    out.clear();
+    let kk = k.min(chunk);
+    if kk == 0 {
+        return;
+    }
     for (ci, ch) in coeffs.chunks_exact(chunk).enumerate() {
         let base = (ci * chunk) as u32;
-        for i in topk_indices(ch, k) {
+        perm.clear();
+        perm.extend(0..chunk as u32);
+        if kk < chunk {
+            perm.select_nth_unstable_by(kk - 1, |&a, &b| rank(ch, a, b));
+        }
+        let top = &mut perm[..kk];
+        top.sort_unstable();
+        for &i in top.iter() {
             out.push(base + i);
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -128,6 +132,28 @@ mod tests {
     }
 
     #[test]
+    fn tie_breaking_pinned_lowest_index() {
+        // Satellite: the documented determinism contract. Equal-magnitude
+        // coefficients (regardless of sign) select the lowest indices, so
+        // partial selection cannot reorder payloads across platforms.
+        let all_ties = [1.0f32, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        for k in 1..=all_ties.len() {
+            assert_eq!(
+                topk_indices(&all_ties, k),
+                (0..k as u32).collect::<Vec<_>>(),
+                "k={k}"
+            );
+        }
+        // mixed magnitudes: the tie at |2.0| resolves to index 0, the
+        // winner block {|3.0|} comes regardless of sign
+        assert_eq!(topk_indices(&[2.0, -3.0, 3.0, -2.0], 2), vec![1, 2]);
+        assert_eq!(topk_indices(&[2.0, -3.0, 3.0, -2.0], 3), vec![0, 1, 2]);
+        // per-chunk: both chunks are all-ties; each selects its lowest k
+        let xs = [5.0f32, -5.0, 5.0, -5.0, 7.0, -7.0, 7.0, -7.0];
+        assert_eq!(topk_per_chunk(&xs, 4, 2), vec![0, 1, 4, 5]);
+    }
+
+    #[test]
     fn matches_brute_force_property() {
         proptest(128, |g| {
             let n = g.usize(1, 300);
@@ -137,6 +163,23 @@ mod tests {
             let got = topk_indices(&xs, k);
             let want = brute_topk(&xs, k);
             prop_assert(got == want, format!("n={n} k={k}: {got:?} vs {want:?}"));
+        });
+    }
+
+    #[test]
+    fn into_variant_reuses_buffers_and_matches() {
+        let mut perm = Vec::new();
+        let mut out = Vec::new();
+        proptest(32, |g| {
+            let chunk = g.pow2(2, 7);
+            let n_chunks = g.usize(1, 8);
+            let k = g.usize(1, chunk);
+            let xs = g.vec_normal(chunk * n_chunks, 1.0);
+            topk_per_chunk_into(&xs, chunk, k, &mut perm, &mut out);
+            prop_assert(
+                out == topk_per_chunk(&xs, chunk, k),
+                "reused buffers diverged from fresh",
+            );
         });
     }
 

@@ -1,10 +1,15 @@
 //! The discrete-event overlap engine — the simulator's spine.
 //!
-//! Each rank owns two resource lanes: a **compute** lane (the accelerator)
-//! and a **NIC** lane. A training step is a DAG of reservations on those
-//! lanes; [`StepEngine`] schedules them and the step's duration is
-//! whatever the critical path says, instead of the old barrier-synchronous
-//! sum of phase maxima.
+//! Each rank owns three resource lanes: a **compute** lane (the
+//! accelerator), an **intra-node fabric** lane (NVLink/xGMI class — the
+//! FSDP unshard and gradient reduce-scatter ride here), and a **NIC**
+//! lane (the inter-node link the replication gather crosses). A training
+//! step is a DAG of reservations on those lanes; [`StepEngine`]
+//! schedules them and the step's duration is whatever the critical path
+//! says, instead of the old barrier-synchronous sum of phase maxima.
+//! Separating fabric from NIC matches the hardware (intra-node traffic
+//! does not contend with the network port) and is what lets a bucketed
+//! gather start while later gradient buckets are still reducing.
 //!
 //! ## Dependency model (one FlexDeMo step)
 //!
@@ -12,9 +17,10 @@
 //! compute lane:   fwd(t) ──────────── bwd(t) ─────────────── fwd(t+1) …
 //!                  │  (no comm dep:     ▲ needs update(t-1)
 //!                  │   stale-params     │ visible = unshard end)
-//! NIC lane:        │   pipelining)      │
+//! fabric lane:     │   pipelining)      │
 //!   unshard(t) ────┘  [≥ gather(t-1)]───┘
 //!   reduce-scatter(t)  [starts with bwd(t), ends ≥ bwd(t) end]
+//! NIC lane:
 //!   gather(t)          [after reduce-scatter(t); overlaps fwd(t+1)]
 //! ```
 //!
@@ -26,8 +32,9 @@
 //! * the **intra-node reduce-scatter** streams gradient buckets while the
 //!   backward produces them: it may start with the backward but cannot
 //!   finish before it;
-//! * the **unshard all-gather** (phase 0) rides the NIC after the gather
-//!   and likewise only gates the next backward.
+//! * the **unshard all-gather** (phase 0) rides the fabric once the
+//!   gather's update is visible and likewise only gates the next
+//!   backward.
 //!
 //! ## `--no-overlap` parity
 //!
@@ -37,15 +44,41 @@
 //! max gather) per step, in that order, using the same duration formulas
 //! (they live in `collectives::*_event`, shared by both paths). The
 //! `serialized_time()` accumulator tracks that sum in *both* modes, so
-//! `now() == serialized_time()` under `--no-overlap` and
-//! `now() ≤ serialized_time()` with overlap on — both are asserted in the
-//! integration tests.
+//! `now() == serialized_time()` under `--no-overlap` always, and
+//! `now() ≤ serialized_time()` for overlapped *whole-phase* schedules —
+//! both asserted in the integration tests. Bucketed schedules pay one α
+//! per bucket while `serialized` keeps whole-phase durations, so on a
+//! latency-dominated link a heavily-bucketed run may exceed the
+//! serialized reference (which is exactly when `--bucket-mb` should not
+//! be used).
 //!
 //! ## Scenario knobs
 //!
 //! [`ClusterModel`] supplies per-node straggler slowdowns (scaling that
 //! node's compute reservations) and per-node NIC bandwidth overrides
 //! (a replication group's link runs at its slowest member NIC).
+//!
+//! ## Pipelined gradient buckets (`--bucket-mb`)
+//!
+//! With a bucket size set (and overlap on), the reduce-scatter and the
+//! replication gather split their traffic into per-bucket
+//! [`CommEvent`]s instead of one whole-phase event:
+//!
+//! * reduce-scatter bucket *i* of *m* becomes available `(i+1)/m` of the
+//!   way through the backward (gradient buckets stream out of the
+//!   backward as they are produced) and reduces as soon as the fabric
+//!   frees up;
+//! * gather bucket *j* ships once the reduce-scatter has covered the
+//!   matching fraction of the shard — so the **first bucket's
+//!   communication overlaps the remaining buckets' compression** and
+//!   the inter-node gather starts deep inside the backward window
+//!   instead of after it.
+//!
+//! Each bucket pays its own α, so the *serialized* accumulator keeps
+//! using the whole-phase durations: under `--no-overlap` bucketing is
+//! ignored entirely and totals reproduce the legacy clock bit-for-bit.
+//! Bucketing never touches data — numerics are identical by
+//! construction (tested in `tests/integration.rs`).
 
 use crate::collectives::{ring_all_gather_event, ring_reduce_scatter_event, CommEvent, Link};
 use crate::net::{ClusterModel, LinkClass, NetModel, SimTime, Timeline, Topology, TrafficMatrix};
@@ -68,19 +101,30 @@ pub struct StepTiming {
     pub hidden_comm: f64,
 }
 
+/// Hard cap on buckets per phase — bounds event-count blowup when the
+/// bucket size is tiny relative to the payload.
+const MAX_BUCKETS: u64 = 32;
+
 pub struct StepEngine {
     topo: Topology,
     net: NetModel,
     cluster: ClusterModel,
     overlap: bool,
-    /// One lane per rank on each resource.
+    /// Bucket size in bytes for pipelined comm (0 = whole-phase events).
+    bucket_bytes: u64,
+    /// One lane per rank on each resource: accelerator, intra-node
+    /// fabric (unshard + reduce-scatter), inter-node NIC (gather).
     compute: Timeline,
+    fabric: Timeline,
     nic: Timeline,
     /// When rank r's parameters carry the latest optimizer update
     /// (gather/unshard landing time) — the next backward's dependency.
     update_visible: Vec<SimTime>,
     /// End of this step's reduce-scatter per rank (gather dependency).
     rs_done: Vec<SimTime>,
+    /// Per-bucket reduce-scatter completion times this step (empty when
+    /// the phase ran whole; lets gather buckets chase rs progress).
+    rs_bucket_end: Vec<Vec<SimTime>>,
     bwd_start: Vec<SimTime>,
     bwd_end: Vec<SimTime>,
     /// What the legacy barrier-synchronous clock would read.
@@ -92,6 +136,7 @@ pub struct StepEngine {
     // per-step bookkeeping
     step_start_horizon: SimTime,
     step_compute_busy0: Vec<f64>,
+    step_fabric_busy0: Vec<f64>,
     step_nic_busy0: Vec<f64>,
     step_gather_max: f64,
     gather_phase_start: Option<SimTime>,
@@ -105,10 +150,13 @@ impl StepEngine {
             net,
             cluster,
             overlap,
+            bucket_bytes: 0,
             compute: Timeline::new(world),
+            fabric: Timeline::new(world),
             nic: Timeline::new(world),
             update_visible: vec![0.0; world],
             rs_done: vec![0.0; world],
+            rs_bucket_end: vec![Vec::new(); world],
             bwd_start: vec![0.0; world],
             bwd_end: vec![0.0; world],
             serialized: 0.0,
@@ -117,19 +165,59 @@ impl StepEngine {
             last_nic_event: vec![None; world],
             step_start_horizon: 0.0,
             step_compute_busy0: vec![0.0; world],
+            step_fabric_busy0: vec![0.0; world],
             step_nic_busy0: vec![0.0; world],
             step_gather_max: 0.0,
             gather_phase_start: None,
         }
     }
 
+    /// Builder: split reduce-scatter/gather traffic into per-bucket
+    /// events of at most `bucket_bytes` (0 = whole-phase, the default).
+    /// Only affects the overlapped schedule; `--no-overlap` ignores it.
+    pub fn with_buckets(mut self, bucket_bytes: u64) -> StepEngine {
+        self.bucket_bytes = bucket_bytes;
+        self
+    }
+
     pub fn overlap(&self) -> bool {
         self.overlap
     }
 
-    /// Global sim-time horizon (latest lane across both resources).
+    /// Buckets a phase of `bytes` splits into (1 = whole-phase).
+    fn n_buckets(&self, bytes: u64) -> u64 {
+        if self.bucket_bytes == 0 || bytes == 0 || !self.overlap {
+            1
+        } else {
+            bytes.div_ceil(self.bucket_bytes).min(MAX_BUCKETS)
+        }
+    }
+
+    /// Bytes of bucket `j` when `total` splits into `m` even buckets
+    /// (remainder spread over the first buckets; sums exactly to total).
+    fn bucket_split(total: u64, m: u64, j: u64) -> u64 {
+        total / m + u64::from(j < total % m)
+    }
+
+    /// When the reduce-scatter output covering fraction `frac` of rank
+    /// `r`'s shard became available (bucket-granular when the phase was
+    /// bucketed, else the whole-phase completion).
+    fn rs_frac_done(&self, rank: usize, frac: f64) -> SimTime {
+        let ends = &self.rs_bucket_end[rank];
+        if ends.is_empty() {
+            return self.rs_done[rank];
+        }
+        let m = ends.len();
+        let idx = ((frac * m as f64).ceil() as usize).clamp(1, m) - 1;
+        ends[idx]
+    }
+
+    /// Global sim-time horizon (latest lane across all resources).
     pub fn now(&self) -> SimTime {
-        self.compute.horizon().max(self.nic.horizon())
+        self.compute
+            .horizon()
+            .max(self.fabric.horizon())
+            .max(self.nic.horizon())
     }
 
     /// What the legacy barrier clock would read for the same run — equals
@@ -140,7 +228,10 @@ impl StepEngine {
 
     /// Latest lane end of one rank.
     pub fn rank_end(&self, rank: usize) -> SimTime {
-        self.compute.now(rank).max(self.nic.now(rank))
+        self.compute
+            .now(rank)
+            .max(self.fabric.now(rank))
+            .max(self.nic.now(rank))
     }
 
     /// The rank on the step's critical path: latest end, ties broken by
@@ -157,9 +248,10 @@ impl StepEngine {
         best
     }
 
-    /// Per-rank compute/NIC timelines (read-only; invariants tested).
-    pub fn timelines(&self) -> (&Timeline, &Timeline) {
-        (&self.compute, &self.nic)
+    /// Per-rank compute/fabric/NIC timelines (read-only; invariants
+    /// tested).
+    pub fn timelines(&self) -> (&Timeline, &Timeline, &Timeline) {
+        (&self.compute, &self.fabric, &self.nic)
     }
 
     fn world(&self) -> usize {
@@ -171,6 +263,7 @@ impl StepEngine {
         let h = self.now();
         for r in 0..self.world() {
             self.compute.stall_until(r, h);
+            self.fabric.stall_until(r, h);
             self.nic.stall_until(r, h);
         }
         h
@@ -204,7 +297,9 @@ impl StepEngine {
         self.step_start_horizon = self.now();
         for r in 0..self.world() {
             self.step_compute_busy0[r] = self.compute.busy(r);
+            self.step_fabric_busy0[r] = self.fabric.busy(r);
             self.step_nic_busy0[r] = self.nic.busy(r);
+            self.rs_bucket_end[r].clear();
         }
     }
 
@@ -227,7 +322,7 @@ impl StepEngine {
             for node in 0..self.topo.nodes {
                 let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
                 for &r in &members {
-                    self.nic.reserve(r, h, dur);
+                    self.fabric.reserve(r, h, dur);
                     self.update_visible[r] = h + dur;
                 }
                 self.push_event(proto.clone().scheduled(h, Vec::new()), &members);
@@ -238,10 +333,10 @@ impl StepEngine {
                 let earliest = members
                     .iter()
                     .fold(0.0f64, |m, &r| m.max(self.update_visible[r]));
-                let start = earliest.max(self.nic.join(&members));
+                let start = earliest.max(self.fabric.join(&members));
                 let deps = self.nic_deps(&members);
                 for &r in &members {
-                    self.nic.reserve(r, start, dur);
+                    self.fabric.reserve(r, start, dur);
                     self.update_visible[r] = start + dur;
                 }
                 self.push_event(proto.clone().scheduled(start, deps), &members);
@@ -304,28 +399,61 @@ impl StepEngine {
             for node in 0..self.topo.nodes {
                 let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
                 for &r in &members {
-                    self.nic.reserve(r, h, dur);
+                    self.fabric.reserve(r, h, dur);
                     self.rs_done[r] = h + dur;
                     self.update_visible[r] = h + dur;
                 }
                 self.push_event(proto.clone().scheduled(h, Vec::new()), &members);
             }
-        } else {
+        } else if self.n_buckets(max_shard_bytes) <= 1 {
             for node in 0..self.topo.nodes {
                 let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
                 let bwd_start_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_start[r]));
                 let bwd_end_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_end[r]));
-                let start = self.nic.join(&members).max(bwd_start_max);
+                let start = self.fabric.join(&members).max(bwd_start_max);
                 let fin = (start + dur).max(bwd_end_max);
                 let deps = self.nic_deps(&members);
                 for &r in &members {
-                    self.nic.reserve(r, start, dur);
+                    self.fabric.reserve(r, start, dur);
                     // the last gradient bucket lands only when bwd ends
-                    self.nic.stall_until(r, fin);
+                    self.fabric.stall_until(r, fin);
                     self.rs_done[r] = fin;
                     self.update_visible[r] = fin;
                 }
                 self.push_event(proto.clone().scheduled(start, deps), &members);
+            }
+        } else {
+            // Bucketed: gradient bucket i streams out of the backward at
+            // the (i+1)/m mark and reduces on the fabric as soon as it
+            // frees up — early buckets finish deep inside the backward
+            // window, and their completion times let the gather start
+            // before the whole phase is done.
+            let m = self.n_buckets(max_shard_bytes);
+            for node in 0..self.topo.nodes {
+                let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
+                let bwd_start_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_start[r]));
+                let bwd_end_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_end[r]));
+                let tb = (bwd_end_max - bwd_start_max).max(0.0);
+                let mut deps = self.nic_deps(&members);
+                let mut ends = Vec::with_capacity(m as usize);
+                for j in 0..m {
+                    let bytes_j = Self::bucket_split(max_shard_bytes, m, j);
+                    let ev = ring_reduce_scatter_event(&link, accels, bytes_j);
+                    let ready = bwd_start_max + tb * (j + 1) as f64 / m as f64;
+                    let start = self.fabric.join(&members).max(ready);
+                    for &r in &members {
+                        self.fabric.reserve(r, start, ev.duration);
+                    }
+                    ends.push(start + ev.duration);
+                    let id = self.push_event(ev.scheduled(start, deps.clone()), &members);
+                    deps = vec![id];
+                }
+                let fin = *ends.last().expect("m >= 1");
+                for &r in &members {
+                    self.rs_done[r] = fin;
+                    self.update_visible[r] = fin;
+                    self.rs_bucket_end[r].clone_from(&ends);
+                }
             }
         }
         self.serialized += dur;
@@ -352,6 +480,17 @@ impl StepEngine {
         mode.record_traffic(traffic, &self.topo, group, payload_bytes);
         let dur = ev.duration;
         self.step_gather_max = self.step_gather_max.max(dur);
+        // Bucketing the gather only pays off when the reduce-scatter
+        // produced incremental availability to pipeline against; without
+        // it (accels=1, or a shard smaller than one bucket) the buckets
+        // would serialize after the backward anyway, each paying its own
+        // α — fall back to the single whole-phase event.
+        let pipelined = group.iter().any(|&r| !self.rs_bucket_end[r].is_empty());
+        let max_payload = if pipelined {
+            payload_bytes.iter().copied().max().unwrap_or(0)
+        } else {
+            0
+        };
         if !self.overlap {
             let h = match self.gather_phase_start {
                 Some(h) => h,
@@ -366,7 +505,7 @@ impl StepEngine {
                 self.update_visible[r] = h + dur;
             }
             self.push_event(ev.scheduled(h, Vec::new()), group);
-        } else {
+        } else if self.n_buckets(max_payload) <= 1 {
             let earliest = group.iter().fold(0.0f64, |m, &r| m.max(self.rs_done[r]));
             let start = self.nic.join(group).max(earliest);
             let deps = self.nic_deps(group);
@@ -375,6 +514,35 @@ impl StepEngine {
                 self.update_visible[r] = start + dur;
             }
             self.push_event(ev.scheduled(start, deps), group);
+        } else {
+            // Bucketed: gather bucket j covers payload fraction (j+1)/m
+            // and ships once the reduce-scatter has covered the matching
+            // fraction of the shard — the first bucket crosses the
+            // inter-node link while later buckets are still reducing.
+            let m = self.n_buckets(max_payload);
+            let mut deps = self.nic_deps(group);
+            let mut sizes = vec![0u64; payload_bytes.len()];
+            let mut end = 0.0f64;
+            for j in 0..m {
+                for (s, &b) in sizes.iter_mut().zip(payload_bytes) {
+                    *s = Self::bucket_split(b, m, j);
+                }
+                let bev = mode.comm_event(&link, &sizes);
+                let frac = (j + 1) as f64 / m as f64;
+                let earliest = group
+                    .iter()
+                    .fold(0.0f64, |acc, &r| acc.max(self.rs_frac_done(r, frac)));
+                let start = self.nic.join(group).max(earliest);
+                for &r in group {
+                    self.nic.reserve(r, start, bev.duration);
+                }
+                end = start + bev.duration;
+                let id = self.push_event(bev.scheduled(start, deps.clone()), group);
+                deps = vec![id];
+            }
+            for &r in group {
+                self.update_visible[r] = end;
+            }
         }
     }
 
@@ -388,7 +556,8 @@ impl StepEngine {
         let sim_time = self.now();
         let crit = self.critical_rank();
         let compute_time = self.compute.busy(crit) - self.step_compute_busy0[crit];
-        let comm = self.nic.busy(crit) - self.step_nic_busy0[crit];
+        let comm = (self.nic.busy(crit) - self.step_nic_busy0[crit])
+            + (self.fabric.busy(crit) - self.step_fabric_busy0[crit]);
         let span = (sim_time - self.step_start_horizon).max(0.0);
         let exposed_comm = (span - compute_time).clamp(0.0, comm.max(0.0));
         let hidden_comm = (comm - exposed_comm).max(0.0);
@@ -477,9 +646,9 @@ mod tests {
             e.compute(1e8);
             e.reduce_scatter(1024);
             e.end_step();
-            let (c, n) = e.timelines();
+            let (c, f, n) = e.timelines();
             for r in 0..8 {
-                let t = c.now(r).max(n.now(r));
+                let t = c.now(r).max(f.now(r)).max(n.now(r));
                 assert!(t >= prev[r], "rank {r} went backwards");
                 prev[r] = t;
             }
@@ -501,6 +670,96 @@ mod tests {
         let mut u = engine(2, 2, true);
         drive(&mut u, 4, true);
         assert!(e.now() > u.now());
+    }
+
+    #[test]
+    fn bucketed_schedule_keeps_serialized_parity_and_splits_events() {
+        let drive_with = |bucket: u64| {
+            let mut e = StepEngine::new(
+                Topology::new(2, 2),
+                NetModel::hpc(),
+                ClusterModel::uniform(),
+                true,
+            )
+            .with_buckets(bucket);
+            drive(&mut e, 3, true);
+            e
+        };
+        let whole = drive_with(0);
+        let bucketed = drive_with(1024); // shard 4096 B → 4 rs buckets; payload 2048 → 2
+        // the serialized accumulator always uses whole-phase durations:
+        // bucketing must not perturb the legacy reference clock
+        assert_eq!(whole.serialized_time(), bucketed.serialized_time());
+        // per-bucket events appear in the last step's schedule
+        assert!(bucketed.events.len() > whole.events.len());
+        let count = |e: &StepEngine, label: &str| {
+            e.events.iter().filter(|ev| ev.label == label).count()
+        };
+        assert_eq!(count(&bucketed, "reduce-scatter"), 2 * 4); // 2 nodes × 4 buckets
+        assert_eq!(count(&bucketed, "naive-gather"), 2 * 2); // 2 groups × 2 buckets
+        // the byte split is exact — buckets cover the whole phase
+        let bytes = |e: &StepEngine, label: &str| -> u64 {
+            e.events.iter().filter(|ev| ev.label == label).map(|ev| ev.bytes).sum()
+        };
+        assert_eq!(bytes(&bucketed, "reduce-scatter"), bytes(&whole, "reduce-scatter"));
+        assert_eq!(bytes(&bucketed, "naive-gather"), bytes(&whole, "naive-gather"));
+        // bucket chains carry dependencies (each bucket gates the next)
+        assert!(bucketed.events.iter().any(|ev| !ev.deps.is_empty()));
+    }
+
+    #[test]
+    fn buckets_noop_without_reduce_scatter_progress() {
+        // accels=1: no reduce-scatter, so there is nothing to pipeline
+        // against — bucketing must fall back to the whole-phase gather
+        // instead of serializing α-paying buckets after the backward.
+        let drive_with = |bucket: u64| {
+            let mut e = StepEngine::new(
+                Topology::new(4, 1),
+                NetModel::hpc(),
+                ClusterModel::uniform(),
+                true,
+            )
+            .with_buckets(bucket);
+            let t = drive(&mut e, 4, true);
+            (e, t)
+        };
+        let (whole, tw) = drive_with(0);
+        let (bucketed, tb) = drive_with(512); // payload 2048 would split 4×
+        assert_eq!(whole.now(), bucketed.now());
+        assert_eq!(tw.exposed_comm, tb.exposed_comm);
+        assert_eq!(whole.events.len(), bucketed.events.len());
+    }
+
+    #[test]
+    fn buckets_ignored_when_overlap_off() {
+        let mut a = engine(2, 2, false);
+        let ta = drive(&mut a, 4, true);
+        let mut b = StepEngine::new(
+            Topology::new(2, 2),
+            NetModel::hpc(),
+            ClusterModel::uniform(),
+            false,
+        )
+        .with_buckets(512);
+        let tb = drive(&mut b, 4, true);
+        // --no-overlap reproduces the legacy barrier clock bit-for-bit,
+        // bucket knob or not
+        assert_eq!(a.now(), b.now());
+        assert_eq!(ta.exposed_comm, tb.exposed_comm);
+        assert_eq!(b.now(), b.serialized_time());
+    }
+
+    #[test]
+    fn bucket_split_is_exact_and_even() {
+        assert_eq!(StepEngine::bucket_split(10, 3, 0), 4);
+        assert_eq!(StepEngine::bucket_split(10, 3, 1), 3);
+        assert_eq!(StepEngine::bucket_split(10, 3, 2), 3);
+        for total in [0u64, 1, 7, 4096, 99_999] {
+            for m in 1..=8u64 {
+                let sum: u64 = (0..m).map(|j| StepEngine::bucket_split(total, m, j)).sum();
+                assert_eq!(sum, total, "total={total} m={m}");
+            }
+        }
     }
 
     #[test]

@@ -22,8 +22,10 @@
 //! *clock* is the discrete-event [`engine::StepEngine`], which either
 //! serializes the phases (`--no-overlap`, legacy `SimClock` parity) or
 //! overlaps phase 0/2 intra-node traffic with backward compute and the
-//! replication gather with the next step's forward. See `engine` for the
-//! dependency model.
+//! replication gather with the next step's forward. With `--bucket-mb`
+//! set the reduce-scatter and gather further split into per-bucket
+//! events so the first bucket's communication overlaps the remaining
+//! buckets' compression. See `engine` for the dependency model.
 //!
 //! Edge cases degrade exactly as the paper states: |R|=1 → pure FSDP,
 //! |S|=1 → DeMo-style DDP, |S|=|R|=1 → single-accelerator training.
@@ -40,7 +42,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::collectives::{self, CollCtx};
-use crate::compress::WireStats;
+use crate::compress::{Scratch, WireStats};
 use crate::config::ExperimentConfig;
 use crate::data::{task_for, Task};
 use crate::metrics::{RunMetrics, StepRow, ValRow};
@@ -52,10 +54,13 @@ use crate::shard::{FlatLayout, HybridMesh};
 
 use engine::{StepEngine, StepTiming};
 
-/// Per-rank state (optimizer + replicator own shard-sized buffers).
+/// Per-rank state (optimizer + replicator own shard-sized buffers, plus
+/// the per-worker compression scratch arena reused across steps — the
+/// steady-state extract path allocates nothing).
 struct RankState {
     opt: Box<dyn Optimizer>,
     repl: Box<dyn Replicator>,
+    scratch: Scratch,
 }
 
 /// The assembled training system.
@@ -103,11 +108,13 @@ impl Trainer {
             .map(|_| RankState {
                 opt: cfg.opt.build(shard_len),
                 repl: cfg.repl.build(shard_len),
+                scratch: Scratch::new(),
             })
             .collect();
 
         let traffic = TrafficMatrix::new(cfg.nodes);
-        let engine = StepEngine::new(topo, cfg.net, cfg.cluster.clone(), cfg.overlap);
+        let engine = StepEngine::new(topo, cfg.net, cfg.cluster.clone(), cfg.overlap)
+            .with_buckets(cfg.bucket_bytes());
         Ok(Trainer {
             model,
             layout,
@@ -292,7 +299,8 @@ impl Trainer {
                 let grad_shard = &self.grads[rank][lo..hi];
                 let st = &mut self.ranks[rank];
                 st.opt.accumulate(grad_shard);
-                let (q_local, payload) = st.repl.extract(&rctx, st.opt.buffer_mut());
+                let (q_local, payload) =
+                    st.repl.extract(&rctx, st.opt.buffer_mut(), &mut st.scratch);
                 any_payload |= payload.is_some();
                 locals.push(q_local);
                 payloads.push(payload);
@@ -313,23 +321,37 @@ impl Trainer {
                 let lr = self.cfg.lr_at(step);
                 for (gi, &rank) in group.iter().enumerate() {
                     let st = &mut self.ranks[rank];
-                    let mean = mean_decoded(st.repl.as_ref(), &rctx, &payloads, hi - lo);
-                    let q = st
-                        .repl
-                        .finalize(&rctx, std::mem::take(&mut locals[gi]), Some(mean));
+                    let mean =
+                        mean_decoded(st.repl.as_ref(), &rctx, &payloads, hi - lo, &mut st.scratch);
+                    let q = st.repl.finalize(
+                        &rctx,
+                        std::mem::take(&mut locals[gi]),
+                        Some(mean),
+                        &mut st.scratch,
+                    );
                     let node = self.mesh.topo.node_of(rank);
                     st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
+                    st.scratch.put_f32(q);
+                }
+                // Consumed payloads return their buffers to the ranks
+                // that produced them — the next step reuses the capacity.
+                for (gi, p) in payloads.into_iter().enumerate() {
+                    self.ranks[group[gi]].scratch.recycle_payload(p);
                 }
             } else {
                 // Local-only step (DiLoCo between syncs).
                 let lr = self.cfg.lr_at(step);
                 for (gi, &rank) in group.iter().enumerate() {
                     let st = &mut self.ranks[rank];
-                    let q = st
-                        .repl
-                        .finalize(&rctx, std::mem::take(&mut locals[gi]), None);
+                    let q = st.repl.finalize(
+                        &rctx,
+                        std::mem::take(&mut locals[gi]),
+                        None,
+                        &mut st.scratch,
+                    );
                     let node = self.mesh.topo.node_of(rank);
                     st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
+                    st.scratch.put_f32(q);
                 }
             }
         }
@@ -367,17 +389,25 @@ impl Trainer {
     }
 
     /// Wire stats of a hypothetical payload from rank 0's current state
-    /// (used by the bandwidth figures without running a gather).
+    /// (used by the bandwidth figures without running a gather). Runs a
+    /// throwaway replicator instance so stateful schemes (DiLoCo's
+    /// displacement accumulator) never absorb the probed buffer.
     pub fn probe_payload(&mut self) -> Option<WireStats> {
         let rctx = ReplCtx {
             step: self.step,
             shard: 0,
             seed: self.cfg.seed,
         };
+        let mut probe = self.cfg.repl.build(self.mesh.shards.shard_len());
         let st = &mut self.ranks[0];
         let mut buf = st.opt.buffer_mut().to_vec();
-        let (_, p) = st.repl.extract(&rctx, &mut buf);
-        p.map(|p| WireStats::of(&p))
+        let (q, p) = probe.extract(&rctx, &mut buf, &mut st.scratch);
+        st.scratch.put_f32(q);
+        let stats = p.as_ref().map(WireStats::of);
+        if let Some(p) = p {
+            st.scratch.recycle_payload(p);
+        }
+        stats
     }
 
     /// Run the configured number of steps, collecting metrics.
@@ -403,6 +433,7 @@ impl Trainer {
                 compute_time: self.last_timing.compute_time,
                 exposed_comm: self.last_timing.exposed_comm,
                 hidden_comm: self.last_timing.hidden_comm,
+                comm_events: self.engine.events.len() as u64,
                 wall_time: wall0.elapsed().as_secs_f64(),
             });
             self.last_inter = inter;

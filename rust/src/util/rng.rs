@@ -180,6 +180,15 @@ impl Rng {
     /// Sample `k` distinct indices from [0, n), sorted ascending.
     /// Floyd's algorithm: O(k) expected, no O(n) scratch.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.sample_indices_into(n, k, &mut out);
+        out
+    }
+
+    /// [`Rng::sample_indices`] into a reusable buffer (same draws, same
+    /// result). The membership set is still built internally, so this is
+    /// not allocation-free — it only spares the output vector.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
         assert!(k <= n, "sample {k} from {n}");
         let mut chosen = std::collections::HashSet::with_capacity(k);
         for j in (n - k)..n {
@@ -188,9 +197,9 @@ impl Rng {
                 chosen.insert(j);
             }
         }
-        let mut out: Vec<usize> = chosen.into_iter().collect();
+        out.clear();
+        out.extend(chosen);
         out.sort_unstable();
-        out
     }
 }
 

@@ -440,9 +440,9 @@ mod engine_invariants {
         let mut prev = vec![0.0f64; world];
         for _ in 0..8 {
             t.step().unwrap();
-            let (compute, nic) = t.engine.timelines();
+            let (compute, fabric, nic) = t.engine.timelines();
             for r in 0..world {
-                let now = compute.now(r).max(nic.now(r));
+                let now = compute.now(r).max(fabric.now(r)).max(nic.now(r));
                 assert!(now >= prev[r], "rank {r} timeline went backwards");
                 prev[r] = now;
             }
@@ -488,6 +488,102 @@ mod engine_invariants {
             m_full.mean_step_time(),
             m_demo.mean_step_time()
         );
+    }
+
+    /// Satellite + acceptance: with `--bucket-mb` the engine splits
+    /// reduce-scatter/gather into per-bucket events. Numerics must be
+    /// bit-identical to whole-phase scheduling, `--no-overlap` totals
+    /// must reproduce exactly, and on a comm-exposed config the bucketed
+    /// schedule's `exposed_comm` must not exceed the whole-phase one.
+    #[test]
+    fn bucketed_schedule_matches_numerics_and_shrinks_exposed_comm() {
+        let mk = |bucket_mb: f64, overlap: bool| {
+            let mut cfg = synth_cfg("demo:1/8");
+            // A compute-rich regime (backward window ≫ per-bucket α) so
+            // the gather tail is the exposed term bucketing attacks.
+            cfg.net.device_flops = 5e10;
+            cfg.steps = 8;
+            cfg.bucket_mb = bucket_mb;
+            cfg.overlap = overlap;
+            run(cfg)
+        };
+        let (_, whole) = mk(0.0, true);
+        let (t_bucketed, bucketed) = mk(0.01, true);
+        // bucketing reschedules traffic, it never touches data
+        let lw: Vec<f64> = whole.steps.iter().map(|r| r.loss).collect();
+        let lb: Vec<f64> = bucketed.steps.iter().map(|r| r.loss).collect();
+        assert_eq!(lw, lb, "bucketing changed the numerics");
+        // acceptance: bucketed exposure never exceeds whole-phase …
+        assert!(
+            bucketed.total_exposed_comm() <= whole.total_exposed_comm() * (1.0 + 1e-9),
+            "bucketed exposed {} > whole-phase {}",
+            bucketed.total_exposed_comm(),
+            whole.total_exposed_comm()
+        );
+        // … and on this config it strictly helps: the first gather
+        // bucket crosses the link during the backward window.
+        assert!(
+            bucketed.total_sim_time() < whole.total_sim_time(),
+            "bucketing did not shorten the run: {} vs {}",
+            bucketed.total_sim_time(),
+            whole.total_sim_time()
+        );
+        assert!(
+            bucketed.steps[1].comm_events > whole.steps[1].comm_events,
+            "no per-bucket events emitted"
+        );
+        // the overlapped horizon still respects its serialized bound
+        assert!(
+            t_bucketed.engine.now() <= t_bucketed.engine.serialized_time() * (1.0 + 1e-12),
+            "bucketed overlap exceeded serialized bound"
+        );
+        // --no-overlap ignores bucketing: serialized totals reproduce
+        let (_, ser_whole) = mk(0.0, false);
+        let (_, ser_bucket) = mk(0.01, false);
+        assert_eq!(ser_whole.total_sim_time(), ser_bucket.total_sim_time());
+        assert_eq!(
+            ser_whole.total_exposed_comm(),
+            ser_bucket.total_exposed_comm()
+        );
+        let lsw: Vec<f64> = ser_whole.steps.iter().map(|r| r.loss).collect();
+        let lsb: Vec<f64> = ser_bucket.steps.iter().map(|r| r.loss).collect();
+        assert_eq!(lsw, lsb);
+    }
+
+    #[test]
+    fn prop_bucketed_numerics_identical_across_schedules() {
+        // Proptest satellite: any bucket size on any small mesh leaves
+        // the loss trajectory bit-identical to whole-phase scheduling
+        // and reproduces --no-overlap serialized totals.
+        detonation::util::proptest::proptest(8, |g| {
+            let nodes = g.usize(1, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&["demo:1/8", "random:1/8", "full", "diloco:2"]);
+            let bucket_mb = *g.choose(&[0.001, 0.005, 0.02, 0.1]);
+            let mk = |bucket: f64, overlap: bool| {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 3;
+                cfg.bucket_mb = bucket;
+                cfg.overlap = overlap;
+                run(cfg).1
+            };
+            let whole = mk(0.0, true);
+            let bucketed = mk(bucket_mb, true);
+            let lw: Vec<f64> = whole.steps.iter().map(|r| r.loss).collect();
+            let lb: Vec<f64> = bucketed.steps.iter().map(|r| r.loss).collect();
+            detonation::util::proptest::prop_assert(
+                lw == lb,
+                format!("{nodes}x{accels} {repl} @{bucket_mb}MiB: numerics diverged"),
+            );
+            let ser_whole = mk(0.0, false);
+            let ser_bucket = mk(bucket_mb, false);
+            detonation::util::proptest::prop_assert(
+                ser_whole.total_sim_time() == ser_bucket.total_sim_time(),
+                format!("{nodes}x{accels} {repl}: serialized totals diverged"),
+            );
+        });
     }
 
     #[test]
@@ -610,6 +706,7 @@ fn rust_extraction_matches_pallas_artifact() {
             seed: 0,
         },
         &mut buf,
+        &mut detonation::compress::Scratch::new(),
     );
     for (a, b) in outs[0].iter().zip(&q) {
         assert!((a - b).abs() < 2e-3, "q mismatch {a} vs {b}");
