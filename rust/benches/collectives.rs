@@ -1,20 +1,28 @@
 //! Collectives micro-bench: real data movement + cost model, across group
 //! sizes and buffer sizes (perf deliverable: coordinator off the critical
-//! path relative to artifact execution).
+//! path relative to artifact execution). The data plane runs on the
+//! worker pool — this bench reports pooled throughput per shape.
 //!
-//!     cargo bench --bench collectives
+//!     cargo bench --bench collectives [-- --quick]
+//!
+//! Results (µs/op + GB/s) land in `BENCH_collectives.json` at the repo
+//! root (the perf-trajectory artifact).
 
-use detonation::collectives::{naive_all_gather_bytes, ring_all_gather, ring_reduce_scatter_avg, CollCtx};
+use detonation::collectives::{
+    naive_all_gather_bytes, ring_all_gather, ring_reduce_scatter_avg, CollCtx, CollScratch,
+};
 use detonation::net::{NetModel, Topology, TrafficMatrix};
+use detonation::parallel::WorkerPool;
+use detonation::util::json::Json;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
+fn bench<F: FnMut()>(name: &str, budget: f64, mut f: F) -> f64 {
     for _ in 0..2 {
         f();
     }
     let t0 = Instant::now();
     let mut iters = 0u64;
-    while t0.elapsed().as_secs_f64() < 0.4 {
+    while t0.elapsed().as_secs_f64() < budget {
         f();
         iters += 1;
     }
@@ -23,34 +31,75 @@ fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
     us
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = if quick { 0.05 } else { 0.4 };
     let model = NetModel::hpc();
-    for (g, n) in [(2usize, 1 << 18), (4, 1 << 18), (8, 1 << 18), (4, 1 << 22)] {
+    let pool = WorkerPool::new(0);
+    let mut scratch = CollScratch::new();
+    let mut rows = Vec::new();
+    let shapes: &[(usize, usize)] = if quick {
+        &[(2usize, 1 << 16), (4, 1 << 16)]
+    } else {
+        &[(2, 1 << 18), (4, 1 << 18), (8, 1 << 18), (4, 1 << 22)]
+    };
+    for &(g, n) in shapes {
         let topo = Topology::new(1, g);
         let traffic = TrafficMatrix::new(1);
-        let ctx = CollCtx {
+        let mut ctx = CollCtx {
             topo: &topo,
             model: &model,
             traffic: &traffic,
+            pool: &pool,
+            scratch: &mut scratch,
         };
         let group: Vec<usize> = (0..g).collect();
         let shards: Vec<(usize, usize)> = (0..g).map(|i| (i * n / g, (i + 1) * n / g)).collect();
         let mut bufs: Vec<Vec<f32>> = (0..g).map(|i| vec![i as f32; n]).collect();
-        bench(
-            &format!("ring_reduce_scatter g={g} n={}K", n >> 10),
-            || {
-                let mut refs: Vec<&mut [f32]> =
-                    bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
-                ring_reduce_scatter_avg(&ctx, &group, &mut refs, &shards);
-            },
-        );
-        bench(&format!("ring_all_gather    g={g} n={}K", n >> 10), || {
+        let bytes_moved = (g * n * 4) as f64;
+        let name = format!("ring_reduce_scatter g={g} n={}K", n >> 10);
+        let us = bench(&name, budget, || {
             let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
-            ring_all_gather(&ctx, &group, &mut refs, &shards);
+            ring_reduce_scatter_avg(&mut ctx, &group, &mut refs, &shards);
         });
-        let payloads: Vec<(Vec<u8>, u64)> = (0..g).map(|_| (vec![0u8; n / 8], (n / 8) as u64)).collect();
-        bench(&format!("naive_all_gather   g={g} b={}K", n >> 13), || {
-            std::hint::black_box(naive_all_gather_bytes(&ctx, &group, &payloads));
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("micros_per_op", Json::Num(us)),
+            ("gb_per_sec", Json::Num(bytes_moved / (us / 1e6) / 1e9)),
+        ]));
+        let name = format!("ring_all_gather    g={g} n={}K", n >> 10);
+        let us = bench(&name, budget, || {
+            let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            ring_all_gather(&mut ctx, &group, &mut refs, &shards);
         });
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("micros_per_op", Json::Num(us)),
+            ("gb_per_sec", Json::Num(bytes_moved / (us / 1e6) / 1e9)),
+        ]));
+        let payloads: Vec<(Vec<u8>, u64)> =
+            (0..g).map(|_| (vec![0u8; n / 8], (n / 8) as u64)).collect();
+        let name = format!("naive_all_gather   g={g} b={}K", n >> 13);
+        let us = bench(&name, budget, || {
+            std::hint::black_box(naive_all_gather_bytes(&mut ctx, &group, &payloads));
+        });
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("micros_per_op", Json::Num(us)),
+            ("gb_per_sec", Json::Num((g * n / 8) as f64 / (us / 1e6) / 1e9)),
+        ]));
     }
+    let out = Json::obj(vec![
+        ("bench", Json::Str("collectives".into())),
+        ("pool_width", Json::Num(pool.width() as f64)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_collectives.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
 }

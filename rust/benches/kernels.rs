@@ -1,0 +1,423 @@
+//! Kernel micro-bench: scalar baseline vs pooled chunk-parallel kernels
+//! on large flats (the tentpole perf deliverable), plus the zero-alloc
+//! steady-state assertions for the collectives and optimizer paths
+//! (counting global allocator, as in `benches/compress.rs`).
+//!
+//!     cargo bench --bench kernels [-- --quick]
+//!
+//! `--quick` shrinks sizes/durations for the CI smoke step. Results
+//! (µs/iter per arm, speedup, allocs/iter) land in `BENCH_kernels.json`
+//! at the repo root — the perf-trajectory artifact.
+
+use std::time::Instant;
+
+use detonation::collectives::{ring_all_reduce_avg, ring_reduce_scatter_avg, CollCtx, CollScratch};
+use detonation::dct::{Dct, DctScratch};
+use detonation::net::{NetModel, Topology, TrafficMatrix};
+use detonation::optim::{OptSpec, Optimizer};
+use detonation::parallel::{PoolHandle, WorkerPool};
+use detonation::runtime::Runtime;
+use detonation::tensor;
+use detonation::util::json::Json;
+use detonation::util::rng::Rng;
+
+#[path = "util/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::{alloc_count, CountingAlloc};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Time `f`: (micros/iter, allocs/iter).
+fn bench<F: FnMut()>(budget: f64, mut f: F) -> (f64, f64) {
+    for _ in 0..3 {
+        f();
+    }
+    let a0 = alloc_count();
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_secs_f64() < budget {
+        f();
+        iters += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = (alloc_count() - a0) as f64 / iters as f64;
+    (dt / iters as f64 * 1e6, allocs)
+}
+
+struct Row {
+    name: &'static str,
+    scalar_us: f64,
+    pooled_us: f64,
+    pooled_allocs: f64,
+}
+
+impl Row {
+    fn print(&self) {
+        println!(
+            "{:<28} scalar {:>9.1} µs  pooled {:>9.1} µs  speedup {:>5.2}x  {:>6.1} allocs/iter",
+            self.name,
+            self.scalar_us,
+            self.pooled_us,
+            self.scalar_us / self.pooled_us,
+            self.pooled_allocs
+        );
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("scalar_micros_per_iter", Json::Num(self.scalar_us)),
+            ("pooled_micros_per_iter", Json::Num(self.pooled_us)),
+            ("speedup", Json::Num(self.scalar_us / self.pooled_us)),
+            ("pooled_allocs_per_iter", Json::Num(self.pooled_allocs)),
+        ])
+    }
+}
+
+/// Count allocations of exactly one steady-state invocation.
+fn allocs_of<F: FnMut()>(mut f: F) -> u64 {
+    f(); // warm
+    let a0 = alloc_count();
+    f();
+    alloc_count() - a0
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = if quick { 0.05 } else { 0.4 };
+    let n: usize = if quick { 1 << 18 } else { 1 << 22 };
+    let pool = WorkerPool::new(0);
+    println!(
+        "kernels bench: n = {n} elements, pool width = {} ({})",
+        pool.width(),
+        if quick { "quick" } else { "full" }
+    );
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // -- axpy ------------------------------------------------------------
+    let mut y = vec![0.0f32; n];
+    let (scalar_us, _) = bench(budget, || {
+        tensor::axpy(&mut y, 0.5, &x);
+        std::hint::black_box(y[0]);
+    });
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        tensor::axpy_pooled(&pool, &mut y, 0.5, &x);
+        std::hint::black_box(y[0]);
+    });
+    rows.push(Row {
+        name: "axpy",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+
+    // -- mean_into (4 parts) ---------------------------------------------
+    let parts_data: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 + 0.5; n]).collect();
+    let parts: Vec<&[f32]> = parts_data.iter().map(|v| v.as_slice()).collect();
+    let mut out = vec![0.0f32; n];
+    let (scalar_us, _) = bench(budget, || {
+        tensor::mean_into(&mut out, &parts);
+        std::hint::black_box(out[0]);
+    });
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        tensor::mean_into_pooled(&pool, &mut out, &parts);
+        std::hint::black_box(out[0]);
+    });
+    rows.push(Row {
+        name: "mean_into g=4",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+
+    // -- collectives (g=4): scalar baseline = the pre-PR alloc-per-call
+    // loops, spelled out; pooled = the shipped zero-alloc kernels.
+    let g = 4usize;
+    let topo = Topology::new(1, g);
+    let net = NetModel::hpc();
+    let traffic = TrafficMatrix::new(1);
+    let mut scratch = CollScratch::new();
+    let shards: Vec<(usize, usize)> = (0..g).map(|i| (i * n / g, (i + 1) * n / g)).collect();
+    let mut bufs: Vec<Vec<f32>> = (0..g).map(|i| vec![i as f32 + 1.0; n]).collect();
+
+    let baseline_all_reduce = |bufs: &mut [Vec<f32>]| {
+        let mut acc = vec![0.0f32; n];
+        for b in bufs.iter() {
+            tensor::axpy(&mut acc, 1.0, b);
+        }
+        let inv = 1.0 / g as f32;
+        for v in acc.iter_mut() {
+            *v *= inv;
+        }
+        for b in bufs.iter_mut() {
+            b.copy_from_slice(&acc);
+        }
+    };
+    let (scalar_us, _) = bench(budget, || {
+        baseline_all_reduce(&mut bufs);
+        std::hint::black_box(bufs[0][0]);
+    });
+    let mut ctx = CollCtx {
+        topo: &topo,
+        model: &net,
+        traffic: &traffic,
+        pool: &pool,
+        scratch: &mut scratch,
+    };
+    let group: Vec<usize> = (0..g).collect();
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        ring_all_reduce_avg(&mut ctx, &group, &mut refs);
+        std::hint::black_box(bufs[0][0]);
+    });
+    rows.push(Row {
+        name: "ring_all_reduce_avg g=4",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+    // zero-alloc assertion (steady state): the refs Vec is the caller's;
+    // the collective itself must not allocate.
+    let coll_allocs = {
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        ring_all_reduce_avg(&mut ctx, &group, &mut refs); // warm
+        let a0 = alloc_count();
+        ring_all_reduce_avg(&mut ctx, &group, &mut refs);
+        alloc_count() - a0
+    };
+    assert_eq!(
+        coll_allocs, 0,
+        "steady-state ring_all_reduce_avg allocated {coll_allocs} times"
+    );
+
+    let baseline_reduce_scatter = |bufs: &mut [Vec<f32>]| {
+        let inv = 1.0 / g as f32;
+        for (i, &(lo, hi)) in shards.iter().enumerate() {
+            let mut acc = vec![0.0f32; hi - lo];
+            for b in bufs.iter() {
+                tensor::axpy(&mut acc, 1.0, &b[lo..hi]);
+            }
+            for v in acc.iter_mut() {
+                *v *= inv;
+            }
+            bufs[i][lo..hi].copy_from_slice(&acc);
+        }
+    };
+    let (scalar_us, _) = bench(budget, || {
+        baseline_reduce_scatter(&mut bufs);
+        std::hint::black_box(bufs[0][0]);
+    });
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        ring_reduce_scatter_avg(&mut ctx, &group, &mut refs, &shards);
+        std::hint::black_box(bufs[0][0]);
+    });
+    rows.push(Row {
+        name: "ring_reduce_scatter g=4",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+    let rs_allocs = {
+        let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        ring_reduce_scatter_avg(&mut ctx, &group, &mut refs, &shards); // warm
+        let a0 = alloc_count();
+        ring_reduce_scatter_avg(&mut ctx, &group, &mut refs, &shards);
+        alloc_count() - a0
+    };
+    assert_eq!(
+        rs_allocs, 0,
+        "steady-state ring_reduce_scatter_avg allocated {rs_allocs} times"
+    );
+
+    // -- optimizers: scalar baseline = the pre-PR two-pass update --------
+    let grad = &x;
+    let mut params = vec![1.0f32; n];
+
+    // demo-sgd accumulate + apply (wd on, so the fused decay path runs)
+    let mut scalar_opt = OptSpec::parse("demo-sgd:wd=0.01")?.build(n);
+    let baseline_apply = |params: &mut [f32], q: &[f32], lr: f32, wd: f32| {
+        let decay = 1.0 - lr * wd;
+        for p in params.iter_mut() {
+            *p *= decay;
+        }
+        tensor::axpy(params, -lr, q);
+    };
+    let (scalar_us, _) = bench(budget, || {
+        scalar_opt.accumulate(grad);
+        baseline_apply(&mut params, grad, 1e-3, 0.01);
+        std::hint::black_box(params[0]);
+    });
+    let mut pooled_opt = OptSpec::parse("demo-sgd:wd=0.01")?.build(n);
+    pooled_opt.attach_pool(PoolHandle::new(pool.clone()));
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        pooled_opt.accumulate(grad);
+        pooled_opt.apply(&mut params, grad, 1e-3);
+        std::hint::black_box(params[0]);
+    });
+    rows.push(Row {
+        name: "demo-sgd accumulate+apply",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+    let opt_allocs = allocs_of(|| {
+        pooled_opt.accumulate(grad);
+        pooled_opt.apply(&mut params, grad, 1e-3);
+    });
+    assert_eq!(
+        opt_allocs, 0,
+        "steady-state demo-sgd step allocated {opt_allocs} times"
+    );
+
+    // adamw apply (the heaviest per-element chain)
+    let mut scalar_adam = AdamScalarBaseline::new(n);
+    let (scalar_us, _) = bench(budget, || {
+        scalar_adam.apply(&mut params, grad, 1e-3);
+        std::hint::black_box(params[0]);
+    });
+    let mut pooled_adam = OptSpec::parse("adamw:wd=0.01")?.build(n);
+    pooled_adam.attach_pool(PoolHandle::new(pool.clone()));
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        pooled_adam.apply(&mut params, grad, 1e-3);
+        std::hint::black_box(params[0]);
+    });
+    rows.push(Row {
+        name: "adamw apply",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+    let adam_allocs = allocs_of(|| {
+        pooled_adam.apply(&mut params, grad, 1e-3);
+    });
+    assert_eq!(adam_allocs, 0, "steady-state adamw apply allocated {adam_allocs} times");
+
+    // decoupled-adamw accumulate (fused moments + buffer push)
+    let mut scalar_dadam = OptSpec::parse("decoupled-adamw")?.build(n);
+    let (scalar_us, _) = bench(budget, || {
+        scalar_dadam.accumulate(grad);
+        std::hint::black_box(scalar_dadam.buffer_mut()[0]);
+    });
+    let mut pooled_dadam = OptSpec::parse("decoupled-adamw")?.build(n);
+    pooled_dadam.attach_pool(PoolHandle::new(pool.clone()));
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        pooled_dadam.accumulate(grad);
+        std::hint::black_box(pooled_dadam.buffer_mut()[0]);
+    });
+    rows.push(Row {
+        name: "decoupled-adamw accumulate",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+
+    // -- surrogate eval step ---------------------------------------------
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(std::path::Path::new("artifacts"), "synthetic-lm")?;
+    let flat = model.manifest.init_flat(3);
+    let task = detonation::data::task_for(&model.manifest, 3);
+    let batch = task.val_batch(0);
+    let (scalar_us, _) = bench(budget, || {
+        std::hint::black_box(model.eval_step(&flat, &batch).unwrap());
+    });
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        std::hint::black_box(model.eval_step_pooled(&flat, &batch, &pool).unwrap());
+    });
+    rows.push(Row {
+        name: "surrogate eval_step",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+
+    // -- DCT block batch forward ------------------------------------------
+    let chunk = 64usize;
+    let d = Dct::plan(chunk);
+    let sig = &x[..n - n % chunk];
+    let mut coeffs = vec![0.0f32; sig.len()];
+    let mut serial_scratch = DctScratch::new();
+    let (scalar_us, _) = bench(budget, || {
+        d.forward_chunked_with(sig, &mut coeffs, &mut serial_scratch);
+        std::hint::black_box(coeffs[0]);
+    });
+    let mut ws: Vec<DctScratch> = (0..pool.width()).map(|_| DctScratch::new()).collect();
+    let (pooled_us, pooled_allocs) = bench(budget, || {
+        d.forward_chunked_pooled(sig, &mut coeffs, &pool, &mut ws);
+        std::hint::black_box(coeffs[0]);
+    });
+    rows.push(Row {
+        name: "dct forward_chunked c=64",
+        scalar_us,
+        pooled_us,
+        pooled_allocs,
+    });
+
+    println!();
+    for r in &rows {
+        r.print();
+    }
+    let best = rows
+        .iter()
+        .map(|r| r.scalar_us / r.pooled_us)
+        .fold(0.0f64, f64::max);
+    println!("\nbest kernel speedup: {best:.2}x (pool width {})", pool.width());
+    println!("steady-state allocations: collectives 0, optimizer 0 (asserted)");
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("elements", Json::Num(n as f64)),
+        ("pool_width", Json::Num(pool.width() as f64)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows.iter().map(Row::json).collect())),
+        ("best_speedup", Json::Num(best)),
+        ("collectives_steady_state_allocs", Json::Num(0.0)),
+        ("optimizer_steady_state_allocs", Json::Num(0.0)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_kernels.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// The pre-PR AdamW apply, spelled out: the same float chain as
+/// `optim::AdamW::apply` but single-threaded (scalar timing baseline).
+struct AdamScalarBaseline {
+    m1: Vec<f32>,
+    m2: Vec<f32>,
+    t: u64,
+}
+
+impl AdamScalarBaseline {
+    fn new(n: usize) -> AdamScalarBaseline {
+        AdamScalarBaseline {
+            m1: vec![0.0; n],
+            m2: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    fn apply(&mut self, params: &mut [f32], q: &[f32], lr: f32) {
+        let (b1, b2, eps, wd) = (0.9f32, 0.999f32, 1e-8f32, 0.01f32);
+        self.t += 1;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = q[i];
+            self.m1[i] = b1 * self.m1[i] + (1.0 - b1) * g;
+            self.m2[i] = b2 * self.m2[i] + (1.0 - b2) * g * g;
+            let mhat = self.m1[i] / bc1;
+            let vhat = self.m2[i] / bc2;
+            if wd > 0.0 {
+                params[i] *= 1.0 - lr * wd;
+            }
+            params[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}

@@ -1,19 +1,27 @@
-//! Runtime micro-bench: artifact execution latency (fwd+bwd) and the cost
-//! of literal marshalling — the L3-vs-L2 boundary. Target: marshalling
-//! ≤ 30% of exec time for tiny models, ≤ 5% for small+.
+//! Runtime micro-bench: model execution latency (fwd+bwd / eval) — the
+//! L3-vs-L2 boundary. Artifact-backed models bench the PJRT path when
+//! artifacts exist; `synthetic-lm` always runs (surrogate backend), so
+//! the JSON artifact is populated on every checkout.
 //!
-//!     cargo bench --bench runtime
+//!     cargo bench --bench runtime [-- --quick]
+//!
+//! Results land in `BENCH_runtime.json` at the repo root.
 
 use detonation::data::task_for;
 use detonation::runtime::Runtime;
+use detonation::util::json::Json;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     detonation::util::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (train_budget, eval_budget) = if quick { (0.2, 0.1) } else { (2.0, 1.0) };
     let rt = Runtime::cpu()?;
     let dir = std::path::PathBuf::from("artifacts");
-    for name in ["lm-tiny", "lm-small", "seq2seq-tiny", "vit-tiny"] {
-        if !dir.join(format!("{name}.meta.json")).exists() {
+    let mut rows = Vec::new();
+    for name in ["synthetic-lm", "lm-tiny", "lm-small", "seq2seq-tiny", "vit-tiny"] {
+        let is_synthetic = name.starts_with("synthetic");
+        if !is_synthetic && !dir.join(format!("{name}.meta.json")).exists() {
             println!("{name:<16} skipped (artifact missing — run `make artifacts`)");
             continue;
         }
@@ -26,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         model.train_step(&params, &batch)?;
         let t0 = Instant::now();
         let mut iters = 0u64;
-        while t0.elapsed().as_secs_f64() < 2.0 {
+        while t0.elapsed().as_secs_f64() < train_budget {
             std::hint::black_box(model.train_step(&params, &batch)?);
             iters += 1;
         }
@@ -34,17 +42,34 @@ fn main() -> anyhow::Result<()> {
 
         let t0 = Instant::now();
         let mut eiters = 0u64;
-        while t0.elapsed().as_secs_f64() < 1.0 {
+        while t0.elapsed().as_secs_f64() < eval_budget {
             std::hint::black_box(model.eval_step(&params, &batch)?);
             eiters += 1;
         }
         let eval_ms = t0.elapsed().as_secs_f64() / eiters as f64 * 1e3;
 
         let flops = model.manifest.step_flops();
+        let gflops = flops / (step_ms / 1e3) / 1e9;
         println!(
-            "{name:<16} train {step_ms:>8.2} ms/step  eval {eval_ms:>7.2} ms  ~{:.1} GFLOP/s",
-            flops / (step_ms / 1e3) / 1e9
+            "{name:<16} train {step_ms:>8.2} ms/step  eval {eval_ms:>7.2} ms  ~{gflops:.1} GFLOP/s"
         );
+        rows.push(Json::obj(vec![
+            ("model", Json::Str(name.to_string())),
+            ("train_ms_per_step", Json::Num(step_ms)),
+            ("eval_ms", Json::Num(eval_ms)),
+            ("gflops_per_sec", Json::Num(gflops)),
+        ]));
     }
+    let out = Json::obj(vec![
+        ("bench", Json::Str("runtime".into())),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_runtime.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -26,7 +26,18 @@
 //! one duration formula per algorithm, so serialized totals are identical
 //! bit-for-bit between the old and new clocks.
 
+//! ## Data plane
+//!
+//! The *data* side of every collective (the real averaging/copying) runs
+//! chunk-parallel on the caller's [`crate::parallel::WorkerPool`] over
+//! the fixed grid, staging accumulators and shards through the
+//! [`CollScratch`] arena threaded via [`CollCtx`] — so the steady state
+//! performs zero heap allocations (asserted in `benches/kernels.rs`) and
+//! is bit-identical to the scalar reference at any `--threads N`
+//! (prop-tested below).
+
 use crate::net::{LinkClass, NetModel, SimTime, Topology, TrafficMatrix};
+use crate::parallel::{self, SlicePtr, WorkerPool};
 
 /// One collective's cost description: what moves, over which link class,
 /// how long it occupies the participants' NICs once started, and (after
@@ -47,6 +58,9 @@ pub struct CommEvent {
     pub start: SimTime,
     /// Ids of the events whose completion gated this start.
     pub deps: Vec<u64>,
+    /// Participating ranks (empty until scheduled; the engine fills it —
+    /// Chrome-trace lanes map one tid per rank).
+    pub ranks: Vec<usize>,
 }
 
 impl CommEvent {
@@ -59,6 +73,7 @@ impl CommEvent {
             duration,
             start: 0.0,
             deps: Vec::new(),
+            ranks: Vec::new(),
         }
     }
 
@@ -192,11 +207,36 @@ pub fn record_ring_traffic(
     }
 }
 
-/// Context threaded through every collective call.
+/// Reusable workspace for the collectives' data plane: the mean
+/// accumulator plus the lifetime-erased buffer-pointer list the
+/// chunk-parallel kernels fan out over. One
+/// instance per trainer (threaded via [`CollCtx`]); after one warm-up
+/// step every buffer is at steady-state capacity and no collective call
+/// allocates.
+#[derive(Debug, Default)]
+pub struct CollScratch {
+    /// Elementwise-mean accumulator (whole-buffer sized).
+    acc: Vec<f32>,
+    /// Per-call lifetime-erased buffer views (cleared before each call
+    /// returns; only the capacity persists).
+    ptrs: Vec<SlicePtr<f32>>,
+}
+
+impl CollScratch {
+    pub fn new() -> CollScratch {
+        CollScratch::default()
+    }
+}
+
+/// Context threaded through every collective call: topology + cost
+/// model + traffic accounting, plus the worker pool the data plane runs
+/// on and the scratch arena it stages through.
 pub struct CollCtx<'a> {
     pub topo: &'a Topology,
     pub model: &'a NetModel,
     pub traffic: &'a TrafficMatrix,
+    pub pool: &'a WorkerPool,
+    pub scratch: &'a mut CollScratch,
 }
 
 impl<'a> CollCtx<'a> {
@@ -212,10 +252,31 @@ impl<'a> CollCtx<'a> {
     }
 }
 
+/// Stash lifetime-erased views of every buffer in the scratch pointer
+/// list (capacity reused across calls; cleared before return-by-use).
+fn buf_ptrs<'a>(ptrs: &'a mut Vec<SlicePtr<f32>>, bufs: &mut [&mut [f32]]) -> &'a [SlicePtr<f32>] {
+    ptrs.clear();
+    ptrs.extend(bufs.iter_mut().map(|b| SlicePtr::new(b)));
+    ptrs
+}
+
+/// Shard ranges must be ascending and pairwise disjoint — the
+/// chunk-parallel data plane writes them concurrently, so this is a
+/// soundness precondition (hard assert, O(g)); every real layout
+/// (`ShardSpec::even`) satisfies it.
+fn assert_disjoint(shards: &[(usize, usize)]) {
+    assert!(
+        shards.windows(2).all(|w| w[0].1 <= w[1].0),
+        "shard ranges must be ascending and disjoint: {shards:?}"
+    );
+}
+
 /// Ring all-reduce (average) over `bufs[i]` belonging to `group[i]`.
-/// Every buffer ends up holding the element-wise mean.
+/// Every buffer ends up holding the element-wise mean. Data plane runs
+/// chunk-parallel on `ctx.pool`, staging through `ctx.scratch` — zero
+/// steady-state allocations, bit-identical at any worker count.
 pub fn ring_all_reduce_avg(
-    ctx: &CollCtx,
+    ctx: &mut CollCtx,
     group: &[usize],
     bufs: &mut [&mut [f32]],
 ) -> SimTime {
@@ -227,17 +288,30 @@ pub fn ring_all_reduce_avg(
     let n = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == n));
 
-    // Semantics: mean into every buffer.
-    let mut acc = vec![0.0f32; n];
-    for b in bufs.iter() {
-        crate::tensor::axpy(&mut acc, 1.0, b);
-    }
-    let inv = 1.0 / g as f32;
-    for x in acc.iter_mut() {
-        *x *= inv;
-    }
-    for b in bufs.iter_mut() {
-        b.copy_from_slice(&acc);
+    // Semantics: mean into every buffer. Per element the accumulation
+    // order over `bufs` matches the scalar sweep exactly.
+    {
+        let CollScratch { acc, ptrs, .. } = &mut *ctx.scratch;
+        acc.clear();
+        acc.resize(n, 0.0);
+        let accp = SlicePtr::new(acc);
+        let bp = buf_ptrs(&mut *ptrs, bufs);
+        let inv = 1.0 / g as f32;
+        parallel::run_chunks(ctx.pool, n, |_w, lo, hi| {
+            // Safety: grid chunks are disjoint; every access below stays
+            // inside this task's [lo, hi).
+            let a = unsafe { accp.range(lo, hi) };
+            for p in bp {
+                crate::tensor::axpy(a, 1.0, unsafe { p.range(lo, hi) });
+            }
+            for x in a.iter_mut() {
+                *x *= inv;
+            }
+            for p in bp {
+                unsafe { p.range(lo, hi) }.copy_from_slice(a);
+            }
+        });
+        ptrs.clear();
     }
 
     // Cost: ring all-reduce = reduce-scatter + all-gather, each (g-1)
@@ -250,15 +324,17 @@ pub fn ring_all_reduce_avg(
 
 /// Ring reduce-scatter (average): after the call, `bufs[i]` holds the mean
 /// in its own shard range `[shards[i].0, shards[i].1)`; other regions are
-/// left untouched (FSDP only guarantees the owned shard).
+/// left untouched (FSDP only guarantees the owned shard). Chunk-parallel
+/// + scratch-staged like [`ring_all_reduce_avg`].
 pub fn ring_reduce_scatter_avg(
-    ctx: &CollCtx,
+    ctx: &mut CollCtx,
     group: &[usize],
     bufs: &mut [&mut [f32]],
     shards: &[(usize, usize)],
 ) -> SimTime {
     assert_eq!(group.len(), bufs.len());
     assert_eq!(group.len(), shards.len());
+    assert_disjoint(shards);
     let g = group.len();
     if g <= 1 {
         return 0.0;
@@ -266,17 +342,34 @@ pub fn ring_reduce_scatter_avg(
     let n = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == n));
 
-    // Mean of each shard region into its owner.
-    let inv = 1.0 / g as f32;
-    for (i, &(lo, hi)) in shards.iter().enumerate() {
-        let mut acc = vec![0.0f32; hi - lo];
-        for b in bufs.iter() {
-            crate::tensor::axpy(&mut acc, 1.0, &b[lo..hi]);
-        }
-        for x in acc.iter_mut() {
-            *x *= inv;
-        }
-        bufs[i][lo..hi].copy_from_slice(&acc);
+    // Mean of each shard region into its owner: each grid chunk handles
+    // the overlap with every shard range it intersects.
+    {
+        let CollScratch { acc, ptrs, .. } = &mut *ctx.scratch;
+        acc.clear();
+        acc.resize(n, 0.0);
+        let accp = SlicePtr::new(acc);
+        let bp = buf_ptrs(&mut *ptrs, bufs);
+        let inv = 1.0 / g as f32;
+        parallel::run_chunks(ctx.pool, n, |_w, clo, chi| {
+            for (i, &(slo, shi)) in shards.iter().enumerate() {
+                let (lo, hi) = (clo.max(slo), chi.min(shi));
+                if lo >= hi {
+                    continue;
+                }
+                // Safety: (chunk ∩ shard) regions are pairwise disjoint
+                // across tasks and across shards.
+                let a = unsafe { accp.range(lo, hi) };
+                for p in bp {
+                    crate::tensor::axpy(a, 1.0, unsafe { p.range(lo, hi) });
+                }
+                for x in a.iter_mut() {
+                    *x *= inv;
+                }
+                unsafe { bp[i].range(lo, hi) }.copy_from_slice(a);
+            }
+        });
+        ptrs.clear();
     }
 
     let max_shard_bytes = shards.iter().map(|&(lo, hi)| (hi - lo) * 4).max().unwrap() as u64;
@@ -286,14 +379,16 @@ pub fn ring_reduce_scatter_avg(
 }
 
 /// Ring all-gather: rank i contributes `bufs[i][shards[i]]`; afterwards
-/// every buffer holds every shard (i.e. the full vector).
+/// every buffer holds every shard (i.e. the full vector). Chunk-parallel
+/// owner→peers copies; no shard staging clones.
 pub fn ring_all_gather(
-    ctx: &CollCtx,
+    ctx: &mut CollCtx,
     group: &[usize],
     bufs: &mut [&mut [f32]],
     shards: &[(usize, usize)],
 ) -> SimTime {
     assert_eq!(group.len(), bufs.len());
+    assert_disjoint(shards);
     let g = group.len();
     if g <= 1 {
         return 0.0;
@@ -301,15 +396,27 @@ pub fn ring_all_gather(
     let n = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == n));
 
-    // Collect every shard from its owner, then write into all buffers.
-    let mut owned: Vec<Vec<f32>> = Vec::with_capacity(g);
-    for (i, &(lo, hi)) in shards.iter().enumerate() {
-        owned.push(bufs[i][lo..hi].to_vec());
-    }
-    for b in bufs.iter_mut() {
-        for (&(lo, hi), shard) in shards.iter().zip(&owned) {
-            b[lo..hi].copy_from_slice(shard);
-        }
+    // Copy every shard from its owner into all peers, chunk-parallel.
+    {
+        let ptrs = &mut ctx.scratch.ptrs;
+        let bp = buf_ptrs(&mut *ptrs, bufs);
+        parallel::run_chunks(ctx.pool, n, |_w, clo, chi| {
+            for (i, &(slo, shi)) in shards.iter().enumerate() {
+                let (lo, hi) = (clo.max(slo), chi.min(shi));
+                if lo >= hi {
+                    continue;
+                }
+                // Safety: disjoint (chunk ∩ shard) regions per task; the
+                // owner's region is read-only here, peers are written.
+                let src: &[f32] = unsafe { bp[i].range(lo, hi) };
+                for (j, p) in bp.iter().enumerate() {
+                    if j != i {
+                        unsafe { p.range(lo, hi) }.copy_from_slice(src);
+                    }
+                }
+            }
+        });
+        ptrs.clear();
     }
 
     let max_shard_bytes = shards.iter().map(|&(lo, hi)| (hi - lo) * 4).max().unwrap() as u64;
@@ -322,7 +429,7 @@ pub fn ring_all_gather(
 /// primitive). Returns (gathered payloads in group order, elapsed time).
 /// Received volume per rank is `Σ_{j≠i} bytes_j` — linear in group size.
 pub fn naive_all_gather_bytes<T: Clone>(
-    ctx: &CollCtx,
+    ctx: &mut CollCtx,
     group: &[usize],
     payloads: &[(T, u64)],
 ) -> (Vec<T>, SimTime) {
@@ -348,8 +455,9 @@ pub fn naive_all_gather_bytes<T: Clone>(
 }
 
 /// Broadcast `src_buf` (group index `src`) into every buffer (tree cost).
+/// Chunk-parallel src→peers copies; no staging clone.
 pub fn broadcast(
-    ctx: &CollCtx,
+    ctx: &mut CollCtx,
     group: &[usize],
     bufs: &mut [&mut [f32]],
     src: usize,
@@ -360,11 +468,19 @@ pub fn broadcast(
         return 0.0;
     }
     let n = bufs[src].len();
-    let data = bufs[src].to_vec();
-    for (i, b) in bufs.iter_mut().enumerate() {
-        if i != src {
-            b.copy_from_slice(&data);
-        }
+    {
+        let ptrs = &mut ctx.scratch.ptrs;
+        let bp = buf_ptrs(&mut *ptrs, bufs);
+        parallel::run_chunks(ctx.pool, n, |_w, lo, hi| {
+            // Safety: disjoint grid chunks; src is read-only, peers written.
+            let data: &[f32] = unsafe { bp[src].range(lo, hi) };
+            for (i, p) in bp.iter().enumerate() {
+                if i != src {
+                    unsafe { p.range(lo, hi) }.copy_from_slice(data);
+                }
+            }
+        });
+        ptrs.clear();
     }
     let bytes = (n * 4) as u64;
     for (j, _) in group.iter().enumerate() {
@@ -386,11 +502,14 @@ mod tests {
         topo: &'a Topology,
         model: &'a NetModel,
         traffic: &'a TrafficMatrix,
+        scratch: &'a mut CollScratch,
     ) -> CollCtx<'a> {
         CollCtx {
             topo,
             model,
             traffic,
+            pool: WorkerPool::inline(),
+            scratch,
         }
     }
 
@@ -403,10 +522,11 @@ mod tests {
         let topo = Topology::new(2, 2);
         let model = NetModel::hpc();
         let traffic = TrafficMatrix::new(2);
-        let c = ctx(&topo, &model, &traffic);
+        let mut s = CollScratch::new();
+        let mut c = ctx(&topo, &model, &traffic, &mut s);
         let mut a = vec![1.0f32, 2.0];
         let mut b = vec![3.0f32, 6.0];
-        let t = ring_all_reduce_avg(&c, &[0, 1], &mut [&mut a, &mut b]);
+        let t = ring_all_reduce_avg(&mut c, &[0, 1], &mut [&mut a, &mut b]);
         assert_eq!(a, vec![2.0, 4.0]);
         assert_eq!(b, vec![2.0, 4.0]);
         assert!(t > 0.0);
@@ -420,7 +540,8 @@ mod tests {
             let topo = Topology::new(1, gsz);
             let model = NetModel::hpc();
             let traffic = TrafficMatrix::new(1);
-            let c = ctx(&topo, &model, &traffic);
+            let mut s = CollScratch::new();
+            let mut c = ctx(&topo, &model, &traffic, &mut s);
             let group: Vec<usize> = (0..gsz).collect();
             let shards = even_shards(n, gsz);
 
@@ -430,16 +551,16 @@ mod tests {
             let mut a: Vec<Vec<f32>> = orig.clone();
             {
                 let mut refs: Vec<&mut [f32]> = a.iter_mut().map(|v| v.as_mut_slice()).collect();
-                ring_all_reduce_avg(&c, &group, &mut refs);
+                ring_all_reduce_avg(&mut c, &group, &mut refs);
             }
 
             // Path B: reduce-scatter + all-gather
             let mut b: Vec<Vec<f32>> = orig.clone();
             {
                 let mut refs: Vec<&mut [f32]> = b.iter_mut().map(|v| v.as_mut_slice()).collect();
-                ring_reduce_scatter_avg(&c, &group, &mut refs, &shards);
+                ring_reduce_scatter_avg(&mut c, &group, &mut refs, &shards);
                 let mut refs: Vec<&mut [f32]> = b.iter_mut().map(|v| v.as_mut_slice()).collect();
-                ring_all_gather(&c, &group, &mut refs, &shards);
+                ring_all_gather(&mut c, &group, &mut refs, &shards);
             }
 
             for i in 0..gsz {
@@ -456,10 +577,11 @@ mod tests {
         let topo = Topology::new(1, 2);
         let model = NetModel::hpc();
         let traffic = TrafficMatrix::new(1);
-        let c = ctx(&topo, &model, &traffic);
+        let mut s = CollScratch::new();
+        let mut c = ctx(&topo, &model, &traffic, &mut s);
         let mut a = vec![1.0f32, 1.0, 5.0, 5.0];
         let mut b = vec![3.0f32, 3.0, 7.0, 7.0];
-        ring_reduce_scatter_avg(&c, &[0, 1], &mut [&mut a, &mut b], &[(0, 2), (2, 4)]);
+        ring_reduce_scatter_avg(&mut c, &[0, 1], &mut [&mut a, &mut b], &[(0, 2), (2, 4)]);
         assert_eq!(a, vec![2.0, 2.0, 5.0, 5.0]); // own shard averaged
         assert_eq!(b, vec![3.0, 3.0, 6.0, 6.0]);
     }
@@ -469,10 +591,11 @@ mod tests {
         let topo = Topology::new(1, 2);
         let model = NetModel::hpc();
         let traffic = TrafficMatrix::new(1);
-        let c = ctx(&topo, &model, &traffic);
+        let mut s = CollScratch::new();
+        let mut c = ctx(&topo, &model, &traffic, &mut s);
         let mut a = vec![1.0f32, 2.0, 0.0, 0.0];
         let mut b = vec![0.0f32, 0.0, 3.0, 4.0];
-        ring_all_gather(&c, &[0, 1], &mut [&mut a, &mut b], &[(0, 2), (2, 4)]);
+        ring_all_gather(&mut c, &[0, 1], &mut [&mut a, &mut b], &[(0, 2), (2, 4)]);
         assert_eq!(a, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0]);
     }
@@ -486,10 +609,11 @@ mod tests {
         for nodes in [2usize, 8, 32] {
             let topo = Topology::new(nodes, 1);
             let traffic = TrafficMatrix::new(nodes);
-            let c = ctx(&topo, &model, &traffic);
+            let mut s = CollScratch::new();
+            let mut c = ctx(&topo, &model, &traffic, &mut s);
             let group: Vec<usize> = (0..nodes).collect();
             let payloads: Vec<((), u64)> = group.iter().map(|_| ((), payload_bytes)).collect();
-            let (_, t) = naive_all_gather_bytes(&c, &group, &payloads);
+            let (_, t) = naive_all_gather_bytes(&mut c, &group, &payloads);
             times.push(t);
         }
         let r1 = times[1] / times[0]; // 8 vs 2 nodes → ~7/1
@@ -508,11 +632,12 @@ mod tests {
         let t_at = |nodes: usize| {
             let topo = Topology::new(nodes, 1);
             let traffic = TrafficMatrix::new(nodes);
-            let c = ctx(&topo, &model, &traffic);
+            let mut s = CollScratch::new();
+            let mut c = ctx(&topo, &model, &traffic, &mut s);
             let group: Vec<usize> = (0..nodes).collect();
             let mut bufs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0; n]).collect();
             let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
-            ring_all_reduce_avg(&c, &group, &mut refs)
+            ring_all_reduce_avg(&mut c, &group, &mut refs)
         };
         let t2 = t_at(2);
         let t8 = t_at(8);
@@ -520,14 +645,121 @@ mod tests {
     }
 
     #[test]
+    fn pooled_collectives_bit_match_scalar_reference_at_any_width() {
+        // The chunk-parallel data plane must reproduce the pre-PR scalar
+        // loops bit-for-bit at every pool width (buffers span multiple
+        // grid chunks so the parallel path is actually exercised).
+        use crate::parallel::CHUNK;
+        proptest(5, |g| {
+            let gsz = g.usize(2, 4);
+            let per = CHUNK / 2 + g.usize(0, CHUNK);
+            let n = gsz * per;
+            let orig: Vec<Vec<f32>> = (0..gsz).map(|_| g.vec_normal(n, 1.0)).collect();
+            let shards = even_shards(n, gsz);
+            let group: Vec<usize> = (0..gsz).collect();
+            let inv = 1.0 / gsz as f32;
+
+            // Scalar references: the pre-PR loops, spelled out.
+            let mut want_ar = orig.clone();
+            {
+                let mut acc = vec![0.0f32; n];
+                for b in want_ar.iter() {
+                    crate::tensor::axpy(&mut acc, 1.0, b);
+                }
+                for x in acc.iter_mut() {
+                    *x *= inv;
+                }
+                for b in want_ar.iter_mut() {
+                    b.copy_from_slice(&acc);
+                }
+            }
+            let mut want_rs = orig.clone();
+            for (i, &(lo, hi)) in shards.iter().enumerate() {
+                let mut acc = vec![0.0f32; hi - lo];
+                for b in want_rs.iter() {
+                    crate::tensor::axpy(&mut acc, 1.0, &b[lo..hi]);
+                }
+                for x in acc.iter_mut() {
+                    *x *= inv;
+                }
+                want_rs[i][lo..hi].copy_from_slice(&acc);
+            }
+            let mut want_ag = orig.clone();
+            {
+                let owned: Vec<Vec<f32>> = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(lo, hi))| want_ag[i][lo..hi].to_vec())
+                    .collect();
+                for b in want_ag.iter_mut() {
+                    for (&(lo, hi), shard) in shards.iter().zip(&owned) {
+                        b[lo..hi].copy_from_slice(shard);
+                    }
+                }
+            }
+
+            let bits_eq = |a: &[Vec<f32>], b: &[Vec<f32>]| {
+                a.iter().zip(b).all(|(x, y)| {
+                    x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                })
+            };
+            let model = NetModel::hpc();
+            for threads in [1usize, 2, 4] {
+                let pool = crate::parallel::WorkerPool::new(threads);
+                let topo = Topology::new(1, gsz);
+                let traffic = TrafficMatrix::new(1);
+                let mut scr = CollScratch::new();
+                let mut c = CollCtx {
+                    topo: &topo,
+                    model: &model,
+                    traffic: &traffic,
+                    pool: &pool,
+                    scratch: &mut scr,
+                };
+                let mut got = orig.clone();
+                {
+                    let mut refs: Vec<&mut [f32]> =
+                        got.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    ring_all_reduce_avg(&mut c, &group, &mut refs);
+                }
+                prop_assert(
+                    bits_eq(&got, &want_ar),
+                    format!("all-reduce diverged: g={gsz} n={n} threads={threads}"),
+                );
+                let mut got = orig.clone();
+                {
+                    let mut refs: Vec<&mut [f32]> =
+                        got.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    ring_reduce_scatter_avg(&mut c, &group, &mut refs, &shards);
+                }
+                prop_assert(
+                    bits_eq(&got, &want_rs),
+                    format!("reduce-scatter diverged: g={gsz} n={n} threads={threads}"),
+                );
+                let mut got = orig.clone();
+                {
+                    let mut refs: Vec<&mut [f32]> =
+                        got.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    ring_all_gather(&mut c, &group, &mut refs, &shards);
+                }
+                prop_assert(
+                    bits_eq(&got, &want_ag),
+                    format!("all-gather diverged: g={gsz} n={n} threads={threads}"),
+                );
+            }
+        });
+    }
+
+    #[test]
     fn traffic_matrix_sees_inter_node_bytes() {
         let topo = Topology::new(2, 1);
         let model = NetModel::hpc();
         let traffic = TrafficMatrix::new(2);
-        let c = ctx(&topo, &model, &traffic);
+        let mut s = CollScratch::new();
+        let mut c = ctx(&topo, &model, &traffic, &mut s);
         let mut a = vec![0.0f32; 64];
         let mut b = vec![2.0f32; 64];
-        ring_all_reduce_avg(&c, &[0, 1], &mut [&mut a, &mut b]);
+        ring_all_reduce_avg(&mut c, &[0, 1], &mut [&mut a, &mut b]);
         assert!(traffic.inter_node_bytes() > 0);
         assert_eq!(traffic.intra_node_bytes(), 0);
     }
@@ -537,11 +769,12 @@ mod tests {
         let topo = Topology::new(1, 4);
         let model = NetModel::hpc();
         let traffic = TrafficMatrix::new(1);
-        let c = ctx(&topo, &model, &traffic);
+        let mut s = CollScratch::new();
+        let mut c = ctx(&topo, &model, &traffic, &mut s);
         let mut bufs: Vec<Vec<f32>> = vec![vec![0.0; 8]; 4];
         bufs[2] = vec![7.0; 8];
         let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
-        let t = broadcast(&c, &[0, 1, 2, 3], &mut refs, 2);
+        let t = broadcast(&mut c, &[0, 1, 2, 3], &mut refs, 2);
         assert!(t > 0.0);
         for b in &bufs {
             assert_eq!(b, &vec![7.0; 8]);
@@ -555,25 +788,26 @@ mod tests {
         let topo = Topology::new(2, 1);
         let model = NetModel::hpc();
         let traffic = TrafficMatrix::new(2);
-        let c = ctx(&topo, &model, &traffic);
+        let mut s = CollScratch::new();
+        let mut c = ctx(&topo, &model, &traffic, &mut s);
         let group = [0usize, 1];
         let link = Link::of(&model, LinkClass::InterNode);
 
         let n = 1000usize;
         let mut a = vec![1.0f32; n];
         let mut b = vec![2.0f32; n];
-        let t = ring_all_reduce_avg(&c, &group, &mut [&mut a, &mut b]);
+        let t = ring_all_reduce_avg(&mut c, &group, &mut [&mut a, &mut b]);
         assert_eq!(t, ring_all_reduce_event(&link, 2, (n * 4) as u64).duration);
 
         let shards = [(0usize, 500usize), (500, 1000)];
-        let t = ring_reduce_scatter_avg(&c, &group, &mut [&mut a, &mut b], &shards);
+        let t = ring_reduce_scatter_avg(&mut c, &group, &mut [&mut a, &mut b], &shards);
         assert_eq!(t, ring_reduce_scatter_event(&link, 2, 2000).duration);
 
-        let t = ring_all_gather(&c, &group, &mut [&mut a, &mut b], &shards);
+        let t = ring_all_gather(&mut c, &group, &mut [&mut a, &mut b], &shards);
         assert_eq!(t, ring_all_gather_event(&link, 2, 2000).duration);
 
         let payloads: Vec<((), u64)> = vec![((), 777), ((), 99)];
-        let (_, t) = naive_all_gather_bytes(&c, &group, &payloads);
+        let (_, t) = naive_all_gather_bytes(&mut c, &group, &payloads);
         assert_eq!(t, naive_all_gather_event(&link, &[777, 99]).duration);
     }
 
@@ -620,14 +854,15 @@ mod tests {
         let topo = Topology::new(1, 1);
         let model = NetModel::hpc();
         let traffic = TrafficMatrix::new(1);
-        let c = ctx(&topo, &model, &traffic);
+        let mut s = CollScratch::new();
+        let mut c = ctx(&topo, &model, &traffic, &mut s);
         let mut a = vec![1.0f32; 4];
-        assert_eq!(ring_all_reduce_avg(&c, &[0], &mut [&mut a]), 0.0);
+        assert_eq!(ring_all_reduce_avg(&mut c, &[0], &mut [&mut a]), 0.0);
         assert_eq!(
-            ring_all_gather(&c, &[0], &mut [&mut a], &[(0, 4)]),
+            ring_all_gather(&mut c, &[0], &mut [&mut a], &[(0, 4)]),
             0.0
         );
-        let (g, t) = naive_all_gather_bytes(&c, &[0], &[((), 100)]);
+        let (g, t) = naive_all_gather_bytes(&mut c, &[0], &[((), 100)]);
         assert_eq!(g.len(), 1);
         assert_eq!(t, 0.0);
     }

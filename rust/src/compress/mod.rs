@@ -226,8 +226,13 @@ pub struct Scratch {
     pub perm: Vec<u32>,
     /// Index-set workspace for seed-regenerated schemes (Random).
     pub idx: Vec<usize>,
-    /// Blocked-transform workspace for the DCT.
+    /// Blocked-transform workspace for the DCT (serial paths).
     pub dct: crate::dct::DctScratch,
+    /// Per-worker DCT arenas for pool-dispatched block batches (one per
+    /// pool execution slot; see [`Scratch::ensure_dct_workers`]).
+    pub dct_workers: Vec<crate::dct::DctScratch>,
+    /// The worker pool pooled pipelines dispatch onto (inline default).
+    pub pool: crate::parallel::PoolHandle,
     pool_f32: Vec<Vec<f32>>,
     pool_u32: Vec<Vec<u32>>,
 }
@@ -235,6 +240,23 @@ pub struct Scratch {
 impl Scratch {
     pub fn new() -> Scratch {
         Scratch::default()
+    }
+
+    /// A scratch arena whose pipelines dispatch onto `pool`.
+    pub fn with_pool(pool: crate::parallel::PoolHandle) -> Scratch {
+        Scratch {
+            pool,
+            ..Scratch::default()
+        }
+    }
+
+    /// Make sure one [`crate::dct::DctScratch`] exists per pool slot
+    /// (grow-only; a one-time allocation per trainer, not per step).
+    pub fn ensure_dct_workers(&mut self) {
+        let w = self.pool.get().width();
+        if self.dct_workers.len() < w {
+            self.dct_workers.resize_with(w, Default::default);
+        }
     }
 
     /// An empty f32 vector from the pool (capacity retained across reuse).

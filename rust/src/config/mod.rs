@@ -41,9 +41,15 @@ pub struct ExperimentConfig {
     /// (the default); false = legacy barrier-serialized phases
     /// (`--no-overlap`, bit-parity with the old `SimClock`).
     pub overlap: bool,
-    /// Worker threads for the per-stream fwd/bwd fan-out (1 = sequential,
-    /// 0 = one worker per stream). Never changes numerics.
+    /// Execution slots of the persistent worker pool that runs the data
+    /// plane: per-stream fwd/bwd fan-out *and* the chunk-parallel
+    /// kernels (collectives, optimizer updates, DCT batches, eval).
+    /// 1 = fully inline, 0 = one slot per hardware thread. Never changes
+    /// numerics — results are bit-identical for any value (prop-tested).
     pub threads: usize,
+    /// Dump the engine's scheduled comm events as Chrome-trace JSON to
+    /// this path after the run (`--trace-out`; None = off).
+    pub trace_out: Option<PathBuf>,
     /// Pipelined-comm bucket size in MiB (`--bucket-mb`): reduce-scatter
     /// and replication-gather traffic splits into per-bucket events so
     /// the first bucket's communication overlaps the remaining buckets'
@@ -76,6 +82,7 @@ impl Default for ExperimentConfig {
             compute_streams: 0,
             overlap: true,
             threads: 1,
+            trace_out: None,
             bucket_mb: 0.0,
             cluster: ClusterModel::uniform(),
         }
@@ -125,6 +132,15 @@ impl ExperimentConfig {
             ("compute_streams", Json::Num(self.compute_streams as f64)),
             ("overlap", Json::Bool(self.overlap)),
             ("threads", Json::Num(self.threads as f64)),
+            (
+                "trace_out",
+                Json::Str(
+                    self.trace_out
+                        .as_ref()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_default(),
+                ),
+            ),
             ("bucket_mb", Json::Num(self.bucket_mb)),
             (
                 "stragglers",
@@ -164,6 +180,13 @@ impl ExperimentConfig {
             "streams" => self.compute_streams = value.parse()?,
             "overlap" => self.overlap = value.parse()?,
             "threads" => self.threads = value.parse()?,
+            "trace-out" => {
+                self.trace_out = if value.is_empty() {
+                    None
+                } else {
+                    Some(value.into())
+                };
+            }
             "bucket-mb" => {
                 let mb: f64 = value.parse()?;
                 anyhow::ensure!(mb >= 0.0 && mb.is_finite(), "bucket-mb must be >= 0");
@@ -247,6 +270,15 @@ mod tests {
         assert!(c.apply_arg("bucket-mb", "-1").is_err());
         assert!(c.apply_arg("bucket-mb", "nan").is_err());
         c.apply_arg("bucket-mb", "0").unwrap();
+        // trace-out: defaults off, parses a path, empty clears
+        assert!(c.trace_out.is_none());
+        c.apply_arg("trace-out", "/tmp/sched.json").unwrap();
+        assert_eq!(
+            c.trace_out.as_deref(),
+            Some(std::path::Path::new("/tmp/sched.json"))
+        );
+        c.apply_arg("trace-out", "").unwrap();
+        assert!(c.trace_out.is_none());
         assert_eq!(c.cluster.slowdown_of(1), 2.0);
         assert!((c.cluster.node_bw(&c.net, 0) - 12.5e6).abs() < 1.0);
         assert!(c.apply_arg("straggler", "1:-2").is_err());

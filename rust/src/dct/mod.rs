@@ -295,6 +295,46 @@ impl Dct {
         }
     }
 
+    /// Pool-dispatched blocked chunked forward: the fixed `BLOCK_F64`
+    /// block grid of [`Dct::forward_chunked_with`] fans out across the
+    /// worker pool, each slot transforming its blocks into `ws[slot]`'s
+    /// arena. Block boundaries depend only on `(len, n)` — never on the
+    /// worker count — and each block runs the exact serial kernel, so
+    /// output is bit-identical to the serial path at any `--threads N`.
+    /// `ws` must hold at least `pool.width()` arenas.
+    pub fn forward_chunked_pooled(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        pool: &crate::parallel::WorkerPool,
+        ws: &mut [DctScratch],
+    ) {
+        assert_eq!(x.len() % self.n, 0);
+        assert_eq!(x.len(), out.len());
+        let n = self.n;
+        if !(n.is_power_of_two() && n >= 8) {
+            for (xi, oi) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+                self.forward(xi, oi);
+            }
+            return;
+        }
+        assert!(ws.len() >= pool.width(), "one DctScratch per pool slot");
+        let block = self.block_chunks();
+        let n_chunks = x.len() / n;
+        let n_blocks = n_chunks.div_ceil(block);
+        let outp = crate::parallel::SlicePtr::new(out);
+        let wsp = crate::parallel::SlicePtr::new(ws);
+        pool.run(n_blocks, |w, b| {
+            let base = b * block;
+            let cnt = block.min(n_chunks - base);
+            let (lo, hi) = (base * n, (base + cnt) * n);
+            // Safety: blocks are disjoint; slot `w` is owned by exactly
+            // one thread for the duration of the job.
+            let s = unsafe { &mut wsp.range(w, w + 1)[0] };
+            self.forward_block(&x[lo..hi], unsafe { outp.range(lo, hi) }, s);
+        });
+    }
+
     /// Chunked inverse. Allocates a fresh [`DctScratch`] — hot callers
     /// should hold one and use [`Dct::inverse_chunked_with`].
     pub fn inverse_chunked(&self, c: &[f32], out: &mut [f32]) {
@@ -766,6 +806,29 @@ mod tests {
                 blocked == recursive,
                 format!("n={n} chunks={n_chunks}: blocked forward diverged"),
             );
+        });
+    }
+
+    #[test]
+    fn pooled_forward_bit_matches_serial_at_any_width() {
+        proptest(12, |g| {
+            let n = g.pow2(3, 8);
+            let n_chunks = g.usize(1, 2 * (BLOCK_F64 / n).max(1) + 3);
+            let x = g.vec_normal(n * n_chunks, 1.0);
+            let d = Dct::plan(n);
+            let mut serial = vec![0.0f32; x.len()];
+            d.forward_chunked(&x, &mut serial);
+            for threads in [1usize, 2, 4] {
+                let pool = crate::parallel::WorkerPool::new(threads);
+                let mut ws: Vec<DctScratch> =
+                    (0..pool.width()).map(|_| DctScratch::new()).collect();
+                let mut pooled = vec![0.0f32; x.len()];
+                d.forward_chunked_pooled(&x, &mut pooled, &pool, &mut ws);
+                prop_assert(
+                    pooled.iter().zip(&serial).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    format!("n={n} chunks={n_chunks} threads={threads}: pooled diverged"),
+                );
+            }
         });
     }
 

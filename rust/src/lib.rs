@@ -41,6 +41,16 @@
 //!   bandwidth overrides on top of the homogeneous α–β [`net::NetModel`];
 //! * metrics split each step into compute vs exposed-comm vs hidden-comm
 //!   on the critical rank (`results/*.steps.csv` columns).
+//!
+//! ## Wall-clock model: the worker pool
+//!
+//! Orthogonal to simulated time, the *host* data plane runs on a
+//! persistent [`parallel::WorkerPool`] built once per trainer from
+//! `--threads`: the per-stream fwd/bwd fan-out, ring collectives, fused
+//! optimizer kernels, DeMo decode/residual scatter, blocked DCT batches,
+//! and the surrogate eval loop all dispatch chunk-parallel work onto it
+//! over a fixed grid, so results are bit-identical for any `--threads N`
+//! (prop-tested) and the steady-state hot path allocates nothing.
 
 pub mod collectives;
 pub mod compress;
@@ -51,6 +61,7 @@ pub mod dct;
 pub mod metrics;
 pub mod net;
 pub mod optim;
+pub mod parallel;
 pub mod replicate;
 pub mod runtime;
 pub mod shard;

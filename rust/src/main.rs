@@ -58,7 +58,19 @@ fn train_parser() -> ArgParser {
         .opt("val-batches", "8", "validation batches")
         .opt("inter-mbps", "0", "throttle inter-node bandwidth (Mbps, 0 = HPC default)")
         .opt("streams", "0", "distinct gradient streams (0 = world size)")
-        .opt("threads", "1", "fwd/bwd worker threads (0 = one per stream)")
+        .opt(
+            "threads",
+            "1",
+            "persistent worker-pool slots driving fwd/bwd fan-out AND the \
+             chunk-parallel kernels (collectives, optimizer, DCT, eval); \
+             0 = one per hardware thread; never changes numerics",
+        )
+        .opt(
+            "trace-out",
+            "",
+            "write the step schedule (comm events, per-rank lanes) as \
+             Chrome-trace JSON to this path after the run",
+        )
         .opt(
             "bucket-mb",
             "0",
@@ -87,7 +99,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if args.flag("no-overlap") {
         cfg.overlap = false;
     }
-    for key in ["straggler", "node-mbps"] {
+    for key in ["straggler", "node-mbps", "trace-out"] {
         if !args.str(key).is_empty() {
             cfg.apply_arg(key, args.str(key))?;
         }

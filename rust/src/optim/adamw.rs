@@ -8,6 +8,7 @@
 //! red baseline curve (Figs 1, 3–6).
 
 use super::Optimizer;
+use crate::parallel::{self, PoolHandle, SlicePtr};
 
 pub struct AdamW {
     pub beta1: f32,
@@ -18,6 +19,7 @@ pub struct AdamW {
     m2: Vec<f32>,
     buffer: Vec<f32>,
     t: u64,
+    pool: PoolHandle,
 }
 
 impl AdamW {
@@ -31,6 +33,7 @@ impl AdamW {
             m2: vec![0.0; shard_len],
             buffer: vec![0.0; shard_len],
             t: 0,
+            pool: PoolHandle::default(),
         }
     }
 }
@@ -38,6 +41,10 @@ impl AdamW {
 impl Optimizer for AdamW {
     fn name(&self) -> String {
         format!("adamw(b1={},b2={})", self.beta1, self.beta2)
+    }
+
+    fn attach_pool(&mut self, pool: PoolHandle) {
+        self.pool = pool;
     }
 
     fn accumulate(&mut self, grad: &[f32]) {
@@ -52,19 +59,31 @@ impl Optimizer for AdamW {
     fn apply(&mut self, params: &mut [f32], q: &[f32], lr: f32) {
         debug_assert_eq!(params.len(), q.len());
         self.t += 1;
-        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        for i in 0..params.len() {
-            let g = q[i];
-            self.m1[i] = self.beta1 * self.m1[i] + (1.0 - self.beta1) * g;
-            self.m2[i] = self.beta2 * self.m2[i] + (1.0 - self.beta2) * g * g;
-            let mhat = self.m1[i] / bc1;
-            let vhat = self.m2[i] / bc2;
-            if self.weight_decay > 0.0 {
-                params[i] *= 1.0 - lr * self.weight_decay;
+        let (beta1, beta2, eps, wd) = (self.beta1, self.beta2, self.eps, self.weight_decay);
+        let bc1 = 1.0 - beta1.powi(self.t as i32);
+        let bc2 = 1.0 - beta2.powi(self.t as i32);
+        // Fused single sweep (moments + decay + step), chunk-parallel —
+        // same per-element float chain as the scalar loop.
+        let pool = self.pool.clone();
+        let m1 = SlicePtr::new(&mut self.m1);
+        let m2 = SlicePtr::new(&mut self.m2);
+        let ps = SlicePtr::new(params);
+        parallel::run_chunks(pool.get(), q.len(), |_w, lo, hi| {
+            // Safety: grid chunks are disjoint per task.
+            let m1 = unsafe { m1.range(lo, hi) };
+            let m2 = unsafe { m2.range(lo, hi) };
+            let ps = unsafe { ps.range(lo, hi) };
+            for (i, &g) in q[lo..hi].iter().enumerate() {
+                m1[i] = beta1 * m1[i] + (1.0 - beta1) * g;
+                m2[i] = beta2 * m2[i] + (1.0 - beta2) * g * g;
+                let mhat = m1[i] / bc1;
+                let vhat = m2[i] / bc2;
+                if wd > 0.0 {
+                    ps[i] *= 1.0 - lr * wd;
+                }
+                ps[i] -= lr * mhat / (vhat.sqrt() + eps);
             }
-            params[i] -= lr * mhat / (vhat.sqrt() + self.eps);
-        }
+        });
     }
 
     fn state_bytes(&self) -> u64 {

@@ -8,7 +8,8 @@
 //! direction* into the replication buffer; replicators then exchange the
 //! selected components of that buffer across nodes.
 
-use super::Optimizer;
+use super::{fused_decay_step, Optimizer};
+use crate::parallel::{self, PoolHandle, SlicePtr};
 
 pub struct DecoupledAdamW {
     pub beta1: f32,
@@ -20,6 +21,7 @@ pub struct DecoupledAdamW {
     /// Accumulated not-yet-replicated update mass (the replication buffer).
     buffer: Vec<f32>,
     t: u64,
+    pool: PoolHandle,
 }
 
 impl DecoupledAdamW {
@@ -33,6 +35,7 @@ impl DecoupledAdamW {
             m2: vec![0.0; shard_len],
             buffer: vec![0.0; shard_len],
             t: 0,
+            pool: PoolHandle::default(),
         }
     }
 }
@@ -42,21 +45,38 @@ impl Optimizer for DecoupledAdamW {
         format!("decoupled-adamw(b1={},b2={})", self.beta1, self.beta2)
     }
 
+    fn attach_pool(&mut self, pool: PoolHandle) {
+        self.pool = pool;
+    }
+
     fn accumulate(&mut self, grad: &[f32]) {
         debug_assert_eq!(grad.len(), self.m1.len());
         self.t += 1;
-        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        for i in 0..grad.len() {
-            let g = grad[i];
-            self.m1[i] = self.beta1 * self.m1[i] + (1.0 - self.beta1) * g;
-            self.m2[i] = self.beta2 * self.m2[i] + (1.0 - self.beta2) * g * g;
-            let mhat = self.m1[i] / bc1;
-            let vhat = self.m2[i] / bc2;
-            // The Adam update direction joins whatever residual the
-            // replicator left behind from previous steps.
-            self.buffer[i] += mhat / (vhat.sqrt() + self.eps);
-        }
+        let (beta1, beta2, eps) = (self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 - beta1.powi(self.t as i32);
+        let bc2 = 1.0 - beta2.powi(self.t as i32);
+        // Fused single sweep: both moment updates and the buffer push in
+        // one pass, chunk-parallel (pure elementwise — bit-identical at
+        // any worker count).
+        let pool = self.pool.clone();
+        let m1 = SlicePtr::new(&mut self.m1);
+        let m2 = SlicePtr::new(&mut self.m2);
+        let buf = SlicePtr::new(&mut self.buffer);
+        parallel::run_chunks(pool.get(), grad.len(), |_w, lo, hi| {
+            // Safety: grid chunks are disjoint per task.
+            let m1 = unsafe { m1.range(lo, hi) };
+            let m2 = unsafe { m2.range(lo, hi) };
+            let buf = unsafe { buf.range(lo, hi) };
+            for (i, &g) in grad[lo..hi].iter().enumerate() {
+                m1[i] = beta1 * m1[i] + (1.0 - beta1) * g;
+                m2[i] = beta2 * m2[i] + (1.0 - beta2) * g * g;
+                let mhat = m1[i] / bc1;
+                let vhat = m2[i] / bc2;
+                // The Adam update direction joins whatever residual the
+                // replicator left behind from previous steps.
+                buf[i] += mhat / (vhat.sqrt() + eps);
+            }
+        });
     }
 
     fn buffer_mut(&mut self) -> &mut [f32] {
@@ -65,13 +85,7 @@ impl Optimizer for DecoupledAdamW {
 
     fn apply(&mut self, params: &mut [f32], q: &[f32], lr: f32) {
         debug_assert_eq!(params.len(), q.len());
-        if self.weight_decay > 0.0 {
-            let decay = 1.0 - lr * self.weight_decay;
-            for p in params.iter_mut() {
-                *p *= decay;
-            }
-        }
-        crate::tensor::axpy(params, -lr, q);
+        fused_decay_step(self.pool.get(), params, q, lr, self.weight_decay);
     }
 
     fn state_bytes(&self) -> u64 {

@@ -6,12 +6,14 @@
 //! accumulating — the "controlled divergence" mechanism), and the final
 //! synchronized Q drives a plain SGD update `θ ← θ − η·Q`.
 
-use super::Optimizer;
+use super::{fused_decay_step, Optimizer};
+use crate::parallel::PoolHandle;
 
 pub struct DemoSgd {
     pub beta: f32,
     pub weight_decay: f32,
     momentum: Vec<f32>,
+    pool: PoolHandle,
 }
 
 impl DemoSgd {
@@ -21,6 +23,7 @@ impl DemoSgd {
             beta,
             weight_decay,
             momentum: vec![0.0; shard_len],
+            pool: PoolHandle::default(),
         }
     }
 }
@@ -30,14 +33,22 @@ impl Optimizer for DemoSgd {
         format!("demo-sgd(b={})", self.beta)
     }
 
+    fn attach_pool(&mut self, pool: PoolHandle) {
+        self.pool = pool;
+    }
+
     fn accumulate(&mut self, grad: &[f32]) {
         debug_assert_eq!(grad.len(), self.momentum.len());
         // m ← βm + Δ  (Algorithm 1; note: *not* (1−β)-scaled — DeMo keeps
         // the raw gradient magnitude so extraction thresholds stay scale-
-        // comparable across β).
-        for (m, g) in self.momentum.iter_mut().zip(grad) {
-            *m = self.beta * *m + g;
-        }
+        // comparable across β). Chunk-parallel, bit-identical at any
+        // worker count (pure elementwise).
+        let beta = self.beta;
+        crate::parallel::zip_chunks(self.pool.get(), &mut self.momentum, grad, |ms, gs| {
+            for (m, g) in ms.iter_mut().zip(gs) {
+                *m = beta * *m + g;
+            }
+        });
     }
 
     fn buffer_mut(&mut self) -> &mut [f32] {
@@ -46,13 +57,7 @@ impl Optimizer for DemoSgd {
 
     fn apply(&mut self, params: &mut [f32], q: &[f32], lr: f32) {
         debug_assert_eq!(params.len(), q.len());
-        if self.weight_decay > 0.0 {
-            let decay = 1.0 - lr * self.weight_decay;
-            for p in params.iter_mut() {
-                *p *= decay;
-            }
-        }
-        crate::tensor::axpy(params, -lr, q);
+        fused_decay_step(self.pool.get(), params, q, lr, self.weight_decay);
     }
 
     fn state_bytes(&self) -> u64 {

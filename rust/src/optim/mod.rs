@@ -30,9 +30,40 @@ pub use decoupled_adamw::DecoupledAdamW;
 pub use demo_sgd::DemoSgd;
 pub use sgd::Sgd;
 
+/// Fused SGD-family parameter step, chunk-parallel on the pool's fixed
+/// grid: weight decay and the `θ ← θ − lr·q` update run in **one sweep**
+/// over the shard (the seed code made two). Per element the float chain
+/// matches the old two-pass `decay; axpy` exactly — `p·d − lr·q` vs
+/// `(p·d) + (−lr)·q` are the same IEEE operations — so results are
+/// bit-identical, at any worker count.
+pub(crate) fn fused_decay_step(
+    pool: &crate::parallel::WorkerPool,
+    params: &mut [f32],
+    q: &[f32],
+    lr: f32,
+    weight_decay: f32,
+) {
+    debug_assert_eq!(params.len(), q.len());
+    if weight_decay > 0.0 {
+        let decay = 1.0 - lr * weight_decay;
+        crate::parallel::zip_chunks(pool, params, q, |ps, qs| {
+            for (p, &qv) in ps.iter_mut().zip(qs) {
+                *p = *p * decay - lr * qv;
+            }
+        });
+    } else {
+        crate::tensor::axpy_pooled(pool, params, -lr, q);
+    }
+}
+
 /// One rank's optimizer state over its parameter shard.
 pub trait Optimizer: Send {
     fn name(&self) -> String;
+
+    /// Hand the optimizer the trainer's worker pool: the fused
+    /// accumulate/apply kernels dispatch chunk-parallel onto it.
+    /// Without a pool they run inline (bit-identical either way).
+    fn attach_pool(&mut self, pool: crate::parallel::PoolHandle);
 
     /// Fold this step's (intra-node averaged) gradient shard into the
     /// replication buffer / internal state.

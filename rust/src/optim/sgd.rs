@@ -1,11 +1,13 @@
 //! Plain SGD on the synchronized gradient — ablation arm ("we
 //! differentiate [DeMo-SGD] as it accumulates momenta"; this one doesn't).
 
-use super::Optimizer;
+use super::{fused_decay_step, Optimizer};
+use crate::parallel::PoolHandle;
 
 pub struct Sgd {
     pub weight_decay: f32,
     buffer: Vec<f32>,
+    pool: PoolHandle,
 }
 
 impl Sgd {
@@ -13,6 +15,7 @@ impl Sgd {
         Sgd {
             weight_decay,
             buffer: vec![0.0; shard_len],
+            pool: PoolHandle::default(),
         }
     }
 }
@@ -20,6 +23,10 @@ impl Sgd {
 impl Optimizer for Sgd {
     fn name(&self) -> String {
         "sgd".to_string()
+    }
+
+    fn attach_pool(&mut self, pool: PoolHandle) {
+        self.pool = pool;
     }
 
     fn accumulate(&mut self, grad: &[f32]) {
@@ -31,13 +38,7 @@ impl Optimizer for Sgd {
     }
 
     fn apply(&mut self, params: &mut [f32], q: &[f32], lr: f32) {
-        if self.weight_decay > 0.0 {
-            let decay = 1.0 - lr * self.weight_decay;
-            for p in params.iter_mut() {
-                *p *= decay;
-            }
-        }
-        crate::tensor::axpy(params, -lr, q);
+        fused_decay_step(self.pool.get(), params, q, lr, self.weight_decay);
     }
 
     fn state_bytes(&self) -> u64 {

@@ -1,0 +1,589 @@
+//! Deterministic data-plane parallelism: a persistent worker pool plus
+//! chunk-parallel primitives over a **fixed, thread-count-independent
+//! chunk grid**.
+//!
+//! The trainer creates one [`WorkerPool`] from `--threads` and every
+//! numeric hot path — the collectives' ring reductions, the fused
+//! optimizer update kernels, the surrogate eval loop, the DeMo
+//! decode/residual scatter, the blocked DCT batches, and the per-stream
+//! fwd/bwd fan-out — dispatches onto it. Workers are spawned once and
+//! parked between jobs (no per-step `std::thread::scope` re-spawn).
+//!
+//! ## Determinism contract
+//!
+//! `--threads N` must never change a single bit of any result (the
+//! contract `train` documents and the integration suite prop-tests).
+//! Two rules make that hold by construction:
+//!
+//! 1. **Work is partitioned on a fixed grid.** [`chunk_range`] cuts a
+//!    flat buffer into [`CHUNK`]-element chunks whose boundaries depend
+//!    only on the buffer length — never on the worker count. Each chunk
+//!    is computed exactly as the scalar loop would compute that index
+//!    range, so elementwise kernels are bit-identical at any width.
+//! 2. **Reductions accumulate on the grid, not on the workers.**
+//!    [`sum_chunks`] has each task write its partial into a slot indexed
+//!    by *chunk id*; the partials are folded sequentially in chunk
+//!    order. Which worker produced a partial is irrelevant.
+//!
+//! Per-worker scratch (e.g. the DCT arenas) is allowed because scratch
+//! *contents* never reach an output — every user fully overwrites its
+//! scratch before reading it.
+//!
+//! ## Zero allocations
+//!
+//! Dispatch allocates nothing: jobs are borrowed closures handed to the
+//! workers through a mutex-guarded slot (the borrow is erased for the
+//! duration of [`WorkerPool::run`], which blocks until every task has
+//! retired, so no closure or slice outlives its frame). The steady-state
+//! collectives and optimizer kernels running on the pool are
+//! allocation-free end to end (asserted with a counting allocator in
+//! `benches/kernels.rs`).
+
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Fixed chunk size (elements) of the deterministic grid. Big enough
+/// that per-task overhead vanishes, small enough that a handful of
+/// chunks exist even for modest shards.
+pub const CHUNK: usize = 1 << 14;
+
+/// Number of grid chunks covering a buffer of `len` elements.
+#[inline]
+pub fn chunk_count(len: usize) -> usize {
+    len.div_ceil(CHUNK)
+}
+
+/// Half-open element range of grid chunk `i` within a buffer of `len`.
+#[inline]
+pub fn chunk_range(len: usize, i: usize) -> (usize, usize) {
+    let lo = i * CHUNK;
+    (lo, ((i + 1) * CHUNK).min(len))
+}
+
+/// A job is a borrowed `Fn(worker, task)` whose lifetime is erased
+/// (transmuted to `'static`) while it sits in the shared slot; `run`
+/// keeps the real borrow alive until every task has retired, so the
+/// erased reference never outlives the closure.
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize, usize) + Sync),
+    n_tasks: usize,
+    next: usize,
+    completed: usize,
+    epoch: u64,
+}
+
+#[derive(Default)]
+struct PoolState {
+    job: Option<Job>,
+    epoch: u64,
+    shutdown: bool,
+    panic_msg: Option<String>,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// Submitters park here until their job's tasks have all retired.
+    done: Condvar,
+}
+
+thread_local! {
+    /// Set while a pool worker (or a caller inside `run`) is executing
+    /// tasks — nested `run` calls detect it and execute inline instead
+    /// of deadlocking on the shared job slot.
+    static IN_POOL_TASK: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Persistent worker pool. `width` execution slots: the submitting
+/// thread is slot 0 and participates in every job; `width - 1` parked
+/// worker threads fill slots `1..width`.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    width: usize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("width", &self.width).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool of `threads` execution slots. `0` = one slot per
+    /// hardware thread; `1` = fully inline (no worker threads at all).
+    pub fn new(threads: usize) -> Arc<WorkerPool> {
+        let width = match threads {
+            0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+            t => t,
+        };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..width)
+            .map(|slot| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("detonation-worker-{slot}"))
+                    .spawn(move || worker_loop(&shared, slot))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Arc::new(WorkerPool {
+            shared,
+            handles,
+            width,
+        })
+    }
+
+    /// The process-wide inline pool (width 1) — the default executor for
+    /// code paths that were never handed a trainer pool (tests, tools).
+    pub fn inline() -> &'static WorkerPool {
+        static INLINE: OnceLock<WorkerPool> = OnceLock::new();
+        INLINE.get_or_init(|| WorkerPool {
+            shared: Arc::new(Shared {
+                state: Mutex::new(PoolState::default()),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            handles: Vec::new(),
+            width: 1,
+        })
+    }
+
+    /// Number of execution slots; worker indices passed to job closures
+    /// are `0..width()` (slot 0 is the submitting thread).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Execute `n_tasks` invocations of `f(worker, task)` across the
+    /// pool and block until all have retired. Task→worker assignment is
+    /// dynamic (work-stealing off a shared counter) and therefore
+    /// nondeterministic — callers must make results depend only on
+    /// `task`, never on `worker` (worker-indexed scratch is fine when it
+    /// is fully overwritten before use). Panics in `f` are caught,
+    /// drained, and re-raised on the submitting thread.
+    pub fn run<F>(&self, n_tasks: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n_tasks == 0 {
+            return;
+        }
+        // Inline when the pool is serial, the job is trivial, or we are
+        // already inside a pool task (nested dispatch).
+        if self.width == 1 || n_tasks == 1 || IN_POOL_TASK.with(|t| t.get()) {
+            for t in 0..n_tasks {
+                f(0, t);
+            }
+            return;
+        }
+        // Safety: `run` blocks below until every task of this job has
+        // retired (the job slot is cleared by the last retirer), so the
+        // lifetime-erased borrow cannot outlive `f`.
+        let f_erased: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(&f as &(dyn Fn(usize, usize) + Sync)) };
+        let epoch;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // One job at a time: a concurrent submitter queues here until
+            // the slot frees (overwriting an in-flight job would let its
+            // submitter return while workers still hold the erased
+            // closure — soundness, not just correctness).
+            while st.job.is_some() {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.epoch += 1;
+            epoch = st.epoch;
+            st.job = Some(Job {
+                f: f_erased,
+                n_tasks,
+                next: 0,
+                completed: 0,
+                epoch,
+            });
+            self.shared.work.notify_all();
+        }
+        // The submitting thread participates as worker slot 0.
+        execute_tasks(&self.shared, 0, epoch);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.job.as_ref().is_some_and(|j| j.epoch == epoch) {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        if let Some(msg) = st.panic_msg.take() {
+            drop(st);
+            panic!("worker pool task panicked: {msg}");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, slot: usize) {
+    let mut last_epoch = 0u64;
+    loop {
+        let epoch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let fresh = match &st.job {
+                    Some(j) if j.epoch != last_epoch => Some(j.epoch),
+                    _ => None,
+                };
+                if let Some(e) = fresh {
+                    break e;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        last_epoch = epoch;
+        execute_tasks(shared, slot, epoch);
+    }
+}
+
+/// Pull tasks of job `epoch` until exhausted. Counters live under the
+/// mutex; `f` runs outside it. The job slot is cleared (and `done`
+/// signalled) by whichever executor retires the last task, so a job
+/// pointer can never be dereferenced after `run` returns.
+fn execute_tasks(shared: &Shared, slot: usize, epoch: u64) {
+    loop {
+        let (f, task, n_tasks) = {
+            let mut st = shared.state.lock().unwrap();
+            match &mut st.job {
+                Some(j) if j.epoch == epoch && j.next < j.n_tasks => {
+                    let t = j.next;
+                    j.next += 1;
+                    (j.f, t, j.n_tasks)
+                }
+                _ => return,
+            }
+        };
+        let result = IN_POOL_TASK.with(|flag| {
+            flag.set(true);
+            // The erased borrow is alive: the submitting `run` frame is
+            // blocked until this task retires below.
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| f(slot, task)));
+            flag.set(false);
+            r
+        });
+        let mut st = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic_msg.is_none() {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                st.panic_msg = Some(msg);
+            }
+        }
+        let mut finished = false;
+        if let Some(j) = &mut st.job {
+            if j.epoch == epoch {
+                j.completed += 1;
+                finished = j.completed == n_tasks;
+            }
+        }
+        if finished {
+            st.job = None;
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Cheap clonable handle threaded through structs that may or may not
+/// have been handed a trainer pool; `get` falls back to the process-wide
+/// inline executor.
+#[derive(Clone, Default)]
+pub struct PoolHandle(Option<Arc<WorkerPool>>);
+
+impl PoolHandle {
+    pub fn new(pool: Arc<WorkerPool>) -> PoolHandle {
+        PoolHandle(Some(pool))
+    }
+
+    pub fn get(&self) -> &WorkerPool {
+        self.0.as_deref().unwrap_or_else(WorkerPool::inline)
+    }
+}
+
+impl std::fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PoolHandle(width={})", self.get().width())
+    }
+}
+
+/// Lifetime-erased `&mut [T]` that tasks slice disjoint ranges out of.
+///
+/// Safety contract: concurrent [`SlicePtr::range`] calls must cover
+/// pairwise-disjoint ranges, and no range may outlive the `run` call it
+/// was taken inside (the original borrow is frozen for that duration).
+pub struct SlicePtr<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SlicePtr<T> {}
+unsafe impl<T: Send> Sync for SlicePtr<T> {}
+
+impl<T> std::fmt::Debug for SlicePtr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SlicePtr(len={})", self.len)
+    }
+}
+
+impl<T> SlicePtr<T> {
+    pub fn new(s: &mut [T]) -> SlicePtr<T> {
+        SlicePtr {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reborrow `[lo, hi)` mutably.
+    ///
+    /// # Safety
+    /// Ranges handed out to concurrently running tasks must be disjoint,
+    /// and the underlying buffer must outlive the use (guaranteed when
+    /// called inside the `run` whose frame created this `SlicePtr`).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+/// Run `f(worker, lo, hi)` over the fixed chunk grid of `[0, len)`.
+pub fn run_chunks<F>(pool: &WorkerPool, len: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let n = chunk_count(len);
+    pool.run(n, |w, c| {
+        let (lo, hi) = chunk_range(len, c);
+        f(w, lo, hi);
+    });
+}
+
+/// Chunk-parallel `f(chunk_of_out)` over one mutable buffer.
+pub fn for_each_chunk<T, F>(pool: &WorkerPool, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = data.len();
+    let p = SlicePtr::new(data);
+    run_chunks(pool, len, |_w, lo, hi| {
+        // Safety: grid chunks are disjoint.
+        f(lo, unsafe { p.range(lo, hi) });
+    });
+}
+
+/// Chunk-parallel zip over one mutable and one shared buffer of equal
+/// length: `f(chunk_of_y, chunk_of_x)`.
+pub fn zip_chunks<F>(pool: &WorkerPool, y: &mut [f32], x: &[f32], f: F)
+where
+    F: Fn(&mut [f32], &[f32]) + Sync,
+{
+    assert_eq!(y.len(), x.len());
+    let len = y.len();
+    let p = SlicePtr::new(y);
+    run_chunks(pool, len, |_w, lo, hi| {
+        // Safety: grid chunks are disjoint.
+        f(unsafe { p.range(lo, hi) }, &x[lo..hi]);
+    });
+}
+
+/// Deterministic chunk-grid reduction: `f(lo, hi)` produces the partial
+/// of each grid chunk into a slot indexed by *chunk id*; partials are
+/// folded sequentially in chunk order, so the result is independent of
+/// worker count and scheduling. `partials` is caller-owned scratch
+/// (resized here; steady-state callers reuse capacity).
+pub fn sum_chunks<F>(pool: &WorkerPool, len: usize, partials: &mut Vec<f64>, f: F) -> f64
+where
+    F: Fn(usize, usize) -> f64 + Sync,
+{
+    let n = chunk_count(len);
+    partials.clear();
+    partials.resize(n, 0.0);
+    let p = SlicePtr::new(partials.as_mut_slice());
+    pool.run(n, |_w, c| {
+        let (lo, hi) = chunk_range(len, c);
+        // Safety: one slot per task, disjoint.
+        unsafe { p.range(c, c + 1) }[0] = f(lo, hi);
+    });
+    partials.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn grid_is_exact_and_fixed() {
+        for len in [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1, 5 * CHUNK + 17] {
+            let n = chunk_count(len);
+            let mut covered = 0usize;
+            for c in 0..n {
+                let (lo, hi) = chunk_range(len, c);
+                assert_eq!(lo, covered, "len={len} chunk {c}");
+                assert!(hi > lo && hi <= len);
+                covered = hi;
+            }
+            assert_eq!(covered, len, "len={len} grid does not cover");
+        }
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once_at_any_width() {
+        for threads in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let n = 257;
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, |_w, t| {
+                counts[t].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                counts.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = WorkerPool::new(4);
+        for round in 0..50 {
+            let hits = AtomicUsize::new(0);
+            pool.run(round % 7 + 1, |_w, _t| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), round % 7 + 1);
+        }
+    }
+
+    #[test]
+    fn zip_chunks_bit_matches_scalar_at_any_width() {
+        let n = 3 * CHUNK + 123;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut want: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let orig = want.clone();
+        for (yi, xi) in want.iter_mut().zip(&x) {
+            *yi += 0.5 * *xi;
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut got = orig.clone();
+            zip_chunks(&pool, &mut got, &x, |ys, xs| {
+                for (yi, xi) in ys.iter_mut().zip(xs) {
+                    *yi += 0.5 * *xi;
+                }
+            });
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}: zip_chunks diverged from scalar"
+            );
+        }
+    }
+
+    #[test]
+    fn sum_chunks_is_width_independent() {
+        let n = 7 * CHUNK + 991;
+        let data: Vec<f32> = (0..n).map(|i| ((i * 2654435761) as f32).to_bits() as f32 * 1e-30).collect();
+        let sum_at = |threads: usize| {
+            let pool = WorkerPool::new(threads);
+            let mut partials = Vec::new();
+            sum_chunks(&pool, n, &mut partials, |lo, hi| {
+                data[lo..hi].iter().map(|&x| x as f64).sum()
+            })
+        };
+        let s1 = sum_at(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(s1.to_bits(), sum_at(threads).to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.run(4, |_w, _t| {
+            pool.run(3, |_w2, _t2| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |_w, t| {
+                if t == 5 {
+                    panic!("boom in task 5");
+                }
+            });
+        }));
+        let msg = format!("{:?}", r.expect_err("should propagate"));
+        assert!(msg.contains("boom in task 5"), "{msg}");
+        // the pool survives and remains usable
+        let hits = AtomicUsize::new(0);
+        pool.run(4, |_w, _t| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn inline_pool_is_width_one_and_static() {
+        let a = WorkerPool::inline() as *const WorkerPool;
+        let b = WorkerPool::inline() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert_eq!(WorkerPool::inline().width(), 1);
+        let h = PoolHandle::default();
+        assert_eq!(h.get().width(), 1);
+    }
+
+    #[test]
+    fn worker_indices_stay_in_width() {
+        let pool = WorkerPool::new(3);
+        let bad = AtomicUsize::new(0);
+        pool.run(64, |w, _t| {
+            if w >= 3 {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+            // give other workers a chance to participate
+            std::thread::yield_now();
+        });
+        assert_eq!(bad.load(Ordering::Relaxed), 0);
+    }
+}

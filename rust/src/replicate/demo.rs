@@ -17,12 +17,25 @@
 //! chunk) instead of materializing a dense coefficient buffer — all
 //! bit-identical to the original dense pipeline (pinned by
 //! `extract_bit_identical_to_dense_reference`).
+//!
+//! The forward DCT block batches, the residual scatter, and the decode
+//! scatter all dispatch onto the scratch's worker pool (per-slot
+//! `DctScratch` arenas, fixed chunk granules) — bit-identical at any
+//! `--threads N` by construction.
 
 use super::{ReplCtx, Replicator};
 use crate::compress::{Payload, Scratch};
 use crate::dct::Dct;
+use crate::parallel::{self, SlicePtr};
 use crate::tensor::Dtype;
 use crate::topk;
+
+/// DCT chunks per pool task: batch enough chunks that a task covers one
+/// grid chunk's worth of elements. Fixed by (CHUNK, n) — independent of
+/// worker count, so the parallel scatter is bit-identical at any width.
+fn chunk_granule(n: usize) -> usize {
+    (parallel::CHUNK / n).max(1)
+}
 
 #[derive(Debug)]
 pub struct DemoReplicator {
@@ -100,11 +113,21 @@ impl Replicator for DemoReplicator {
             n
         );
         let d = Dct::plan(n);
+        scratch.ensure_dct_workers();
 
-        // 1. chunked DCT-II into the reusable coefficient buffer.
-        scratch.coeffs.clear();
-        scratch.coeffs.resize(buf.len(), 0.0);
-        d.forward_chunked_with(buf, &mut scratch.coeffs, &mut scratch.dct);
+        // 1. chunked DCT-II into the reusable coefficient buffer — block
+        // batches dispatched across the worker pool.
+        {
+            let Scratch {
+                coeffs,
+                dct_workers,
+                pool,
+                ..
+            } = &mut *scratch;
+            coeffs.clear();
+            coeffs.resize(buf.len(), 0.0);
+            d.forward_chunked_pooled(buf, coeffs, pool.get(), dct_workers);
+        }
 
         // 2. partial-select top-k per chunk (pinned tie-breaking).
         topk::topk_per_chunk_into(
@@ -118,22 +141,49 @@ impl Replicator for DemoReplicator {
         values.extend(scratch.sel.iter().map(|&i| scratch.coeffs[i as usize]));
 
         // 3. residual: reconstruct the kept mass chunk-by-chunk via the
-        // direct k-term accumulation and subtract it from the buffer.
-        scratch.removed.clear();
-        scratch.removed.resize(buf.len(), 0.0);
+        // direct k-term accumulation — chunk batches fan out across the
+        // pool (fixed granule, bit-identical at any width) — and
+        // subtract it from the buffer.
         let kk = self.k.min(n);
-        for ci in 0..buf.len() / n {
-            let lo = ci * kk;
-            d.inverse_sparse(
-                (ci * n) as u32,
-                &scratch.sel[lo..lo + kk],
-                &values[lo..lo + kk],
-                &mut scratch.removed[ci * n..(ci + 1) * n],
-                &mut scratch.dct,
-            );
-        }
-        for (b, r) in buf.iter_mut().zip(&scratch.removed) {
-            *b -= r;
+        let n_chunks = buf.len() / n;
+        {
+            let Scratch {
+                removed,
+                sel,
+                dct_workers,
+                pool,
+                ..
+            } = &mut *scratch;
+            removed.clear();
+            removed.resize(buf.len(), 0.0);
+            let granule = chunk_granule(n);
+            let n_tasks = n_chunks.div_ceil(granule);
+            let remp = SlicePtr::new(removed);
+            let wsp = SlicePtr::new(dct_workers);
+            let values = &values;
+            let sel = &*sel;
+            pool.get().run(n_tasks, |w, t| {
+                let c0 = t * granule;
+                let c1 = (c0 + granule).min(n_chunks);
+                // Safety: chunk ranges are disjoint per task; slot `w`
+                // is owned by one thread for the job's duration.
+                let s = unsafe { &mut wsp.range(w, w + 1)[0] };
+                for ci in c0..c1 {
+                    let lo = ci * kk;
+                    d.inverse_sparse(
+                        (ci * n) as u32,
+                        &sel[lo..lo + kk],
+                        &values[lo..lo + kk],
+                        unsafe { remp.range(ci * n, (ci + 1) * n) },
+                        s,
+                    );
+                }
+            });
+            parallel::zip_chunks(pool.get(), buf, removed, |bs, rs| {
+                for (b, r) in bs.iter_mut().zip(rs) {
+                    *b -= r;
+                }
+            });
         }
 
         // 4. wire payload + locally-decoded dense update, pool-backed.
@@ -153,23 +203,41 @@ impl Replicator for DemoReplicator {
             .indices
             .as_ref()
             .expect("demo payload carries indices");
-        // Indices ascend (the selection emits them that way), so one
-        // pointer walk splits them into per-chunk slices.
-        let mut p = 0usize;
-        for (ci, oseg) in out.chunks_exact_mut(n).enumerate() {
-            let hi = ((ci + 1) * n) as u32;
-            let lo = p;
-            while p < indices.len() && indices[p] < hi {
-                p += 1;
+        // Indices ascend (the selection emits them that way): each pool
+        // task binary-searches its first chunk's boundary, then pointer-
+        // walks its own chunk batch. Chunk batches are disjoint and
+        // fixed-granule, so the scatter is bit-identical at any width.
+        scratch.ensure_dct_workers();
+        let Scratch {
+            dct_workers, pool, ..
+        } = &mut *scratch;
+        let n_chunks = out.len() / n;
+        let granule = chunk_granule(n);
+        let n_tasks = n_chunks.div_ceil(granule);
+        let outp = SlicePtr::new(out);
+        let wsp = SlicePtr::new(dct_workers);
+        pool.get().run(n_tasks, |w, t| {
+            let c0 = t * granule;
+            let c1 = (c0 + granule).min(n_chunks);
+            // Safety: disjoint chunk ranges per task; slot `w` is owned
+            // by one thread for the job's duration.
+            let s = unsafe { &mut wsp.range(w, w + 1)[0] };
+            let mut p = indices.partition_point(|&i| i < (c0 * n) as u32);
+            for ci in c0..c1 {
+                let hi = ((ci + 1) * n) as u32;
+                let lo = p;
+                while p < indices.len() && indices[p] < hi {
+                    p += 1;
+                }
+                d.inverse_sparse(
+                    (ci * n) as u32,
+                    &indices[lo..p],
+                    &payload.values[lo..p],
+                    unsafe { outp.range(ci * n, (ci + 1) * n) },
+                    s,
+                );
             }
-            d.inverse_sparse(
-                (ci * n) as u32,
-                &indices[lo..p],
-                &payload.values[lo..p],
-                oseg,
-                &mut scratch.dct,
-            );
-        }
+        });
     }
 
     fn rate(&self) -> f64 {

@@ -352,6 +352,8 @@ impl ReplSpec {
 
 /// Dense mean of decoded payloads (helper used by the trainer). The
 /// result vector comes from `scratch`'s pool — recycle it after applying.
+/// Decode and accumulation run chunk-parallel on the scratch's worker
+/// pool (payload order stays sequential, so numerics are unchanged).
 pub fn mean_decoded(
     repl: &dyn Replicator,
     ctx: &ReplCtx,
@@ -361,10 +363,11 @@ pub fn mean_decoded(
 ) -> Vec<f32> {
     let mut acc = scratch.take_f32_zeroed(shard_len);
     let mut tmp = scratch.take_f32_zeroed(shard_len);
+    let pool = scratch.pool.clone();
     for p in payloads {
         tmp.fill(0.0);
         repl.decode(ctx, p, &mut tmp, scratch);
-        crate::tensor::axpy(&mut acc, 1.0, &tmp);
+        crate::tensor::axpy_pooled(pool.get(), &mut acc, 1.0, &tmp);
     }
     scratch.put_f32(tmp);
     let inv = 1.0 / payloads.len().max(1) as f32;

@@ -189,4 +189,15 @@ impl ModelRuntime {
             .to_vec::<f32>()
             .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?[0])
     }
+
+    /// API parity with the reference backend: PJRT executes the compiled
+    /// eval artifact itself, so the pool is unused.
+    pub fn eval_step_pooled(
+        &self,
+        flat_params: &[f32],
+        batch: &[BatchData],
+        _pool: &crate::parallel::WorkerPool,
+    ) -> Result<f32> {
+        self.eval_step(flat_params, batch)
+    }
 }

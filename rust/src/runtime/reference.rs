@@ -190,15 +190,33 @@ impl ModelRuntime {
         Ok(((loss_acc / n.max(1) as f64) as f32, grads))
     }
 
-    /// Loss only (validation): the noise-free well depth.
+    /// Loss only (validation): the noise-free well depth. Runs on the
+    /// process-wide inline executor; the trainer's validation loop uses
+    /// [`ModelRuntime::eval_step_pooled`] with its worker pool.
     pub fn eval_step(&self, flat_params: &[f32], batch: &[BatchData]) -> Result<f32> {
+        self.eval_step_pooled(flat_params, batch, crate::parallel::WorkerPool::inline())
+    }
+
+    /// Chunk-parallel eval: per-grid-chunk partial sums folded in chunk
+    /// order, so the loss is bit-identical for any `--threads N` (the
+    /// association is fixed by the grid, not by the worker count).
+    pub fn eval_step_pooled(
+        &self,
+        flat_params: &[f32],
+        batch: &[BatchData],
+        pool: &crate::parallel::WorkerPool,
+    ) -> Result<f32> {
         self.check_batch(flat_params, batch)?;
         let n = self.target.len();
-        let mut loss_acc = 0.0f64;
-        for (&p, &t) in flat_params[..n].iter().zip(&self.target) {
-            let dev = (p - t) as f64;
-            loss_acc += 0.5 * dev * dev;
-        }
+        let mut partials = Vec::new();
+        let loss_acc = crate::parallel::sum_chunks(pool, n, &mut partials, |lo, hi| {
+            let mut acc = 0.0f64;
+            for (&p, &t) in flat_params[lo..hi].iter().zip(&self.target[lo..hi]) {
+                let dev = (p - t) as f64;
+                acc += 0.5 * dev * dev;
+            }
+            acc
+        });
         Ok((loss_acc / n.max(1) as f64) as f32)
     }
 }

@@ -122,6 +122,13 @@ pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     }
 }
 
+/// Chunk-parallel `y += alpha * x` on the pool's fixed grid —
+/// bit-identical to [`axpy`] at any worker count (each element's float
+/// chain is unchanged; only which thread computes it varies).
+pub fn axpy_pooled(pool: &crate::parallel::WorkerPool, y: &mut [f32], alpha: f32, x: &[f32]) {
+    crate::parallel::zip_chunks(pool, y, x, |ys, xs| axpy(ys, alpha, xs));
+}
+
 /// Elementwise mean of many equally-sized slices into `out`.
 pub fn mean_into(out: &mut [f32], parts: &[&[f32]]) {
     assert!(!parts.is_empty());
@@ -133,6 +140,24 @@ pub fn mean_into(out: &mut [f32], parts: &[&[f32]]) {
     for x in out.iter_mut() {
         *x *= inv;
     }
+}
+
+/// Chunk-parallel [`mean_into`]: per element the accumulation order over
+/// `parts` is identical to the scalar version, so results are
+/// bit-identical at any worker count.
+pub fn mean_into_pooled(pool: &crate::parallel::WorkerPool, out: &mut [f32], parts: &[&[f32]]) {
+    assert!(!parts.is_empty());
+    let inv = 1.0 / parts.len() as f32;
+    crate::parallel::for_each_chunk(pool, out, |lo, oseg| {
+        let hi = lo + oseg.len();
+        oseg.copy_from_slice(&parts[0][lo..hi]);
+        for p in &parts[1..] {
+            axpy(oseg, 1.0, &p[lo..hi]);
+        }
+        for x in oseg.iter_mut() {
+            *x *= inv;
+        }
+    });
 }
 
 #[cfg(test)]
@@ -174,6 +199,36 @@ mod tests {
         let mut out = [0.0f32; 2];
         mean_into(&mut out, &[&a, &b]);
         assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn pooled_kernels_bit_match_scalar() {
+        let n = crate::parallel::CHUNK * 2 + 77;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.013).sin()).collect();
+        let z: Vec<f32> = (0..n).map(|i| (i as f32 * 0.029).cos()).collect();
+        let y0: Vec<f32> = (0..n).map(|i| (i as f32 * 0.007).tan()).collect();
+        let mut want = y0.clone();
+        axpy(&mut want, -0.3, &x);
+        let mut want_mean = vec![0.0f32; n];
+        mean_into(&mut want_mean, &[&x, &z, &y0]);
+        for threads in [1usize, 2, 4] {
+            let pool = crate::parallel::WorkerPool::new(threads);
+            let mut got = y0.clone();
+            axpy_pooled(&pool, &mut got, -0.3, &x);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "axpy_pooled threads={threads}"
+            );
+            let mut got_mean = vec![0.0f32; n];
+            mean_into_pooled(&pool, &mut got_mean, &[&x, &z, &y0]);
+            assert!(
+                got_mean
+                    .iter()
+                    .zip(&want_mean)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "mean_into_pooled threads={threads}"
+            );
+        }
     }
 
     #[test]

@@ -273,6 +273,7 @@ impl StepEngine {
         let id = self.next_event_id;
         self.next_event_id += 1;
         ev.id = id;
+        ev.ranks = members.to_vec();
         for &r in members {
             self.last_nic_event[r] = Some(id);
         }
@@ -570,6 +571,71 @@ impl StepEngine {
     }
 }
 
+/// Serialize scheduled [`CommEvent`]s (tagged with their step) as a
+/// Chrome-trace JSON document (`chrome://tracing` / Perfetto "X"
+/// complete events). One lane (tid) per rank, sim-time µs on the time
+/// axis; event args carry step, bytes, event id, and dependency ids —
+/// the figure-quality timeline view of overlap vs `--no-overlap`.
+pub fn chrome_trace_json(rows: &[(u64, CommEvent)]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut evs: Vec<Json> = Vec::new();
+    let mut max_rank = None::<usize>;
+    for (step, ev) in rows {
+        for &r in &ev.ranks {
+            max_rank = Some(max_rank.map_or(r, |m| m.max(r)));
+            evs.push(Json::obj(vec![
+                ("name", Json::Str(ev.label.to_string())),
+                (
+                    "cat",
+                    Json::Str(
+                        match ev.class {
+                            LinkClass::IntraNode => "intra-node",
+                            LinkClass::InterNode => "inter-node",
+                        }
+                        .to_string(),
+                    ),
+                ),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(ev.start * 1e6)),
+                ("dur", Json::Num(ev.duration * 1e6)),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(r as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("step", Json::Num(*step as f64)),
+                        ("bytes", Json::Num(ev.bytes as f64)),
+                        ("event_id", Json::Num(ev.id as f64)),
+                        (
+                            "deps",
+                            Json::Arr(ev.deps.iter().map(|&d| Json::Num(d as f64)).collect()),
+                        ),
+                    ]),
+                ),
+            ]));
+        }
+    }
+    // Lane names: rank index per tid (M metadata events).
+    if let Some(mr) = max_rank {
+        for r in 0..=mr {
+            evs.push(Json::obj(vec![
+                ("name", Json::Str("thread_name".to_string())),
+                ("ph", Json::Str("M".to_string())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(r as f64)),
+                (
+                    "args",
+                    Json::obj(vec![("name", Json::Str(format!("rank {r}")))]),
+                ),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -779,5 +845,32 @@ mod tests {
         }
         // the second step's events depend on the first step's (ids exist)
         assert!(e.events.iter().any(|ev| !ev.deps.is_empty()));
+    }
+
+    #[test]
+    fn events_carry_ranks_and_serialize_to_chrome_trace() {
+        let mut e = engine(2, 2, true);
+        drive(&mut e, 2, true);
+        // scheduled events know their participants
+        for ev in &e.events {
+            assert!(!ev.ranks.is_empty(), "{} has no ranks", ev.label);
+            assert!(ev.ranks.iter().all(|&r| r < 4));
+        }
+        let rows: Vec<(u64, CommEvent)> =
+            e.events.iter().map(|ev| (1u64, ev.clone())).collect();
+        let doc = chrome_trace_json(&rows);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // one X event per (event, rank) + one M lane-name event per rank
+        let n_x: usize = rows.iter().map(|(_, ev)| ev.ranks.len()).sum();
+        assert_eq!(evs.len(), n_x + 4);
+        let x0 = evs
+            .iter()
+            .find(|j| j.get("ph").unwrap().as_str() == Some("X"))
+            .unwrap();
+        assert!(x0.get("ts").is_some() && x0.get("dur").is_some());
+        assert_eq!(x0.get("args").unwrap().get("step").unwrap().as_u64(), Some(1));
+        // document round-trips through the JSON parser
+        let text = doc.to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
     }
 }

@@ -4,8 +4,9 @@
 //! R = inter-node replication groups):
 //!
 //! 1. every rank runs fwd+bwd on its own microbatch (deduplicated by
-//!    gradient stream and fanned out to `std::thread::scope` workers —
-//!    full parameters, full gradient, `p.grad` in the paper's framing);
+//!    gradient stream and fanned out onto the persistent
+//!    [`crate::parallel::WorkerPool`] — full parameters, full gradient,
+//!    `p.grad` in the paper's framing);
 //! 2. `GradReduceScatter(θ_t, S)`: ring reduce-scatter averages gradients
 //!    intra-node; each rank keeps its shard;
 //! 3. the optimizer folds the gradient shard into the decoupled buffer
@@ -32,22 +33,27 @@
 //!
 //! Everything is deterministic: data streams, init, and the Random/
 //! Striding index sets all derive from `config.seed` — and the worker
-//! threads only parallelize *independent* stream computations, so
-//! `--threads N` never changes a single bit of the result (tested).
+//! pool only parallelizes *independent* work over fixed, thread-count-
+//! independent chunk boundaries (stream computations, grid chunks of
+//! the collectives/optimizer/eval kernels, DCT block batches), so
+//! `--threads N` never changes a single bit of the result (prop-tested
+//! across meshes and schemes in `tests/integration.rs`).
 
 pub mod engine;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::collectives::{self, CollCtx};
+use crate::collectives::{self, CollCtx, CollScratch, CommEvent};
 use crate::compress::{Scratch, WireStats};
 use crate::config::ExperimentConfig;
 use crate::data::{task_for, Task};
 use crate::metrics::{RunMetrics, StepRow, ValRow};
 use crate::net::{Topology, TrafficMatrix};
 use crate::optim::Optimizer;
+use crate::parallel::{PoolHandle, SlicePtr, WorkerPool};
 use crate::replicate::{mean_decoded, ReplCtx, Replicator};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::shard::{FlatLayout, HybridMesh};
@@ -76,6 +82,12 @@ pub struct Trainer {
     /// Per-rank gradient buffers (padded).
     grads: Vec<Vec<f32>>,
     ranks: Vec<RankState>,
+    /// The persistent data-plane worker pool (`--threads` slots): stream
+    /// fan-out and every chunk-parallel kernel dispatch here. Built once
+    /// — no per-step thread spawns.
+    pool: Arc<WorkerPool>,
+    /// Collectives' staging arena (zero-alloc steady state).
+    coll_scratch: CollScratch,
     /// The discrete-event clock (per-rank compute + NIC timelines).
     pub engine: StepEngine,
     pub traffic: TrafficMatrix,
@@ -103,12 +115,32 @@ impl Trainer {
         let params = vec![flat; cfg.nodes];
         let grads = vec![vec![0.0f32; layout.padded_len]; topo.world_size()];
 
+        // One persistent pool for the whole data plane. The PJRT client
+        // is not Sync, so the xla build stays fully inline.
+        let threads = if cfg!(feature = "xla") {
+            if cfg.threads != 1 {
+                log::warn!(
+                    "--threads {} ignored: the PJRT (xla) backend is not Sync; \
+                     the data plane runs inline",
+                    cfg.threads
+                );
+            }
+            1
+        } else {
+            cfg.threads
+        };
+        let pool = WorkerPool::new(threads);
+
         let shard_len = mesh.shards.shard_len();
         let ranks = (0..topo.world_size())
-            .map(|_| RankState {
-                opt: cfg.opt.build(shard_len),
-                repl: cfg.repl.build(shard_len),
-                scratch: Scratch::new(),
+            .map(|_| {
+                let mut opt = cfg.opt.build(shard_len);
+                opt.attach_pool(PoolHandle::new(Arc::clone(&pool)));
+                RankState {
+                    opt,
+                    repl: cfg.repl.build(shard_len),
+                    scratch: Scratch::with_pool(PoolHandle::new(Arc::clone(&pool))),
+                }
             })
             .collect();
 
@@ -123,6 +155,8 @@ impl Trainer {
             params,
             grads,
             ranks,
+            pool,
+            coll_scratch: CollScratch::new(),
             engine,
             traffic,
             last_timing: StepTiming::default(),
@@ -143,34 +177,15 @@ impl Trainer {
         }
     }
 
-    /// Worker threads for the per-stream fwd/bwd fan-out.
-    fn n_workers(&self, n_streams: usize) -> usize {
-        if cfg!(feature = "xla") {
-            // The PJRT client is not Sync; execute streams sequentially.
-            if self.cfg.threads != 1 && self.step == 0 {
-                log::warn!(
-                    "--threads {} ignored: the PJRT (xla) backend is not Sync; \
-                     streams run sequentially",
-                    self.cfg.threads
-                );
-            }
-            1
-        } else {
-            match self.cfg.threads {
-                0 => n_streams,
-                t => t.min(n_streams),
-            }
-        }
-    }
-
-    /// Run the deduplicated per-stream fwd/bwd calls, possibly on scoped
-    /// worker threads. Stream `s` trains on node `node_of(s)`'s replica —
-    /// the same assignment the sequential loop has always used, so the
-    /// results are bit-identical at any worker count.
+    /// Run the deduplicated per-stream fwd/bwd calls on the persistent
+    /// worker pool. Stream `s` trains on node `node_of(s)`'s replica and
+    /// each stream's computation depends only on `(s, step)` — the same
+    /// assignment the sequential loop has always used — so the results
+    /// are bit-identical at any pool width.
     #[cfg(not(feature = "xla"))]
-    fn run_streams(&self, n_streams: usize, workers: usize) -> Result<Vec<(f32, Vec<f32>)>> {
+    fn run_streams(&self, n_streams: usize) -> Result<Vec<(f32, Vec<f32>)>> {
         let step = self.step;
-        if workers <= 1 {
+        if self.pool.width() <= 1 {
             return (0..n_streams)
                 .map(|s| {
                     let node = self.mesh.topo.node_of(s);
@@ -183,35 +198,20 @@ impl Trainer {
         }
         let mut results: Vec<Option<Result<(f32, Vec<f32>)>>> =
             (0..n_streams).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..workers)
-                .map(|w| {
-                    let model = &self.model;
-                    let task = &self.task;
-                    let params = &self.params;
-                    let topo = self.mesh.topo;
-                    scope.spawn(move || {
-                        let mut out = Vec::new();
-                        let mut s = w;
-                        while s < n_streams {
-                            let node = topo.node_of(s);
-                            let batch = task.train_batch(s as u64, step);
-                            let r = model
-                                .train_step(&params[node], &batch)
-                                .with_context(|| format!("stream {s} step {step}"));
-                            out.push((s, r));
-                            s += workers;
-                        }
-                        out
-                    })
-                })
-                .collect();
-            for h in handles {
-                for (s, r) in h.join().expect("stream worker panicked") {
-                    results[s] = Some(r);
-                }
-            }
-        });
+        {
+            let slots = SlicePtr::new(&mut results);
+            let (model, task, params) = (&self.model, &self.task, &self.params);
+            let topo = self.mesh.topo;
+            self.pool.run(n_streams, |_w, s| {
+                let node = topo.node_of(s);
+                let batch = task.train_batch(s as u64, step);
+                let r = model
+                    .train_step(&params[node], &batch)
+                    .with_context(|| format!("stream {s} step {step}"));
+                // Safety: one slot per stream, disjoint per task.
+                unsafe { slots.range(s, s + 1) }[0] = Some(r);
+            });
+        }
         results
             .into_iter()
             .map(|r| r.expect("stream not computed"))
@@ -219,7 +219,7 @@ impl Trainer {
     }
 
     #[cfg(feature = "xla")]
-    fn run_streams(&self, n_streams: usize, _workers: usize) -> Result<Vec<(f32, Vec<f32>)>> {
+    fn run_streams(&self, n_streams: usize) -> Result<Vec<(f32, Vec<f32>)>> {
         let step = self.step;
         (0..n_streams)
             .map(|s| {
@@ -237,11 +237,6 @@ impl Trainer {
         let world = self.mesh.topo.world_size();
         let accels = self.cfg.accels_per_node;
         let step = self.step;
-        let ctx = CollCtx {
-            topo: &self.mesh.topo,
-            model: &self.cfg.net,
-            traffic: &self.traffic,
-        };
         self.engine.begin_step();
 
         // -- 0. FSDP unshard: within each node, updated parameters are
@@ -253,10 +248,9 @@ impl Trainer {
         self.engine.unshard(shard_bytes, &self.traffic);
 
         // -- 1. fwd/bwd per rank (deduplicated by gradient stream, fanned
-        // out to scoped worker threads).
+        // out onto the persistent worker pool).
         let n_streams = self.n_streams();
-        let workers = self.n_workers(n_streams);
-        let stream_results = self.run_streams(n_streams, workers)?;
+        let stream_results = self.run_streams(n_streams)?;
         let mut loss_sum = 0.0f64;
         for rank in 0..world {
             let (loss, grads) = &stream_results[rank % n_streams];
@@ -268,16 +262,24 @@ impl Trainer {
         self.engine.compute(self.model.manifest.step_flops());
 
         // -- 2. intra-node reduce-scatter (S groups run in parallel; the
-        // engine streams the event behind the backward).
+        // engine streams the event behind the backward). The data plane
+        // runs chunk-parallel on the pool, staged through coll_scratch.
+        let mut ctx = CollCtx {
+            topo: &self.mesh.topo,
+            model: &self.cfg.net,
+            traffic: &self.traffic,
+            pool: &*self.pool,
+            scratch: &mut self.coll_scratch,
+        };
         for node in 0..self.cfg.nodes {
-            let group = self.mesh.topo.shard_group(self.mesh.topo.rank(node, 0));
+            let group = ctx.topo.shard_group(ctx.topo.rank(node, 0));
             let shards: Vec<(usize, usize)> =
                 (0..accels).map(|a| self.mesh.shards.range(a)).collect();
             let (_, tail) = self.grads.split_at_mut(node * accels);
             let bufs_vec = &mut tail[..accels];
             let mut bufs: Vec<&mut [f32]> =
                 bufs_vec.iter_mut().map(|v| v.as_mut_slice()).collect();
-            let _ = collectives::ring_reduce_scatter_avg(&ctx, &group, &mut bufs, &shards);
+            let _ = collectives::ring_reduce_scatter_avg(&mut ctx, &group, &mut bufs, &shards);
         }
         self.engine.reduce_scatter(shard_bytes);
 
@@ -366,12 +368,15 @@ impl Trainer {
         self.engine.now()
     }
 
-    /// Validation loss on the held-out split (node-0 parameters).
+    /// Validation loss on the held-out split (node-0 parameters); the
+    /// eval sweep runs chunk-parallel on the worker pool.
     pub fn validate(&self, batches: u64) -> Result<f64> {
         let mut total = 0.0f64;
         for i in 0..batches {
             let batch = self.task.val_batch(i);
-            total += self.model.eval_step(&self.params[0], &batch)? as f64;
+            total += self
+                .model
+                .eval_step_pooled(&self.params[0], &batch, &self.pool)? as f64;
         }
         Ok(total / batches.max(1) as f64)
     }
@@ -400,8 +405,13 @@ impl Trainer {
         };
         let mut probe = self.cfg.repl.build(self.mesh.shards.shard_len());
         let st = &mut self.ranks[0];
-        let mut buf = st.opt.buffer_mut().to_vec();
+        // Stage the optimizer buffer through a scratch-pooled vector
+        // instead of a fresh `to_vec` clone per probe — the next probe
+        // reuses the capacity.
+        let mut buf = st.scratch.take_f32();
+        buf.extend_from_slice(st.opt.buffer_mut());
         let (q, p) = probe.extract(&rctx, &mut buf, &mut st.scratch);
+        st.scratch.put_f32(buf);
         st.scratch.put_f32(q);
         let stats = p.as_ref().map(WireStats::of);
         if let Some(p) = p {
@@ -419,9 +429,15 @@ impl Trainer {
             self.cfg.repl.label()
         );
         let mut metrics = RunMetrics::new(label);
+        // `--trace-out`: accumulate every step's scheduled comm events
+        // (the engine clears them per step) for the Chrome-trace dump.
+        let mut trace: Vec<(u64, CommEvent)> = Vec::new();
         for _ in 0..self.cfg.steps {
             let wall0 = Instant::now();
             let loss = self.step()?;
+            if self.cfg.trace_out.is_some() {
+                trace.extend(self.engine.events.iter().map(|ev| (self.step - 1, ev.clone())));
+            }
             let inter = self.traffic.inter_node_bytes();
             let intra = self.traffic.intra_node_bytes();
             metrics.steps.push(StepRow {
@@ -456,6 +472,16 @@ impl Trainer {
             } else if self.step % 50 == 0 {
                 log::debug!("step {:>5}  loss {loss:.4}", self.step);
             }
+        }
+        if let Some(path) = &self.cfg.trace_out {
+            let doc = engine::chrome_trace_json(&trace);
+            std::fs::write(path, doc.to_string_pretty())
+                .with_context(|| format!("writing schedule trace to {path:?}"))?;
+            log::info!(
+                "wrote Chrome-trace schedule ({} events) to {}",
+                trace.len(),
+                path.display()
+            );
         }
         Ok(metrics)
     }

@@ -639,7 +639,81 @@ mod engine_invariants {
         };
         let serial = losses(1);
         assert_eq!(serial, losses(4));
-        assert_eq!(serial, losses(0)); // one worker per stream
+        assert_eq!(serial, losses(0)); // one pool slot per hardware thread
+    }
+
+    /// Tentpole acceptance: the persistent pool's chunk-parallel kernels
+    /// (stream fan-out, collectives, optimizer, DCT batches, eval) keep
+    /// every bit identical for any `--threads N`, across meshes,
+    /// replication schemes, and optimizers — step metrics, validation
+    /// losses, and final parameters alike.
+    #[test]
+    fn prop_thread_count_bit_identical_across_meshes_and_schemes() {
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(1, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&["demo:1/8", "random:1/8", "striding:1/8", "diloco:2", "full"]);
+            let opt = *g.choose(&["demo-sgd", "decoupled-adamw", "adamw", "sgd"]);
+            let fingerprint = |threads: usize| {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 3;
+                cfg.threads = threads;
+                cfg.val_every = 2;
+                cfg.val_batches = 2;
+                cfg.opt = OptSpec::parse(opt).unwrap();
+                if opt == "adamw" {
+                    cfg.repl = ReplSpec::parse("full").unwrap();
+                }
+                let (t, m) = run(cfg);
+                let loss_bits: Vec<u64> = m.steps.iter().map(|r| r.loss.to_bits()).collect();
+                let val_bits: Vec<u64> = m.val.iter().map(|r| r.loss.to_bits()).collect();
+                let param_bits: Vec<u32> =
+                    t.params_node0().iter().map(|p| p.to_bits()).collect();
+                (loss_bits, val_bits, param_bits)
+            };
+            let serial = fingerprint(1);
+            for threads in [2usize, 4, 8] {
+                let parallel = fingerprint(threads);
+                detonation::util::proptest::prop_assert(
+                    serial == parallel,
+                    format!("{nodes}x{accels} {repl}/{opt}: --threads {threads} changed bits"),
+                );
+            }
+        });
+    }
+
+    /// Satellite: `--trace-out` dumps the engine's scheduled comm events
+    /// as Chrome-trace JSON (per-rank lanes, ts/dur in sim-µs).
+    #[test]
+    fn trace_out_writes_chrome_trace_json() {
+        let path = std::env::temp_dir().join("detonation-trace-test.json");
+        let _ = std::fs::remove_file(&path);
+        let mut cfg = synth_cfg("demo:1/8");
+        cfg.steps = 3;
+        cfg.trace_out = Some(path.clone());
+        let _ = run(cfg);
+        let text = std::fs::read_to_string(&path).expect("trace file written");
+        let doc = detonation::util::json::parse(&text).expect("valid JSON");
+        let evs = doc
+            .get("traceEvents")
+            .and_then(|j| j.as_arr())
+            .expect("traceEvents array");
+        assert!(!evs.is_empty(), "trace has no events");
+        let names: Vec<&str> = evs
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        assert!(names.contains(&"reduce-scatter"), "{names:?}");
+        assert!(names.contains(&"naive-gather"), "{names:?}");
+        // per-rank lanes: a 2x2 mesh uses tids 0..4
+        let tids: std::collections::BTreeSet<u64> = evs
+            .iter()
+            .filter_map(|e| e.get("tid").and_then(|t| t.as_u64()))
+            .collect();
+        assert_eq!(tids.into_iter().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
