@@ -1,0 +1,165 @@
+//! Async DiLoCo bench: convergence vs wallclock as the staleness knob
+//! sweeps.
+//!
+//!     cargo bench --bench async_diloco [-- --quick]
+//!
+//! On a comm-exposed two-node link (100 Mbps — the paper's Fig 10
+//! regime) with the synthetic surrogate LM, runs
+//!
+//! * synchronous DiLoCo (`diloco:8`) and the conventional AdamW
+//!   full-sync baseline, and
+//! * async DiLoCo at `--staleness S` for `S ∈ {0, 1, 2, 4}`,
+//!
+//! recording simulated time per step (the wallclock axis: local steps
+//! keep running while the periodic gather is in flight) against the
+//! final validation loss (the convergence axis: the averaged delta
+//! lands S steps late). Asserts the PR's acceptance criteria — `S = 0`
+//! reproduces synchronous DiLoCo bit-for-bit, and every `S ≥ 1` is
+//! strictly faster per step than the synchronous scheme — and writes
+//! the sweep to `BENCH_async_diloco.json` at the repo root
+//! (schema: docs/BENCHMARKS.md; `--quick` shrinks the run for the CI
+//! smoke step).
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::runtime;
+use detonation::metrics::RunMetrics;
+use detonation::net::NetModel;
+use detonation::train::Trainer;
+use detonation::util::fmt_secs;
+use detonation::util::json::Json;
+
+const PERIOD: u64 = 8;
+
+fn cfg(opt: &str, repl: &str, staleness: Option<u64>, steps: u64) -> Result<ExperimentConfig> {
+    let mut c = ExperimentConfig {
+        model: "synthetic-lm".into(),
+        nodes: 2,
+        accels_per_node: 2,
+        steps,
+        lr: 0.02,
+        seed: 11,
+        val_every: steps, // validate once, at the end of the run
+        val_batches: 8,
+        net: NetModel::throttled(100.0),
+        ..Default::default()
+    };
+    c.apply_arg("opt", opt)?;
+    c.apply_arg("repl", repl)?;
+    if let Some(s) = staleness {
+        c.apply_arg("staleness", &s.to_string())?;
+    }
+    Ok(c)
+}
+
+fn run(c: ExperimentConfig) -> Result<RunMetrics> {
+    let rt = runtime()?;
+    let mut t = Trainer::new(&rt, c)?;
+    t.run()
+}
+
+fn row(label: &str, staleness: Option<u64>, m: &RunMetrics, val_sync: f64) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(label.to_string())),
+        (
+            "staleness",
+            staleness.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+        ),
+        ("sim_step_s", Json::Num(m.mean_step_time())),
+        ("sim_time_s", Json::Num(m.total_sim_time())),
+        ("exposed_comm_s", Json::Num(m.total_exposed_comm())),
+        ("hidden_comm_s", Json::Num(m.total_hidden_comm())),
+        ("inter_bytes", Json::Num(m.total_inter_bytes() as f64)),
+        (
+            "final_val_loss",
+            m.final_val_loss().map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "val_delta_vs_sync_diloco",
+            m.final_val_loss()
+                .map(|v| Json::Num(v - val_sync))
+                .unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 3 * PERIOD } else { 8 * PERIOD };
+
+    // Baselines: synchronous DiLoCo and conventional AdamW full-sync.
+    let sync = run(cfg("demo-sgd", &format!("diloco:{PERIOD}"), None, steps)?)?;
+    let adamw = run(cfg("adamw", "full", None, steps)?)?;
+    let val_sync = sync.final_val_loss().expect("sync diloco validated");
+
+    println!(
+        "{:<22} {:>6} {:>12} {:>12} {:>10} {:>10} {:>10}",
+        "arm", "S", "t/step", "total", "hidden", "val", "Δval"
+    );
+    let print_row = |label: &str, m: &RunMetrics, s: Option<u64>| {
+        println!(
+            "{:<22} {:>6} {:>12} {:>12} {:>10} {:>10.4} {:>+10.4}",
+            label,
+            s.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            fmt_secs(m.mean_step_time()),
+            fmt_secs(m.total_sim_time()),
+            fmt_secs(m.total_hidden_comm()),
+            m.final_val_loss().unwrap_or(f64::NAN),
+            m.final_val_loss().unwrap_or(f64::NAN) - val_sync,
+        );
+    };
+    print_row("diloco (sync)", &sync, None);
+    print_row("adamw full-sync", &adamw, None);
+
+    let mut rows = vec![
+        row("diloco-sync", None, &sync, val_sync),
+        row("adamw-full", None, &adamw, val_sync),
+    ];
+    for s in [0u64, 1, 2, 4] {
+        let m = run(cfg("demo-sgd", &format!("diloco:{PERIOD}"), Some(s), steps)?)?;
+        print_row(&format!("async diloco S={s}"), &m, Some(s));
+
+        // Acceptance: S = 0 is synchronous DiLoCo, bit for bit…
+        if s == 0 {
+            assert_eq!(
+                m.final_val_loss().map(f64::to_bits),
+                sync.final_val_loss().map(f64::to_bits),
+                "staleness 0 diverged from synchronous DiLoCo"
+            );
+            assert_eq!(
+                m.total_sim_time().to_bits(),
+                sync.total_sim_time().to_bits(),
+                "staleness 0 changed the schedule"
+            );
+        } else {
+            // …and any in-flight window buys wallclock on a
+            // comm-exposed link.
+            assert!(
+                m.mean_step_time() < sync.mean_step_time(),
+                "S={s} not faster per step: {} vs sync {}",
+                m.mean_step_time(),
+                sync.mean_step_time()
+            );
+        }
+        rows.push(row(&format!("async-diloco-s{s}"), Some(s), &m, val_sync));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("async_diloco".into())),
+        ("model", Json::Str("synthetic-lm".into())),
+        ("mesh", Json::Str("2x2".into())),
+        ("inter_mbps", Json::Num(100.0)),
+        ("period", Json::Num(PERIOD as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("quick", Json::Bool(quick)),
+        ("arms", Json::Arr(rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_async_diloco.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

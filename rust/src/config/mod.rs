@@ -99,6 +99,19 @@ impl ExperimentConfig {
         (self.bucket_mb * (1u64 << 20) as f64).round() as u64
     }
 
+    /// The async DiLoCo staleness knob (`--staleness`): steps between a
+    /// sync launch and the application of its averaged delta. 0 for
+    /// every synchronous configuration (including plain `diloco:N`
+    /// without the knob).
+    pub fn staleness(&self) -> u64 {
+        match self.repl {
+            ReplSpec::DiLoCo {
+                staleness: Some(s), ..
+            } => s,
+            _ => 0,
+        }
+    }
+
     /// Effective LR at a step (linear warmup → constant).
     pub fn lr_at(&self, step: u64) -> f32 {
         if self.warmup_steps == 0 || step >= self.warmup_steps {
@@ -142,6 +155,7 @@ impl ExperimentConfig {
                 ),
             ),
             ("bucket_mb", Json::Num(self.bucket_mb)),
+            ("staleness", Json::Num(self.staleness() as f64)),
             (
                 "stragglers",
                 Json::Arr(self.cluster.slowdown.iter().map(|&s| Json::Num(s)).collect()),
@@ -192,6 +206,32 @@ impl ExperimentConfig {
                 anyhow::ensure!(mb >= 0.0 && mb.is_finite(), "bucket-mb must be >= 0");
                 self.bucket_mb = mb;
             }
+            // Async DiLoCo: apply the periodic sync `S` steps after its
+            // launch (S = 0 runs the async path, bit-identical to the
+            // synchronous scheme). Must come after "repl" so it attaches
+            // to the configured period.
+            "staleness" => {
+                let s: u64 = value.parse()?;
+                match &mut self.repl {
+                    ReplSpec::DiLoCo {
+                        period, staleness, ..
+                    } => {
+                        anyhow::ensure!(
+                            s < *period,
+                            "staleness {s} must be < diloco period {period} \
+                             (one gather in flight at a time)"
+                        );
+                        *staleness = Some(s);
+                    }
+                    // 0 is the harmless default for every scheme; a real
+                    // staleness needs the periodic scheme to defer.
+                    _ if s == 0 => {}
+                    _ => anyhow::bail!(
+                        "--staleness only applies to the diloco replicator (got {:?})",
+                        self.repl.label()
+                    ),
+                }
+            }
             "straggler" => self.cluster.slowdown = ClusterModel::parse_slowdown(value)?,
             "node-mbps" => self.cluster.node_inter_bw = ClusterModel::parse_node_mbps(value)?,
             other => anyhow::bail!("unknown config key {other:?}"),
@@ -237,6 +277,30 @@ mod tests {
         assert_eq!(c.repl.label(), "random-1/16");
         assert!((c.net.inter_bw - 12.5e6).abs() < 1.0);
         assert!(c.apply_arg("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn staleness_knob_attaches_to_diloco_only() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.staleness(), 0);
+        // 0 is a harmless default on non-diloco schemes…
+        c.apply_arg("staleness", "0").unwrap();
+        // …but a real staleness needs the periodic scheme
+        assert!(c.apply_arg("staleness", "2").is_err());
+        c.apply_arg("repl", "diloco:8").unwrap();
+        assert_eq!(c.staleness(), 0);
+        c.apply_arg("staleness", "2").unwrap();
+        assert_eq!(c.staleness(), 2);
+        assert_eq!(c.repl.label(), "diloco-1/8-async2");
+        assert_eq!(c.to_json().get("staleness").unwrap().as_usize(), Some(2));
+        // staleness 0 on diloco selects the async implementation (S = 0)
+        c.apply_arg("staleness", "0").unwrap();
+        assert_eq!(c.staleness(), 0);
+        assert_eq!(c.repl.label(), "diloco-1/8-async0");
+        // bounded by the period
+        assert!(c.apply_arg("staleness", "8").is_err());
+        assert!(c.apply_arg("staleness", "-1").is_err());
+        assert!(c.apply_arg("staleness", "nan").is_err());
     }
 
     #[test]

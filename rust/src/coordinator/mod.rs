@@ -128,6 +128,8 @@ mod tests {
                 exposed_comm: 0.0,
                 hidden_comm: 0.0,
                 comm_events: 0,
+                staleness: 0,
+                sync_in_flight: 0,
                 wall_time: 0.0,
             });
             m.val.push(crate::metrics::ValRow {

@@ -37,6 +37,13 @@
 //!   so the first bucket's communication overlaps the remaining buckets'
 //!   compression (pipelined gradient buckets; schedule-only — numerics
 //!   and serialized totals are untouched);
+//! * `--staleness S` turns DiLoCo's periodic sync asynchronous
+//!   ([`replicate::AsyncDiLoCoReplicator`]): the gather is charged on a
+//!   deferred NIC lane while up to S further local steps run, and the
+//!   averaged delta lands S steps late with the federated-averaging
+//!   correction taken against the launch snapshot — the first scheme
+//!   where communication overlaps *optimization*, not just compute
+//!   within a step (`S = 0` is bit-identical to synchronous DiLoCo);
 //! * [`net::ClusterModel`] adds per-node straggler slowdowns and NIC
 //!   bandwidth overrides on top of the homogeneous α–β [`net::NetModel`];
 //! * metrics split each step into compute vs exposed-comm vs hidden-comm
@@ -51,6 +58,14 @@
 //! and the surrogate eval loop all dispatch chunk-parallel work onto it
 //! over a fixed grid, so results are bit-identical for any `--threads N`
 //! (prop-tested) and the steady-state hot path allocates nothing.
+//!
+//! ## Where to start reading
+//!
+//! [`train`] (the step loop) → [`train::engine`] (the clock) →
+//! [`replicate`] (what crosses the wire) → [`collectives`] (how, and at
+//! what α–β cost) → [`parallel`] (how the host executes it). The repo
+//! root's `README.md` has the scheme matrix and the full CLI reference;
+//! `docs/BENCHMARKS.md` describes every `BENCH_*.json` artifact.
 
 pub mod collectives;
 pub mod compress;

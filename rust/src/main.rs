@@ -48,7 +48,15 @@ fn train_parser() -> ArgParser {
         .opt(
             "repl",
             "demo:1/8",
-            "replicator: demo:1/8|random:1/16|striding:1/8|diloco:8|full (+ :nosign :bf16 :chunk=N)",
+            "replicator: demo:1/8|random:1/16|striding:1/8|diloco:8|full \
+             (+ :nosign :bf16 :chunk=N; diloco also :async=S)",
+        )
+        .opt(
+            "staleness",
+            "0",
+            "async DiLoCo: apply the periodic sync S steps after its \
+             launch while local steps keep running (diloco only, S < \
+             period; 0 = synchronous, bit-identical to plain diloco)",
         )
         .opt("lr", "0.001", "learning rate")
         .opt("warmup", "0", "linear warmup steps")
@@ -91,6 +99,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         "val-every", "val-batches", "streams", "threads", "bucket-mb",
     ] {
         cfg.apply_arg(key, args.str(key))?;
+    }
+    // Applied only when given on the command line, so the flag's default
+    // never clobbers an `:async=S` component inside --repl — while an
+    // explicit `--staleness 0` still overrides it back to S = 0.
+    if argv
+        .iter()
+        .any(|a| a == "--staleness" || a.starts_with("--staleness="))
+    {
+        cfg.apply_arg("staleness", args.str("staleness"))?;
     }
     let mbps: f64 = args.f64("inter-mbps");
     if mbps > 0.0 {

@@ -28,6 +28,13 @@ pub struct StepRow {
     /// `--bucket-mb` bucketing; whole-phase schedules emit one per phase
     /// per group).
     pub comm_events: u64,
+    /// The run's `--staleness` knob (steps between an async DiLoCo
+    /// launch and the application of its mean; 0 = synchronous).
+    pub staleness: u64,
+    /// Deferred syncs in flight at the end of this step (shards whose
+    /// launched gather has not arrived yet; always 0 for synchronous
+    /// schemes).
+    pub sync_in_flight: u64,
     /// Real wall time spent computing this step (profiling only).
     pub wall_time: f64,
 }
@@ -116,12 +123,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
         writeln!(
             f,
-            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,wall_time"
+            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,sync_in_flight,wall_time"
         )?;
         for r in &self.steps {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{:.6}",
+                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{:.6}",
                 r.step,
                 r.sim_time,
                 r.loss,
@@ -131,6 +138,8 @@ impl RunMetrics {
                 r.exposed_comm,
                 r.hidden_comm,
                 r.comm_events,
+                r.staleness,
+                r.sync_in_flight,
                 r.wall_time
             )?;
         }
@@ -238,6 +247,8 @@ mod tests {
                 exposed_comm: 0.15,
                 hidden_comm: 0.05,
                 comm_events: 6,
+                staleness: 0,
+                sync_in_flight: 0,
                 wall_time: 0.01,
             });
         }

@@ -2,12 +2,16 @@
 //! chunk-parallel primitives over a **fixed, thread-count-independent
 //! chunk grid**.
 //!
-//! The trainer creates one [`WorkerPool`] from `--threads` and every
-//! numeric hot path — the collectives' ring reductions, the fused
-//! optimizer update kernels, the surrogate eval loop, the DeMo
-//! decode/residual scatter, the blocked DCT batches, and the per-stream
-//! fwd/bwd fan-out — dispatches onto it. Workers are spawned once and
-//! parked between jobs (no per-step `std::thread::scope` re-spawn).
+//! The trainer ([`crate::train::Trainer`]) creates one [`WorkerPool`]
+//! from `--threads` and every numeric hot path — the collectives' ring
+//! reductions ([`crate::collectives`]), the fused optimizer update
+//! kernels ([`crate::optim`]), the surrogate eval loop, the DeMo
+//! decode/residual scatter, the blocked DCT batches ([`crate::dct`]),
+//! and the per-stream fwd/bwd fan-out — dispatches onto it. Workers are
+//! spawned once and parked between jobs (no per-step
+//! `std::thread::scope` re-spawn). Note this pool is the *host
+//! wall-clock* axis; simulated time is owned by
+//! [`crate::train::engine::StepEngine`] and the two never interact.
 //!
 //! ## Determinism contract
 //!

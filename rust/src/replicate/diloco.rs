@@ -1,6 +1,8 @@
 //! DiLoCo replication (Douillard et al. 2023, recast as a DeToNATION
-//! replication scheme): workers step locally and synchronize every n-th
-//! optimization step.
+//! replication scheme): workers step locally and synchronize after every
+//! `period`-th optimization step (steps are 0-indexed internally, so the
+//! sync fires on steps `period − 1, 2·period − 1, …` — see
+//! [`DiLoCoReplicator::is_sync_step`] for the pinned convention).
 //!
 //! Mechanics here follow the federated-averaging identity: a worker that
 //! applied local updates δ_i since the last sync can jump onto the
@@ -14,6 +16,20 @@
 //!   which the paper also applies).
 //!
 //! Average bandwidth = full buffer / period → "compression rate" 1/period.
+//!
+//! ## Async DiLoCo ([`AsyncDiLoCoReplicator`])
+//!
+//! The synchronous scheme blocks every rank at the periodic gather. The
+//! async variant instead *launches* the gather on a sync step and keeps
+//! taking local steps while it is in flight; the averaged delta lands
+//! `S` steps later (`--staleness S`, `0 ≤ S < period`). The
+//! federated-averaging correction is computed against the **snapshot of
+//! the accumulator at launch** — deltas accumulated while the gather was
+//! in flight belong to the *next* window's payload and survive the
+//! arrival, so each rank lands on `θ_base + mean_j(δ_j) + d_i` where
+//! `d_i` is its own since-launch displacement. With `S = 0` the launch
+//! and arrival coincide and the update chain is bit-identical to
+//! [`DiLoCoReplicator`] (prop-tested here and in the integration suite).
 
 use super::{ReplCtx, Replicator};
 use crate::compress::{Payload, Scratch};
@@ -57,6 +73,20 @@ impl DiLoCoReplicator {
     }
 
 
+    /// Whether `step` replicates. The sync fires after every
+    /// `period`-th optimization step *counting from 1*: steps are
+    /// 0-indexed, so the first window covers steps `0..period` and syncs
+    /// on step `period − 1` (the convention `(step + 1) % period == 0`
+    /// pins — every rank of an R-group must agree on it bit-for-bit).
+    ///
+    /// ```
+    /// use detonation::replicate::DiLoCoReplicator;
+    /// use detonation::tensor::Dtype;
+    /// let r = DiLoCoReplicator::new(4, false, Dtype::F32, 8);
+    /// let syncs: Vec<u64> = (0..12).filter(|&s| r.is_sync_step(s)).collect();
+    /// assert_eq!(syncs, vec![3, 7, 11]);
+    /// assert!(DiLoCoReplicator::new(1, false, Dtype::F32, 8).is_sync_step(0));
+    /// ```
     pub fn is_sync_step(&self, step: u64) -> bool {
         (step + 1) % self.period == 0
     }
@@ -124,6 +154,145 @@ impl Replicator for DiLoCoReplicator {
 
     fn rate(&self) -> f64 {
         1.0 / self.period as f64
+    }
+}
+
+/// Async DiLoCo: the periodic sync gather is *launched* on the sync step
+/// and its averaged delta is applied `staleness` steps later, while local
+/// optimization keeps running (see the module docs for the exact
+/// federated-averaging correction).
+///
+/// Protocol differences from [`DiLoCoReplicator`]:
+/// * [`Replicator::extract`] on a sync step additionally **snapshots**
+///   the shipped accumulator and opens the next window immediately —
+///   deltas taken while the gather is in flight feed the next payload;
+/// * [`Replicator::sync_delay`] returns `staleness`, telling the trainer
+///   to park the gathered payloads and hand the mean to
+///   [`Replicator::finalize`] on step `launch + staleness`;
+/// * [`Replicator::finalize`] with a mean corrects against the launch
+///   snapshot (not the live accumulator), so since-launch local progress
+///   is preserved.
+///
+/// `staleness` must satisfy `staleness < period` so at most one gather is
+/// in flight per shard (enforced at construction). `staleness == 0`
+/// reproduces the synchronous scheme bit-for-bit.
+pub struct AsyncDiLoCoReplicator {
+    inner: DiLoCoReplicator,
+    staleness: u64,
+    /// Snapshot of the accumulator shipped by the in-flight gather
+    /// (Some between the launch step and the arrival step).
+    in_flight: Option<Vec<f32>>,
+}
+
+impl AsyncDiLoCoReplicator {
+    pub fn new(
+        period: u64,
+        sign: bool,
+        dtype: Dtype,
+        shard_len: usize,
+        staleness: u64,
+    ) -> AsyncDiLoCoReplicator {
+        assert!(
+            staleness < period,
+            "staleness {staleness} must be < period {period} (one gather in flight at a time)"
+        );
+        AsyncDiLoCoReplicator {
+            inner: DiLoCoReplicator::new(period, sign, dtype, shard_len),
+            staleness,
+            in_flight: None,
+        }
+    }
+
+    /// Builder: enable the 2-bit ternary wire extension (see
+    /// `compress::Payload::packed`).
+    pub fn packed(mut self, packed: bool) -> Self {
+        self.inner = self.inner.packed(packed);
+        self
+    }
+
+    /// Whether a launched gather has not yet been applied.
+    pub fn sync_in_flight(&self) -> bool {
+        self.in_flight.is_some()
+    }
+}
+
+impl Replicator for AsyncDiLoCoReplicator {
+    fn name(&self) -> String {
+        format!("async-{}-s{}", self.inner.name(), self.staleness)
+    }
+
+    fn extract(
+        &mut self,
+        ctx: &ReplCtx,
+        buf: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> (Vec<f32>, Option<Payload>) {
+        assert_eq!(buf.len(), self.inner.delta_acc.len());
+        let mut q_local = scratch.take_f32();
+        q_local.extend_from_slice(buf);
+        buf.fill(0.0);
+        crate::tensor::axpy(&mut self.inner.delta_acc, 1.0, &q_local);
+        if self.inner.is_sync_step(ctx.step) {
+            assert!(
+                self.in_flight.is_none(),
+                "step {}: previous gather still in flight (staleness must be < period)",
+                ctx.step
+            );
+            let mut values = scratch.take_f32();
+            values.extend_from_slice(&self.inner.delta_acc);
+            // Snapshot the shipped window and open the next one: the
+            // arrival correction subtracts this snapshot, while deltas
+            // accumulated in flight stay in `delta_acc` for the next
+            // payload.
+            let mut snap = scratch.take_f32();
+            snap.extend_from_slice(&self.inner.delta_acc);
+            self.in_flight = Some(snap);
+            self.inner.delta_acc.fill(0.0);
+            let payload = self.inner.mk_payload(None, values);
+            (q_local, Some(payload))
+        } else {
+            (q_local, None)
+        }
+    }
+
+    fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32], scratch: &mut Scratch) {
+        self.inner.decode(ctx, payload, out, scratch);
+    }
+
+    fn finalize(
+        &mut self,
+        _ctx: &ReplCtx,
+        q_local: Vec<f32>,
+        mean: Option<Vec<f32>>,
+        scratch: &mut Scratch,
+    ) -> Vec<f32> {
+        match mean {
+            None => q_local, // local step (launch step included)
+            Some(mean_delta) => {
+                // Arrival: jump onto the averaged trajectory while
+                // keeping since-launch local progress — the same float
+                // chain as the synchronous finalize, against the launch
+                // snapshot instead of the live accumulator.
+                let snap = self
+                    .in_flight
+                    .take()
+                    .expect("arrival without a launched gather");
+                let mut q = mean_delta;
+                crate::tensor::axpy(&mut q, -1.0, &snap);
+                crate::tensor::axpy(&mut q, 1.0, &q_local);
+                scratch.put_f32(snap);
+                scratch.put_f32(q_local);
+                q
+            }
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        self.inner.rate()
+    }
+
+    fn sync_delay(&self) -> u64 {
+        self.staleness
     }
 }
 
@@ -234,5 +403,141 @@ mod tests {
     fn average_bandwidth_matches_rate() {
         let r = DiLoCoReplicator::new(32, false, Dtype::F32, 64);
         assert!((r.rate() - 1.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "staleness")]
+    fn async_rejects_staleness_at_or_above_period() {
+        let _ = AsyncDiLoCoReplicator::new(4, false, Dtype::F32, 8, 4);
+    }
+
+    /// Tentpole pin: with `staleness = 0` the async replicator's whole
+    /// visible behaviour — q, residual, payload, and finalized update —
+    /// is bit-identical to the synchronous [`DiLoCoReplicator`], for
+    /// random periods, lengths, and update sequences.
+    #[test]
+    fn prop_staleness_zero_bit_identical_to_sync() {
+        proptest(24, |g| {
+            let period = g.usize(1, 6) as u64;
+            let len = g.usize(1, 64);
+            let mut sync = DiLoCoReplicator::new(period, true, Dtype::F32, len);
+            let mut asyn = AsyncDiLoCoReplicator::new(period, true, Dtype::F32, len, 0);
+            let mut ss = Scratch::new();
+            let mut sa = Scratch::new();
+            for step in 0..3 * period {
+                let u = g.vec_normal(len, 1.0);
+                let c = ctx(step);
+                let mut buf_s = u.clone();
+                let mut buf_a = u;
+                let (qs, ps) = sync.extract(&c, &mut buf_s, &mut ss);
+                let (qa, pa) = asyn.extract(&c, &mut buf_a, &mut sa);
+                prop_assert(qs == qa, format!("step {step}: q diverged"));
+                prop_assert(buf_s == buf_a, format!("step {step}: residual diverged"));
+                let (fs, fa) = match (ps, pa) {
+                    (Some(ps), Some(pa)) => {
+                        prop_assert(
+                            ps.values == pa.values,
+                            format!("step {step}: payload diverged"),
+                        );
+                        let payloads = vec![ps];
+                        let ms = mean_decoded(&sync, &c, &payloads, len, &mut ss);
+                        let pay_a = vec![pa];
+                        let ma = mean_decoded(&asyn, &c, &pay_a, len, &mut sa);
+                        prop_assert(ms == ma, format!("step {step}: mean diverged"));
+                        (
+                            sync.finalize(&c, qs, Some(ms), &mut ss),
+                            asyn.finalize(&c, qa, Some(ma), &mut sa),
+                        )
+                    }
+                    (None, None) => (
+                        sync.finalize(&c, qs, None, &mut ss),
+                        asyn.finalize(&c, qa, None, &mut sa),
+                    ),
+                    _ => panic!("step {step}: ranks must agree on sync steps"),
+                };
+                prop_assert(fs == fa, format!("step {step}: finalize diverged"));
+                ss.put_f32(fs);
+                sa.put_f32(fa);
+            }
+        });
+    }
+
+    /// The async federated-averaging identity: after a stale arrival,
+    /// each rank sits at `mean(window δ) + its own since-launch deltas` —
+    /// the averaged trajectory plus preserved local progress.
+    #[test]
+    fn prop_stale_arrival_preserves_since_launch_progress() {
+        proptest(16, |g| {
+            let period = g.usize(2, 6) as u64;
+            let staleness = g.usize(1, period as usize - 1) as u64;
+            let len = g.usize(1, 40);
+            let mut ra = AsyncDiLoCoReplicator::new(period, false, Dtype::F32, len, staleness);
+            let mut rb = AsyncDiLoCoReplicator::new(period, false, Dtype::F32, len, staleness);
+            let mut sa = Scratch::new();
+            let mut sb = Scratch::new();
+            let launch = period - 1;
+            let arrival = launch + staleness;
+            let mut applied_a = vec![0.0f32; len];
+            let mut applied_b = vec![0.0f32; len];
+            let mut window_a = vec![0.0f32; len]; // δ_a over steps 0..period
+            let mut window_b = vec![0.0f32; len];
+            let mut since_a = vec![0.0f32; len]; // d_a over steps launch+1..=arrival
+            let mut since_b = vec![0.0f32; len];
+            let mut parked: Option<Vec<Payload>> = None;
+            for step in 0..=arrival {
+                let ua = g.vec_normal(len, 1.0);
+                let ub = g.vec_normal(len, 1.0);
+                if step < period {
+                    crate::tensor::axpy(&mut window_a, 1.0, &ua);
+                    crate::tensor::axpy(&mut window_b, 1.0, &ub);
+                } else {
+                    crate::tensor::axpy(&mut since_a, 1.0, &ua);
+                    crate::tensor::axpy(&mut since_b, 1.0, &ub);
+                }
+                let c = ctx(step);
+                let mut bufa = ua.clone();
+                let mut bufb = ub.clone();
+                let (qa, pa) = ra.extract(&c, &mut bufa, &mut sa);
+                let (qb, pb) = rb.extract(&c, &mut bufb, &mut sb);
+                if let (Some(pa), Some(pb)) = (pa, pb) {
+                    assert_eq!(step, launch);
+                    assert!(ra.sync_in_flight() && rb.sync_in_flight());
+                    parked = Some(vec![pa, pb]);
+                }
+                let (fa, fb) = if step == arrival {
+                    let payloads = parked.take().expect("gather parked at launch");
+                    let ma = mean_decoded(&ra, &c, &payloads, len, &mut sa);
+                    let mb = ma.clone();
+                    (
+                        ra.finalize(&c, qa, Some(ma), &mut sa),
+                        rb.finalize(&c, qb, Some(mb), &mut sb),
+                    )
+                } else {
+                    (
+                        ra.finalize(&c, qa, None, &mut sa),
+                        rb.finalize(&c, qb, None, &mut sb),
+                    )
+                };
+                crate::tensor::axpy(&mut applied_a, 1.0, &fa);
+                crate::tensor::axpy(&mut applied_b, 1.0, &fb);
+            }
+            assert!(!ra.sync_in_flight() && !rb.sync_in_flight());
+            // applied − since-launch deltas = mean of the shipped window
+            let mean: Vec<f32> = window_a
+                .iter()
+                .zip(&window_b)
+                .map(|(a, b)| 0.5 * (a + b))
+                .collect();
+            let land_a: Vec<f32> = applied_a.iter().zip(&since_a).map(|(x, d)| x - d).collect();
+            let land_b: Vec<f32> = applied_b.iter().zip(&since_b).map(|(x, d)| x - d).collect();
+            prop_assert(
+                approx_slice_eq(&land_a, &mean, 1e-4),
+                format!("rank a off averaged trajectory (p={period} s={staleness})"),
+            );
+            prop_assert(
+                approx_slice_eq(&land_b, &mean, 1e-4),
+                format!("rank b off averaged trajectory (p={period} s={staleness})"),
+            );
+        });
     }
 }

@@ -5,13 +5,14 @@
 //! update buffer are exchanged across the replication group R (one group
 //! per shard index, spanning nodes) and *when*. The framework ships:
 //!
-//! | scheme   | selection                         | indices on wire? | when        |
-//! |----------|-----------------------------------|------------------|-------------|
-//! | DeMo     | chunked DCT-II → top-k per chunk  | yes (4 B each)   | every step  |
-//! | Random   | seeded random subset              | no (regenerated) | every step  |
-//! | Striding | every n-th index (rotating offset)| no (regenerated) | every step  |
-//! | DiLoCo   | everything                        | no               | every n-th  |
-//! | Full     | everything                        | no               | every step  |
+//! | scheme      | selection                         | indices on wire? | when        |
+//! |-------------|-----------------------------------|------------------|-------------|
+//! | DeMo        | chunked DCT-II → top-k per chunk  | yes (4 B each)   | every step  |
+//! | Random      | seeded random subset              | no (regenerated) | every step  |
+//! | Striding    | every n-th index (rotating offset)| no (regenerated) | every step  |
+//! | DiLoCo      | everything                        | no               | every n-th  |
+//! | async DiLoCo| everything                        | no               | every n-th, applied `S` steps late |
+//! | Full        | everything                        | no               | every step  |
 //!
 //! Random/Striding regenerate their index sets from `(seed, step, shard)`
 //! on every rank of the R-group — bit-identical by construction (tested) —
@@ -28,7 +29,11 @@
 //!    decodes each via [`Replicator::decode`], and averages;
 //! 3. [`Replicator::finalize`] turns `(q_local, mean)` into the update Q
 //!    the optimizer applies. DiLoCo uses this hook to re-synchronize
-//!    parameter trajectories after local-only steps.
+//!    parameter trajectories after local-only steps. A scheme with a
+//!    non-zero [`Replicator::sync_delay`] (async DiLoCo's `--staleness`)
+//!    gets its mean *deferred*: the trainer parks the gathered payloads
+//!    at the launch step and hands the decoded mean to `finalize` S
+//!    steps later, while local steps keep running.
 //!
 //! Every hook threads a per-worker [`Scratch`] arena: extraction draws
 //! its payload/`q` vectors from the arena's pools and hot-path stage
@@ -45,7 +50,7 @@ mod random;
 mod striding;
 
 pub use demo::DemoReplicator;
-pub use diloco::DiLoCoReplicator;
+pub use diloco::{AsyncDiLoCoReplicator, DiLoCoReplicator};
 pub use full::FullReplicator;
 pub use random::RandomReplicator;
 pub use striding::StridingReplicator;
@@ -119,6 +124,18 @@ pub trait Replicator: Send {
 
     /// Fraction of components selected per replicating step (reporting).
     fn rate(&self) -> f64;
+
+    /// Steps between a payload-emitting step and the application of its
+    /// gathered mean. 0 (the default for every synchronous scheme) means
+    /// the mean lands in the same step's [`Replicator::finalize`]; S > 0
+    /// tells the trainer to park the gathered payloads and hand the mean
+    /// to `finalize` S steps later while local steps keep running (async
+    /// DiLoCo's staleness knob). Must be identical on every rank of an
+    /// R-group and strictly smaller than the interval between
+    /// payload-emitting steps.
+    fn sync_delay(&self) -> u64 {
+        0
+    }
 
     /// How payloads cross the replication group. Sparse schemes use DeMo's
     /// naive blocking all-gather (the Fig 6 non-scaling primitive); the
@@ -223,6 +240,11 @@ pub enum ReplSpec {
         sign: bool,
         dtype: Dtype,
         packed: bool,
+        /// `None` = today's synchronous scheme; `Some(S)` = async DiLoCo
+        /// applying the gathered mean S steps after the launch
+        /// (`--staleness S`, or the `async=S` spec component; `Some(0)`
+        /// runs the async implementation, bit-identical to `None`).
+        staleness: Option<u64>,
     },
     Full {
         sign: bool,
@@ -233,7 +255,9 @@ pub enum ReplSpec {
 
 impl ReplSpec {
     /// Parse "demo:1/8", "random:1/16", "striding:1/32", "diloco:32",
-    /// "full" (+ optional ":nosign" / ":sign" / ":bf16" / ":chunk=128").
+    /// "full" (+ optional ":nosign" / ":sign" / ":bf16" / ":chunk=128";
+    /// diloco additionally takes ":async=S" for the stale-sync variant —
+    /// see `--staleness`).
     pub fn parse(s: &str) -> anyhow::Result<ReplSpec> {
         let mut parts = s.split(':');
         let kind = parts.next().unwrap_or("");
@@ -243,6 +267,7 @@ impl ReplSpec {
         let mut dtype = Dtype::F32;
         let mut chunk = 64usize;
         let mut packed = false;
+        let mut staleness = None;
         for p in parts {
             if let Some(r) = p.strip_prefix("1/") {
                 let c: f64 = r.parse()?;
@@ -250,6 +275,8 @@ impl ReplSpec {
                 period = c as u64;
             } else if let Some(c) = p.strip_prefix("chunk=") {
                 chunk = c.parse()?;
+            } else if let Some(a) = p.strip_prefix("async=") {
+                staleness = Some(a.parse()?);
             } else if p == "nosign" {
                 sign = false;
             } else if p == "sign" {
@@ -265,6 +292,17 @@ impl ReplSpec {
             } else {
                 anyhow::bail!("bad replicator component {p:?} in {s:?}");
             }
+        }
+        if let Some(st) = staleness {
+            anyhow::ensure!(
+                kind == "diloco",
+                "async={st} only applies to the diloco replicator, not {kind:?}"
+            );
+            anyhow::ensure!(
+                st < period,
+                "staleness {st} must be < diloco period {period} \
+                 (one gather in flight at a time)"
+            );
         }
         Ok(match kind {
             "demo" => ReplSpec::Demo {
@@ -291,6 +329,7 @@ impl ReplSpec {
                 sign,
                 dtype,
                 packed,
+                staleness,
             },
             // Full-sync baseline ships raw gradients (no sign) by default;
             // "full:sign" gives the signed variant (Fig 10's full-repl arm).
@@ -330,7 +369,15 @@ impl ReplSpec {
                 sign,
                 dtype,
                 packed,
-            } => Box::new(DiLoCoReplicator::new(period, sign, dtype, shard_len).packed(packed)),
+                staleness,
+            } => match staleness {
+                Some(s) => Box::new(
+                    AsyncDiLoCoReplicator::new(period, sign, dtype, shard_len, s).packed(packed),
+                ),
+                None => {
+                    Box::new(DiLoCoReplicator::new(period, sign, dtype, shard_len).packed(packed))
+                }
+            },
             ReplSpec::Full {
                 sign,
                 dtype,
@@ -344,6 +391,11 @@ impl ReplSpec {
             ReplSpec::Demo { rate, .. } => format!("demo-1/{:.0}", 1.0 / rate),
             ReplSpec::Random { rate, .. } => format!("random-1/{:.0}", 1.0 / rate),
             ReplSpec::Striding { rate, .. } => format!("striding-1/{:.0}", 1.0 / rate),
+            ReplSpec::DiLoCo {
+                period,
+                staleness: Some(s),
+                ..
+            } => format!("diloco-1/{period}-async{s}"),
             ReplSpec::DiLoCo { period, .. } => format!("diloco-1/{period}"),
             ReplSpec::Full { .. } => "full".to_string(),
         }
@@ -404,8 +456,15 @@ mod tests {
         );
         assert!(matches!(
             ReplSpec::parse("diloco:32").unwrap(),
-            ReplSpec::DiLoCo { period: 32, .. }
+            ReplSpec::DiLoCo { period: 32, staleness: None, .. }
         ));
+        assert!(matches!(
+            ReplSpec::parse("diloco:8:async=2").unwrap(),
+            ReplSpec::DiLoCo { period: 8, staleness: Some(2), .. }
+        ));
+        // staleness must stay below the period, and is diloco-only
+        assert!(ReplSpec::parse("diloco:4:async=4").is_err());
+        assert!(ReplSpec::parse("demo:1/8:async=1").is_err());
         assert!(matches!(
             ReplSpec::parse("full").unwrap(),
             ReplSpec::Full { .. }
@@ -421,6 +480,10 @@ mod tests {
     fn labels() {
         assert_eq!(ReplSpec::parse("demo:1/8").unwrap().label(), "demo-1/8");
         assert_eq!(ReplSpec::parse("diloco:16").unwrap().label(), "diloco-1/16");
+        assert_eq!(
+            ReplSpec::parse("diloco:8:async=2").unwrap().label(),
+            "diloco-1/8-async2"
+        );
         assert_eq!(ReplSpec::parse("full").unwrap().label(), "full");
     }
 
@@ -456,7 +519,14 @@ mod tests {
         // fresh arena per call, for every scheme.
         use crate::util::proptest::{prop_assert, proptest};
         proptest(10, |g| {
-            for spec in ["demo:1/8", "random:1/8", "striding:1/8", "diloco:2", "full"] {
+            for spec in [
+                "demo:1/8",
+                "random:1/8",
+                "striding:1/8",
+                "diloco:2",
+                "diloco:4:async=1",
+                "full",
+            ] {
                 let len = 128 * g.usize(1, 3);
                 let mut reused = Scratch::new();
                 let mut ra = ReplSpec::parse(spec).unwrap().build(len);

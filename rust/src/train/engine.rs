@@ -29,6 +29,14 @@
 //!   update when the gather lands (DeMo's async `dist.all_gather`
 //!   decoupling), and only the next *backward* requires the update to be
 //!   visible;
+//! * a **deferred gather** ([`StepEngine::gather_deferred`], async
+//!   DiLoCo's `--staleness` lane) reserves the NIC exactly like a normal
+//!   gather but does *not* gate the next backward at all: its completion
+//!   time is parked in a per-rank slot and only feeds `update_visible`
+//!   when the trainer announces the arrival step via
+//!   [`StepEngine::sync_arrival`], S steps after the launch — so up to S
+//!   whole optimization steps run under the in-flight sync (the events
+//!   carry the `async-gather` label in `--trace-out` Chrome traces);
 //! * the **intra-node reduce-scatter** streams gradient buckets while the
 //!   backward produces them: it may start with the backward but cannot
 //!   finish before it;
@@ -120,6 +128,11 @@ pub struct StepEngine {
     /// When rank r's parameters carry the latest optimizer update
     /// (gather/unshard landing time) — the next backward's dependency.
     update_visible: Vec<SimTime>,
+    /// Completion time of rank r's in-flight *deferred* gather (async
+    /// DiLoCo). Parked here instead of `update_visible` until the
+    /// trainer calls [`Self::sync_arrival`]; 0 when nothing is in
+    /// flight.
+    deferred_end: Vec<SimTime>,
     /// End of this step's reduce-scatter per rank (gather dependency).
     rs_done: Vec<SimTime>,
     /// Per-bucket reduce-scatter completion times this step (empty when
@@ -155,6 +168,7 @@ impl StepEngine {
             fabric: Timeline::new(world),
             nic: Timeline::new(world),
             update_visible: vec![0.0; world],
+            deferred_end: vec![0.0; world],
             rs_done: vec![0.0; world],
             rs_bucket_end: vec![Vec::new(); world],
             bwd_start: vec![0.0; world],
@@ -470,6 +484,61 @@ impl StepEngine {
         payload_bytes: &[u64],
         traffic: &TrafficMatrix,
     ) {
+        self.gather_inner(group, mode, payload_bytes, traffic, false);
+    }
+
+    /// The async (stale) replication lane: charge the gather on the NIC
+    /// now — same cost, same schedule, same serialized accounting as
+    /// [`Self::gather`] — but park its completion time instead of gating
+    /// the next backward on it. The trainer announces the application
+    /// step later via [`Self::sync_arrival`]; until then local steps run
+    /// free of the sync. Scheduled events carry the `async-gather` label
+    /// so in-flight syncs are visible in `--trace-out` Chrome traces.
+    pub fn gather_deferred(
+        &mut self,
+        group: &[usize],
+        mode: GatherMode,
+        payload_bytes: &[u64],
+        traffic: &TrafficMatrix,
+    ) {
+        self.gather_inner(group, mode, payload_bytes, traffic, true);
+    }
+
+    /// The trainer applied a deferred gather's averaged update this step:
+    /// its completion now gates the *next* backward (feeds
+    /// `update_visible`), S steps after [`Self::gather_deferred`] charged
+    /// the wire.
+    pub fn sync_arrival(&mut self, group: &[usize]) {
+        for &r in group {
+            if self.deferred_end[r] > self.update_visible[r] {
+                self.update_visible[r] = self.deferred_end[r];
+            }
+            self.deferred_end[r] = 0.0;
+        }
+    }
+
+    /// Where a gather's landing time goes: the next backward's dependency
+    /// (synchronous), or the parked slot [`Self::sync_arrival`] drains
+    /// (deferred). Keeping this the only difference between the two
+    /// lanes is what makes `--no-overlap` totals — and the whole
+    /// synchronous schedule — bit-identical whether or not the deferred
+    /// lane exists (engine-invariant tested).
+    fn mark_update_visible(&mut self, rank: usize, at: SimTime, deferred: bool) {
+        if deferred {
+            self.deferred_end[rank] = at;
+        } else {
+            self.update_visible[rank] = at;
+        }
+    }
+
+    fn gather_inner(
+        &mut self,
+        group: &[usize],
+        mode: GatherMode,
+        payload_bytes: &[u64],
+        traffic: &TrafficMatrix,
+        deferred: bool,
+    ) {
         let class = self.topo.group_link_class(group);
         let nodes: Vec<usize> = group.iter().map(|&r| self.topo.node_of(r)).collect();
         let link = Link {
@@ -477,7 +546,10 @@ impl StepEngine {
             lat: self.net.lat(class),
             bw: self.cluster.group_bw(&self.net, class, &nodes),
         };
-        let ev = mode.comm_event(&link, payload_bytes);
+        let mut ev = mode.comm_event(&link, payload_bytes);
+        if deferred {
+            ev.label = "async-gather";
+        }
         mode.record_traffic(traffic, &self.topo, group, payload_bytes);
         let dur = ev.duration;
         self.step_gather_max = self.step_gather_max.max(dur);
@@ -503,7 +575,7 @@ impl StepEngine {
             };
             for &r in group {
                 self.nic.reserve(r, h, dur);
-                self.update_visible[r] = h + dur;
+                self.mark_update_visible(r, h + dur, deferred);
             }
             self.push_event(ev.scheduled(h, Vec::new()), group);
         } else if self.n_buckets(max_payload) <= 1 {
@@ -512,7 +584,7 @@ impl StepEngine {
             let deps = self.nic_deps(group);
             for &r in group {
                 self.nic.reserve(r, start, dur);
-                self.update_visible[r] = start + dur;
+                self.mark_update_visible(r, start + dur, deferred);
             }
             self.push_event(ev.scheduled(start, deps), group);
         } else {
@@ -528,7 +600,10 @@ impl StepEngine {
                 for (s, &b) in sizes.iter_mut().zip(payload_bytes) {
                     *s = Self::bucket_split(b, m, j);
                 }
-                let bev = mode.comm_event(&link, &sizes);
+                let mut bev = mode.comm_event(&link, &sizes);
+                if deferred {
+                    bev.label = "async-gather";
+                }
                 let frac = (j + 1) as f64 / m as f64;
                 let earliest = group
                     .iter()
@@ -542,7 +617,7 @@ impl StepEngine {
                 deps = vec![id];
             }
             for &r in group {
-                self.update_visible[r] = end;
+                self.mark_update_visible(r, end, deferred);
             }
         }
     }
@@ -826,6 +901,112 @@ mod tests {
                 assert_eq!(sum, total, "total={total} m={m}");
             }
         }
+    }
+
+    /// Satellite invariant: the deferred (async DiLoCo) lane must leave
+    /// `--no-overlap` totals bit-for-bit unchanged — under barriers the
+    /// gather is charged at the launch step either way, and the parked
+    /// completion slot is never on the critical path.
+    #[test]
+    fn no_overlap_totals_unchanged_by_deferred_lane() {
+        let topo = Topology::new(2, 2);
+        let traffic = TrafficMatrix::new(2);
+        let mk = || StepEngine::new(topo, NetModel::hpc(), ClusterModel::uniform(), false);
+        let mut a = mk();
+        let mut b = mk();
+        let (mut ta, mut tb) = (StepTiming::default(), StepTiming::default());
+        for step in 0..6u64 {
+            for e in [&mut a, &mut b] {
+                e.begin_step();
+                e.unshard(4096, &traffic);
+                e.compute(1e9);
+                e.reduce_scatter(4096);
+            }
+            for acc in 0..2 {
+                let group: Vec<usize> = (0..2).map(|n| topo.rank(n, acc)).collect();
+                let sizes = vec![2048u64; 2];
+                if step % 3 == 0 {
+                    a.gather(&group, GatherMode::NaiveAllGather, &sizes, &traffic);
+                    b.gather_deferred(&group, GatherMode::NaiveAllGather, &sizes, &traffic);
+                }
+                if step % 3 == 2 {
+                    b.sync_arrival(&group);
+                }
+            }
+            ta = a.end_step();
+            tb = b.end_step();
+        }
+        assert_eq!(a.now(), b.now());
+        assert_eq!(a.serialized_time(), b.serialized_time());
+        assert_eq!(a.now(), a.serialized_time());
+        assert_eq!(ta.exposed_comm, tb.exposed_comm);
+        assert_eq!(ta.compute_time, tb.compute_time);
+    }
+
+    /// The tentpole schedule property: with a gather in flight on the
+    /// deferred lane, local steps keep running inside the gather window
+    /// (the synchronous lane stalls its next backward on it), and the
+    /// arrival S steps later still gates the following backward — so the
+    /// whole run ends strictly earlier than blocking at the launch.
+    #[test]
+    fn deferred_gather_overlaps_local_steps_until_arrival() {
+        let topo = Topology::new(2, 1);
+        let traffic = TrafficMatrix::new(2);
+        let group = [0usize, 1];
+        let payload = vec![1_000_000u64; 2];
+        let mk = || StepEngine::new(topo, NetModel::throttled(10.0), ClusterModel::uniform(), true);
+        let mut sync = mk();
+        let mut asy = mk();
+        let mut gather_end = 0.0f64;
+        for step in 0..4u64 {
+            for (e, deferred) in [(&mut sync, false), (&mut asy, true)] {
+                e.begin_step();
+                e.unshard(4096, &traffic);
+                e.compute(1e9);
+                e.reduce_scatter(4096);
+                if step == 0 {
+                    if deferred {
+                        e.gather_deferred(&group, GatherMode::NaiveAllGather, &payload, &traffic);
+                    } else {
+                        e.gather(&group, GatherMode::NaiveAllGather, &payload, &traffic);
+                    }
+                }
+                if step == 2 && deferred {
+                    e.sync_arrival(&group);
+                }
+                e.end_step();
+            }
+            if step == 0 {
+                let ev = asy
+                    .events
+                    .iter()
+                    .find(|ev| ev.label == "async-gather")
+                    .expect("deferred gather event with async label");
+                gather_end = ev.end();
+                assert!(sync.events.iter().any(|ev| ev.label == "naive-gather"));
+            }
+            if step == 2 {
+                let (ac, _, _) = asy.timelines();
+                let (sc, _, _) = sync.timelines();
+                for r in 0..2 {
+                    assert!(
+                        ac.now(r) < gather_end,
+                        "async rank {r} stalled on the in-flight sync"
+                    );
+                    assert!(sc.now(r) > gather_end, "sync rank {r} did not wait for it");
+                }
+            }
+        }
+        // the arrival fed update_visible: the step-3 backward ran after
+        // the gather landed, yet the run beats the blocking schedule.
+        let (ac, _, _) = asy.timelines();
+        assert!(ac.now(0) > gather_end);
+        assert!(
+            asy.now() < sync.now(),
+            "deferred lane should beat blocking at the launch: {} vs {}",
+            asy.now(),
+            sync.now()
+        );
     }
 
     #[test]

@@ -28,6 +28,18 @@
 //! events so the first bucket's communication overlaps the remaining
 //! buckets' compression. See `engine` for the dependency model.
 //!
+//! **Async DiLoCo (`--staleness S`).** A replicator with a non-zero
+//! [`crate::replicate::Replicator::sync_delay`] gets its periodic sync
+//! *deferred*: the launch step ships the payloads and charges the NIC on
+//! the engine's deferred lane ([`engine::StepEngine::gather_deferred`]),
+//! the step loop parks the gathered payloads in [`Trainer`]'s per-shard
+//! pending slot and keeps taking local steps, and S steps later the
+//! decoded mean is handed to `finalize` while
+//! [`engine::StepEngine::sync_arrival`] lets the completion gate the
+//! *next* backward. Data still moves in program order — staleness is a
+//! numerics knob (how late the averaged delta lands), and `S = 0` is
+//! bit-identical to the synchronous scheme (prop-tested).
+//!
 //! Edge cases degrade exactly as the paper states: |R|=1 → pure FSDP,
 //! |S|=1 → DeMo-style DDP, |S|=|R|=1 → single-accelerator training.
 //!
@@ -47,7 +59,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::collectives::{self, CollCtx, CollScratch, CommEvent};
-use crate::compress::{Scratch, WireStats};
+use crate::compress::{Payload, Scratch, WireStats};
 use crate::config::ExperimentConfig;
 use crate::data::{task_for, Task};
 use crate::metrics::{RunMetrics, StepRow, ValRow};
@@ -69,6 +81,16 @@ struct RankState {
     scratch: Scratch,
 }
 
+/// A deferred (async DiLoCo) sync parked between its launch step and its
+/// arrival step: the gathered payloads of one R-group, decoded and
+/// finalized `sync_delay` steps after the gather was charged.
+struct PendingSync {
+    /// Step at which the averaged delta is applied.
+    arrival: u64,
+    /// One payload per R-group member (group order).
+    payloads: Vec<Payload>,
+}
+
 /// The assembled training system.
 pub struct Trainer {
     pub cfg: ExperimentConfig,
@@ -88,6 +110,9 @@ pub struct Trainer {
     pool: Arc<WorkerPool>,
     /// Collectives' staging arena (zero-alloc steady state).
     coll_scratch: CollScratch,
+    /// Deferred syncs in flight, one slot per shard (async DiLoCo):
+    /// payloads parked between the launch step and `arrival`.
+    pending: Vec<Option<PendingSync>>,
     /// The discrete-event clock (per-rank compute + NIC timelines).
     pub engine: StepEngine,
     pub traffic: TrafficMatrix,
@@ -157,6 +182,7 @@ impl Trainer {
             ranks,
             pool,
             coll_scratch: CollScratch::new(),
+            pending: (0..cfg.accels_per_node).map(|_| None).collect(),
             engine,
             traffic,
             last_timing: StepTiming::default(),
@@ -230,6 +256,66 @@ impl Trainer {
                     .with_context(|| format!("stream {s} step {step}"))
             })
             .collect()
+    }
+
+    /// Decode the gathered payloads into each rank's mean, finalize it
+    /// against that rank's local update, apply, and recycle the consumed
+    /// payloads — one R-group's sync landing, shared by the synchronous
+    /// sync step and the async arrival.
+    fn apply_mean(
+        &mut self,
+        group: &[usize],
+        rctx: &ReplCtx,
+        payloads: Vec<Payload>,
+        locals: &mut [Vec<f32>],
+        (lo, hi): (usize, usize),
+        lr: f32,
+    ) {
+        for (gi, &rank) in group.iter().enumerate() {
+            let st = &mut self.ranks[rank];
+            let mean = mean_decoded(st.repl.as_ref(), rctx, &payloads, hi - lo, &mut st.scratch);
+            let q = st.repl.finalize(
+                rctx,
+                std::mem::take(&mut locals[gi]),
+                Some(mean),
+                &mut st.scratch,
+            );
+            let node = self.mesh.topo.node_of(rank);
+            st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
+            st.scratch.put_f32(q);
+        }
+        // Consumed payloads return their buffers to the ranks that
+        // produced them — the next step reuses the capacity.
+        for (gi, p) in payloads.into_iter().enumerate() {
+            self.ranks[group[gi]].scratch.recycle_payload(p);
+        }
+    }
+
+    /// Apply each rank's local-only update for one shard (no mean lands
+    /// this step): `finalize(None)`, then the optimizer step.
+    fn apply_local(
+        &mut self,
+        group: &[usize],
+        rctx: &ReplCtx,
+        locals: &mut [Vec<f32>],
+        lo: usize,
+        hi: usize,
+        lr: f32,
+    ) {
+        for (gi, &rank) in group.iter().enumerate() {
+            let st = &mut self.ranks[rank];
+            let q = st.repl.finalize(rctx, std::mem::take(&mut locals[gi]), None, &mut st.scratch);
+            let node = self.mesh.topo.node_of(rank);
+            st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
+            st.scratch.put_f32(q);
+        }
+    }
+
+    /// Number of deferred syncs currently in flight (shards whose
+    /// launched gather has not arrived yet) — the `sync_in_flight`
+    /// metrics column.
+    pub fn syncs_in_flight(&self) -> u64 {
+        self.pending.iter().filter(|p| p.is_some()).count() as u64
     }
 
     /// One full FlexDeMo step. Returns the mean train loss across ranks.
@@ -309,52 +395,46 @@ impl Trainer {
             }
 
             // gather + decode + finalize + apply
+            let lr = self.cfg.lr_at(step);
             if any_payload {
                 anyhow::ensure!(
                     payloads.iter().all(|p| p.is_some()),
                     "ranks disagree on sync step {step} shard {a}"
                 );
-                let payloads: Vec<crate::compress::Payload> =
-                    payloads.into_iter().map(|p| p.unwrap()).collect();
+                let payloads: Vec<Payload> = payloads.into_iter().map(|p| p.unwrap()).collect();
                 let mode = self.ranks[group[0]].repl.gather_mode();
+                let delay = self.ranks[group[0]].repl.sync_delay();
                 let sizes: Vec<u64> = payloads.iter().map(|p| p.wire_bytes()).collect();
-                self.engine.gather(&group, mode, &sizes, &self.traffic);
-
-                let lr = self.cfg.lr_at(step);
-                for (gi, &rank) in group.iter().enumerate() {
-                    let st = &mut self.ranks[rank];
-                    let mean =
-                        mean_decoded(st.repl.as_ref(), &rctx, &payloads, hi - lo, &mut st.scratch);
-                    let q = st.repl.finalize(
-                        &rctx,
-                        std::mem::take(&mut locals[gi]),
-                        Some(mean),
-                        &mut st.scratch,
+                if delay == 0 {
+                    // Synchronous replication: the mean lands this step.
+                    self.engine.gather(&group, mode, &sizes, &self.traffic);
+                    self.apply_mean(&group, &rctx, payloads, &mut locals, (lo, hi), lr);
+                } else {
+                    // Async launch: charge the wire on the deferred lane,
+                    // park the payloads, and apply only this step's local
+                    // update — the averaged delta lands `delay` steps
+                    // from now.
+                    anyhow::ensure!(
+                        self.pending[a].is_none(),
+                        "step {step} shard {a}: deferred sync launched with one still in flight"
                     );
-                    let node = self.mesh.topo.node_of(rank);
-                    st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
-                    st.scratch.put_f32(q);
+                    self.engine.gather_deferred(&group, mode, &sizes, &self.traffic);
+                    self.pending[a] = Some(PendingSync {
+                        arrival: step + delay,
+                        payloads,
+                    });
+                    self.apply_local(&group, &rctx, &mut locals, lo, hi, lr);
                 }
-                // Consumed payloads return their buffers to the ranks
-                // that produced them — the next step reuses the capacity.
-                for (gi, p) in payloads.into_iter().enumerate() {
-                    self.ranks[group[gi]].scratch.recycle_payload(p);
-                }
+            } else if self.pending[a].as_ref().is_some_and(|p| p.arrival == step) {
+                // Async arrival: the in-flight gather's mean is applied
+                // alongside this step's local update, and its completion
+                // starts gating the next backward.
+                let PendingSync { payloads, .. } = self.pending[a].take().unwrap();
+                self.engine.sync_arrival(&group);
+                self.apply_mean(&group, &rctx, payloads, &mut locals, (lo, hi), lr);
             } else {
                 // Local-only step (DiLoCo between syncs).
-                let lr = self.cfg.lr_at(step);
-                for (gi, &rank) in group.iter().enumerate() {
-                    let st = &mut self.ranks[rank];
-                    let q = st.repl.finalize(
-                        &rctx,
-                        std::mem::take(&mut locals[gi]),
-                        None,
-                        &mut st.scratch,
-                    );
-                    let node = self.mesh.topo.node_of(rank);
-                    st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
-                    st.scratch.put_f32(q);
-                }
+                self.apply_local(&group, &rctx, &mut locals, lo, hi, lr);
             }
         }
         self.last_timing = self.engine.end_step();
@@ -450,6 +530,8 @@ impl Trainer {
                 exposed_comm: self.last_timing.exposed_comm,
                 hidden_comm: self.last_timing.hidden_comm,
                 comm_events: self.engine.events.len() as u64,
+                staleness: self.cfg.staleness(),
+                sync_in_flight: self.syncs_in_flight(),
                 wall_time: wall0.elapsed().as_secs_f64(),
             });
             self.last_inter = inter;
