@@ -28,9 +28,14 @@ fn main() -> Result<()> {
     let args = ArgParser::new("async_diloco", "async DiLoCo staleness sweep")
         .opt("period", "8", "DiLoCo sync period (steps)")
         .opt("steps", "64", "training steps per arm")
+        .flag("quick", "CI smoke shape (3 sync windows per arm)")
         .parse_env();
     let period: u64 = args.str("period").parse()?;
-    let steps: u64 = args.str("steps").parse()?;
+    let steps: u64 = if args.flag("quick") {
+        3 * period
+    } else {
+        args.str("steps").parse()?
+    };
 
     let rt = runtime()?;
     let mut exp = Experiment::new("async_diloco", &results_root());

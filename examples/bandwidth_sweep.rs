@@ -18,7 +18,15 @@ fn main() -> Result<()> {
     let args = ArgParser::new("bandwidth_sweep", "time/step vs inter-node bandwidth")
         .opt("model", "seq2seq-tiny", "artifact name")
         .opt("steps", "24", "steps per point (timing only)")
+        .flag("quick", "artifact-free CI smoke shape (synthetic-lm, 6 steps)")
         .parse_env();
+    let quick = args.flag("quick");
+    let model = if quick {
+        "synthetic-lm".to_string()
+    } else {
+        args.string("model")
+    };
+    let steps = if quick { 6 } else { args.u64("steps") };
 
     let rt = runtime()?;
     let mut exp = Experiment::new("bandwidth_sweep", &results_root());
@@ -30,20 +38,25 @@ fn main() -> Result<()> {
         ("decoupled-adamw", "full:sign"),
     ];
     let bandwidths = [10.0, 100.0, 1000.0, 10000.0];
+    // Latency-scaled paper network (T5-Large reference); the model is
+    // fixed for the whole sweep, so resolve its size once.
+    let params = if quick {
+        detonation::runtime::Manifest::synthetic(&model).param_count
+    } else {
+        let meta = std::fs::read_to_string(format!("artifacts/{model}.meta.json"))?;
+        detonation::runtime::Manifest::parse(&meta)?.param_count
+    };
 
     let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
     for (opt, repl) in schemes {
         let mut times = Vec::new();
         for mbps in bandwidths {
-            // Latency-scaled paper network (T5-Large reference) with the
-            // inter-node link throttled to the sweep point.
-            let meta = std::fs::read_to_string(format!("artifacts/{}.meta.json", args.str("model")))?;
-            let params = detonation::runtime::Manifest::parse(&meta)?.param_count;
+            // Throttle the inter-node link to the sweep point.
             let mut cfg = ExperimentConfig {
-                model: args.string("model"),
+                model: model.clone(),
                 nodes: 2,
                 accels_per_node: 2,
-                steps: args.u64("steps"),
+                steps,
                 net: detonation::net::NetModel::paper_scaled(params, 737e6)
                     .with_inter_mbps(mbps),
                 ..Default::default()

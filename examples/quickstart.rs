@@ -8,7 +8,9 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Requires `make artifacts` to have produced `artifacts/lm-tiny.*`.
+//! Requires `make artifacts` to have produced `artifacts/lm-tiny.*`;
+//! `-- --quick` runs the artifact-free `synthetic-lm` smoke shape
+//! instead (what CI executes).
 
 use anyhow::Result;
 use detonation::config::ExperimentConfig;
@@ -17,15 +19,16 @@ use detonation::metrics::sparkline;
 use detonation::util::{fmt_bytes, fmt_secs};
 
 fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
     let rt = runtime()?;
     let mut exp = Experiment::new("quickstart", &results_root());
 
     let base = ExperimentConfig {
-        model: "lm-tiny".into(),
+        model: if quick { "synthetic-lm" } else { "lm-tiny" }.into(),
         nodes: 2,
         accels_per_node: 2,
-        steps: 120,
-        val_every: 40,
+        steps: if quick { 24 } else { 120 },
+        val_every: if quick { 8 } else { 40 },
         lr: 2e-3,
         ..Default::default()
     };

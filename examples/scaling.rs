@@ -22,25 +22,35 @@ fn main() -> Result<()> {
         .opt("accels", "4", "accelerators per node")
         .opt("steps", "100", "training steps")
         .opt("streams", "8", "distinct gradient streams computed")
+        .flag("quick", "artifact-free CI smoke shape (synthetic-lm, 8 nodes)")
         .parse_env();
+    let quick = args.flag("quick");
 
     let rt = runtime()?;
     let mut exp = Experiment::new("scaling", &results_root());
 
     let base = ExperimentConfig {
-        model: args.string("model"),
-        nodes: args.usize("nodes"),
-        accels_per_node: args.usize("accels"),
-        steps: args.u64("steps"),
-        compute_streams: args.usize("streams"),
+        model: if quick {
+            "synthetic-lm".into()
+        } else {
+            args.string("model")
+        },
+        nodes: if quick { 8 } else { args.usize("nodes") },
+        accels_per_node: if quick { 2 } else { args.usize("accels") },
+        steps: if quick { 6 } else { args.u64("steps") },
+        compute_streams: if quick { 4 } else { args.usize("streams") },
         lr: 1e-3,
         ..Default::default()
     };
     // Latency-scaled paper network (OLMo2-1B reference) — preserves the
     // paper's time ratios exactly (see NetModel::paper_scaled).
     let mut base = base;
-    let meta = std::fs::read_to_string(format!("artifacts/{}.meta.json", base.model))?;
-    let params = detonation::runtime::Manifest::parse(&meta)?.param_count;
+    let params = if quick {
+        detonation::runtime::Manifest::synthetic(&base.model).param_count
+    } else {
+        let meta = std::fs::read_to_string(format!("artifacts/{}.meta.json", base.model))?;
+        detonation::runtime::Manifest::parse(&meta)?.param_count
+    };
     base.net = detonation::net::NetModel::paper_scaled(params, 1.2e9);
 
     for (opt, repl) in [

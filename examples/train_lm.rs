@@ -31,6 +31,7 @@ fn main() -> Result<()> {
         .opt("warmup", "12", "warmup steps (OLMo-style 4%)")
         .opt("val-every", "50", "validation cadence")
         .flag("baseline", "also run the AdamW + full-sync baseline")
+        .flag("quick", "artifact-free CI smoke shape (synthetic-lm, 16 steps)")
         .parse_env();
 
     let rt = runtime()?;
@@ -39,6 +40,12 @@ fn main() -> Result<()> {
     let mut cfg = ExperimentConfig::default();
     for key in ["model", "steps", "nodes", "accels", "repl", "opt", "lr", "warmup", "val-every"] {
         cfg.apply_arg(key, args.str(key))?;
+    }
+    if args.flag("quick") {
+        cfg.model = "synthetic-lm".into();
+        cfg.steps = 16;
+        cfg.warmup_steps = 2;
+        cfg.val_every = 8;
     }
 
     let t0 = std::time::Instant::now();

@@ -18,18 +18,25 @@ fn main() -> Result<()> {
         .opt("model", "vit-tiny", "artifact name")
         .opt("steps", "200", "training steps")
         .opt("rate", "1/8", "compression rate")
+        .flag("quick", "artifact-free CI smoke shape (synthetic-lm, 8 steps)")
         .parse_env();
 
     let rt = runtime()?;
     let mut exp = Experiment::new("vision_classification", &results_root());
     let rate = args.str("rate").strip_prefix("1/").unwrap_or("8").to_string();
+    let quick = args.flag("quick");
+    let steps = if quick { 8 } else { args.u64("steps") };
 
     let base = ExperimentConfig {
-        model: args.string("model"),
+        model: if quick {
+            "synthetic-lm".into()
+        } else {
+            args.string("model")
+        },
         nodes: 2,
         accels_per_node: 2,
-        steps: args.u64("steps"),
-        val_every: (args.u64("steps") / 4).max(1),
+        steps,
+        val_every: (steps / 4).max(1),
         // Paper uses 1e-5 for ViT-B; our tiny stand-in tolerates more.
         lr: 5e-4,
         ..Default::default()

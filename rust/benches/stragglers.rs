@@ -1,0 +1,271 @@
+//! Straggler bench: late-arrival policy × straggler severity.
+//!
+//!     cargo bench --bench stragglers [-- --quick]
+//!
+//! On a 2×2 mesh whose inter-node bandwidth is tuned so one sync
+//! transfer spans ~20 fast-node steps (comm-exposed, but still inside a
+//! 4× straggler's arrival deadline), sweeps async DiLoCo
+//! (`diloco:8`, S = 2) over
+//!
+//! * straggler severity — node 1 compute slowdown ∈ {1×, 2×, 4×} — and
+//! * late policy — `wait` (PR 4 whole-group window) vs `drop` (NoLoCo
+//!   quorum) vs `partial` (late deltas fold into the next window) —
+//!
+//! plus a `--staleness auto` arm that derives each node's window from
+//! its profile. Asserts the PR's acceptance criteria while writing
+//! `BENCH_stragglers.json` at the repo root (schema: docs/BENCHMARKS.md;
+//! `--quick` shrinks the run for the CI smoke step):
+//!
+//! * under the 4× straggler, `drop` and `partial` are strictly faster
+//!   than `wait` in simulated time (an admitted contribution can never
+//!   stall its admitter; `wait` blocks every arrival on the straggler's
+//!   launch + full send queue);
+//! * on the homogeneous cluster, the `wait` arm — configured through the
+//!   per-node staleness table — is bit-identical to the PR 4 async path
+//!   configured through the plain global `--staleness` knob;
+//! * the tolerant arms actually exercised the policy (`dropped_syncs`
+//!   counted late contributions under the 4× straggler).
+
+use anyhow::Result;
+use detonation::compress::Scratch;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::runtime;
+use detonation::metrics::RunMetrics;
+use detonation::net::ClusterModel;
+use detonation::replicate::{ReplCtx, Replicator, ReplSpec};
+use detonation::train::Trainer;
+use detonation::util::fmt_secs;
+use detonation::util::json::Json;
+
+const PERIOD: u64 = 8;
+const STALENESS: u64 = 2;
+/// How many fast-node compute steps one sync transfer spans. The
+/// interesting regime is `S·severity < XFER_STEPS < period·severity`
+/// for the 4× arm: the transfer is too long for the straggler's
+/// `wait` window (so `wait` stalls every arrival) but short enough
+/// that the NIC is not saturated (so tolerating the straggler actually
+/// moves the horizon) — and fast contributions still land inside the
+/// straggler's own deadline, keeping the quorums non-trivial.
+const XFER_STEPS: f64 = 20.0;
+/// Pinned fast-node step time (s). Chosen far above the α latency so
+/// the tuned transfer is bandwidth- not latency-shaped.
+const STEP_TIME: f64 = 1e-3;
+
+fn base_cfg(steps: u64, step_flops: f64, inter_bw: f64, severity: f64) -> Result<ExperimentConfig> {
+    let mut c = ExperimentConfig {
+        model: "synthetic-lm".into(),
+        nodes: 2,
+        accels_per_node: 2,
+        steps,
+        lr: 0.02,
+        seed: 11,
+        val_every: steps, // validate once, at the end of the run
+        val_batches: 8,
+        ..Default::default()
+    };
+    c.net.device_flops = step_flops / STEP_TIME;
+    c.net.inter_bw = inter_bw;
+    if severity != 1.0 {
+        c.cluster = ClusterModel {
+            slowdown: ClusterModel::parse_slowdown(&format!("1:{severity}"))?,
+            node_inter_bw: vec![],
+        };
+    }
+    c.apply_arg("repl", &format!("diloco:{PERIOD}"))?;
+    Ok(c)
+}
+
+fn run(c: ExperimentConfig) -> Result<RunMetrics> {
+    let rt = runtime()?;
+    let mut t = Trainer::new(&rt, c)?;
+    t.run()
+}
+
+fn row(label: &str, severity: f64, policy: &str, m: &RunMetrics) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(label.to_string())),
+        ("severity", Json::Num(severity)),
+        ("policy", Json::Str(policy.to_string())),
+        ("sim_time_s", Json::Num(m.total_sim_time())),
+        ("sim_step_s", Json::Num(m.mean_step_time())),
+        ("exposed_comm_s", Json::Num(m.total_exposed_comm())),
+        ("hidden_comm_s", Json::Num(m.total_hidden_comm())),
+        ("dropped_syncs", Json::Num(m.total_dropped_syncs() as f64)),
+        (
+            "node_staleness",
+            Json::Str(
+                m.steps
+                    .first()
+                    .map(|r| r.node_staleness.clone())
+                    .unwrap_or_default(),
+            ),
+        ),
+        (
+            "final_val_loss",
+            m.final_val_loss().map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 3 * PERIOD } else { 6 * PERIOD };
+
+    // Tune the mesh: pin the fast-node step to STEP_TIME via
+    // device_flops, probe the exact wire size of a full-buffer payload
+    // at this mesh's shard length, and set the inter-node bandwidth so
+    // one sync transfer spans XFER_STEPS fast steps
+    // (bytes / bw = XFER_STEPS · STEP_TIME).
+    let (wire_bytes, step_flops) = {
+        let probe_cfg = base_cfg(1, 1e9, 1e9, 1.0)?;
+        let t = Trainer::new(&runtime()?, probe_cfg)?;
+        let shard_len = t.mesh.shards.shard_len();
+        let mut repl = ReplSpec::parse("diloco:1")?.build(shard_len);
+        let mut buf = vec![0.0f32; shard_len];
+        let ctx = ReplCtx {
+            step: 0,
+            shard: 0,
+            seed: 1,
+        };
+        let (_, p) = repl.extract(&ctx, &mut buf, &mut Scratch::new());
+        let wire = p.expect("diloco:1 syncs at step 0").wire_bytes();
+        (wire, t.model.manifest.step_flops())
+    };
+    let inter_bw = wire_bytes as f64 / (XFER_STEPS * STEP_TIME);
+    println!(
+        "tuned link: payload {wire_bytes} B, step {} -> {:.3} Mbit/s",
+        fmt_secs(STEP_TIME),
+        inter_bw * 8.0 / 1e6
+    );
+
+    println!(
+        "{:<26} {:>9} {:>8} {:>12} {:>12} {:>9} {:>10}",
+        "arm", "severity", "policy", "t/step", "total", "dropped", "val"
+    );
+    let print_row = |label: &str, m: &RunMetrics| {
+        println!(
+            "{:<26} {:>9} {:>8} {:>12} {:>12} {:>9} {:>10.4}",
+            label,
+            "",
+            "",
+            fmt_secs(m.mean_step_time()),
+            fmt_secs(m.total_sim_time()),
+            m.total_dropped_syncs(),
+            m.final_val_loss().unwrap_or(f64::NAN),
+        );
+    };
+
+    // PR 4 reference: the plain global --staleness knob, homogeneous.
+    let mut pr4_cfg = base_cfg(steps, step_flops, inter_bw, 1.0)?;
+    pr4_cfg.apply_arg("staleness", &STALENESS.to_string())?;
+    let pr4 = run(pr4_cfg)?;
+    print_row("pr4 async (global S)", &pr4);
+    let mut rows = vec![row("pr4-async-global", 1.0, "wait", &pr4)];
+
+    let mut by_key = std::collections::BTreeMap::new();
+    for &severity in &[1.0f64, 2.0, 4.0] {
+        for policy in ["wait", "drop", "partial"] {
+            let mut cfg = base_cfg(steps, step_flops, inter_bw, severity)?;
+            if policy == "wait" {
+                // Route the uniform window through the per-node table so
+                // the bit-identity claim below covers the resolution
+                // logic, not just identical specs.
+                cfg.apply_arg("node-staleness", &format!("0:{STALENESS},1:{STALENESS}"))?;
+                cfg.apply_arg("late-policy", "wait")?;
+            } else {
+                cfg.apply_arg("staleness", &STALENESS.to_string())?;
+                cfg.apply_arg("late-policy", policy)?;
+            }
+            let m = run(cfg)?;
+            print_row(&format!("s{severity} {policy}"), &m);
+            rows.push(row(
+                &format!("severity{severity}-{policy}"),
+                severity,
+                policy,
+                &m,
+            ));
+            by_key.insert((severity as u64, policy.to_string()), m);
+        }
+    }
+
+    // Acceptance 1: homogeneous wait (via the node table) is
+    // bit-identical to the PR 4 global-staleness path.
+    let wait1 = &by_key[&(1u64, "wait".to_string())];
+    assert_eq!(
+        wait1
+            .steps
+            .iter()
+            .map(|r| r.loss.to_bits())
+            .collect::<Vec<_>>(),
+        pr4.steps
+            .iter()
+            .map(|r| r.loss.to_bits())
+            .collect::<Vec<_>>(),
+        "homogeneous wait diverged from the PR 4 async losses"
+    );
+    assert_eq!(
+        wait1.total_sim_time().to_bits(),
+        pr4.total_sim_time().to_bits(),
+        "homogeneous wait changed the PR 4 async schedule"
+    );
+    assert_eq!(
+        wait1.final_val_loss().map(f64::to_bits),
+        pr4.final_val_loss().map(f64::to_bits),
+        "homogeneous wait diverged from the PR 4 async validation"
+    );
+
+    // Acceptance 2: under the 4× straggler, drop and partial are
+    // strictly faster than wait in simulated time.
+    let wait4 = &by_key[&(4u64, "wait".to_string())];
+    for policy in ["drop", "partial"] {
+        let m = &by_key[&(4u64, policy.to_string())];
+        assert!(
+            m.total_sim_time() < wait4.total_sim_time(),
+            "{policy} not faster than wait under the 4x straggler: {} vs {}",
+            m.total_sim_time(),
+            wait4.total_sim_time()
+        );
+        assert!(
+            m.total_dropped_syncs() > 0,
+            "{policy} recorded no late contributions under the 4x straggler"
+        );
+    }
+    assert_eq!(
+        wait4.total_dropped_syncs(),
+        0,
+        "the wait window must never drop"
+    );
+
+    // The auto arm: profile-derived per-node windows under the 4×
+    // straggler (recorded, not asserted — the table is the datum).
+    let mut auto_cfg = base_cfg(steps, step_flops, inter_bw, 4.0)?;
+    auto_cfg.apply_arg("staleness", "auto")?;
+    auto_cfg.apply_arg("late-policy", "drop")?;
+    let auto = run(auto_cfg)?;
+    print_row("s4 auto drop", &auto);
+    rows.push(row("severity4-auto-drop", 4.0, "drop", &auto));
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("stragglers".into())),
+        ("model", Json::Str("synthetic-lm".into())),
+        ("mesh", Json::Str("2x2".into())),
+        ("period", Json::Num(PERIOD as f64)),
+        ("staleness", Json::Num(STALENESS as f64)),
+        ("xfer_steps", Json::Num(XFER_STEPS)),
+        ("inter_mbps", Json::Num(inter_bw * 8.0 / 1e6)),
+        ("steps", Json::Num(steps as f64)),
+        ("quick", Json::Bool(quick)),
+        ("homogeneous_bit_identical_to_pr4_async", Json::Bool(true)),
+        ("drop_beats_wait_under_4x_straggler", Json::Bool(true)),
+        ("partial_beats_wait_under_4x_straggler", Json::Bool(true)),
+        ("arms", Json::Arr(rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_stragglers.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

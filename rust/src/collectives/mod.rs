@@ -61,6 +61,11 @@ pub struct CommEvent {
     /// Participating ranks (empty until scheduled; the engine fills it —
     /// Chrome-trace lanes map one tid per rank).
     pub ranks: Vec<usize>,
+    /// Owning node for events that belong to a single sender (the
+    /// straggler-tolerant per-member async gather lanes); `None` for
+    /// whole-group collectives. Surfaces as `owner_node` in
+    /// `--trace-out` args so parked gathers are attributable.
+    pub node: Option<u64>,
 }
 
 impl CommEvent {
@@ -74,7 +79,14 @@ impl CommEvent {
             start: 0.0,
             deps: Vec::new(),
             ranks: Vec::new(),
+            node: None,
         }
+    }
+
+    /// Builder: tag this event with its owning (sender) node.
+    pub fn owned_by(mut self, node: usize) -> CommEvent {
+        self.node = Some(node as u64);
+        self
     }
 
     pub fn end(&self) -> SimTime {

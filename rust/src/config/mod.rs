@@ -8,7 +8,7 @@ use std::path::PathBuf;
 
 use crate::net::{ClusterModel, NetModel};
 use crate::optim::OptSpec;
-use crate::replicate::ReplSpec;
+use crate::replicate::{LatePolicy, ReplSpec};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -58,6 +58,13 @@ pub struct ExperimentConfig {
     pub bucket_mb: f64,
     /// Per-node stragglers + NIC bandwidth overrides (empty = uniform).
     pub cluster: ClusterModel,
+    /// `--staleness auto`: derive each node's async DiLoCo staleness
+    /// from its simulated compute/NIC profile
+    /// ([`ClusterModel::auto_staleness`]) instead of one global S.
+    pub staleness_auto: bool,
+    /// `--node-staleness R:S[,R:S…]`: explicit per-node staleness
+    /// overrides (index = node; `None` = use the global/auto value).
+    pub node_staleness: Vec<Option<u64>>,
 }
 
 impl Default for ExperimentConfig {
@@ -85,6 +92,8 @@ impl Default for ExperimentConfig {
             trace_out: None,
             bucket_mb: 0.0,
             cluster: ClusterModel::uniform(),
+            staleness_auto: false,
+            node_staleness: Vec::new(),
         }
     }
 }
@@ -110,6 +119,98 @@ impl ExperimentConfig {
             } => s,
             _ => 0,
         }
+    }
+
+    /// The late-arrival policy of the async DiLoCo window
+    /// (`--late-policy`, or the `async=S,policy` spec component).
+    /// [`LatePolicy::Wait`] for every non-DiLoCo scheme.
+    pub fn late_policy(&self) -> LatePolicy {
+        match self.repl {
+            ReplSpec::DiLoCo { policy, .. } => policy,
+            _ => LatePolicy::Wait,
+        }
+    }
+
+    /// Resolve the per-node staleness table: the global `--staleness`
+    /// value everywhere, replaced by the profile-derived
+    /// [`ClusterModel::auto_staleness`] under `--staleness auto`, then
+    /// patched by explicit `--node-staleness R:S` overrides. `step_flops`
+    /// and `gather_bytes` feed the auto derivation (the trainer passes
+    /// the model's step cost and its per-node send-volume estimate).
+    /// Every entry is validated against the DiLoCo period; non-DiLoCo
+    /// schemes only accept an all-zero result.
+    pub fn resolve_node_staleness(
+        &self,
+        step_flops: f64,
+        gather_bytes: u64,
+    ) -> anyhow::Result<Vec<u64>> {
+        let period = match self.repl {
+            ReplSpec::DiLoCo { period, .. } => Some(period),
+            _ => None,
+        };
+        let mut table = if self.staleness_auto {
+            let period = period
+                .ok_or_else(|| anyhow::anyhow!("--staleness auto requires the diloco replicator"))?;
+            self.cluster
+                .auto_staleness(&self.net, self.nodes, step_flops, gather_bytes, period)
+        } else {
+            vec![self.staleness(); self.nodes]
+        };
+        for (node, s) in self.node_staleness.iter().enumerate() {
+            if let Some(s) = *s {
+                anyhow::ensure!(
+                    node < self.nodes,
+                    "--node-staleness names node {node}, but the cluster has {} nodes",
+                    self.nodes
+                );
+                table[node] = s;
+            }
+        }
+        match period {
+            Some(period) => {
+                for (node, &s) in table.iter().enumerate() {
+                    anyhow::ensure!(
+                        s < period,
+                        "node {node} staleness {s} must be < diloco period {period} \
+                         (one gather in flight at a time)"
+                    );
+                }
+            }
+            None => anyhow::ensure!(
+                table.iter().all(|&s| s == 0),
+                "per-node staleness only applies to the diloco replicator (got {:?})",
+                self.repl.label()
+            ),
+        }
+        Ok(table)
+    }
+
+    /// Parse the `--node-staleness` table, "NODE:S[,NODE:S…]". In a
+    /// *mixed* table, S = 0 makes that node aggregate at the launch
+    /// step itself: under `wait` it blocks on every peer transfer
+    /// (synchronous-style), under `drop`/`partial` it averages whatever
+    /// has landed by its own backward end — typically only its own
+    /// delta on slow links. An **all-zero** resolved table means no
+    /// async window exists at all: the run is plain synchronous DiLoCo
+    /// and the late policy is inert (there are never late arrivals).
+    pub fn parse_node_staleness(spec: &str) -> anyhow::Result<Vec<Option<u64>>> {
+        let mut table: Vec<Option<u64>> = Vec::new();
+        if spec.trim().is_empty() {
+            return Ok(table);
+        }
+        for part in spec.split(',') {
+            let (node, value) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad entry {part:?}, want NODE:STALENESS"))?;
+            let node: usize = node.trim().parse()?;
+            anyhow::ensure!(node < 65_536, "node index {node} out of range");
+            let value: u64 = value.trim().parse()?;
+            if table.len() <= node {
+                table.resize(node + 1, None);
+            }
+            table[node] = Some(value);
+        }
+        Ok(table)
     }
 
     /// Effective LR at a step (linear warmup → constant).
@@ -156,6 +257,20 @@ impl ExperimentConfig {
             ),
             ("bucket_mb", Json::Num(self.bucket_mb)),
             ("staleness", Json::Num(self.staleness() as f64)),
+            ("staleness_auto", Json::Bool(self.staleness_auto)),
+            (
+                "node_staleness",
+                Json::Arr(
+                    self.node_staleness
+                        .iter()
+                        .map(|s| s.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+            (
+                "late_policy",
+                Json::Str(self.late_policy().label().to_string()),
+            ),
             (
                 "stragglers",
                 Json::Arr(self.cluster.slowdown.iter().map(|&s| Json::Num(s)).collect()),
@@ -208,9 +323,25 @@ impl ExperimentConfig {
             }
             // Async DiLoCo: apply the periodic sync `S` steps after its
             // launch (S = 0 runs the async path, bit-identical to the
-            // synchronous scheme). Must come after "repl" so it attaches
-            // to the configured period.
+            // synchronous scheme). "auto" derives one S per node from
+            // its simulated compute/NIC profile. Must come after "repl"
+            // so it attaches to the configured period.
             "staleness" => {
+                if value == "auto" {
+                    match &mut self.repl {
+                        ReplSpec::DiLoCo { staleness, .. } => {
+                            // Arm the async machinery; the trainer fills
+                            // the per-node table at resolve time.
+                            staleness.get_or_insert(0);
+                            self.staleness_auto = true;
+                        }
+                        _ => anyhow::bail!(
+                            "--staleness auto only applies to the diloco replicator (got {:?})",
+                            self.repl.label()
+                        ),
+                    }
+                    return Ok(());
+                }
                 let s: u64 = value.parse()?;
                 match &mut self.repl {
                     ReplSpec::DiLoCo {
@@ -222,12 +353,44 @@ impl ExperimentConfig {
                              (one gather in flight at a time)"
                         );
                         *staleness = Some(s);
+                        self.staleness_auto = false;
                     }
                     // 0 is the harmless default for every scheme; a real
                     // staleness needs the periodic scheme to defer.
                     _ if s == 0 => {}
                     _ => anyhow::bail!(
                         "--staleness only applies to the diloco replicator (got {:?})",
+                        self.repl.label()
+                    ),
+                }
+            }
+            // Per-node staleness overrides (straggler-tolerant async
+            // DiLoCo); validated against the period at resolve time so
+            // the spec order of --repl / --node-staleness doesn't matter.
+            "node-staleness" => {
+                let table = Self::parse_node_staleness(value)?;
+                if table.iter().any(|s| s.is_some_and(|s| s > 0)) {
+                    anyhow::ensure!(
+                        matches!(self.repl, ReplSpec::DiLoCo { .. }),
+                        "--node-staleness only applies to the diloco replicator (got {:?})",
+                        self.repl.label()
+                    );
+                    if let ReplSpec::DiLoCo { staleness, .. } = &mut self.repl {
+                        staleness.get_or_insert(0);
+                    }
+                }
+                self.node_staleness = table;
+            }
+            // What an aggregation does with peer contributions that miss
+            // its arrival deadline; "wait" is the harmless default for
+            // every scheme.
+            "late-policy" => {
+                let p = LatePolicy::parse(value)?;
+                match &mut self.repl {
+                    ReplSpec::DiLoCo { policy, .. } => *policy = p,
+                    _ if p == LatePolicy::Wait => {}
+                    _ => anyhow::bail!(
+                        "--late-policy only applies to the diloco replicator (got {:?})",
                         self.repl.label()
                     ),
                 }
@@ -301,6 +464,70 @@ mod tests {
         assert!(c.apply_arg("staleness", "8").is_err());
         assert!(c.apply_arg("staleness", "-1").is_err());
         assert!(c.apply_arg("staleness", "nan").is_err());
+    }
+
+    #[test]
+    fn staleness_auto_and_node_table_knobs() {
+        let mut c = ExperimentConfig::default();
+        // auto / node tables are diloco-only
+        assert!(c.apply_arg("staleness", "auto").is_err());
+        assert!(c.apply_arg("node-staleness", "1:2").is_err());
+        c.apply_arg("node-staleness", "").unwrap(); // empty is a no-op
+        c.apply_arg("repl", "diloco:8").unwrap();
+        c.apply_arg("staleness", "auto").unwrap();
+        assert!(c.staleness_auto);
+        assert_eq!(c.staleness(), 0); // the table is resolved later
+        // an explicit global S turns auto back off
+        c.apply_arg("staleness", "2").unwrap();
+        assert!(!c.staleness_auto);
+        // node overrides parse sparsely, S = 0 allowed (pin to sync)
+        c.apply_arg("node-staleness", "1:3,0:0").unwrap();
+        assert_eq!(c.node_staleness, vec![Some(0), Some(3)]);
+        assert!(c.apply_arg("node-staleness", "1:x").is_err());
+        assert!(c.apply_arg("node-staleness", "nope").is_err());
+
+        // resolution: global fill, then overrides; period-bounded
+        let table = c.resolve_node_staleness(1e9, 1 << 20).unwrap();
+        assert_eq!(table, vec![0, 3]);
+        c.apply_arg("node-staleness", "1:8").unwrap(); // == period
+        assert!(c.resolve_node_staleness(1e9, 1 << 20).is_err());
+        c.apply_arg("node-staleness", "3:1").unwrap(); // node out of range
+        assert!(c.resolve_node_staleness(1e9, 1 << 20).is_err());
+
+        // auto derives per-node values within [1, period)
+        c.apply_arg("node-staleness", "").unwrap();
+        c.apply_arg("staleness", "auto").unwrap();
+        c.apply_arg("straggler", "1:4.0").unwrap();
+        let table = c.resolve_node_staleness(1e9, 1 << 20).unwrap();
+        assert_eq!(table.len(), 2);
+        assert!(table.iter().all(|&s| (1..8).contains(&s)));
+        // the compute straggler needs no more slack than the fast node
+        assert!(table[1] <= table[0]);
+    }
+
+    #[test]
+    fn late_policy_knob() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.late_policy(), LatePolicy::Wait);
+        c.apply_arg("late-policy", "wait").unwrap(); // harmless anywhere
+        assert!(c.apply_arg("late-policy", "drop").is_err()); // demo scheme
+        c.apply_arg("repl", "diloco:8").unwrap();
+        c.apply_arg("late-policy", "drop").unwrap();
+        assert_eq!(c.late_policy(), LatePolicy::Drop);
+        c.apply_arg("late-policy", "partial").unwrap();
+        assert_eq!(c.late_policy(), LatePolicy::Partial);
+        assert!(c.apply_arg("late-policy", "sometimes").is_err());
+        // the spec form carries both knobs at once
+        c.apply_arg("repl", "diloco:8:async=2,drop").unwrap();
+        assert_eq!(c.staleness(), 2);
+        assert_eq!(c.late_policy(), LatePolicy::Drop);
+        assert_eq!(
+            c.to_json().get("late_policy").unwrap().as_str(),
+            Some("drop")
+        );
+        // non-diloco schemes never defer, so they report wait
+        c.apply_arg("repl", "full").unwrap();
+        assert_eq!(c.late_policy(), LatePolicy::Wait);
     }
 
     #[test]

@@ -129,7 +129,9 @@ mod tests {
                 hidden_comm: 0.0,
                 comm_events: 0,
                 staleness: 0,
+                node_staleness: String::new(),
                 sync_in_flight: 0,
+                dropped_syncs: String::new(),
                 wall_time: 0.0,
             });
             m.val.push(crate::metrics::ValRow {

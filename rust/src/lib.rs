@@ -44,6 +44,14 @@
 //!   correction taken against the launch snapshot — the first scheme
 //!   where communication overlaps *optimization*, not just compute
 //!   within a step (`S = 0` is bit-identical to synchronous DiLoCo);
+//! * on heterogeneous clusters the window turns **straggler-tolerant**:
+//!   `--staleness auto` resolves one S per node from its compute/NIC
+//!   profile ([`net::ClusterModel::auto_staleness`], with explicit
+//!   `--node-staleness R:S` overrides), the launch charges one
+//!   per-member NIC lane so fast nodes ship at their own pace, and
+//!   `--late-policy drop|partial` finalizes each node's window from the
+//!   on-time quorum (NoLoCo-style, averaging denominator corrected to
+//!   the contributing set) instead of blocking on the slowest member;
 //! * [`net::ClusterModel`] adds per-node straggler slowdowns and NIC
 //!   bandwidth overrides on top of the homogeneous α–β [`net::NetModel`];
 //! * metrics split each step into compute vs exposed-comm vs hidden-comm

@@ -56,7 +56,28 @@ fn train_parser() -> ArgParser {
             "0",
             "async DiLoCo: apply the periodic sync S steps after its \
              launch while local steps keep running (diloco only, S < \
-             period; 0 = synchronous, bit-identical to plain diloco)",
+             period; 0 = synchronous, bit-identical to plain diloco; \
+             'auto' derives one S per node from its compute/NIC profile)",
+        )
+        .opt(
+            "node-staleness",
+            "",
+            "per-node staleness overrides for async DiLoCo, \
+             NODE:S[,NODE:S...] (diloco only; patches the global/auto \
+             value; in a mixed table S = 0 makes that node aggregate at \
+             the launch step itself — under wait it blocks on every \
+             peer like the synchronous scheme, under drop/partial it \
+             averages whatever has landed by then; an all-zero table is \
+             plain synchronous diloco, late policy inert)",
+        )
+        .opt(
+            "late-policy",
+            "wait",
+            "what an async DiLoCo aggregation does with peer deltas that \
+             miss its arrival deadline: wait = whole-group window (PR 4 \
+             semantics), drop = NoLoCo-style quorum with the averaging \
+             denominator corrected to the contributing set, partial = \
+             fold late deltas into that node's next window",
         )
         .opt("lr", "0.001", "learning rate")
         .opt("warmup", "0", "linear warmup steps")
@@ -116,10 +137,20 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if args.flag("no-overlap") {
         cfg.overlap = false;
     }
-    for key in ["straggler", "node-mbps", "trace-out"] {
+    for key in ["straggler", "node-mbps", "trace-out", "node-staleness"] {
         if !args.str(key).is_empty() {
             cfg.apply_arg(key, args.str(key))?;
         }
+    }
+    // "wait" is the universal default, so only a non-default policy (or
+    // an explicit flag) needs to reach the config — mirroring how
+    // --staleness avoids clobbering an `:async=S,policy` repl component.
+    if args.str("late-policy") != "wait"
+        || argv
+            .iter()
+            .any(|a| a == "--late-policy" || a.starts_with("--late-policy="))
+    {
+        cfg.apply_arg("late-policy", args.str("late-policy"))?;
     }
     let rt = runtime()?;
     let mut exp = Experiment::new(args.str("name"), &results_root());

@@ -29,12 +29,23 @@ pub struct StepRow {
     /// per group).
     pub comm_events: u64,
     /// The run's `--staleness` knob (steps between an async DiLoCo
-    /// launch and the application of its mean; 0 = synchronous).
+    /// launch and the application of its mean; 0 = synchronous). Under
+    /// per-node staleness this is the table's maximum; `node_staleness`
+    /// carries the full table.
     pub staleness: u64,
+    /// Resolved per-node staleness table, `;`-joined in node order
+    /// (e.g. `"2;4"`); empty for runs without the async machinery.
+    pub node_staleness: String,
     /// Deferred syncs in flight at the end of this step (shards whose
     /// launched gather has not arrived yet; always 0 for synchronous
     /// schemes).
     pub sync_in_flight: u64,
+    /// Per-node count of peer contributions that missed this node's
+    /// arrival deadline this step (`;`-joined in node order; dropped
+    /// under `--late-policy drop`, carried to the next window under
+    /// `partial`; always all-zero under `wait`). Empty when the
+    /// straggler-tolerant path is inactive.
+    pub dropped_syncs: String,
     /// Real wall time spent computing this step (profiling only).
     pub wall_time: f64,
 }
@@ -100,6 +111,21 @@ impl RunMetrics {
         }
     }
 
+    /// Total late peer contributions across the run (the sum over steps
+    /// and nodes of the `dropped_syncs` column; 0 when the straggler-
+    /// tolerant path never fired).
+    pub fn total_dropped_syncs(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|r| {
+                r.dropped_syncs
+                    .split(';')
+                    .filter_map(|s| s.parse::<u64>().ok())
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
     /// Mean simulated time per step.
     pub fn mean_step_time(&self) -> f64 {
         if self.steps.is_empty() {
@@ -123,12 +149,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
         writeln!(
             f,
-            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,sync_in_flight,wall_time"
+            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,node_staleness,sync_in_flight,dropped_syncs,wall_time"
         )?;
         for r in &self.steps {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{:.6}",
+                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{:.6}",
                 r.step,
                 r.sim_time,
                 r.loss,
@@ -139,7 +165,9 @@ impl RunMetrics {
                 r.hidden_comm,
                 r.comm_events,
                 r.staleness,
+                r.node_staleness,
                 r.sync_in_flight,
+                r.dropped_syncs,
                 r.wall_time
             )?;
         }
@@ -248,7 +276,9 @@ mod tests {
                 hidden_comm: 0.05,
                 comm_events: 6,
                 staleness: 0,
+                node_staleness: "0;0".into(),
                 sync_in_flight: 0,
+                dropped_syncs: if s % 2 == 0 { "1;0".into() } else { String::new() },
                 wall_time: 0.01,
             });
         }
@@ -266,6 +296,9 @@ mod tests {
         assert_eq!(m.final_loss(), Some(5.0 - 0.9));
         assert_eq!(m.final_val_loss(), Some(4.2));
         assert_eq!(m.total_inter_bytes(), 1000);
+        // per-node dropped column sums across steps and nodes (empty
+        // cells — inactive straggler path — count as zero)
+        assert_eq!(m.total_dropped_syncs(), 5);
         assert!((m.total_sim_time() - 5.0).abs() < 1e-9);
         assert!((m.mean_step_time() - 0.5).abs() < 1e-9);
         let t = m.tail_loss(3).unwrap();

@@ -368,6 +368,47 @@ impl ClusterModel {
         }
     }
 
+    /// Derive each node's staleness budget (`--staleness auto`) from its
+    /// simulated compute/NIC profile: the number of *local* steps the
+    /// node's sync transfer spans,
+    ///
+    /// ```text
+    /// S_n = clamp(ceil(xfer_n / step_n), 1, period − 1)
+    /// xfer_n = inter_lat + gather_bytes / node_bw(n)
+    /// step_n = compute_time(step_flops) · slowdown(n)
+    /// ```
+    ///
+    /// so a node behind a slow NIC tolerates a larger S (the transfer
+    /// needs more steps to hide), while a compute straggler's long steps
+    /// absorb the same transfer in fewer of them — its arrival deadline
+    /// lands earlier in step count, which is what lets the fast nodes'
+    /// contributions reach it in time. `gather_bytes` is the caller's
+    /// estimate of the per-node send volume (payload × (group − 1) for
+    /// the naive all-gather).
+    pub fn auto_staleness(
+        &self,
+        net: &NetModel,
+        nodes: usize,
+        step_flops: f64,
+        gather_bytes: u64,
+        period: u64,
+    ) -> Vec<u64> {
+        let max_s = period.saturating_sub(1);
+        if max_s == 0 {
+            // period 1 leaves no room for an in-flight window: every
+            // step syncs, so the only consistent derivation is the
+            // synchronous S = 0 everywhere.
+            return vec![0; nodes];
+        }
+        (0..nodes)
+            .map(|n| {
+                let step = (net.compute_time(step_flops) * self.slowdown_of(n)).max(1e-30);
+                let xfer = net.inter_lat + gather_bytes as f64 / self.node_bw(net, n);
+                ((xfer / step).ceil() as u64).clamp(1, max_s)
+            })
+            .collect()
+    }
+
     /// Parse "NODE:FACTOR[,NODE:FACTOR...]" into a slowdown table.
     pub fn parse_slowdown(spec: &str) -> anyhow::Result<Vec<f64>> {
         parse_node_table(spec, 1.0)
@@ -680,6 +721,38 @@ mod tests {
         assert_eq!(c.node_bw(&m, 1), m.inter_bw);
         // group runs at the slowest member NIC
         assert!((c.group_bw(&m, LinkClass::InterNode, &[0, 1]) - 12.5e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn auto_staleness_tracks_nic_and_compute_profiles() {
+        let net = NetModel {
+            intra_bw: 1e9,
+            inter_bw: 1000.0, // 1 KB/s: 4000 B gather = 4 s on the wire
+            intra_lat: 0.0,
+            inter_lat: 0.0,
+            device_flops: 1e9, // 1e9 FLOP step = 1 s of compute
+        };
+        // Uniform cluster: every node spans ceil(4/1) = 4 steps.
+        let c = ClusterModel::uniform();
+        assert_eq!(c.auto_staleness(&net, 3, 1e9, 4000, 8), vec![4, 4, 4]);
+        // A 4× compute straggler absorbs the transfer in 1 long step; a
+        // node behind a 4×-slower NIC needs 16 (clamped to period − 1).
+        let c = ClusterModel {
+            slowdown: vec![1.0, 4.0],
+            node_inter_bw: vec![0.0, 0.0, 250.0],
+        };
+        assert_eq!(c.auto_staleness(&net, 3, 1e9, 4000, 8), vec![4, 1, 7]);
+        // S is always at least 1 and at most period − 1…
+        assert_eq!(
+            ClusterModel::uniform().auto_staleness(&net, 2, 1e15, 1, 2),
+            vec![1, 1]
+        );
+        // …except at period 1, where no in-flight window can exist and
+        // the derivation degrades to synchronous S = 0.
+        assert_eq!(
+            ClusterModel::uniform().auto_staleness(&net, 2, 1e9, 4000, 1),
+            vec![0, 0]
+        );
     }
 
     #[test]

@@ -273,6 +273,17 @@ impl Replicator for AsyncDiLoCoReplicator {
                 // keeping since-launch local progress — the same float
                 // chain as the synchronous finalize, against the launch
                 // snapshot instead of the live accumulator.
+                //
+                // The finalize is quorum-agnostic by construction: `mean`
+                // may average any contributing set (the full group, or a
+                // NoLoCo-style on-time quorum under `--late-policy drop` /
+                // `partial`, assembled via `mean_decoded_refs` with the
+                // denominator corrected to the contributing count). The
+                // correction only ever subtracts this rank's own launch
+                // snapshot, and a rank's own payload is always in its
+                // quorum (it never crosses the wire), so the identity
+                // `θ_base + mean(contributing δ) + d_own` holds for every
+                // quorum shape.
                 let snap = self
                     .in_flight
                     .take()
@@ -460,6 +471,57 @@ mod tests {
                 sa.put_f32(fa);
             }
         });
+    }
+
+    /// Straggler-tolerance pin: when a member is dropped from the
+    /// aggregation (NoLoCo's late-arrival policy), the averaging
+    /// denominator must be the **contributing count**, not the group
+    /// size — `mean_decoded_refs` over the quorum divides by the quorum
+    /// size, and the surviving rank still lands on the quorum's averaged
+    /// trajectory.
+    #[test]
+    fn dropped_member_corrects_the_averaging_denominator() {
+        use crate::replicate::mean_decoded_refs;
+        let len = 6;
+        let period = 2u64;
+        let mut ra = AsyncDiLoCoReplicator::new(period, false, Dtype::F32, len, 1);
+        let mut rb = AsyncDiLoCoReplicator::new(period, false, Dtype::F32, len, 1);
+        let mut rc = AsyncDiLoCoReplicator::new(period, false, Dtype::F32, len, 1);
+        let mut sa = Scratch::new();
+        let (mut sb, mut sc) = (Scratch::new(), Scratch::new());
+        let da = vec![1.0f32; len];
+        let db = vec![3.0f32; len];
+        let dc = vec![100.0f32; len]; // the straggler's (dropped) window
+        let launch = ctx(period - 1);
+        // one-step window: the whole buffer is the window delta
+        let mut bufs = [da.clone(), db.clone(), dc.clone()];
+        let (qa, pa) = ra.extract(&launch, &mut bufs[0], &mut sa);
+        let (_, pb) = rb.extract(&launch, &mut bufs[1], &mut sb);
+        let (_, pc) = rc.extract(&launch, &mut bufs[2], &mut sc);
+        let (pa, pb, pc) = (pa.unwrap(), pb.unwrap(), pc.unwrap());
+
+        // Full-group mean divides by 3…
+        let full = mean_decoded_refs(&ra, &launch, &[&pa, &pb, &pc], len, &mut sa);
+        assert!(full.iter().all(|&x| (x - (1.0 + 3.0 + 100.0) / 3.0).abs() < 1e-5));
+        sa.put_f32(full);
+        // …but with c dropped, the denominator is the quorum size 2,
+        // bit-for-bit the same float chain as averaging a 2-group.
+        let quorum = mean_decoded_refs(&ra, &launch, &[&pa, &pb], len, &mut sa);
+        assert_eq!(quorum, vec![(1.0f32 + 3.0) * 0.5; len]);
+
+        // The surviving rank lands on the quorum average: finalize at the
+        // arrival (next step, zero local update) applies mean − snap, so
+        // total applied = δ_a + (mean − δ_a) = mean of {a, b}.
+        let arrival = ctx(period);
+        let mut zero = vec![0.0f32; len];
+        let (q2, none) = ra.extract(&arrival, &mut zero, &mut sa);
+        assert!(none.is_none());
+        let fin = ra.finalize(&arrival, q2, Some(quorum), &mut sa);
+        let mut applied = qa;
+        crate::tensor::axpy(&mut applied, 1.0, &fin);
+        assert_eq!(applied, vec![(1.0f32 + 3.0) * 0.5; len]);
+        assert!(!ra.sync_in_flight());
+        sc.recycle_payload(pc);
     }
 
     /// The async federated-averaging identity: after a stale arrival,

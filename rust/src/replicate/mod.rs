@@ -33,7 +33,12 @@
 //!    non-zero [`Replicator::sync_delay`] (async DiLoCo's `--staleness`)
 //!    gets its mean *deferred*: the trainer parks the gathered payloads
 //!    at the launch step and hands the decoded mean to `finalize` S
-//!    steps later, while local steps keep running.
+//!    steps later, while local steps keep running. On heterogeneous
+//!    clusters the window is additionally governed by a [`LatePolicy`]:
+//!    contributions that miss a node's arrival deadline are waited for
+//!    (PR 4 semantics), dropped from the mean (NoLoCo-style, denominator
+//!    corrected to the contributing set — [`mean_decoded_refs`]), or
+//!    carried into that node's next window.
 //!
 //! Every hook threads a per-worker [`Scratch`] arena: extraction draws
 //! its payload/`q` vectors from the arena's pools and hot-path stage
@@ -126,13 +131,16 @@ pub trait Replicator: Send {
     fn rate(&self) -> f64;
 
     /// Steps between a payload-emitting step and the application of its
-    /// gathered mean. 0 (the default for every synchronous scheme) means
-    /// the mean lands in the same step's [`Replicator::finalize`]; S > 0
-    /// tells the trainer to park the gathered payloads and hand the mean
-    /// to `finalize` S steps later while local steps keep running (async
-    /// DiLoCo's staleness knob). Must be identical on every rank of an
-    /// R-group and strictly smaller than the interval between
-    /// payload-emitting steps.
+    /// gathered mean for *this instance*. 0 (the default for every
+    /// synchronous scheme) means the mean lands in the same step's
+    /// [`Replicator::finalize`]; S > 0 is async DiLoCo's staleness
+    /// window. The trainer is the source of truth for the schedule — it
+    /// resolves one window per node (`--staleness [auto]`,
+    /// `--node-staleness`) and constructs each rank's replicator with
+    /// its node's value via `ReplSpec::build_with_staleness`, so this
+    /// method reports that window rather than driving it. Must be
+    /// strictly smaller than the interval between payload-emitting
+    /// steps.
     fn sync_delay(&self) -> u64 {
         0
     }
@@ -142,6 +150,47 @@ pub trait Replicator: Send {
     /// Full baseline uses the ring all-reduce NCCL/RCCL would.
     fn gather_mode(&self) -> GatherMode {
         GatherMode::NaiveAllGather
+    }
+}
+
+/// What an async DiLoCo aggregation does with peer contributions that
+/// miss its arrival deadline (`--late-policy`, or the `async=S,policy`
+/// spec component). Only meaningful when a staleness window exists; the
+/// synchronous scheme never has late arrivals.
+///
+/// * [`LatePolicy::Wait`] — PR 4 semantics: the arrival blocks the next
+///   backward until the *whole* group gather has landed (the slowest
+///   member's reduce-scatter plus the full send queue gates everyone).
+/// * [`LatePolicy::Drop`] — NoLoCo-style: the window finalizes from the
+///   quorum that arrived by the deadline; late deltas are discarded and
+///   the averaging denominator is the contributing set, not the group.
+/// * [`LatePolicy::Partial`] — like `Drop` for time, but late deltas are
+///   carried and folded into that node's *next* window mean instead of
+///   being lost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LatePolicy {
+    #[default]
+    Wait,
+    Drop,
+    Partial,
+}
+
+impl LatePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<LatePolicy> {
+        match s {
+            "wait" => Ok(LatePolicy::Wait),
+            "drop" => Ok(LatePolicy::Drop),
+            "partial" => Ok(LatePolicy::Partial),
+            other => anyhow::bail!("unknown late policy {other:?} (wait|drop|partial)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LatePolicy::Wait => "wait",
+            LatePolicy::Drop => "drop",
+            LatePolicy::Partial => "partial",
+        }
     }
 }
 
@@ -245,6 +294,10 @@ pub enum ReplSpec {
         /// (`--staleness S`, or the `async=S` spec component; `Some(0)`
         /// runs the async implementation, bit-identical to `None`).
         staleness: Option<u64>,
+        /// Late-arrival handling for the async window (`--late-policy`,
+        /// or the `async=S,policy` spec component). Inert while the
+        /// resolved staleness is 0 everywhere.
+        policy: LatePolicy,
     },
     Full {
         sign: bool,
@@ -257,7 +310,8 @@ impl ReplSpec {
     /// Parse "demo:1/8", "random:1/16", "striding:1/32", "diloco:32",
     /// "full" (+ optional ":nosign" / ":sign" / ":bf16" / ":chunk=128";
     /// diloco additionally takes ":async=S" for the stale-sync variant —
-    /// see `--staleness`).
+    /// see `--staleness` — with an optional late policy suffix,
+    /// ":async=S,drop" / ":async=S,partial" — see `--late-policy`).
     pub fn parse(s: &str) -> anyhow::Result<ReplSpec> {
         let mut parts = s.split(':');
         let kind = parts.next().unwrap_or("");
@@ -268,6 +322,7 @@ impl ReplSpec {
         let mut chunk = 64usize;
         let mut packed = false;
         let mut staleness = None;
+        let mut policy = LatePolicy::Wait;
         for p in parts {
             if let Some(r) = p.strip_prefix("1/") {
                 let c: f64 = r.parse()?;
@@ -276,7 +331,14 @@ impl ReplSpec {
             } else if let Some(c) = p.strip_prefix("chunk=") {
                 chunk = c.parse()?;
             } else if let Some(a) = p.strip_prefix("async=") {
-                staleness = Some(a.parse()?);
+                let (st, pol) = match a.split_once(',') {
+                    Some((st, pol)) => (st, Some(pol)),
+                    None => (a, None),
+                };
+                staleness = Some(st.parse()?);
+                if let Some(pol) = pol {
+                    policy = LatePolicy::parse(pol)?;
+                }
             } else if p == "nosign" {
                 sign = false;
             } else if p == "sign" {
@@ -330,6 +392,7 @@ impl ReplSpec {
                 dtype,
                 packed,
                 staleness,
+                policy,
             },
             // Full-sync baseline ships raw gradients (no sign) by default;
             // "full:sign" gives the signed variant (Fig 10's full-repl arm).
@@ -370,10 +433,15 @@ impl ReplSpec {
                 dtype,
                 packed,
                 staleness,
+                ..
             } => match staleness {
-                Some(s) => Box::new(
-                    AsyncDiLoCoReplicator::new(period, sign, dtype, shard_len, s).packed(packed),
-                ),
+                // One construction site for the async variant: the
+                // global-staleness build is the per-node build with a
+                // uniform window (parse/apply_arg already validated
+                // s < period, so the Result is vacuous here).
+                Some(s) => self
+                    .build_with_staleness(shard_len, s)
+                    .expect("staleness validated against the period at parse time"),
                 None => {
                     Box::new(DiLoCoReplicator::new(period, sign, dtype, shard_len).packed(packed))
                 }
@@ -386,6 +454,41 @@ impl ReplSpec {
         }
     }
 
+    /// Build the async DiLoCo variant with an explicit per-node staleness
+    /// override — the straggler-tolerant trainer resolves one value per
+    /// node (`--staleness auto` / `--node-staleness`) and instantiates
+    /// each rank's replicator with its node's window. Errors for
+    /// non-DiLoCo schemes: only the periodic scheme can defer its sync.
+    pub fn build_with_staleness(
+        &self,
+        shard_len: usize,
+        staleness: u64,
+    ) -> anyhow::Result<Box<dyn Replicator>> {
+        match *self {
+            ReplSpec::DiLoCo {
+                period,
+                sign,
+                dtype,
+                packed,
+                ..
+            } => {
+                anyhow::ensure!(
+                    staleness < period,
+                    "staleness {staleness} must be < diloco period {period} \
+                     (one gather in flight at a time)"
+                );
+                Ok(Box::new(
+                    AsyncDiLoCoReplicator::new(period, sign, dtype, shard_len, staleness)
+                        .packed(packed),
+                ))
+            }
+            _ => anyhow::bail!(
+                "per-node staleness only applies to the diloco replicator (got {:?})",
+                self.label()
+            ),
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             ReplSpec::Demo { rate, .. } => format!("demo-1/{:.0}", 1.0 / rate),
@@ -394,8 +497,15 @@ impl ReplSpec {
             ReplSpec::DiLoCo {
                 period,
                 staleness: Some(s),
+                policy,
                 ..
-            } => format!("diloco-1/{period}-async{s}"),
+            } => {
+                let pol = match policy {
+                    LatePolicy::Wait => String::new(),
+                    p => format!("-{}", p.label()),
+                };
+                format!("diloco-1/{period}-async{s}{pol}")
+            }
             ReplSpec::DiLoCo { period, .. } => format!("diloco-1/{period}"),
             ReplSpec::Full { .. } => "full".to_string(),
         }
@@ -410,6 +520,25 @@ pub fn mean_decoded(
     repl: &dyn Replicator,
     ctx: &ReplCtx,
     payloads: &[Payload],
+    shard_len: usize,
+    scratch: &mut Scratch,
+) -> Vec<f32> {
+    let refs: Vec<&Payload> = payloads.iter().collect();
+    mean_decoded_refs(repl, ctx, &refs, shard_len, scratch)
+}
+
+/// [`mean_decoded`] over borrowed payloads — the straggler-tolerant
+/// aggregation path assembles an arbitrary contributing set (the on-time
+/// quorum, plus any deltas carried from the previous window under
+/// [`LatePolicy::Partial`]) and the **denominator is the contributing
+/// count**, not the full group size (the NoLoCo correction: dropping a
+/// straggler must not shrink the surviving deltas toward zero). The
+/// float chain is identical to [`mean_decoded`] for the same payload
+/// sequence, so the full-group case stays bit-for-bit unchanged.
+pub fn mean_decoded_refs(
+    repl: &dyn Replicator,
+    ctx: &ReplCtx,
+    payloads: &[&Payload],
     shard_len: usize,
     scratch: &mut Scratch,
 ) -> Vec<f32> {
@@ -460,8 +589,22 @@ mod tests {
         ));
         assert!(matches!(
             ReplSpec::parse("diloco:8:async=2").unwrap(),
-            ReplSpec::DiLoCo { period: 8, staleness: Some(2), .. }
+            ReplSpec::DiLoCo { period: 8, staleness: Some(2), policy: LatePolicy::Wait, .. }
         ));
+        // async=S takes an optional late-policy suffix
+        assert!(matches!(
+            ReplSpec::parse("diloco:8:async=2,drop").unwrap(),
+            ReplSpec::DiLoCo { period: 8, staleness: Some(2), policy: LatePolicy::Drop, .. }
+        ));
+        assert!(matches!(
+            ReplSpec::parse("diloco:8:async=1,partial").unwrap(),
+            ReplSpec::DiLoCo { staleness: Some(1), policy: LatePolicy::Partial, .. }
+        ));
+        assert!(matches!(
+            ReplSpec::parse("diloco:8:async=1,wait").unwrap(),
+            ReplSpec::DiLoCo { policy: LatePolicy::Wait, .. }
+        ));
+        assert!(ReplSpec::parse("diloco:8:async=1,sometimes").is_err());
         // staleness must stay below the period, and is diloco-only
         assert!(ReplSpec::parse("diloco:4:async=4").is_err());
         assert!(ReplSpec::parse("demo:1/8:async=1").is_err());
@@ -484,7 +627,29 @@ mod tests {
             ReplSpec::parse("diloco:8:async=2").unwrap().label(),
             "diloco-1/8-async2"
         );
+        assert_eq!(
+            ReplSpec::parse("diloco:8:async=2,drop").unwrap().label(),
+            "diloco-1/8-async2-drop"
+        );
+        assert_eq!(
+            ReplSpec::parse("diloco:8:async=2,partial").unwrap().label(),
+            "diloco-1/8-async2-partial"
+        );
         assert_eq!(ReplSpec::parse("full").unwrap().label(), "full");
+    }
+
+    #[test]
+    fn build_with_staleness_is_diloco_only_and_bounded() {
+        let spec = ReplSpec::parse("diloco:4").unwrap();
+        let r = spec.build_with_staleness(8, 2).unwrap();
+        assert_eq!(r.sync_delay(), 2);
+        assert!(spec.build_with_staleness(8, 4).is_err());
+        assert!(ReplSpec::parse("demo:1/8")
+            .unwrap()
+            .build_with_staleness(8, 1)
+            .is_err());
+        // S = 0 builds the async implementation (bit-identical to sync)
+        assert_eq!(spec.build_with_staleness(8, 0).unwrap().sync_delay(), 0);
     }
 
     #[test]

@@ -37,6 +37,19 @@
 //!   [`StepEngine::sync_arrival`], S steps after the launch — so up to S
 //!   whole optimization steps run under the in-flight sync (the events
 //!   carry the `async-gather` label in `--trace-out` Chrome traces);
+//! * the **straggler-tolerant per-member lanes**
+//!   ([`StepEngine::gather_deferred_per_member`], `--late-policy` +
+//!   per-node `--staleness`) replace the single parked completion with
+//!   one NIC event per group member: each member's send queue starts at
+//!   *its own* reduce-scatter completion (a slow node no longer delays a
+//!   fast node's launch) and finishes independently. Nothing gates any
+//!   backward until the trainer announces, per member, which
+//!   contributions it aggregated ([`StepEngine::sync_arrival_member`]);
+//!   contributions are judged against the member's **arrival deadline**
+//!   ([`StepEngine::arrival_deadline`] — the end of its backward in the
+//!   arrival step), so an admitted contribution can never stall the lane
+//!   that admitted it. Per-member events carry the owning sender node
+//!   (`owner_node` in `--trace-out` args);
 //! * the **intra-node reduce-scatter** streams gradient buckets while the
 //!   backward produces them: it may start with the backward but cannot
 //!   finish before it;
@@ -517,6 +530,107 @@ impl StepEngine {
         }
     }
 
+    /// Straggler-tolerant launch: one NIC event per group member instead
+    /// of one whole-group event. Member *i*'s send queue ((g−1) sends of
+    /// its payload for the naive all-gather) starts at **its own**
+    /// reduce-scatter completion at **its own** NIC bandwidth, so fast
+    /// members launch early and finish early while a straggler's late
+    /// contribution stays its own problem. Returns each member's
+    /// contribution completion time — the trainer compares these against
+    /// per-member [`Self::arrival_deadline`]s to form the on-time quorum
+    /// and announces what it aggregated via
+    /// [`Self::sync_arrival_member`]; until then nothing gates any
+    /// backward. Events are labelled `async-gather` and tagged with the
+    /// owning sender node for `--trace-out`.
+    ///
+    /// Only the uniform-staleness `--late-policy wait` window keeps the
+    /// PR 4 whole-group event ([`Self::gather_deferred`]) — that path is
+    /// bit-frozen; this one intentionally prices the same bytes as
+    /// independent per-sender queues.
+    pub fn gather_deferred_per_member(
+        &mut self,
+        group: &[usize],
+        mode: GatherMode,
+        payload_bytes: &[u64],
+        traffic: &TrafficMatrix,
+    ) -> Vec<SimTime> {
+        let g = group.len();
+        let class = self.topo.group_link_class(group);
+        mode.record_traffic(traffic, &self.topo, group, payload_bytes);
+        let h = if self.overlap {
+            None
+        } else {
+            Some(match self.gather_phase_start {
+                Some(h) => h,
+                None => {
+                    let h = self.barrier();
+                    self.gather_phase_start = Some(h);
+                    h
+                }
+            })
+        };
+        let mut ends = vec![0.0f64; g];
+        let mut max_dur = 0.0f64;
+        for (i, &rank) in group.iter().enumerate() {
+            let node = self.topo.node_of(rank);
+            let link = Link {
+                class,
+                lat: self.net.lat(class),
+                bw: self.cluster.group_bw(&self.net, class, &[node]),
+            };
+            let mut ev = match mode {
+                GatherMode::NaiveAllGather => {
+                    let (bytes, dur) = if g <= 1 {
+                        (0, 0.0)
+                    } else {
+                        (
+                            (g as u64 - 1) * payload_bytes[i],
+                            (g as f64 - 1.0) * link.xfer(payload_bytes[i]),
+                        )
+                    };
+                    CommEvent::new("async-gather", class, bytes, dur)
+                }
+                // Ring transports have no per-sender decomposition;
+                // charge the whole event on this member's lane.
+                _ => mode.comm_event(&link, payload_bytes),
+            }
+            .owned_by(node);
+            ev.label = "async-gather";
+            max_dur = max_dur.max(ev.duration);
+            let earliest = h.unwrap_or(self.rs_done[rank]);
+            let deps = self.nic_deps(&[rank]);
+            let (start, end) = self.nic.reserve(rank, earliest, ev.duration);
+            ends[i] = end;
+            self.push_event(ev.scheduled(start, deps), &[rank]);
+        }
+        // The serialized reference charges the phase's slowest member —
+        // identical to the whole-phase event on a uniform cluster, and
+        // exactly the barriered lane maximum under `--no-overlap`.
+        self.step_gather_max = self.step_gather_max.max(max_dur);
+        ends
+    }
+
+    /// A member of a straggler-tolerant window applied its aggregated
+    /// update this step: the latest admitted contribution (`completion`,
+    /// the max over the member's on-time quorum — 0.0 when it aggregated
+    /// only itself) now gates that rank's *next* backward. The per-member
+    /// counterpart of [`Self::sync_arrival`].
+    pub fn sync_arrival_member(&mut self, rank: usize, completion: SimTime) {
+        if completion > self.update_visible[rank] {
+            self.update_visible[rank] = completion;
+        }
+    }
+
+    /// The per-node arrival deadline: the end of this rank's backward in
+    /// the current step. A peer contribution that landed by this instant
+    /// can be aggregated *this* step without stalling anything (the
+    /// aggregate only gates the next backward, which starts later by
+    /// construction); one that missed it is late and subject to
+    /// `--late-policy`.
+    pub fn arrival_deadline(&self, rank: usize) -> SimTime {
+        self.bwd_end[rank]
+    }
+
     /// Where a gather's landing time goes: the next backward's dependency
     /// (synchronous), or the parked slot [`Self::sync_arrival`] drains
     /// (deferred). Keeping this the only difference between the two
@@ -649,15 +763,36 @@ impl StepEngine {
 /// Serialize scheduled [`CommEvent`]s (tagged with their step) as a
 /// Chrome-trace JSON document (`chrome://tracing` / Perfetto "X"
 /// complete events). One lane (tid) per rank, sim-time µs on the time
-/// axis; event args carry step, bytes, event id, and dependency ids —
-/// the figure-quality timeline view of overlap vs `--no-overlap`.
-pub fn chrome_trace_json(rows: &[(u64, CommEvent)]) -> crate::util::json::Json {
+/// axis; event args carry step, bytes, event id, dependency ids, and the
+/// lane's node (`accels_per_node` maps tids onto nodes) — plus
+/// `owner_node` for single-sender events (the per-member async-gather
+/// lanes), so parked in-flight syncs are attributable to the node that
+/// launched them — the figure-quality timeline view of overlap vs
+/// `--no-overlap`.
+pub fn chrome_trace_json(
+    rows: &[(u64, CommEvent)],
+    accels_per_node: usize,
+) -> crate::util::json::Json {
     use crate::util::json::Json;
+    let accels = accels_per_node.max(1);
     let mut evs: Vec<Json> = Vec::new();
     let mut max_rank = None::<usize>;
     for (step, ev) in rows {
         for &r in &ev.ranks {
             max_rank = Some(max_rank.map_or(r, |m| m.max(r)));
+            let mut args = vec![
+                ("step", Json::Num(*step as f64)),
+                ("bytes", Json::Num(ev.bytes as f64)),
+                ("event_id", Json::Num(ev.id as f64)),
+                (
+                    "deps",
+                    Json::Arr(ev.deps.iter().map(|&d| Json::Num(d as f64)).collect()),
+                ),
+                ("node", Json::Num((r / accels) as f64)),
+            ];
+            if let Some(owner) = ev.node {
+                args.push(("owner_node", Json::Num(owner as f64)));
+            }
             evs.push(Json::obj(vec![
                 ("name", Json::Str(ev.label.to_string())),
                 (
@@ -675,18 +810,7 @@ pub fn chrome_trace_json(rows: &[(u64, CommEvent)]) -> crate::util::json::Json {
                 ("dur", Json::Num(ev.duration * 1e6)),
                 ("pid", Json::Num(0.0)),
                 ("tid", Json::Num(r as f64)),
-                (
-                    "args",
-                    Json::obj(vec![
-                        ("step", Json::Num(*step as f64)),
-                        ("bytes", Json::Num(ev.bytes as f64)),
-                        ("event_id", Json::Num(ev.id as f64)),
-                        (
-                            "deps",
-                            Json::Arr(ev.deps.iter().map(|&d| Json::Num(d as f64)).collect()),
-                        ),
-                    ]),
-                ),
+                ("args", Json::obj(args)),
             ]));
         }
     }
@@ -1009,6 +1133,123 @@ mod tests {
         );
     }
 
+    /// Tentpole: the straggler-tolerant lanes. Each member's async-gather
+    /// event starts at its *own* reduce-scatter completion (the fast
+    /// member launches while the straggler is still computing), finishes
+    /// independently, and carries the owning sender node for
+    /// `--trace-out`. Admission is per member: `sync_arrival_member`
+    /// gates only with the completion time the trainer aggregated.
+    #[test]
+    fn per_member_deferred_lanes_launch_early_and_carry_owner_node() {
+        let topo = Topology::new(2, 1);
+        let cluster = ClusterModel {
+            slowdown: vec![1.0, 4.0],
+            node_inter_bw: vec![],
+        };
+        let mut e = StepEngine::new(topo, NetModel::throttled(10.0), cluster, true);
+        let traffic = TrafficMatrix::new(2);
+        let group = [0usize, 1];
+        let payload = vec![1_000_000u64; 2];
+        e.begin_step();
+        e.unshard(4096, &traffic);
+        e.compute(1e9);
+        e.reduce_scatter(4096);
+        let ends =
+            e.gather_deferred_per_member(&group, GatherMode::NaiveAllGather, &payload, &traffic);
+        e.end_step();
+        let evs: Vec<CommEvent> = e
+            .events
+            .iter()
+            .filter(|ev| ev.label == "async-gather")
+            .cloned()
+            .collect();
+        assert_eq!(evs.len(), 2, "one event per member");
+        assert_eq!(evs[0].node, Some(0));
+        assert_eq!(evs[1].node, Some(1));
+        assert_eq!(evs[0].ranks, vec![0]);
+        // the fast member's send starts at its rs completion, long before
+        // the 4× straggler's, and finishes first
+        assert!(evs[0].start < evs[1].start, "{evs:?}");
+        assert!(ends[0] < ends[1], "{ends:?}");
+        // serialize: per-member events surface their owner in args
+        let rows: Vec<(u64, CommEvent)> = evs.iter().map(|ev| (0u64, ev.clone())).collect();
+        let doc = chrome_trace_json(&rows, 1);
+        let tr = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let owners: Vec<u64> = tr
+            .iter()
+            .filter(|j| j.get("ph").unwrap().as_str() == Some("X"))
+            .map(|j| j.get("args").unwrap().get("owner_node").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(owners, vec![0, 1]);
+
+        // Per-member admission: gating rank 0 with only the fast
+        // contribution leaves it free of the straggler's late send.
+        e.sync_arrival_member(0, ends[0]);
+        e.begin_step();
+        e.unshard(4096, &traffic);
+        e.compute(1e9);
+        e.reduce_scatter(4096);
+        e.end_step();
+        let (c, _, _) = e.timelines();
+        assert!(
+            c.now(0) < ends[1],
+            "rank 0 stalled on the straggler's contribution: {} vs {}",
+            c.now(0),
+            ends[1]
+        );
+        // the deadline accessor is the backward end — an admitted
+        // contribution (end <= deadline) can never stall its admitter
+        assert!(e.arrival_deadline(0) <= c.now(0));
+    }
+
+    /// The per-member lanes price the same bytes as the whole-group
+    /// event on a uniform cluster (slowest member == whole-phase naive
+    /// gather), so the serialized reference is unchanged; and under
+    /// `--no-overlap` the barriered lane maximum still equals the
+    /// serialized accumulator.
+    #[test]
+    fn per_member_deferred_matches_whole_phase_cost_on_uniform_cluster() {
+        let topo = Topology::new(2, 1);
+        let traffic = TrafficMatrix::new(2);
+        let group = [0usize, 1];
+        let payload = vec![500_000u64; 2];
+        let mk = |overlap| {
+            StepEngine::new(topo, NetModel::throttled(50.0), ClusterModel::uniform(), overlap)
+        };
+        let drive = |e: &mut StepEngine, per_member: bool| {
+            for _ in 0..3 {
+                e.begin_step();
+                e.unshard(4096, &traffic);
+                e.compute(1e9);
+                e.reduce_scatter(4096);
+                if per_member {
+                    let ends = e.gather_deferred_per_member(
+                        &group,
+                        GatherMode::NaiveAllGather,
+                        &payload,
+                        &traffic,
+                    );
+                    e.sync_arrival_member(0, ends[1]);
+                    e.sync_arrival_member(1, ends[0]);
+                } else {
+                    e.gather_deferred(&group, GatherMode::NaiveAllGather, &payload, &traffic);
+                    e.sync_arrival(&group);
+                }
+                e.end_step();
+            }
+        };
+        let mut whole = mk(true);
+        drive(&mut whole, false);
+        let mut member = mk(true);
+        drive(&mut member, true);
+        // same serialized accounting (the slowest member IS the phase)
+        assert_eq!(whole.serialized_time(), member.serialized_time());
+        // no-overlap: barriers keep now == serialized with per-member lanes
+        let mut ser = mk(false);
+        drive(&mut ser, true);
+        assert_eq!(ser.now(), ser.serialized_time());
+    }
+
     #[test]
     fn events_carry_schedule_and_deps() {
         let mut e = engine(2, 2, true);
@@ -1039,7 +1280,7 @@ mod tests {
         }
         let rows: Vec<(u64, CommEvent)> =
             e.events.iter().map(|ev| (1u64, ev.clone())).collect();
-        let doc = chrome_trace_json(&rows);
+        let doc = chrome_trace_json(&rows, 2);
         let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
         // one X event per (event, rank) + one M lane-name event per rank
         let n_x: usize = rows.iter().map(|(_, ev)| ev.ranks.len()).sum();
@@ -1050,6 +1291,13 @@ mod tests {
             .unwrap();
         assert!(x0.get("ts").is_some() && x0.get("dur").is_some());
         assert_eq!(x0.get("args").unwrap().get("step").unwrap().as_u64(), Some(1));
+        // every lane row carries its node (tid → node via accels_per_node)
+        for j in evs {
+            if j.get("ph").unwrap().as_str() == Some("X") {
+                let tid = j.get("tid").unwrap().as_u64().unwrap();
+                assert_eq!(j.get("args").unwrap().get("node").unwrap().as_u64(), Some(tid / 2));
+            }
+        }
         // document round-trips through the JSON parser
         let text = doc.to_string_pretty();
         assert!(crate::util::json::parse(&text).is_ok());

@@ -28,17 +28,46 @@
 //! events so the first bucket's communication overlaps the remaining
 //! buckets' compression. See `engine` for the dependency model.
 //!
-//! **Async DiLoCo (`--staleness S`).** A replicator with a non-zero
-//! [`crate::replicate::Replicator::sync_delay`] gets its periodic sync
-//! *deferred*: the launch step ships the payloads and charges the NIC on
-//! the engine's deferred lane ([`engine::StepEngine::gather_deferred`]),
-//! the step loop parks the gathered payloads in [`Trainer`]'s per-shard
-//! pending slot and keeps taking local steps, and S steps later the
-//! decoded mean is handed to `finalize` while
-//! [`engine::StepEngine::sync_arrival`] lets the completion gate the
-//! *next* backward. Data still moves in program order — staleness is a
-//! numerics knob (how late the averaged delta lands), and `S = 0` is
-//! bit-identical to the synchronous scheme (prop-tested).
+//! **Async DiLoCo (`--staleness S`).** With a non-zero staleness window
+//! (the trainer resolves one per node and builds each rank's
+//! [`crate::replicate::AsyncDiLoCoReplicator`] with its node's value,
+//! which [`crate::replicate::Replicator::sync_delay`] echoes back), the
+//! periodic sync is *deferred*: the launch step ships the payloads and
+//! charges the NIC on the engine's deferred lane
+//! ([`engine::StepEngine::gather_deferred`]), the step loop parks the
+//! gathered payloads in [`Trainer`]'s per-shard pending slot and keeps
+//! taking local steps, and S steps later the decoded mean is handed to
+//! `finalize` while [`engine::StepEngine::sync_arrival`] lets the
+//! completion gate the *next* backward. Data still moves in program
+//! order — staleness is a numerics knob (how late the averaged delta
+//! lands), and `S = 0` is bit-identical to the synchronous scheme
+//! (prop-tested).
+//!
+//! **Straggler-tolerant async DiLoCo (`--staleness auto`,
+//! `--node-staleness`, `--late-policy`).** On heterogeneous clusters one
+//! global S lets the slowest node gate every window, so the staleness
+//! table is resolved *per node*
+//! ([`crate::config::ExperimentConfig::resolve_node_staleness`]) and the
+//! window switches to per-member machinery: the launch charges one NIC
+//! event per member
+//! ([`engine::StepEngine::gather_deferred_per_member`] — each member's
+//! send starts at its own reduce-scatter completion), the parked
+//! `PendingSync` carries per-member arrival steps and contribution
+//! completion times, and each member aggregates at its own arrival with
+//! the contributions that met its deadline. Peer deltas that missed it
+//! follow `--late-policy`: `wait` admits them anyway and lets the
+//! slowest transfer gate the next backward (with a *uniform* table this
+//! routes through the PR 4 whole-group window, kept bit-frozen), `drop`
+//! discards them with the averaging denominator corrected to the
+//! contributing set (NoLoCo-style gossip), and `partial` folds each —
+//! once its transfer has landed — into one of that node's later window
+//! means. This is the one place where *numerics follow the
+//! simulated schedule* — which contributions a node aggregates depends
+//! on simulated arrival times (deterministic, and still independent of
+//! `--threads`), because tolerating stragglers is inherently a
+//! scheduling decision. Group members may therefore average different
+//! quorums; DiLoCo's periodic windows keep the divergence bounded
+//! exactly as they bound replica drift between syncs.
 //!
 //! Edge cases degrade exactly as the paper states: |R|=1 → pure FSDP,
 //! |S|=1 → DeMo-style DDP, |S|=|R|=1 → single-accelerator training.
@@ -63,10 +92,10 @@ use crate::compress::{Payload, Scratch, WireStats};
 use crate::config::ExperimentConfig;
 use crate::data::{task_for, Task};
 use crate::metrics::{RunMetrics, StepRow, ValRow};
-use crate::net::{Topology, TrafficMatrix};
+use crate::net::{SimTime, Topology, TrafficMatrix};
 use crate::optim::Optimizer;
 use crate::parallel::{PoolHandle, SlicePtr, WorkerPool};
-use crate::replicate::{mean_decoded, ReplCtx, Replicator};
+use crate::replicate::{mean_decoded, mean_decoded_refs, LatePolicy, ReplCtx, Replicator, ReplSpec};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::shard::{FlatLayout, HybridMesh};
 
@@ -79,16 +108,43 @@ struct RankState {
     opt: Box<dyn Optimizer>,
     repl: Box<dyn Replicator>,
     scratch: Scratch,
+    /// Peer deltas that missed this rank's arrival deadline under
+    /// `--late-policy partial`, carried (with their wire completion
+    /// times) into a later window's mean: a carried delta is only
+    /// admitted once its transfer has actually landed, and its
+    /// completion still gates the backward that follows the aggregation.
+    /// Empty outside the straggler-tolerant path.
+    carried: Vec<(Payload, SimTime)>,
 }
 
 /// A deferred (async DiLoCo) sync parked between its launch step and its
-/// arrival step: the gathered payloads of one R-group, decoded and
-/// finalized `sync_delay` steps after the gather was charged.
-struct PendingSync {
-    /// Step at which the averaged delta is applied.
-    arrival: u64,
-    /// One payload per R-group member (group order).
-    payloads: Vec<Payload>,
+/// arrival: the gathered payloads of one R-group, decoded and finalized
+/// after the gather was charged on the wire.
+enum PendingSync {
+    /// The PR 4 uniform-staleness window (`--late-policy wait` with one
+    /// global S): a single arrival step for the whole group, gated by
+    /// the whole-group gather event. Kept bit-frozen.
+    Uniform {
+        /// Step at which the averaged delta is applied.
+        arrival: u64,
+        /// One payload per R-group member (group order).
+        payloads: Vec<Payload>,
+    },
+    /// A straggler-tolerant window (per-node staleness and/or a
+    /// non-`wait` late policy): every member aggregates at its own
+    /// arrival step from the contributions that met its own deadline.
+    PerNode {
+        /// One payload per R-group member (group order); kept until
+        /// every member has applied, then recycled.
+        payloads: Vec<Payload>,
+        /// Per-member contribution completion times on the wire
+        /// (engine's per-member async-gather lanes).
+        contrib_end: Vec<SimTime>,
+        /// Per-member arrival step (`launch + S_node`).
+        arrival: Vec<u64>,
+        /// Which members have aggregated already.
+        applied: Vec<bool>,
+    },
 }
 
 /// The assembled training system.
@@ -113,6 +169,14 @@ pub struct Trainer {
     /// Deferred syncs in flight, one slot per shard (async DiLoCo):
     /// payloads parked between the launch step and `arrival`.
     pending: Vec<Option<PendingSync>>,
+    /// Resolved per-node staleness table (node → S); uniform unless
+    /// `--staleness auto` / `--node-staleness` differentiated it.
+    node_delay: Vec<u64>,
+    /// `;`-joined `node_delay` for the steps CSV (empty when the async
+    /// machinery is unarmed).
+    node_staleness_label: String,
+    /// Per-node late-contribution counts this step (`dropped_syncs`).
+    dropped_step: Vec<u64>,
     /// The discrete-event clock (per-rank compute + NIC timelines).
     pub engine: StepEngine,
     pub traffic: TrafficMatrix,
@@ -157,17 +221,57 @@ impl Trainer {
         let pool = WorkerPool::new(threads);
 
         let shard_len = mesh.shards.shard_len();
+        // Straggler-tolerant staleness: resolve one S per node from the
+        // global knob / the cluster profile / explicit overrides. The
+        // gather-volume estimate feeds `--staleness auto`: a full-buffer
+        // DiLoCo payload — at the spec's actual wire format (sign/dtype/
+        // packing), not a flat 4 B/element — to every replication peer.
+        let wire_est = match cfg.repl {
+            ReplSpec::DiLoCo {
+                sign,
+                dtype,
+                packed,
+                ..
+            } => {
+                let p = Payload::new(None, vec![0.0; shard_len], dtype, sign);
+                let p = if packed && sign { p.with_packing() } else { p };
+                p.wire_bytes()
+            }
+            _ => (shard_len * 4) as u64,
+        };
+        let gather_est = wire_est * cfg.nodes.saturating_sub(1).max(1) as u64;
+        let node_delay = cfg.resolve_node_staleness(model.manifest.step_flops(), gather_est)?;
+        // Any `Some` staleness on the spec (set by --staleness,
+        // --staleness auto, --node-staleness, or :async=S) arms the async
+        // replicator; each rank gets its node's window.
+        let async_armed = matches!(cfg.repl, ReplSpec::DiLoCo { staleness: Some(_), .. });
+        let node_staleness_label = if async_armed {
+            node_delay
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(";")
+        } else {
+            String::new()
+        };
         let ranks = (0..topo.world_size())
-            .map(|_| {
+            .map(|r| {
                 let mut opt = cfg.opt.build(shard_len);
                 opt.attach_pool(PoolHandle::new(Arc::clone(&pool)));
-                RankState {
+                let repl = if async_armed {
+                    cfg.repl
+                        .build_with_staleness(shard_len, node_delay[topo.node_of(r)])?
+                } else {
+                    cfg.repl.build(shard_len)
+                };
+                Ok(RankState {
                     opt,
-                    repl: cfg.repl.build(shard_len),
+                    repl,
                     scratch: Scratch::with_pool(PoolHandle::new(Arc::clone(&pool))),
-                }
+                    carried: Vec::new(),
+                })
             })
-            .collect();
+            .collect::<Result<Vec<_>>>()?;
 
         let traffic = TrafficMatrix::new(cfg.nodes);
         let engine = StepEngine::new(topo, cfg.net, cfg.cluster.clone(), cfg.overlap)
@@ -183,6 +287,9 @@ impl Trainer {
             pool,
             coll_scratch: CollScratch::new(),
             pending: (0..cfg.accels_per_node).map(|_| None).collect(),
+            node_delay,
+            node_staleness_label,
+            dropped_step: vec![0; cfg.nodes],
             engine,
             traffic,
             last_timing: StepTiming::default(),
@@ -291,8 +398,25 @@ impl Trainer {
         }
     }
 
-    /// Apply each rank's local-only update for one shard (no mean lands
-    /// this step): `finalize(None)`, then the optimizer step.
+    /// One rank's local-only update (no mean lands this step):
+    /// `finalize(None)`, then the optimizer step — the single float
+    /// chain every local step shares, whichever path invokes it.
+    fn apply_local_one(
+        &mut self,
+        rank: usize,
+        rctx: &ReplCtx,
+        local: Vec<f32>,
+        (lo, hi): (usize, usize),
+        lr: f32,
+    ) {
+        let st = &mut self.ranks[rank];
+        let q = st.repl.finalize(rctx, local, None, &mut st.scratch);
+        let node = self.mesh.topo.node_of(rank);
+        st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
+        st.scratch.put_f32(q);
+    }
+
+    /// Apply each rank's local-only update for one shard.
     fn apply_local(
         &mut self,
         group: &[usize],
@@ -303,12 +427,140 @@ impl Trainer {
         lr: f32,
     ) {
         for (gi, &rank) in group.iter().enumerate() {
-            let st = &mut self.ranks[rank];
-            let q = st.repl.finalize(rctx, std::mem::take(&mut locals[gi]), None, &mut st.scratch);
-            let node = self.mesh.topo.node_of(rank);
-            st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
-            st.scratch.put_f32(q);
+            self.apply_local_one(rank, rctx, std::mem::take(&mut locals[gi]), (lo, hi), lr);
         }
+    }
+
+    /// One pass over a straggler-tolerant window: every group member
+    /// whose arrival step is `rctx.step` aggregates the contributions
+    /// that met its arrival deadline — its own payload always (it never
+    /// crossed the wire), a peer's iff the peer's send completed by the
+    /// end of this member's backward ([`StepEngine::arrival_deadline`]),
+    /// plus any earlier-window deltas carried under `--late-policy
+    /// partial` whose transfers have landed by now (admitted carried
+    /// deltas come ahead of this window's quorum, in a deterministic
+    /// order). The averaging denominator is the contributing count
+    /// ([`mean_decoded_refs`]). Under `wait` every peer is admitted
+    /// regardless of the deadline and the gate carries the slowest
+    /// transfer's completion — the per-member rendition of the
+    /// whole-group window, for non-uniform staleness tables. Otherwise
+    /// late peers count into the per-node `dropped_syncs` column and are
+    /// discarded (`drop`) or carried — payload plus completion time — to
+    /// one of this member's later windows (`partial`). Every other
+    /// member takes a plain local step. The window's payloads are
+    /// recycled once the last member has applied.
+    fn arrival_scan(
+        &mut self,
+        group: &[usize],
+        rctx: &ReplCtx,
+        shard: usize,
+        locals: &mut [Vec<f32>],
+        (lo, hi): (usize, usize),
+        lr: f32,
+    ) -> Result<()> {
+        let step = rctx.step;
+        let policy = self.cfg.late_policy();
+        // Take the window out of its slot so its payload borrows cannot
+        // alias the rank/engine/param field borrows below.
+        let mut pending = self.pending[shard].take();
+        let done = {
+            let Some(PendingSync::PerNode {
+                payloads,
+                contrib_end,
+                arrival,
+                applied,
+            }) = pending.as_mut()
+            else {
+                anyhow::bail!("step {step} shard {shard}: arrival scan without a per-node window");
+            };
+            for (gi, &rank) in group.iter().enumerate() {
+                let node = self.mesh.topo.node_of(rank);
+                if arrival[gi] != step || applied[gi] {
+                    // Not this member's arrival: plain local step.
+                    self.apply_local_one(rank, rctx, std::mem::take(&mut locals[gi]), (lo, hi), lr);
+                    continue;
+                }
+                applied[gi] = true;
+                let deadline = self.engine.arrival_deadline(rank);
+                // Deltas carried from the previous window join ahead of
+                // this window's quorum once their transfer has landed;
+                // pulled out of the rank first so the borrows stay
+                // disjoint. A carried delta still in flight stays
+                // carried (it was already counted late once).
+                let carried = std::mem::take(&mut self.ranks[rank].carried);
+                let mut next_carried: Vec<(Payload, SimTime)> = Vec::new();
+                let mut admitted = vec![false; carried.len()];
+                let mut quorum: Vec<&Payload> = Vec::new();
+                let mut gate: SimTime = 0.0;
+                for (ci, (p, end)) in carried.iter().enumerate() {
+                    if *end <= deadline {
+                        admitted[ci] = true;
+                        gate = gate.max(*end);
+                        quorum.push(p);
+                    }
+                }
+                let mut late = 0u64;
+                for (gj, p) in payloads.iter().enumerate() {
+                    if gj == gi {
+                        quorum.push(p); // own delta, no wire involved
+                    } else if policy == LatePolicy::Wait || contrib_end[gj] <= deadline {
+                        // `wait` admits every peer regardless of the
+                        // deadline: the gate then carries the late
+                        // transfer's completion, so the next backward
+                        // stalls on it — per-member whole-group
+                        // semantics instead of a silent drop.
+                        gate = gate.max(contrib_end[gj]);
+                        quorum.push(p);
+                    } else {
+                        late += 1;
+                        if policy == LatePolicy::Partial {
+                            next_carried.push((p.clone(), contrib_end[gj]));
+                        }
+                    }
+                }
+                self.dropped_step[node] += late;
+                // Only admitted peer sends gate the next backward.
+                // Under drop/partial every admitted contribution landed
+                // before this backward's end, so the gate can never
+                // stall its admitter; under wait the gate deliberately
+                // carries the slowest transfer and stalls.
+                self.engine.sync_arrival_member(rank, gate);
+                let st = &mut self.ranks[rank];
+                let mean =
+                    mean_decoded_refs(st.repl.as_ref(), rctx, &quorum, hi - lo, &mut st.scratch);
+                drop(quorum);
+                let q = st.repl.finalize(
+                    rctx,
+                    std::mem::take(&mut locals[gi]),
+                    Some(mean),
+                    &mut st.scratch,
+                );
+                st.opt.apply(&mut self.params[node][lo..hi], &q, lr);
+                st.scratch.put_f32(q);
+                for (ci, (p, end)) in carried.into_iter().enumerate() {
+                    if admitted[ci] {
+                        st.scratch.recycle_payload(p);
+                    } else {
+                        next_carried.push((p, end));
+                    }
+                }
+                self.ranks[rank].carried = next_carried;
+            }
+            applied.iter().all(|&x| x)
+        };
+        if done {
+            let Some(PendingSync::PerNode { payloads, .. }) = pending else {
+                unreachable!("checked above");
+            };
+            // Consumed payloads return their buffers to the ranks that
+            // produced them — the next window reuses the capacity.
+            for (gi, p) in payloads.into_iter().enumerate() {
+                self.ranks[group[gi]].scratch.recycle_payload(p);
+            }
+        } else {
+            self.pending[shard] = pending;
+        }
+        Ok(())
     }
 
     /// Number of deferred syncs currently in flight (shards whose
@@ -324,6 +576,7 @@ impl Trainer {
         let accels = self.cfg.accels_per_node;
         let step = self.step;
         self.engine.begin_step();
+        self.dropped_step.fill(0);
 
         // -- 0. FSDP unshard: within each node, updated parameters are
         // all-gathered from shards before they are next used. Data-wise
@@ -403,35 +656,71 @@ impl Trainer {
                 );
                 let payloads: Vec<Payload> = payloads.into_iter().map(|p| p.unwrap()).collect();
                 let mode = self.ranks[group[0]].repl.gather_mode();
-                let delay = self.ranks[group[0]].repl.sync_delay();
                 let sizes: Vec<u64> = payloads.iter().map(|p| p.wire_bytes()).collect();
-                if delay == 0 {
+                let delays: Vec<u64> = group
+                    .iter()
+                    .map(|&r| self.node_delay[self.mesh.topo.node_of(r)])
+                    .collect();
+                let uniform = delays.iter().all(|&d| d == delays[0]);
+                if uniform && delays[0] == 0 {
                     // Synchronous replication: the mean lands this step.
                     self.engine.gather(&group, mode, &sizes, &self.traffic);
                     self.apply_mean(&group, &rctx, payloads, &mut locals, (lo, hi), lr);
-                } else {
-                    // Async launch: charge the wire on the deferred lane,
-                    // park the payloads, and apply only this step's local
-                    // update — the averaged delta lands `delay` steps
-                    // from now.
+                } else if uniform && self.cfg.late_policy() == LatePolicy::Wait {
+                    // PR 4 async launch (bit-frozen whole-group window):
+                    // charge the wire on the deferred lane, park the
+                    // payloads, and apply only this step's local update —
+                    // the averaged delta lands `delay` steps from now.
                     anyhow::ensure!(
                         self.pending[a].is_none(),
                         "step {step} shard {a}: deferred sync launched with one still in flight"
                     );
                     self.engine.gather_deferred(&group, mode, &sizes, &self.traffic);
-                    self.pending[a] = Some(PendingSync {
-                        arrival: step + delay,
+                    self.pending[a] = Some(PendingSync::Uniform {
+                        arrival: step + delays[0],
                         payloads,
                     });
                     self.apply_local(&group, &rctx, &mut locals, lo, hi, lr);
+                } else {
+                    // Straggler-tolerant launch: one NIC lane per member
+                    // (each send starts at its own reduce-scatter), one
+                    // arrival step per node. Members with S = 0 aggregate
+                    // in this same step's arrival scan below.
+                    anyhow::ensure!(
+                        self.pending[a].is_none(),
+                        "step {step} shard {a}: deferred sync launched with one still in flight"
+                    );
+                    let contrib_end = self.engine.gather_deferred_per_member(
+                        &group,
+                        mode,
+                        &sizes,
+                        &self.traffic,
+                    );
+                    self.pending[a] = Some(PendingSync::PerNode {
+                        payloads,
+                        contrib_end,
+                        arrival: delays.iter().map(|&d| step + d).collect(),
+                        applied: vec![false; group.len()],
+                    });
+                    self.arrival_scan(&group, &rctx, a, &mut locals, (lo, hi), lr)?;
                 }
-            } else if self.pending[a].as_ref().is_some_and(|p| p.arrival == step) {
+            } else if matches!(
+                self.pending[a],
+                Some(PendingSync::Uniform { arrival, .. }) if arrival == step
+            ) {
                 // Async arrival: the in-flight gather's mean is applied
                 // alongside this step's local update, and its completion
                 // starts gating the next backward.
-                let PendingSync { payloads, .. } = self.pending[a].take().unwrap();
+                let Some(PendingSync::Uniform { payloads, .. }) = self.pending[a].take() else {
+                    unreachable!("guarded by the match above");
+                };
                 self.engine.sync_arrival(&group);
                 self.apply_mean(&group, &rctx, payloads, &mut locals, (lo, hi), lr);
+            } else if matches!(self.pending[a], Some(PendingSync::PerNode { .. })) {
+                // Straggler-tolerant window in flight: members whose
+                // arrival step is now aggregate their on-time quorum,
+                // the rest take a local step.
+                self.arrival_scan(&group, &rctx, a, &mut locals, (lo, hi), lr)?;
             } else {
                 // Local-only step (DiLoCo between syncs).
                 self.apply_local(&group, &rctx, &mut locals, lo, hi, lr);
@@ -530,8 +819,18 @@ impl Trainer {
                 exposed_comm: self.last_timing.exposed_comm,
                 hidden_comm: self.last_timing.hidden_comm,
                 comm_events: self.engine.events.len() as u64,
-                staleness: self.cfg.staleness(),
+                staleness: self.node_delay.iter().copied().max().unwrap_or(0),
+                node_staleness: self.node_staleness_label.clone(),
                 sync_in_flight: self.syncs_in_flight(),
+                dropped_syncs: if self.node_staleness_label.is_empty() {
+                    String::new()
+                } else {
+                    self.dropped_step
+                        .iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(";")
+                },
                 wall_time: wall0.elapsed().as_secs_f64(),
             });
             self.last_inter = inter;
@@ -556,7 +855,7 @@ impl Trainer {
             }
         }
         if let Some(path) = &self.cfg.trace_out {
-            let doc = engine::chrome_trace_json(&trace);
+            let doc = engine::chrome_trace_json(&trace, self.cfg.accels_per_node);
             std::fs::write(path, doc.to_string_pretty())
                 .with_context(|| format!("writing schedule trace to {path:?}"))?;
             log::info!(

@@ -693,6 +693,146 @@ mod engine_invariants {
         assert_ne!(ls, la);
     }
 
+    /// Satellite acceptance: `--late-policy wait` with a *uniform*
+    /// staleness table — whether it arrives as the global `--staleness S`
+    /// or as an all-equal `--node-staleness` table — must route through
+    /// the PR 4 whole-group window and reproduce it bit-for-bit (losses,
+    /// validation, sim time, final parameters), across meshes, periods,
+    /// and `--threads {1, 2, 4}`.
+    #[test]
+    fn prop_late_policy_wait_uniform_bit_identical_to_global_staleness() {
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(2, 3);
+            let accels = g.usize(1, 2);
+            let period = g.usize(2, 5) as u64;
+            let staleness = g.usize(1, period as usize - 1) as u64;
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let fingerprint = |via_table: bool| {
+                let mut cfg = synth_cfg(&format!("diloco:{period}"));
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 2 * period + 1;
+                cfg.threads = threads;
+                cfg.val_every = period;
+                cfg.val_batches = 2;
+                if via_table {
+                    let table: Vec<String> =
+                        (0..nodes).map(|n| format!("{n}:{staleness}")).collect();
+                    cfg.apply_arg("node-staleness", &table.join(",")).unwrap();
+                    cfg.apply_arg("late-policy", "wait").unwrap();
+                } else {
+                    cfg.apply_arg("staleness", &staleness.to_string()).unwrap();
+                }
+                let (t, m) = run(cfg);
+                let loss_bits: Vec<u64> = m.steps.iter().map(|r| r.loss.to_bits()).collect();
+                let val_bits: Vec<u64> = m.val.iter().map(|r| r.loss.to_bits()).collect();
+                let time_bits = m.total_sim_time().to_bits();
+                let param_bits: Vec<u32> =
+                    t.params_node0().iter().map(|p| p.to_bits()).collect();
+                (loss_bits, val_bits, time_bits, param_bits)
+            };
+            detonation::util::proptest::prop_assert(
+                fingerprint(false) == fingerprint(true),
+                format!(
+                    "{nodes}x{accels} diloco:{period} S={staleness} t{threads}: \
+                     uniform node table + wait diverged from the global path"
+                ),
+            );
+        });
+    }
+
+    /// Tentpole acceptance: under a 4× compute straggler on a
+    /// comm-exposed link, `drop` and `partial` finish strictly faster
+    /// than `wait` (nobody stalls on an admitted contribution by
+    /// construction, while `wait` blocks every arrival on the
+    /// straggler's launch + full send queue), and the per-node
+    /// `dropped_syncs` column records the late contributions.
+    #[test]
+    fn drop_and_partial_beat_wait_under_compute_straggler() {
+        let mk = |policy: &str| {
+            let mut cfg = synth_cfg("diloco:4");
+            cfg.steps = 16;
+            cfg.cluster = ClusterModel {
+                slowdown: ClusterModel::parse_slowdown("1:4.0").unwrap(),
+                node_inter_bw: vec![],
+            };
+            cfg.apply_arg("staleness", "2").unwrap();
+            cfg.apply_arg("late-policy", policy).unwrap();
+            run(cfg)
+        };
+        let (_, wait) = mk("wait");
+        let (_, drop) = mk("drop");
+        let (_, partial) = mk("partial");
+        assert!(
+            drop.total_sim_time() < wait.total_sim_time(),
+            "drop not faster: {} vs wait {}",
+            drop.total_sim_time(),
+            wait.total_sim_time()
+        );
+        assert!(
+            partial.total_sim_time() < wait.total_sim_time(),
+            "partial not faster: {} vs wait {}",
+            partial.total_sim_time(),
+            wait.total_sim_time()
+        );
+        // losses stay finite under both tolerant policies
+        assert!(drop.steps.iter().all(|r| r.loss.is_finite()));
+        assert!(partial.steps.iter().all(|r| r.loss.is_finite()));
+        // the wait window never drops; the tolerant ones record the
+        // straggler's late contributions per node
+        assert_eq!(wait.total_dropped_syncs(), 0);
+        assert!(drop.total_dropped_syncs() > 0, "drop recorded no late peers");
+        assert!(partial.total_dropped_syncs() > 0);
+        // the resolved table is surfaced in the steps CSV columns
+        assert!(drop.steps.iter().all(|r| r.node_staleness == "2;2"));
+        assert!(drop.steps.iter().all(|r| r.staleness == 2));
+    }
+
+    /// `--staleness auto` resolves a per-node table from the cluster
+    /// profile: a NIC-throttled node gets more slack than a nominal one,
+    /// the run stays finite, and the table lands in the CSV column.
+    #[test]
+    fn auto_staleness_derives_per_node_windows() {
+        let mut cfg = synth_cfg("diloco:8");
+        cfg.steps = 18;
+        cfg.cluster = ClusterModel {
+            slowdown: ClusterModel::parse_slowdown("1:2.0").unwrap(),
+            node_inter_bw: vec![],
+        };
+        cfg.apply_arg("staleness", "auto").unwrap();
+        cfg.apply_arg("late-policy", "drop").unwrap();
+        let (t, m) = run(cfg);
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+        let table = &m.steps[0].node_staleness;
+        let parts: Vec<u64> = table.split(';').map(|s| s.parse().unwrap()).collect();
+        assert_eq!(parts.len(), 2, "one entry per node: {table:?}");
+        assert!(parts.iter().all(|&s| (1..8).contains(&s)), "{table:?}");
+        // the compute straggler's long steps absorb the transfer in
+        // fewer of them
+        assert!(parts[1] <= parts[0], "{table:?}");
+        // the engine still respects its serialized upper bound
+        assert!(t.engine.now() <= t.engine.serialized_time() * (1.0 + 1e-12));
+    }
+
+    /// Explicit per-node overrides go through end to end, including a
+    /// node pinned back to S = 0 (aggregate at launch from whatever has
+    /// landed — its own delta at minimum).
+    #[test]
+    fn node_staleness_overrides_run_end_to_end() {
+        let mut cfg = synth_cfg("diloco:4");
+        // launches at steps 3/7/11; node 1's last arrival is step 13
+        cfg.steps = 14;
+        cfg.apply_arg("node-staleness", "0:0,1:2").unwrap();
+        cfg.apply_arg("late-policy", "partial").unwrap();
+        let (_, m) = run(cfg);
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+        assert!(m.steps.iter().all(|r| r.node_staleness == "0;2"));
+        assert!(m.steps.iter().all(|r| r.staleness == 2));
+        // windows fully retire: nothing left in flight at the end of a
+        // non-launch step run tail
+        assert_eq!(m.steps.last().unwrap().sync_in_flight, 0);
+    }
+
     #[test]
     fn straggler_node_dominates_critical_path() {
         let mut cfg = synth_cfg("demo:1/8");
@@ -820,6 +960,15 @@ mod engine_invariants {
             .filter_map(|e| e.get("tid").and_then(|t| t.as_u64()))
             .collect();
         assert_eq!(tids.into_iter().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        // every lane row names its node (2×2 mesh: node = tid / 2), so
+        // in-flight gathers are attributable in the timeline view
+        for e in evs {
+            if e.get("ph").and_then(|p| p.as_str()) == Some("X") {
+                let tid = e.get("tid").and_then(|t| t.as_u64()).unwrap();
+                let node = e.get("args").and_then(|a| a.get("node")).and_then(|n| n.as_u64());
+                assert_eq!(node, Some(tid / 2));
+            }
+        }
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,322 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff freshly regenerated BENCH_*.json against
+committed snapshots and fail CI on a throughput regression or a broken
+invariant field.
+
+Rebar-style compare (see /root/related/BurntSushi__rebar's METHODOLOGY):
+measurements are matched by *name* within each artifact, compared as
+ratios against a tolerance, and everything that cannot be compared is
+reported rather than silently skipped.
+
+Two layers, both of which must pass:
+
+1. **Invariants** — fields the benches assert while writing the artifact
+   (zero steady-state allocations, "drop beats wait", bit-identity
+   booleans, S >= 1 strictly faster than synchronous DiLoCo). A bench
+   that wrote a violating artifact has already failed its own process,
+   but the gate re-checks the *committed* claims so a stale or
+   hand-edited snapshot cannot pass review.
+
+2. **Throughput compare** — for every metric in the registry, fresh
+   must not be worse than baseline by more than --threshold (default
+   15%). Wall-clock metrics are machine-dependent, which is exactly why
+   the tolerance exists; simulated metrics are deterministic and should
+   never trip the gate unless a schedule regressed. Artifacts whose
+   `quick` flags differ between baseline and fresh are skipped (smoke
+   sizes are not comparable to full runs), and a missing baseline is a
+   note, not a failure — the gate arms itself automatically once
+   snapshots are committed (CI uploads every fresh artifact as the
+   `bench-json` artifact either way).
+
+Usage:
+    python3 scripts/bench_gate.py --baseline-dir bench_baseline --fresh-dir .
+    python3 scripts/bench_gate.py --self-test
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# metric registry: artifact stem -> list of
+#   (container key, row-match keys (None = container is a plain object),
+#    value key, higher_is_better)
+METRICS = {
+    "kernels": [("rows", ("name",), "speedup", True)],
+    "compress": [
+        ("rows", ("name",), "elements_per_sec", True),
+        ("extract", None, "speedup", True),
+    ],
+    "dct": [("rows", ("name", "chunk"), "elements_per_sec", True)],
+    "collectives": [("rows", ("name",), "gb_per_sec", True)],
+    "runtime": [("rows", ("model",), "gflops_per_sec", True)],
+    "overlap": [("schemes", ("scheme",), "sim_speedup", True)],
+    "async_diloco": [("arms", ("label",), "sim_step_s", False)],
+    "stragglers": [("arms", ("label",), "sim_step_s", False)],
+}
+
+# invariant registry: artifact stem -> list of (dotted field path, expected)
+INVARIANTS = {
+    "kernels": [
+        ("collectives_steady_state_allocs", 0),
+        ("optimizer_steady_state_allocs", 0),
+    ],
+    "compress": [("extract.steady_state_allocs", 0)],
+    "stragglers": [
+        ("homogeneous_bit_identical_to_pr4_async", True),
+        ("drop_beats_wait_under_4x_straggler", True),
+        ("partial_beats_wait_under_4x_straggler", True),
+    ],
+}
+
+
+def lookup(doc, dotted):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_invariants(stem, doc):
+    """Return a list of violation strings for one artifact."""
+    errors = []
+    for path, expected in INVARIANTS.get(stem, []):
+        got = lookup(doc, path)
+        if got is None:
+            errors.append(f"{stem}: invariant field {path!r} missing")
+        elif got != expected:
+            errors.append(f"{stem}: invariant {path} = {got!r}, want {expected!r}")
+    errors += computed_invariants(stem, doc)
+    return errors
+
+
+def _num(arm, key, errors, stem, label):
+    """Fetch a numeric arm field, reporting (not crashing on) absence."""
+    v = arm.get(key)
+    if not isinstance(v, (int, float)):
+        errors.append(f"{stem}: arm {label!r} missing numeric field {key!r}")
+        return None
+    return v
+
+
+def computed_invariants(stem, doc):
+    """Cross-row invariants that need arithmetic, not just field equality."""
+    errors = []
+    if stem == "async_diloco":
+        arms = {a.get("label"): a for a in doc.get("arms", [])}
+        sync = arms.get("diloco-sync")
+        if sync is None:
+            return [f"{stem}: no diloco-sync baseline arm"]
+        sync_step = _num(sync, "sim_step_s", errors, stem, "diloco-sync")
+        for label, arm in arms.items():
+            s = arm.get("staleness")
+            if s is None:
+                continue
+            if s == 0 and arm.get("val_delta_vs_sync_diloco") not in (0, 0.0):
+                errors.append(f"{stem}: S=0 arm is not bit-identical to sync")
+            step = _num(arm, "sim_step_s", errors, stem, label)
+            if s >= 1 and sync_step is not None and step is not None and not step < sync_step:
+                errors.append(f"{stem}: {label} not faster than sync ({step} vs {sync_step})")
+    if stem == "stragglers":
+        arms = {a.get("label"): a for a in doc.get("arms", [])}
+        wait = arms.get("severity4-wait")
+        if wait is None:
+            return [f"{stem}: no severity4-wait arm"]
+        wait_t = _num(wait, "sim_time_s", errors, stem, "severity4-wait")
+        for policy in ("drop", "partial"):
+            label = f"severity4-{policy}"
+            arm = arms.get(label)
+            if arm is None:
+                errors.append(f"{stem}: {label} arm missing")
+                continue
+            t = _num(arm, "sim_time_s", errors, stem, label)
+            dropped = _num(arm, "dropped_syncs", errors, stem, label)
+            if wait_t is not None and t is not None and not t < wait_t:
+                errors.append(
+                    f"{stem}: {policy} not faster than wait under the 4x straggler "
+                    f"({t} vs {wait_t})"
+                )
+            elif dropped is not None and dropped <= 0:
+                errors.append(f"{stem}: {label} recorded no late contributions")
+    return errors
+
+
+def iter_metric_pairs(stem, base, fresh):
+    """Yield (unit name, base value, fresh value, higher_is_better)."""
+    for container, match_keys, value_key, higher in METRICS.get(stem, []):
+        b, f = base.get(container), fresh.get(container)
+        if b is None or f is None:
+            continue
+        if match_keys is None:  # plain object holding the metric
+            if value_key in b and value_key in f:
+                yield f"{container}.{value_key}", b[value_key], f[value_key], higher
+            continue
+        index = {tuple(r.get(k) for k in match_keys): r for r in b}
+        for r in f:
+            key = tuple(r.get(k) for k in match_keys)
+            if key in index and value_key in r and value_key in index[key]:
+                name = "/".join(str(k) for k in key)
+                yield f"{container}[{name}].{value_key}", index[key][value_key], r[value_key], higher
+
+
+def compare(stem, base, fresh, threshold):
+    """Return (regressions, compared_count) for one artifact pair."""
+    if base.get("quick") != fresh.get("quick"):
+        print(f"  {stem}: quick flags differ (baseline={base.get('quick')}, "
+              f"fresh={fresh.get('quick')}) — compare skipped")
+        return [], 0
+    regressions, compared = [], 0
+    for unit, bv, fv, higher in iter_metric_pairs(stem, base, fresh):
+        if not isinstance(bv, (int, float)) or not isinstance(fv, (int, float)) or bv <= 0:
+            continue
+        if not higher and fv <= 0:
+            # A cost metric that fell to zero is an improvement (or a
+            # degenerate config), never a regression — and has no ratio.
+            continue
+        compared += 1
+        ratio = fv / bv if higher else bv / fv
+        if ratio < 1.0 - threshold:
+            regressions.append(
+                f"{stem}: {unit} regressed {100 * (1 - ratio):.1f}% "
+                f"(baseline {bv:.6g}, fresh {fv:.6g})"
+            )
+    return regressions, compared
+
+
+def run_gate(baseline_dir, fresh_dir, threshold, require_baseline):
+    failures = []
+    fresh_paths = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
+    if not fresh_paths:
+        print(f"no BENCH_*.json found in {fresh_dir!r} — nothing to gate")
+        return 1
+    for path in fresh_paths:
+        stem = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        with open(path) as f:
+            fresh = json.load(f)
+        print(f"{os.path.basename(path)}:")
+        bad = check_invariants(stem, fresh)
+        for e in bad:
+            print(f"  INVARIANT BROKEN: {e}")
+        failures += bad
+        base_path = os.path.join(baseline_dir, os.path.basename(path))
+        if not os.path.exists(base_path):
+            msg = f"  no committed baseline at {base_path} — compare skipped"
+            print(msg)
+            if require_baseline:
+                failures.append(msg.strip())
+            continue
+        with open(base_path) as f:
+            base = json.load(f)
+        # Re-check the committed snapshot's own claims too: a stale or
+        # hand-edited baseline must not pass review (nor skew the
+        # compare with tampered numbers).
+        base_bad = [f"baseline {e}" for e in check_invariants(stem, base)]
+        for e in base_bad:
+            print(f"  INVARIANT BROKEN: {e}")
+        failures += base_bad
+        regressions, compared = compare(stem, base, fresh, threshold)
+        for r in regressions:
+            print(f"  REGRESSION: {r}")
+        failures += regressions
+        if compared and not regressions:
+            print(f"  {compared} metric(s) within {threshold:.0%} of baseline")
+    if failures:
+        print(f"\nbench gate FAILED: {len(failures)} problem(s)")
+        return 1
+    print("\nbench gate passed")
+    return 0
+
+
+def self_test():
+    """Pure-function checks so the gate itself cannot bit-rot silently."""
+    k = {
+        "quick": True,
+        "rows": [{"name": "axpy", "speedup": 2.0}],
+        "collectives_steady_state_allocs": 0,
+        "optimizer_steady_state_allocs": 0,
+    }
+    assert check_invariants("kernels", k) == []
+    k_bad = dict(k, optimizer_steady_state_allocs=3)
+    assert any("optimizer" in e for e in check_invariants("kernels", k_bad))
+
+    # higher-is-better regression beyond 15% trips; within 15% passes
+    fresh_ok = {"quick": True, "rows": [{"name": "axpy", "speedup": 1.8}]}
+    fresh_bad = {"quick": True, "rows": [{"name": "axpy", "speedup": 1.5}]}
+    assert compare("kernels", k, fresh_ok, 0.15) == ([], 1)
+    regs, n = compare("kernels", k, fresh_bad, 0.15)
+    assert n == 1 and len(regs) == 1 and "regressed" in regs[0]
+
+    # lower-is-better metrics invert the ratio
+    base = {"quick": False, "arms": [{"label": "a", "sim_step_s": 1.0}]}
+    slower = {"quick": False, "arms": [{"label": "a", "sim_step_s": 1.3}]}
+    regs, n = compare("stragglers", base, slower, 0.15)
+    assert n == 1 and len(regs) == 1
+    # a cost metric that fell to zero is an improvement, not a 100%
+    # regression (and must not divide by zero)
+    to_zero = {"quick": False, "arms": [{"label": "a", "sim_step_s": 0.0}]}
+    assert compare("stragglers", base, to_zero, 0.15) == ([], 0)
+
+    # quick-flag mismatch skips the compare entirely
+    assert compare("kernels", dict(k, quick=False), fresh_bad, 0.15) == ([], 0)
+
+    # straggler computed invariants: drop/partial must beat wait
+    s = {
+        "arms": [
+            {"label": "severity4-wait", "sim_time_s": 10.0, "dropped_syncs": 0},
+            {"label": "severity4-drop", "sim_time_s": 8.0, "dropped_syncs": 4},
+            {"label": "severity4-partial", "sim_time_s": 8.5, "dropped_syncs": 4},
+        ],
+        "homogeneous_bit_identical_to_pr4_async": True,
+        "drop_beats_wait_under_4x_straggler": True,
+        "partial_beats_wait_under_4x_straggler": True,
+    }
+    assert check_invariants("stragglers", s) == []
+    s_bad = json.loads(json.dumps(s))
+    s_bad["arms"][1]["sim_time_s"] = 11.0
+    assert any("drop not faster" in e for e in check_invariants("stragglers", s_bad))
+    # schema drift (missing field) is a reported violation, not a crash
+    s_missing = json.loads(json.dumps(s))
+    del s_missing["arms"][2]["sim_time_s"]
+    assert any("missing numeric field" in e for e in check_invariants("stragglers", s_missing))
+
+    # async_diloco: S >= 1 must be faster than sync, S = 0 bit-identical
+    a = {
+        "arms": [
+            {"label": "diloco-sync", "staleness": None, "sim_step_s": 2.0},
+            {"label": "async-diloco-s0", "staleness": 0, "sim_step_s": 2.0,
+             "val_delta_vs_sync_diloco": 0.0},
+            {"label": "async-diloco-s2", "staleness": 2, "sim_step_s": 1.5},
+        ]
+    }
+    assert check_invariants("async_diloco", a) == []
+    a["arms"][2]["sim_step_s"] = 2.5
+    assert any("not faster" in e for e in check_invariants("async_diloco", a))
+
+    print("bench_gate self-test passed")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default="bench_baseline",
+                    help="directory holding the committed BENCH_*.json snapshots")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the freshly regenerated artifacts")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="maximum tolerated fractional regression (default 0.15)")
+    ap.add_argument("--require-baseline", action="store_true",
+                    help="fail when a fresh artifact has no committed baseline")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the gate's own unit checks and exit")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    sys.exit(run_gate(args.baseline_dir, args.fresh_dir, args.threshold,
+                      args.require_baseline))
+
+
+if __name__ == "__main__":
+    main()
