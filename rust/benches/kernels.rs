@@ -1,13 +1,17 @@
 //! Kernel micro-bench: scalar baseline vs pooled chunk-parallel kernels
-//! on large flats (the tentpole perf deliverable), plus the zero-alloc
-//! steady-state assertions for the collectives and optimizer paths
-//! (counting global allocator, as in `benches/compress.rs`).
+//! on large flats, plus the lane-level arms — strict scalar sweeps
+//! (`parallel::lanes::scalar`) vs the unrolled lane kernels
+//! (`parallel::lanes`) on an L2-resident chunk — and the zero-alloc
+//! steady-state assertions for the collectives, optimizer, and lane
+//! paths (counting global allocator, as in `benches/compress.rs`).
 //!
 //!     cargo bench --bench kernels [-- --quick]
 //!
 //! `--quick` shrinks sizes/durations for the CI smoke step. Results
 //! (µs/iter per arm, speedup, allocs/iter) land in `BENCH_kernels.json`
-//! at the repo root — the perf-trajectory artifact.
+//! at the repo root — the perf-trajectory artifact. The `lanes` rows
+//! marked `gated` carry the ≥2× `lane_speedup` floor enforced by
+//! `scripts/bench_gate.py`.
 
 use std::time::Instant;
 
@@ -15,7 +19,7 @@ use detonation::collectives::{ring_all_reduce_avg, ring_reduce_scatter_avg, Coll
 use detonation::dct::{Dct, DctScratch};
 use detonation::net::{NetModel, Topology, TrafficMatrix};
 use detonation::optim::{OptSpec, Optimizer};
-use detonation::parallel::{PoolHandle, WorkerPool};
+use detonation::parallel::{lanes, PoolHandle, WorkerPool, CHUNK};
 use detonation::runtime::Runtime;
 use detonation::tensor;
 use detonation::util::json::Json;
@@ -71,6 +75,39 @@ impl Row {
             ("pooled_micros_per_iter", Json::Num(self.pooled_us)),
             ("speedup", Json::Num(self.scalar_us / self.pooled_us)),
             ("pooled_allocs_per_iter", Json::Num(self.pooled_allocs)),
+        ])
+    }
+}
+
+struct LaneRow {
+    name: &'static str,
+    scalar_us: f64,
+    vector_us: f64,
+    vector_allocs: f64,
+    /// Carries the ≥2× `lane_speedup` floor in `scripts/bench_gate.py`.
+    gated: bool,
+}
+
+impl LaneRow {
+    fn print(&self) {
+        println!(
+            "{:<28} scalar {:>9.2} µs  vector {:>9.2} µs  lane speedup {:>5.2}x{}",
+            self.name,
+            self.scalar_us,
+            self.vector_us,
+            self.scalar_us / self.vector_us,
+            if self.gated { "  [gated >=2x]" } else { "" }
+        );
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("scalar_micros_per_iter", Json::Num(self.scalar_us)),
+            ("vector_micros_per_iter", Json::Num(self.vector_us)),
+            ("lane_speedup", Json::Num(self.scalar_us / self.vector_us)),
+            ("vector_allocs_per_iter", Json::Num(self.vector_allocs)),
+            ("gated", Json::Bool(self.gated)),
         ])
     }
 }
@@ -356,8 +393,179 @@ fn main() -> anyhow::Result<()> {
         pooled_allocs,
     });
 
+    // -- lane kernels: strict scalar sweep vs unrolled lane arm -----------
+    // Working set = one grid chunk (CHUNK elements, L2-resident), so both
+    // arms are compute-bound and `lane_speedup` measures the explicit
+    // unrolling rather than memory bandwidth. The scalar arm is
+    // `parallel::lanes::scalar` — the pre-lane per-element sweeps with a
+    // black_box-pinned loop index, so the auto-vectorizer cannot quietly
+    // turn the baseline into SIMD. Rows marked `gated` carry the ≥2×
+    // floor in scripts/bench_gate.py; every lane arm is asserted
+    // allocation-free in steady state.
+    let m = CHUNK;
+    let mut lane_rows: Vec<LaneRow> = Vec::new();
+
+    // fused decay step: the demo-sgd / sgd / decoupled-adamw apply path
+    let q = &x[..m];
+    let mut p = vec![1.0f32; m];
+    let (scalar_us, _) = bench(budget, || {
+        lanes::scalar::decay_step(&mut p, 0.99, 1e-3, q);
+        std::hint::black_box(p[0]);
+    });
+    let (vector_us, vector_allocs) = bench(budget, || {
+        lanes::decay_step(&mut p, 0.99, 1e-3, q);
+        std::hint::black_box(p[0]);
+    });
+    assert_eq!(
+        allocs_of(|| lanes::decay_step(&mut p, 0.99, 1e-3, q)),
+        0,
+        "lane decay_step allocated"
+    );
+    lane_rows.push(LaneRow {
+        name: "fused_decay_step",
+        scalar_us,
+        vector_us,
+        vector_allocs,
+        gated: true,
+    });
+
+    // collective reduce: the g-way accumulate + average inner loop of
+    // ring_all_reduce_avg / ring_reduce_scatter_avg, per chunk
+    let parts4: Vec<&[f32]> = (0..4).map(|i| &x[i * m..(i + 1) * m]).collect();
+    let mut acc = vec![0.0f32; m];
+    let (scalar_us, _) = bench(budget, || {
+        acc.fill(0.0);
+        for part in &parts4 {
+            lanes::scalar::axpy(&mut acc, 1.0, part);
+        }
+        lanes::scalar::scale(&mut acc, 0.25);
+        std::hint::black_box(acc[0]);
+    });
+    let (vector_us, vector_allocs) = bench(budget, || {
+        acc.fill(0.0);
+        for part in &parts4 {
+            lanes::axpy(&mut acc, 1.0, part);
+        }
+        lanes::scale(&mut acc, 0.25);
+        std::hint::black_box(acc[0]);
+    });
+    assert_eq!(
+        allocs_of(|| {
+            for part in &parts4 {
+                lanes::axpy(&mut acc, 1.0, part);
+            }
+            lanes::scale(&mut acc, 0.25);
+        }),
+        0,
+        "lane collective reduce allocated"
+    );
+    lane_rows.push(LaneRow {
+        name: "collective_reduce",
+        scalar_us,
+        vector_us,
+        vector_allocs,
+        gated: true,
+    });
+
+    // residual scatter: sparse DCT-III accumulation (the extract hot
+    // path). Vector arm = the shipped `inverse_sparse`; scalar arm = the
+    // same k strict-scalar axpys of `chunk`-length rows.
+    let idx: Vec<u32> = vec![0, 3, 9, 17, 25, 33, 47, 62];
+    let vals: Vec<f32> = idx.iter().map(|&i| 1.0 + i as f32 * 0.25).collect();
+    let mut out64 = vec![0.0f32; chunk];
+    let mut ds = DctScratch::new();
+    let reps = m / chunk;
+    let (scalar_us, _) = bench(budget, || {
+        for _ in 0..reps {
+            out64.fill(0.0);
+            for (&i, &v) in idx.iter().zip(&vals) {
+                let row = &x[i as usize * chunk..(i as usize + 1) * chunk];
+                lanes::scalar::axpy(&mut out64, v, row);
+            }
+        }
+        std::hint::black_box(out64[0]);
+    });
+    let (vector_us, vector_allocs) = bench(budget, || {
+        for _ in 0..reps {
+            d.inverse_sparse(0, &idx, &vals, &mut out64, &mut ds);
+        }
+        std::hint::black_box(out64[0]);
+    });
+    assert_eq!(
+        allocs_of(|| d.inverse_sparse(0, &idx, &vals, &mut out64, &mut ds)),
+        0,
+        "sparse scatter allocated"
+    );
+    lane_rows.push(LaneRow {
+        name: "residual_scatter",
+        scalar_us,
+        vector_us,
+        vector_allocs,
+        gated: true,
+    });
+
+    // adamw fused moments+step sweep (reported, ungated: division and
+    // sqrt dominate both arms, so the lane win is structurally smaller)
+    let consts = lanes::AdamConsts {
+        beta1: 0.9,
+        beta2: 0.999,
+        bc1: 1.0 - 0.9f32.powi(8),
+        bc2: 1.0 - 0.999f32.powi(8),
+        eps: 1e-8,
+    };
+    let mut m1 = vec![0.0f32; m];
+    let mut m2 = vec![0.0f32; m];
+    let mut pb = vec![1.0f32; m];
+    let (scalar_us, _) = bench(budget, || {
+        lanes::scalar::adamw_step(&mut m1, &mut m2, &mut pb, q, consts, 1e-3, 0.01);
+        std::hint::black_box(pb[0]);
+    });
+    let (vector_us, vector_allocs) = bench(budget, || {
+        lanes::adamw_step(&mut m1, &mut m2, &mut pb, q, consts, 1e-3, 0.01);
+        std::hint::black_box(pb[0]);
+    });
+    assert_eq!(
+        allocs_of(|| lanes::adamw_step(&mut m1, &mut m2, &mut pb, q, consts, 1e-3, 0.01)),
+        0,
+        "lane adamw_step allocated"
+    );
+    lane_rows.push(LaneRow {
+        name: "adamw_moments_step",
+        scalar_us,
+        vector_us,
+        vector_allocs,
+        gated: false,
+    });
+
+    // eval reduction (reported, ungated: the one reassociated kernel)
+    let t = &x[m..2 * m];
+    let (scalar_us, _) = bench(budget, || {
+        std::hint::black_box(lanes::scalar::sq_dev_half_sum(q, t));
+    });
+    let (vector_us, vector_allocs) = bench(budget, || {
+        std::hint::black_box(lanes::sq_dev_half_sum(q, t));
+    });
+    assert_eq!(
+        allocs_of(|| {
+            std::hint::black_box(lanes::sq_dev_half_sum(q, t));
+        }),
+        0,
+        "lane sq_dev_half_sum allocated"
+    );
+    lane_rows.push(LaneRow {
+        name: "eval_sq_dev_sum",
+        scalar_us,
+        vector_us,
+        vector_allocs,
+        gated: false,
+    });
+
     println!();
     for r in &rows {
+        r.print();
+    }
+    println!();
+    for r in &lane_rows {
         r.print();
     }
     let best = rows
@@ -365,17 +573,22 @@ fn main() -> anyhow::Result<()> {
         .map(|r| r.scalar_us / r.pooled_us)
         .fold(0.0f64, f64::max);
     println!("\nbest kernel speedup: {best:.2}x (pool width {})", pool.width());
-    println!("steady-state allocations: collectives 0, optimizer 0 (asserted)");
+    println!("steady-state allocations: collectives 0, optimizer 0, lane kernels 0 (asserted)");
 
     let out = Json::obj(vec![
         ("bench", Json::Str("kernels".into())),
         ("elements", Json::Num(n as f64)),
+        ("lane_elements", Json::Num(m as f64)),
+        ("lane_width_f32", Json::Num(lanes::F32_LANES as f64)),
+        ("lane_width_f64", Json::Num(lanes::F64_LANES as f64)),
         ("pool_width", Json::Num(pool.width() as f64)),
         ("quick", Json::Bool(quick)),
         ("rows", Json::Arr(rows.iter().map(Row::json).collect())),
+        ("lanes", Json::Arr(lane_rows.iter().map(LaneRow::json).collect())),
         ("best_speedup", Json::Num(best)),
         ("collectives_steady_state_allocs", Json::Num(0.0)),
         ("optimizer_steady_state_allocs", Json::Num(0.0)),
+        ("vector_steady_state_allocs", Json::Num(0.0)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

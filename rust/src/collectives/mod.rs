@@ -316,9 +316,7 @@ pub fn ring_all_reduce_avg(
             for p in bp {
                 crate::tensor::axpy(a, 1.0, unsafe { p.range(lo, hi) });
             }
-            for x in a.iter_mut() {
-                *x *= inv;
-            }
+            parallel::lanes::scale(a, inv);
             for p in bp {
                 unsafe { p.range(lo, hi) }.copy_from_slice(a);
             }
@@ -375,9 +373,7 @@ pub fn ring_reduce_scatter_avg(
                 for p in bp {
                     crate::tensor::axpy(a, 1.0, unsafe { p.range(lo, hi) });
                 }
-                for x in a.iter_mut() {
-                    *x *= inv;
-                }
+                parallel::lanes::scale(a, inv);
                 unsafe { bp[i].range(lo, hi) }.copy_from_slice(a);
             }
         });

@@ -29,6 +29,8 @@ use std::f64::consts::PI;
 use std::sync::Mutex;
 use std::sync::OnceLock;
 
+use crate::parallel::lanes::{F64x4, F64_LANES};
+
 /// Precomputed orthonormal DCT-II basis for size n: `basis[k*n + i]`.
 pub fn dct_basis(n: usize) -> Vec<f32> {
     let mut b = vec![0.0f32; n * n];
@@ -175,9 +177,7 @@ impl Dct {
                 continue; // sparse coefficient vectors are the common case
             }
             let row = &self.basis[k * n..(k + 1) * n];
-            for i in 0..n {
-                out[i] += ck * row[i];
-            }
+            crate::parallel::lanes::axpy(out, ck, row);
         }
     }
 
@@ -464,9 +464,7 @@ impl Dct {
                 }
                 let k = (i - base) as usize;
                 let row = &self.basis[k * n..(k + 1) * n];
-                for (o, &r) in out.iter_mut().zip(row) {
-                    *o += v * r;
-                }
+                crate::parallel::lanes::axpy(out, v, row);
             }
         }
     }
@@ -505,7 +503,10 @@ impl Dct {
 /// count 2·log2(n) is even). Per segment this performs exactly the
 /// recursion's butterflies (top-down) and interleaves (bottom-up), so the
 /// per-chunk float dag — and therefore every output bit — matches
-/// [`unnormalized_dct2`].
+/// [`unnormalized_dct2`]. The inner loops run four lanes at a time on
+/// [`F64x4`] (mirrored reads via [`F64x4::load_rev`], recombination via
+/// [`F64x4::interleave`]); lanes only regroup the loop iterations, every
+/// per-element chain is unchanged, so bit-identity is preserved.
 fn dct2_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
     let total = a.len();
     debug_assert_eq!(total, b.len());
@@ -519,11 +520,20 @@ fn dct2_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
         let tw = &twiddles[n - m..n - m + h];
         let mut seg = 0usize;
         while seg < total {
-            for i in 0..h {
+            let mut i = 0usize;
+            while i + F64_LANES <= h {
+                let av = F64x4::load(&cur[seg + i..]);
+                let bv = F64x4::load_rev(&cur[seg + m - i - F64_LANES..]);
+                (av + bv).store(&mut nxt[seg + i..]);
+                ((av - bv) * F64x4::load(&tw[i..])).store(&mut nxt[seg + h + i..]);
+                i += F64_LANES;
+            }
+            while i < h {
                 let av = cur[seg + i];
                 let bv = cur[seg + m - 1 - i];
                 nxt[seg + i] = av + bv;
                 nxt[seg + h + i] = (av - bv) * tw[i];
+                i += 1;
             }
             seg += m;
         }
@@ -537,10 +547,23 @@ fn dct2_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
         let h = m / 2;
         let mut seg = 0usize;
         while seg < total {
-            for k in 0..h {
+            let mut k = 0usize;
+            // Strictly below h so the `D[h] := 0` edge (and the read of
+            // D[k+1]) never lands inside a lane block.
+            while k + F64_LANES < h {
+                let sv = F64x4::load(&cur[seg + k..]);
+                let d0 = F64x4::load(&cur[seg + h + k..]);
+                let d1 = F64x4::load(&cur[seg + h + k + 1..]);
+                let (even, odd) = sv.interleave(d0 + d1);
+                even.store(&mut nxt[seg + 2 * k..]);
+                odd.store(&mut nxt[seg + 2 * k + F64_LANES..]);
+                k += F64_LANES;
+            }
+            while k < h {
                 nxt[seg + 2 * k] = cur[seg + k];
                 let next = if k + 1 < h { cur[seg + h + k + 1] } else { 0.0 };
                 nxt[seg + 2 * k + 1] = cur[seg + h + k] + next;
+                k += 1;
             }
             seg += m;
         }
@@ -552,7 +575,10 @@ fn dct2_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
 /// Blocked unnormalized DCT-III (transpose of [`dct2_block_passes`]):
 /// de-interleave top-down, butterfly bottom-up. Input in `a`; result
 /// lands back in `a`. Per segment the float dag matches
-/// [`unnormalized_dct3`] bit-for-bit.
+/// [`unnormalized_dct3`] bit-for-bit. Inner loops run four lanes at a
+/// time on [`F64x4`] ([`F64x4::deinterleave`] for the even/odd split,
+/// [`F64x4::store_rev`] for the mirrored butterfly write); per-element
+/// chains are unchanged, so bit-identity is preserved.
 fn dct3_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
     let total = a.len();
     debug_assert_eq!(total, b.len());
@@ -565,12 +591,33 @@ fn dct3_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
         let h = m / 2;
         let mut seg = 0usize;
         while seg < total {
-            for k in 0..h {
+            let mut k = 0usize;
+            while k + F64_LANES <= h {
+                let p0 = F64x4::load(&cur[seg + 2 * k..]);
+                let p1 = F64x4::load(&cur[seg + 2 * k + F64_LANES..]);
+                let (even, _) = p0.deinterleave(p1);
+                even.store(&mut nxt[seg + k..]);
+                k += F64_LANES;
+            }
+            while k < h {
                 nxt[seg + k] = cur[seg + 2 * k];
+                k += 1;
             }
             nxt[seg + h] = cur[seg + 1];
-            for k in 1..h {
+            let mut k = 1usize;
+            while k + F64_LANES <= h {
+                // d[k..k+4] needs x[2k−1..2k+6] odd-index values: two
+                // overlapping de-interleaves, one starting a pair early.
+                let (_, oa) = F64x4::load(&cur[seg + 2 * k - 2..])
+                    .deinterleave(F64x4::load(&cur[seg + 2 * k + 2..]));
+                let (_, ob) = F64x4::load(&cur[seg + 2 * k..])
+                    .deinterleave(F64x4::load(&cur[seg + 2 * k + F64_LANES..]));
+                (oa + ob).store(&mut nxt[seg + h + k..]);
+                k += F64_LANES;
+            }
+            while k < h {
                 nxt[seg + h + k] = cur[seg + 2 * k - 1] + cur[seg + 2 * k + 1];
+                k += 1;
             }
             seg += m;
         }
@@ -585,10 +632,19 @@ fn dct3_block_passes(n: usize, twiddles: &[f64], a: &mut [f64], b: &mut [f64]) {
         let tw = &twiddles[n - m..n - m + h];
         let mut seg = 0usize;
         while seg < total {
-            for i in 0..h {
+            let mut i = 0usize;
+            while i + F64_LANES <= h {
+                let sv = F64x4::load(&cur[seg + i..]);
+                let di = F64x4::load(&cur[seg + h + i..]) * F64x4::load(&tw[i..]);
+                (sv + di).store(&mut nxt[seg + i..]);
+                (sv - di).store_rev(&mut nxt[seg + m - i - F64_LANES..]);
+                i += F64_LANES;
+            }
+            while i < h {
                 let di = cur[seg + h + i] * tw[i];
                 nxt[seg + i] = cur[seg + i] + di;
                 nxt[seg + m - 1 - i] = cur[seg + i] - di;
+                i += 1;
             }
             seg += m;
         }

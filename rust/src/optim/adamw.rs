@@ -8,7 +8,7 @@
 //! red baseline curve (Figs 1, 3–6).
 
 use super::Optimizer;
-use crate::parallel::{self, PoolHandle, SlicePtr};
+use crate::parallel::{self, lanes, PoolHandle, SlicePtr};
 
 pub struct AdamW {
     pub beta1: f32,
@@ -62,8 +62,16 @@ impl Optimizer for AdamW {
         let (beta1, beta2, eps, wd) = (self.beta1, self.beta2, self.eps, self.weight_decay);
         let bc1 = 1.0 - beta1.powi(self.t as i32);
         let bc2 = 1.0 - beta2.powi(self.t as i32);
-        // Fused single sweep (moments + decay + step), chunk-parallel —
-        // same per-element float chain as the scalar loop.
+        // Fused single sweep (moments + decay + step), chunk-parallel on
+        // the unrolled lane kernel — same per-element float chain as the
+        // scalar loop.
+        let consts = lanes::AdamConsts {
+            beta1,
+            beta2,
+            bc1,
+            bc2,
+            eps,
+        };
         let pool = self.pool.clone();
         let m1 = SlicePtr::new(&mut self.m1);
         let m2 = SlicePtr::new(&mut self.m2);
@@ -73,16 +81,7 @@ impl Optimizer for AdamW {
             let m1 = unsafe { m1.range(lo, hi) };
             let m2 = unsafe { m2.range(lo, hi) };
             let ps = unsafe { ps.range(lo, hi) };
-            for (i, &g) in q[lo..hi].iter().enumerate() {
-                m1[i] = beta1 * m1[i] + (1.0 - beta1) * g;
-                m2[i] = beta2 * m2[i] + (1.0 - beta2) * g * g;
-                let mhat = m1[i] / bc1;
-                let vhat = m2[i] / bc2;
-                if wd > 0.0 {
-                    ps[i] *= 1.0 - lr * wd;
-                }
-                ps[i] -= lr * mhat / (vhat.sqrt() + eps);
-            }
+            lanes::adamw_step(m1, m2, ps, &q[lo..hi], consts, lr, wd);
         });
     }
 

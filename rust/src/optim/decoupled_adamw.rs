@@ -9,7 +9,7 @@
 //! selected components of that buffer across nodes.
 
 use super::{fused_decay_step, Optimizer};
-use crate::parallel::{self, PoolHandle, SlicePtr};
+use crate::parallel::{self, lanes, PoolHandle, SlicePtr};
 
 pub struct DecoupledAdamW {
     pub beta1: f32,
@@ -56,8 +56,17 @@ impl Optimizer for DecoupledAdamW {
         let bc1 = 1.0 - beta1.powi(self.t as i32);
         let bc2 = 1.0 - beta2.powi(self.t as i32);
         // Fused single sweep: both moment updates and the buffer push in
-        // one pass, chunk-parallel (pure elementwise — bit-identical at
-        // any worker count).
+        // one pass, chunk-parallel on the unrolled lane kernel (pure
+        // elementwise — bit-identical at any worker count). The Adam
+        // update direction joins whatever residual the replicator left
+        // behind from previous steps.
+        let consts = lanes::AdamConsts {
+            beta1,
+            beta2,
+            bc1,
+            bc2,
+            eps,
+        };
         let pool = self.pool.clone();
         let m1 = SlicePtr::new(&mut self.m1);
         let m2 = SlicePtr::new(&mut self.m2);
@@ -67,15 +76,7 @@ impl Optimizer for DecoupledAdamW {
             let m1 = unsafe { m1.range(lo, hi) };
             let m2 = unsafe { m2.range(lo, hi) };
             let buf = unsafe { buf.range(lo, hi) };
-            for (i, &g) in grad[lo..hi].iter().enumerate() {
-                m1[i] = beta1 * m1[i] + (1.0 - beta1) * g;
-                m2[i] = beta2 * m2[i] + (1.0 - beta2) * g * g;
-                let mhat = m1[i] / bc1;
-                let vhat = m2[i] / bc2;
-                // The Adam update direction joins whatever residual the
-                // replicator left behind from previous steps.
-                buf[i] += mhat / (vhat.sqrt() + eps);
-            }
+            lanes::dadamw_accum(m1, m2, buf, &grad[lo..hi], consts);
         });
     }
 

@@ -41,13 +41,11 @@ impl Optimizer for DemoSgd {
         debug_assert_eq!(grad.len(), self.momentum.len());
         // m ← βm + Δ  (Algorithm 1; note: *not* (1−β)-scaled — DeMo keeps
         // the raw gradient magnitude so extraction thresholds stay scale-
-        // comparable across β). Chunk-parallel, bit-identical at any
-        // worker count (pure elementwise).
+        // comparable across β). Chunk-parallel on the unrolled lane
+        // kernel, bit-identical at any worker count (pure elementwise).
         let beta = self.beta;
         crate::parallel::zip_chunks(self.pool.get(), &mut self.momentum, grad, |ms, gs| {
-            for (m, g) in ms.iter_mut().zip(gs) {
-                *m = beta * *m + g;
-            }
+            crate::parallel::lanes::momentum(ms, beta, gs);
         });
     }
 

@@ -47,9 +47,7 @@ pub(crate) fn fused_decay_step(
     if weight_decay > 0.0 {
         let decay = 1.0 - lr * weight_decay;
         crate::parallel::zip_chunks(pool, params, q, |ps, qs| {
-            for (p, &qv) in ps.iter_mut().zip(qs) {
-                *p = *p * decay - lr * qv;
-            }
+            crate::parallel::lanes::decay_step(ps, decay, lr, qs);
         });
     } else {
         crate::tensor::axpy_pooled(pool, params, -lr, q);

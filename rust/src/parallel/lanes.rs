@@ -1,0 +1,834 @@
+//! Explicitly unrolled SIMD-width lane primitives for the chunk kernels.
+//!
+//! Every hot sweep in the data plane (optimizer steps, collective
+//! accumulations, DCT butterflies, the residual scatter, the eval
+//! reduction) runs over the fixed 16Ki-element grid of
+//! [`crate::parallel::CHUNK`]. This module supplies the lane-level inner
+//! loops for those sweeps: fixed-width value types ([`F32x8`], [`F64x4`])
+//! whose elementwise operators are written as straight-line per-lane
+//! loops the compiler fully unrolls and vectorizes, plus free slice
+//! kernels (`axpy`, `scale`, `decay_step`, …) that walk a slice one lane
+//! block at a time with a scalar tail.
+//!
+//! The types are std-only manual unrolling today, but deliberately shaped
+//! like `std::simd::Simd<f32, 8>` / `Simd<f64, 4>` (`splat`, slice
+//! load/store, arithmetic via `std::ops`) so the portable-SIMD types can
+//! drop in when they stabilize.
+//!
+//! # Numeric contract
+//!
+//! Every f32 kernel here is **bit-identical** to its scalar loop: the
+//! per-element float chain (operand order and association) is exactly the
+//! one the pre-lane scalar sweep performed, and lanes only change *which*
+//! elements are in flight together, never how any single element is
+//! computed. This is pinned by the tail tests below at every length in
+//! `0..4·LANE` and across `CHUNK` boundaries, against the
+//! autovectorization-proof references in [`scalar`].
+//!
+//! The one exception is [`sq_dev_half_sum`], the eval reduction: a
+//! horizontal f64 sum has a serial dependence chain, so vectorizing it
+//! *requires* reassociation. It takes the same one-time, thereafter
+//! length-invariant reassociation the chunk grid itself took when eval
+//! went chunk-parallel: [`F64_LANES`] lane accumulators striped over
+//! consecutive elements, folded in lane order, scalar tail appended. The
+//! exact association is documented on the function and pinned by a test.
+
+use std::ops::{Add, Div, Mul, Sub};
+
+/// Lane width of [`F32x8`]: f32 elements processed per unrolled step.
+pub const F32_LANES: usize = 8;
+
+/// Lane width of [`F64x4`]: f64 elements processed per unrolled step.
+pub const F64_LANES: usize = 4;
+
+/// Eight f32 lanes, processed elementwise by every operator.
+///
+/// `#[repr(transparent)]` over `[f32; 8]` — the same layout
+/// `std::simd::Simd<f32, 8>` guarantees, so the port is a type swap.
+#[derive(Clone, Copy, Debug)]
+#[repr(transparent)]
+pub struct F32x8(pub [f32; F32_LANES]);
+
+/// Four f64 lanes, processed elementwise by every operator.
+///
+/// Carries the reversed/interleaving loads the blocked DCT butterflies
+/// need in addition to the plain elementwise surface.
+#[derive(Clone, Copy, Debug)]
+#[repr(transparent)]
+pub struct F64x4(pub [f64; F64_LANES]);
+
+impl F32x8 {
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; F32_LANES])
+    }
+
+    /// Load the first [`F32_LANES`] elements of `s` (panics if shorter).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        F32x8(s[..F32_LANES].try_into().unwrap())
+    }
+
+    /// Store the lanes into the first [`F32_LANES`] elements of `s`.
+    #[inline(always)]
+    pub fn store(self, s: &mut [f32]) {
+        s[..F32_LANES].copy_from_slice(&self.0);
+    }
+
+    /// Per-lane `sqrt`.
+    #[inline(always)]
+    pub fn sqrt(self) -> F32x8 {
+        let mut r = self.0;
+        for v in r.iter_mut() {
+            *v = v.sqrt();
+        }
+        F32x8(r)
+    }
+}
+
+impl Add for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn add(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a += b;
+        }
+        F32x8(r)
+    }
+}
+
+impl Sub for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn sub(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a -= b;
+        }
+        F32x8(r)
+    }
+}
+
+impl Mul for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn mul(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a *= b;
+        }
+        F32x8(r)
+    }
+}
+
+impl Div for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn div(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a /= b;
+        }
+        F32x8(r)
+    }
+}
+
+impl F64x4 {
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f64) -> F64x4 {
+        F64x4([v; F64_LANES])
+    }
+
+    /// Load the first [`F64_LANES`] elements of `s` (panics if shorter).
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> F64x4 {
+        F64x4(s[..F64_LANES].try_into().unwrap())
+    }
+
+    /// Load the first [`F64_LANES`] elements of `s` in reverse order:
+    /// lane `j` gets `s[F64_LANES - 1 - j]`. This is the mirrored read of
+    /// the DCT-II butterfly (`b = cur[m - 1 - i]`).
+    #[inline(always)]
+    pub fn load_rev(s: &[f64]) -> F64x4 {
+        let mut r = [0.0; F64_LANES];
+        for (j, v) in r.iter_mut().enumerate() {
+            *v = s[F64_LANES - 1 - j];
+        }
+        F64x4(r)
+    }
+
+    /// Store the lanes into the first [`F64_LANES`] elements of `s`.
+    #[inline(always)]
+    pub fn store(self, s: &mut [f64]) {
+        s[..F64_LANES].copy_from_slice(&self.0);
+    }
+
+    /// Store the lanes reversed: `s[F64_LANES - 1 - j] = lane j`. The
+    /// mirrored write of the DCT-III butterfly (`nxt[m - 1 - i] = …`).
+    #[inline(always)]
+    pub fn store_rev(self, s: &mut [f64]) {
+        for (j, &v) in self.0.iter().enumerate() {
+            s[F64_LANES - 1 - j] = v;
+        }
+    }
+
+    /// Interleave lanes with `o`: returns
+    /// `([a0, b0, a1, b1], [a2, b2, a3, b3])` — the even/odd zip of the
+    /// DCT-II recombination pass.
+    #[inline(always)]
+    pub fn interleave(self, o: F64x4) -> (F64x4, F64x4) {
+        let a = self.0;
+        let b = o.0;
+        (
+            F64x4([a[0], b[0], a[1], b[1]]),
+            F64x4([a[2], b[2], a[3], b[3]]),
+        )
+    }
+
+    /// De-interleave two adjacent lane blocks: for consecutive memory
+    /// `[x0..x3] = self`, `[x4..x7] = o`, returns the even-index lanes
+    /// `[x0, x2, x4, x6]` and the odd-index lanes `[x1, x3, x5, x7]` —
+    /// the split of the DCT-III de-interleave pass.
+    #[inline(always)]
+    pub fn deinterleave(self, o: F64x4) -> (F64x4, F64x4) {
+        let a = self.0;
+        let b = o.0;
+        (
+            F64x4([a[0], a[2], b[0], b[2]]),
+            F64x4([a[1], a[3], b[1], b[3]]),
+        )
+    }
+}
+
+impl Add for F64x4 {
+    type Output = F64x4;
+    #[inline(always)]
+    fn add(self, o: F64x4) -> F64x4 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a += b;
+        }
+        F64x4(r)
+    }
+}
+
+impl Sub for F64x4 {
+    type Output = F64x4;
+    #[inline(always)]
+    fn sub(self, o: F64x4) -> F64x4 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a -= b;
+        }
+        F64x4(r)
+    }
+}
+
+impl Mul for F64x4 {
+    type Output = F64x4;
+    #[inline(always)]
+    fn mul(self, o: F64x4) -> F64x4 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a *= b;
+        }
+        F64x4(r)
+    }
+}
+
+/// Constants shared by the fused Adam-family sweeps ([`adamw_step`],
+/// [`dadamw_accum`]): moment decays and the step-`t` bias corrections
+/// `bc1 = 1 - beta1^t`, `bc2 = 1 - beta2^t`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConsts {
+    /// First-moment decay.
+    pub beta1: f32,
+    /// Second-moment decay.
+    pub beta2: f32,
+    /// First-moment bias correction `1 - beta1^t`.
+    pub bc1: f32,
+    /// Second-moment bias correction `1 - beta2^t`.
+    pub bc2: f32,
+    /// Denominator fuzz.
+    pub eps: f32,
+}
+
+/// `y[i] += alpha * x[i]` — the hot axpy, eight elements per step.
+/// Bit-identical to the scalar loop at every length.
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let va = F32x8::splat(alpha);
+    let blocks = y.len() / F32_LANES * F32_LANES;
+    let mut i = 0;
+    while i < blocks {
+        (F32x8::load(&y[i..]) + va * F32x8::load(&x[i..])).store(&mut y[i..]);
+        i += F32_LANES;
+    }
+    for (yi, &xi) in y[blocks..].iter_mut().zip(&x[blocks..]) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y[i] *= alpha` — the averaging rescale in collectives and
+/// `mean_into`. Bit-identical to the scalar loop at every length.
+pub fn scale(y: &mut [f32], alpha: f32) {
+    let va = F32x8::splat(alpha);
+    let blocks = y.len() / F32_LANES * F32_LANES;
+    let mut i = 0;
+    while i < blocks {
+        (F32x8::load(&y[i..]) * va).store(&mut y[i..]);
+        i += F32_LANES;
+    }
+    for yi in &mut y[blocks..] {
+        *yi *= alpha;
+    }
+}
+
+/// `y[i] -= x[i]` — the DeMo residual subtract after decode.
+/// Bit-identical to the scalar loop at every length.
+pub fn sub_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let blocks = y.len() / F32_LANES * F32_LANES;
+    let mut i = 0;
+    while i < blocks {
+        (F32x8::load(&y[i..]) - F32x8::load(&x[i..])).store(&mut y[i..]);
+        i += F32_LANES;
+    }
+    for (yi, &xi) in y[blocks..].iter_mut().zip(&x[blocks..]) {
+        *yi -= xi;
+    }
+}
+
+/// Fused decoupled-weight-decay step: `p[i] = p[i] * decay - lr * q[i]`
+/// (the single-sweep kernel behind every SGD-family `apply`).
+/// Bit-identical to the scalar loop at every length.
+pub fn decay_step(p: &mut [f32], decay: f32, lr: f32, q: &[f32]) {
+    debug_assert_eq!(p.len(), q.len());
+    let vd = F32x8::splat(decay);
+    let vlr = F32x8::splat(lr);
+    let blocks = p.len() / F32_LANES * F32_LANES;
+    let mut i = 0;
+    while i < blocks {
+        (F32x8::load(&p[i..]) * vd - vlr * F32x8::load(&q[i..])).store(&mut p[i..]);
+        i += F32_LANES;
+    }
+    for (pi, &qi) in p[blocks..].iter_mut().zip(&q[blocks..]) {
+        *pi = *pi * decay - lr * qi;
+    }
+}
+
+/// DeMo momentum decay-and-accumulate: `m[i] = beta * m[i] + g[i]`.
+/// Bit-identical to the scalar loop at every length.
+pub fn momentum(m: &mut [f32], beta: f32, g: &[f32]) {
+    debug_assert_eq!(m.len(), g.len());
+    let vb = F32x8::splat(beta);
+    let blocks = m.len() / F32_LANES * F32_LANES;
+    let mut i = 0;
+    while i < blocks {
+        (vb * F32x8::load(&m[i..]) + F32x8::load(&g[i..])).store(&mut m[i..]);
+        i += F32_LANES;
+    }
+    for (mi, &gi) in m[blocks..].iter_mut().zip(&g[blocks..]) {
+        *mi = beta * *mi + gi;
+    }
+}
+
+/// Fused AdamW sweep: moment update, bias correction, decoupled weight
+/// decay, and parameter step in one pass:
+///
+/// ```text
+/// m1 = beta1 * m1 + (1 - beta1) * g
+/// m2 = beta2 * m2 + (1 - beta2) * g * g
+/// if wd > 0 { p *= 1 - lr * wd }
+/// p -= lr * (m1 / bc1) / (sqrt(m2 / bc2) + eps)
+/// ```
+///
+/// Bit-identical to the scalar loop at every length (the `wd` branch is
+/// uniform across the sweep, so hoisting it changes no float op).
+pub fn adamw_step(
+    m1: &mut [f32],
+    m2: &mut [f32],
+    p: &mut [f32],
+    g: &[f32],
+    c: AdamConsts,
+    lr: f32,
+    wd: f32,
+) {
+    debug_assert_eq!(m1.len(), g.len());
+    debug_assert_eq!(m2.len(), g.len());
+    debug_assert_eq!(p.len(), g.len());
+    let vb1 = F32x8::splat(c.beta1);
+    let vb2 = F32x8::splat(c.beta2);
+    let vc1 = F32x8::splat(1.0 - c.beta1);
+    let vc2 = F32x8::splat(1.0 - c.beta2);
+    let vbc1 = F32x8::splat(c.bc1);
+    let vbc2 = F32x8::splat(c.bc2);
+    let veps = F32x8::splat(c.eps);
+    let vlr = F32x8::splat(lr);
+    let vdecay = F32x8::splat(1.0 - lr * wd);
+    let blocks = g.len() / F32_LANES * F32_LANES;
+    let mut i = 0;
+    while i < blocks {
+        let gv = F32x8::load(&g[i..]);
+        let nm1 = vb1 * F32x8::load(&m1[i..]) + vc1 * gv;
+        let nm2 = vb2 * F32x8::load(&m2[i..]) + vc2 * gv * gv;
+        nm1.store(&mut m1[i..]);
+        nm2.store(&mut m2[i..]);
+        let mhat = nm1.div(vbc1);
+        let vhat = nm2.div(vbc2);
+        let mut pv = F32x8::load(&p[i..]);
+        if wd > 0.0 {
+            pv = pv * vdecay;
+        }
+        (pv - vlr * mhat / (vhat.sqrt() + veps)).store(&mut p[i..]);
+        i += F32_LANES;
+    }
+    for i in blocks..g.len() {
+        let gv = g[i];
+        m1[i] = c.beta1 * m1[i] + (1.0 - c.beta1) * gv;
+        m2[i] = c.beta2 * m2[i] + (1.0 - c.beta2) * gv * gv;
+        let mhat = m1[i] / c.bc1;
+        let vhat = m2[i] / c.bc2;
+        if wd > 0.0 {
+            p[i] *= 1.0 - lr * wd;
+        }
+        p[i] -= lr * mhat / (vhat.sqrt() + c.eps);
+    }
+}
+
+/// Decoupled-AdamW accumulate sweep: the Adam moment update plus the
+/// bias-corrected update accumulated into `buf` (the parameter step
+/// happens later in [`decay_step`]):
+///
+/// ```text
+/// m1 = beta1 * m1 + (1 - beta1) * g
+/// m2 = beta2 * m2 + (1 - beta2) * g * g
+/// buf += (m1 / bc1) / (sqrt(m2 / bc2) + eps)
+/// ```
+///
+/// Bit-identical to the scalar loop at every length.
+pub fn dadamw_accum(m1: &mut [f32], m2: &mut [f32], buf: &mut [f32], g: &[f32], c: AdamConsts) {
+    debug_assert_eq!(m1.len(), g.len());
+    debug_assert_eq!(m2.len(), g.len());
+    debug_assert_eq!(buf.len(), g.len());
+    let vb1 = F32x8::splat(c.beta1);
+    let vb2 = F32x8::splat(c.beta2);
+    let vc1 = F32x8::splat(1.0 - c.beta1);
+    let vc2 = F32x8::splat(1.0 - c.beta2);
+    let vbc1 = F32x8::splat(c.bc1);
+    let vbc2 = F32x8::splat(c.bc2);
+    let veps = F32x8::splat(c.eps);
+    let blocks = g.len() / F32_LANES * F32_LANES;
+    let mut i = 0;
+    while i < blocks {
+        let gv = F32x8::load(&g[i..]);
+        let nm1 = vb1 * F32x8::load(&m1[i..]) + vc1 * gv;
+        let nm2 = vb2 * F32x8::load(&m2[i..]) + vc2 * gv * gv;
+        nm1.store(&mut m1[i..]);
+        nm2.store(&mut m2[i..]);
+        let mhat = nm1.div(vbc1);
+        let vhat = nm2.div(vbc2);
+        (F32x8::load(&buf[i..]) + mhat / (vhat.sqrt() + veps)).store(&mut buf[i..]);
+        i += F32_LANES;
+    }
+    for i in blocks..g.len() {
+        let gv = g[i];
+        m1[i] = c.beta1 * m1[i] + (1.0 - c.beta1) * gv;
+        m2[i] = c.beta2 * m2[i] + (1.0 - c.beta2) * gv * gv;
+        let mhat = m1[i] / c.bc1;
+        let vhat = m2[i] / c.bc2;
+        buf[i] += mhat / (vhat.sqrt() + c.eps);
+    }
+}
+
+/// Lane-parallel eval reduction: `sum_i 0.5 * ((p[i] - t[i]) as f64)^2`.
+///
+/// **This is the one reassociated kernel in the module** — a horizontal
+/// f64 sum is a serial dependence chain, so vectorizing it requires
+/// changing the association. The lane order is fixed by the slice length
+/// alone (never by thread count or hardware):
+///
+/// 1. [`F64_LANES`] accumulators are striped over consecutive
+///    4-element blocks (lane `j` accumulates elements `4k + j`);
+/// 2. the lanes are folded left to right
+///    (`((l0 + l1) + l2) + l3`);
+/// 3. the tail elements (`len % 4`) are added sequentially, in order.
+///
+/// The per-element term `0.5 * dev * dev` with `dev = (p - t) as f64`
+/// (f32 subtract, then widen) is unchanged from the scalar sweep. Like
+/// the chunk-grid reassociation before it, this moves validation losses
+/// by last-bit amounts exactly once; results remain invariant across
+/// thread counts thereafter. Pinned by
+/// `sq_dev_half_sum_matches_documented_lane_order`.
+pub fn sq_dev_half_sum(p: &[f32], t: &[f32]) -> f64 {
+    debug_assert_eq!(p.len(), t.len());
+    let blocks = p.len() / F64_LANES * F64_LANES;
+    let mut acc = [0.0f64; F64_LANES];
+    let mut i = 0;
+    while i < blocks {
+        for j in 0..F64_LANES {
+            let dev = (p[i + j] - t[i + j]) as f64;
+            acc[j] += 0.5 * dev * dev;
+        }
+        i += F64_LANES;
+    }
+    let mut total = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for (&pv, &tv) in p[blocks..].iter().zip(&t[blocks..]) {
+        let dev = (pv - tv) as f64;
+        total += 0.5 * dev * dev;
+    }
+    total
+}
+
+/// Strict one-element-at-a-time reference sweeps.
+///
+/// Each function here computes the *same float chain* as its lane
+/// counterpart's scalar tail — the pre-lane kernels verbatim — but the
+/// loop index is passed through [`std::hint::black_box`] on every
+/// iteration. The opaque index defeats the auto-vectorizer (the compiler
+/// cannot prove consecutive accesses), pinning a genuine scalar sweep
+/// without altering a single float operation. Two users:
+///
+/// - the tail tests in this module, as the bit-identity reference;
+/// - `benches/kernels.rs`, as the scalar arm of `lane_speedup` — so the
+///   ≥2× gate measures lanes against real scalar code, not against
+///   whatever the auto-vectorizer did to a plain loop.
+#[allow(clippy::needless_range_loop)] // indices are deliberately explicit
+pub mod scalar {
+    use std::hint::black_box;
+
+    use super::AdamConsts;
+
+    /// Strict scalar `y[i] += alpha * x[i]` (see [`super::axpy`]).
+    pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for i in 0..y.len() {
+            let i = black_box(i);
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// Strict scalar `y[i] *= alpha` (see [`super::scale`]).
+    pub fn scale(y: &mut [f32], alpha: f32) {
+        for i in 0..y.len() {
+            let i = black_box(i);
+            y[i] *= alpha;
+        }
+    }
+
+    /// Strict scalar `y[i] -= x[i]` (see [`super::sub_assign`]).
+    pub fn sub_assign(y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for i in 0..y.len() {
+            let i = black_box(i);
+            y[i] -= x[i];
+        }
+    }
+
+    /// Strict scalar fused decay step (see [`super::decay_step`]).
+    pub fn decay_step(p: &mut [f32], decay: f32, lr: f32, q: &[f32]) {
+        debug_assert_eq!(p.len(), q.len());
+        for i in 0..p.len() {
+            let i = black_box(i);
+            p[i] = p[i] * decay - lr * q[i];
+        }
+    }
+
+    /// Strict scalar momentum sweep (see [`super::momentum`]).
+    pub fn momentum(m: &mut [f32], beta: f32, g: &[f32]) {
+        debug_assert_eq!(m.len(), g.len());
+        for i in 0..m.len() {
+            let i = black_box(i);
+            m[i] = beta * m[i] + g[i];
+        }
+    }
+
+    /// Strict scalar fused AdamW sweep (see [`super::adamw_step`]).
+    pub fn adamw_step(
+        m1: &mut [f32],
+        m2: &mut [f32],
+        p: &mut [f32],
+        g: &[f32],
+        c: AdamConsts,
+        lr: f32,
+        wd: f32,
+    ) {
+        debug_assert_eq!(m1.len(), g.len());
+        debug_assert_eq!(m2.len(), g.len());
+        debug_assert_eq!(p.len(), g.len());
+        for i in 0..g.len() {
+            let i = black_box(i);
+            let gv = g[i];
+            m1[i] = c.beta1 * m1[i] + (1.0 - c.beta1) * gv;
+            m2[i] = c.beta2 * m2[i] + (1.0 - c.beta2) * gv * gv;
+            let mhat = m1[i] / c.bc1;
+            let vhat = m2[i] / c.bc2;
+            if wd > 0.0 {
+                p[i] *= 1.0 - lr * wd;
+            }
+            p[i] -= lr * mhat / (vhat.sqrt() + c.eps);
+        }
+    }
+
+    /// Strict scalar decoupled-AdamW accumulate (see
+    /// [`super::dadamw_accum`]).
+    pub fn dadamw_accum(m1: &mut [f32], m2: &mut [f32], buf: &mut [f32], g: &[f32], c: AdamConsts) {
+        debug_assert_eq!(m1.len(), g.len());
+        debug_assert_eq!(m2.len(), g.len());
+        debug_assert_eq!(buf.len(), g.len());
+        for i in 0..g.len() {
+            let i = black_box(i);
+            let gv = g[i];
+            m1[i] = c.beta1 * m1[i] + (1.0 - c.beta1) * gv;
+            m2[i] = c.beta2 * m2[i] + (1.0 - c.beta2) * gv * gv;
+            let mhat = m1[i] / c.bc1;
+            let vhat = m2[i] / c.bc2;
+            buf[i] += mhat / (vhat.sqrt() + c.eps);
+        }
+    }
+
+    /// Strict sequential eval reduction — the pre-lane per-chunk sweep
+    /// (serial f64 chain; compare [`super::sq_dev_half_sum`], which
+    /// reassociates).
+    pub fn sq_dev_half_sum(p: &[f32], t: &[f32]) -> f64 {
+        debug_assert_eq!(p.len(), t.len());
+        let mut acc = 0.0f64;
+        for i in 0..p.len() {
+            let i = black_box(i);
+            let dev = (p[i] - t[i]) as f64;
+            acc += 0.5 * dev * dev;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random data with varied magnitudes (sign
+    /// flips, scale spread) so bit mismatches cannot hide.
+    fn data(seed: u32, len: usize) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(2654435761).wrapping_add(12345);
+        (0..len)
+            .map(|_| {
+                state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+                // map to roughly [-2, 2) with a full mantissa in play
+                (state as f32 / u32::MAX as f32) * 4.0 - 2.0
+            })
+            .collect()
+    }
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: element {i} {a} vs {b}");
+        }
+    }
+
+    /// Every tail length through four full lane blocks, plus lengths
+    /// straddling the parallel grid's CHUNK boundary (the sizes the
+    /// pooled kernels actually hand to these sweeps).
+    fn lengths() -> Vec<usize> {
+        let mut v: Vec<usize> = (0..4 * F32_LANES).collect();
+        let c = crate::parallel::CHUNK;
+        v.extend([c - 1, c, c + 1, 2 * c + 17]);
+        v
+    }
+
+    const CONSTS: AdamConsts = AdamConsts {
+        beta1: 0.9,
+        beta2: 0.999,
+        bc1: 0.271,
+        bc2: 0.00997,
+        eps: 1e-8,
+    };
+
+    #[test]
+    fn axpy_bit_matches_scalar_at_every_tail_length() {
+        for len in lengths() {
+            let x = data(1, len);
+            let y0 = data(2, len);
+            let mut want = y0.clone();
+            scalar::axpy(&mut want, -0.3, &x);
+            let mut got = y0.clone();
+            axpy(&mut got, -0.3, &x);
+            assert_bits_eq(&got, &want, &format!("axpy len={len}"));
+        }
+    }
+
+    #[test]
+    fn scale_bit_matches_scalar_at_every_tail_length() {
+        for len in lengths() {
+            let y0 = data(3, len);
+            let mut want = y0.clone();
+            scalar::scale(&mut want, 1.0 / 3.0);
+            let mut got = y0;
+            scale(&mut got, 1.0 / 3.0);
+            assert_bits_eq(&got, &want, &format!("scale len={len}"));
+        }
+    }
+
+    #[test]
+    fn sub_assign_bit_matches_scalar_at_every_tail_length() {
+        for len in lengths() {
+            let x = data(4, len);
+            let y0 = data(5, len);
+            let mut want = y0.clone();
+            scalar::sub_assign(&mut want, &x);
+            let mut got = y0;
+            sub_assign(&mut got, &x);
+            assert_bits_eq(&got, &want, &format!("sub_assign len={len}"));
+        }
+    }
+
+    #[test]
+    fn decay_step_bit_matches_scalar_at_every_tail_length() {
+        for len in lengths() {
+            let q = data(6, len);
+            let p0 = data(7, len);
+            let mut want = p0.clone();
+            scalar::decay_step(&mut want, 0.999, 0.01, &q);
+            let mut got = p0;
+            decay_step(&mut got, 0.999, 0.01, &q);
+            assert_bits_eq(&got, &want, &format!("decay_step len={len}"));
+        }
+    }
+
+    #[test]
+    fn momentum_bit_matches_scalar_at_every_tail_length() {
+        for len in lengths() {
+            let g = data(8, len);
+            let m0 = data(9, len);
+            let mut want = m0.clone();
+            scalar::momentum(&mut want, 0.95, &g);
+            let mut got = m0;
+            momentum(&mut got, 0.95, &g);
+            assert_bits_eq(&got, &want, &format!("momentum len={len}"));
+        }
+    }
+
+    #[test]
+    fn adamw_step_bit_matches_scalar_at_every_tail_length() {
+        for wd in [0.0f32, 0.01] {
+            for len in lengths() {
+                let g = data(10, len);
+                let m1_0 = data(11, len);
+                // second moments must be non-negative for sqrt
+                let m2_0: Vec<f32> = data(12, len).iter().map(|v| v.abs()).collect();
+                let p0 = data(13, len);
+                let (mut wm1, mut wm2, mut wp) = (m1_0.clone(), m2_0.clone(), p0.clone());
+                scalar::adamw_step(&mut wm1, &mut wm2, &mut wp, &g, CONSTS, 0.01, wd);
+                let (mut gm1, mut gm2, mut gp) = (m1_0, m2_0, p0);
+                adamw_step(&mut gm1, &mut gm2, &mut gp, &g, CONSTS, 0.01, wd);
+                let ctx = format!("adamw len={len} wd={wd}");
+                assert_bits_eq(&gm1, &wm1, &format!("{ctx} m1"));
+                assert_bits_eq(&gm2, &wm2, &format!("{ctx} m2"));
+                assert_bits_eq(&gp, &wp, &format!("{ctx} p"));
+            }
+        }
+    }
+
+    #[test]
+    fn dadamw_accum_bit_matches_scalar_at_every_tail_length() {
+        for len in lengths() {
+            let g = data(14, len);
+            let m1_0 = data(15, len);
+            let m2_0: Vec<f32> = data(16, len).iter().map(|v| v.abs()).collect();
+            let b0 = data(17, len);
+            let (mut wm1, mut wm2, mut wb) = (m1_0.clone(), m2_0.clone(), b0.clone());
+            scalar::dadamw_accum(&mut wm1, &mut wm2, &mut wb, &g, CONSTS);
+            let (mut gm1, mut gm2, mut gb) = (m1_0, m2_0, b0);
+            dadamw_accum(&mut gm1, &mut gm2, &mut gb, &g, CONSTS);
+            let ctx = format!("dadamw len={len}");
+            assert_bits_eq(&gm1, &wm1, &format!("{ctx} m1"));
+            assert_bits_eq(&gm2, &wm2, &format!("{ctx} m2"));
+            assert_bits_eq(&gb, &wb, &format!("{ctx} buf"));
+        }
+    }
+
+    /// The scalar reference module really is the plain loop: black_box
+    /// on the index changes codegen, never values.
+    #[test]
+    fn scalar_reference_is_the_plain_loop() {
+        let x = data(18, 1001);
+        let y0 = data(19, 1001);
+        let mut a = y0.clone();
+        scalar::axpy(&mut a, 0.7, &x);
+        let mut b = y0;
+        for (yi, &xi) in b.iter_mut().zip(&x) {
+            *yi += 0.7 * xi;
+        }
+        assert_bits_eq(&a, &b, "scalar::axpy vs plain loop");
+    }
+
+    /// Pin the documented association of the one reassociated kernel:
+    /// four lane accumulators over consecutive 4-element blocks, folded
+    /// left to right, tail appended sequentially.
+    #[test]
+    fn sq_dev_half_sum_matches_documented_lane_order() {
+        for len in lengths() {
+            let p = data(20, len);
+            let t = data(21, len);
+            let blocks = len / F64_LANES * F64_LANES;
+            let mut acc = [0.0f64; F64_LANES];
+            let mut i = 0;
+            while i < blocks {
+                for (j, a) in acc.iter_mut().enumerate() {
+                    let dev = (p[i + j] - t[i + j]) as f64;
+                    *a += 0.5 * dev * dev;
+                }
+                i += F64_LANES;
+            }
+            let mut want = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+            for j in blocks..len {
+                let dev = (p[j] - t[j]) as f64;
+                want += 0.5 * dev * dev;
+            }
+            let got = sq_dev_half_sum(&p, &t);
+            assert_eq!(got.to_bits(), want.to_bits(), "len={len}: {got} vs {want}");
+        }
+    }
+
+    /// On exactly-representable data the reassociation cannot change the
+    /// value at all, so lane and strict-sequential sums agree exactly.
+    #[test]
+    fn sq_dev_half_sum_equals_sequential_on_exact_data() {
+        let p: Vec<f32> = (0..103).map(|i| (i % 7) as f32).collect();
+        let t = vec![0.0f32; 103];
+        let want = scalar::sq_dev_half_sum(&p, &t);
+        assert_eq!(sq_dev_half_sum(&p, &t), want);
+        let direct: f64 = p.iter().map(|&v| 0.5 * (v as f64) * (v as f64)).sum();
+        assert_eq!(want, direct);
+    }
+
+    #[test]
+    fn f64x4_shuffles() {
+        let a = F64x4([1.0, 2.0, 3.0, 4.0]);
+        let b = F64x4([5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(F64x4::load_rev(&[1.0, 2.0, 3.0, 4.0]).0, [4.0, 3.0, 2.0, 1.0]);
+        let mut out = [0.0; 4];
+        a.store_rev(&mut out);
+        assert_eq!(out, [4.0, 3.0, 2.0, 1.0]);
+        let (lo, hi) = a.interleave(b);
+        assert_eq!(lo.0, [1.0, 5.0, 2.0, 6.0]);
+        assert_eq!(hi.0, [3.0, 7.0, 4.0, 8.0]);
+        let (ev, od) = a.deinterleave(b);
+        assert_eq!(ev.0, [1.0, 3.0, 5.0, 7.0]);
+        assert_eq!(od.0, [2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn f32x8_ops_elementwise() {
+        let a = F32x8::splat(6.0);
+        let b = F32x8::splat(2.0);
+        assert_eq!((a + b).0, [8.0; 8]);
+        assert_eq!((a - b).0, [4.0; 8]);
+        assert_eq!((a * b).0, [12.0; 8]);
+        assert_eq!((a / b).0, [3.0; 8]);
+        assert_eq!(F32x8::splat(9.0).sqrt().0, [3.0; 8]);
+    }
+}

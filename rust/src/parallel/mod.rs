@@ -33,6 +33,11 @@
 //! *contents* never reach an output — every user fully overwrites its
 //! scratch before reading it.
 //!
+//! Inside each chunk, the sweeps themselves run on the explicitly
+//! unrolled SIMD-width primitives of [`lanes`] (f32×8 / f64×4), which
+//! preserve every contracted kernel's per-element float chain exactly —
+//! so the vectorization is invisible to the determinism contract above.
+//!
 //! ## Zero allocations
 //!
 //! Dispatch allocates nothing: jobs are borrowed closures handed to the
@@ -46,6 +51,8 @@
 use std::panic::AssertUnwindSafe;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+pub mod lanes;
 
 /// Fixed chunk size (elements) of the deterministic grid. Big enough
 /// that per-task overhead vanishes, small enough that a handful of

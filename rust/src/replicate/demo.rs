@@ -180,9 +180,7 @@ impl Replicator for DemoReplicator {
                 }
             });
             parallel::zip_chunks(pool.get(), buf, removed, |bs, rs| {
-                for (b, r) in bs.iter_mut().zip(rs) {
-                    *b -= r;
-                }
+                parallel::lanes::sub_assign(bs, rs);
             });
         }
 

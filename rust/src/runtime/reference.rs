@@ -200,6 +200,15 @@ impl ModelRuntime {
     /// Chunk-parallel eval: per-grid-chunk partial sums folded in chunk
     /// order, so the loss is bit-identical for any `--threads N` (the
     /// association is fixed by the grid, not by the worker count).
+    ///
+    /// Within each chunk, [`crate::parallel::lanes::sq_dev_half_sum`]
+    /// stripes the f64 accumulation over four lane accumulators — a
+    /// *documented reassociation* of the reduction (the one lane kernel
+    /// that is not bit-identical to a sequential loop). Like the chunk
+    /// grid itself, the lane association depends only on the chunk
+    /// length, so the loss remains a pure function of the inputs —
+    /// unchanged by `--threads N` — just with a fixed, different
+    /// summation tree than a fully serial sweep.
     pub fn eval_step_pooled(
         &self,
         flat_params: &[f32],
@@ -210,12 +219,7 @@ impl ModelRuntime {
         let n = self.target.len();
         let mut partials = Vec::new();
         let loss_acc = crate::parallel::sum_chunks(pool, n, &mut partials, |lo, hi| {
-            let mut acc = 0.0f64;
-            for (&p, &t) in flat_params[lo..hi].iter().zip(&self.target[lo..hi]) {
-                let dev = (p - t) as f64;
-                acc += 0.5 * dev * dev;
-            }
-            acc
+            crate::parallel::lanes::sq_dev_half_sum(&flat_params[lo..hi], &self.target[lo..hi])
         });
         Ok((loss_acc / n.max(1) as f64) as f32)
     }

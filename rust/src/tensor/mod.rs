@@ -107,19 +107,17 @@ impl Tensor {
     }
 
     pub fn scale(&mut self, alpha: f32) {
-        for x in &mut self.data {
-            *x *= alpha;
-        }
+        crate::parallel::lanes::scale(&mut self.data, alpha);
     }
 }
 
-/// y += alpha * x over slices (the hot axpy used everywhere).
+/// y += alpha * x over slices (the hot axpy used everywhere). Runs on
+/// the unrolled f32×8 lanes of [`crate::parallel::lanes`]; bit-identical
+/// to the scalar loop at every length.
 #[inline]
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * *xi;
-    }
+    crate::parallel::lanes::axpy(y, alpha, x);
 }
 
 /// Chunk-parallel `y += alpha * x` on the pool's fixed grid —
@@ -137,9 +135,7 @@ pub fn mean_into(out: &mut [f32], parts: &[&[f32]]) {
     for p in &parts[1..] {
         axpy(out, 1.0, p);
     }
-    for x in out.iter_mut() {
-        *x *= inv;
-    }
+    crate::parallel::lanes::scale(out, inv);
 }
 
 /// Chunk-parallel [`mean_into`]: per element the accumulation order over
@@ -154,9 +150,7 @@ pub fn mean_into_pooled(pool: &crate::parallel::WorkerPool, out: &mut [f32], par
         for p in &parts[1..] {
             axpy(oseg, 1.0, &p[lo..hi]);
         }
-        for x in oseg.iter_mut() {
-            *x *= inv;
-        }
+        crate::parallel::lanes::scale(oseg, inv);
     });
 }
 

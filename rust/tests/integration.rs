@@ -890,10 +890,12 @@ mod engine_invariants {
     }
 
     /// Tentpole acceptance: the persistent pool's chunk-parallel kernels
-    /// (stream fan-out, collectives, optimizer, DCT batches, eval) keep
-    /// every bit identical for any `--threads N`, across meshes,
-    /// replication schemes, and optimizers — step metrics, validation
-    /// losses, and final parameters alike.
+    /// — now running on the unrolled `parallel::lanes` primitives —
+    /// (stream fan-out, collectives, optimizer sweeps, DCT batches,
+    /// eval) keep every bit identical for any `--threads N`, across
+    /// meshes, replication schemes, and optimizers — training losses,
+    /// per-step simulated time, validation losses, and final parameters
+    /// alike.
     #[test]
     fn prop_thread_count_bit_identical_across_meshes_and_schemes() {
         detonation::util::proptest::proptest(6, |g| {
@@ -915,10 +917,12 @@ mod engine_invariants {
                 }
                 let (t, m) = run(cfg);
                 let loss_bits: Vec<u64> = m.steps.iter().map(|r| r.loss.to_bits()).collect();
+                let time_bits: Vec<u64> =
+                    m.steps.iter().map(|r| r.sim_time.to_bits()).collect();
                 let val_bits: Vec<u64> = m.val.iter().map(|r| r.loss.to_bits()).collect();
                 let param_bits: Vec<u32> =
                     t.params_node0().iter().map(|p| p.to_bits()).collect();
-                (loss_bits, val_bits, param_bits)
+                (loss_bits, time_bits, val_bits, param_bits)
             };
             let serial = fingerprint(1);
             for threads in [2usize, 4, 8] {

@@ -12,7 +12,8 @@ Two layers, both of which must pass:
 
 1. **Invariants** — fields the benches assert while writing the artifact
    (zero steady-state allocations, "drop beats wait", bit-identity
-   booleans, S >= 1 strictly faster than synchronous DiLoCo). A bench
+   booleans, S >= 1 strictly faster than synchronous DiLoCo, the >=2x
+   lane-vectorization floor on the gated kernel rows). A bench
    that wrote a violating artifact has already failed its own process,
    but the gate re-checks the *committed* claims so a stale or
    hand-edited snapshot cannot pass review.
@@ -43,7 +44,10 @@ import sys
 #   (container key, row-match keys (None = container is a plain object),
 #    value key, higher_is_better)
 METRICS = {
-    "kernels": [("rows", ("name",), "speedup", True)],
+    "kernels": [
+        ("rows", ("name",), "speedup", True),
+        ("lanes", ("name",), "lane_speedup", True),
+    ],
     "compress": [
         ("rows", ("name",), "elements_per_sec", True),
         ("extract", None, "speedup", True),
@@ -61,6 +65,7 @@ INVARIANTS = {
     "kernels": [
         ("collectives_steady_state_allocs", 0),
         ("optimizer_steady_state_allocs", 0),
+        ("vector_steady_state_allocs", 0),
     ],
     "compress": [("extract.steady_state_allocs", 0)],
     "stragglers": [
@@ -102,9 +107,31 @@ def _num(arm, key, errors, stem, label):
     return v
 
 
+# lane rows that must clear the 2x vectorization floor (the tentpole
+# kernels: fused optimizer sweep, collective reduce, residual scatter)
+GATED_LANE_ROWS = ("fused_decay_step", "collective_reduce", "residual_scatter")
+
+
 def computed_invariants(stem, doc):
     """Cross-row invariants that need arithmetic, not just field equality."""
     errors = []
+    if stem == "kernels":
+        lanes = {r.get("name"): r for r in doc.get("lanes", [])}
+        for name in GATED_LANE_ROWS:
+            row = lanes.get(name)
+            if row is None:
+                errors.append(f"{stem}: gated lane row {name!r} missing")
+                continue
+            speedup = _num(row, "lane_speedup", errors, stem, name)
+            if speedup is not None and not speedup >= 2.0:
+                errors.append(
+                    f"{stem}: lane row {name!r} below the 2x vectorization "
+                    f"floor (lane_speedup = {speedup})"
+                )
+        for name, row in lanes.items():
+            allocs = _num(row, "vector_allocs_per_iter", errors, stem, name)
+            if allocs is not None and allocs != 0:
+                errors.append(f"{stem}: lane row {name!r} allocates ({allocs}/iter)")
     if stem == "async_diloco":
         arms = {a.get("label"): a for a in doc.get("arms", [])}
         sync = arms.get("diloco-sync")
@@ -235,12 +262,33 @@ def self_test():
     k = {
         "quick": True,
         "rows": [{"name": "axpy", "speedup": 2.0}],
+        "lanes": [
+            {"name": "fused_decay_step", "lane_speedup": 3.0,
+             "vector_allocs_per_iter": 0, "gated": True},
+            {"name": "collective_reduce", "lane_speedup": 2.4,
+             "vector_allocs_per_iter": 0, "gated": True},
+            {"name": "residual_scatter", "lane_speedup": 2.1,
+             "vector_allocs_per_iter": 0, "gated": True},
+        ],
         "collectives_steady_state_allocs": 0,
         "optimizer_steady_state_allocs": 0,
+        "vector_steady_state_allocs": 0,
     }
     assert check_invariants("kernels", k) == []
     k_bad = dict(k, optimizer_steady_state_allocs=3)
     assert any("optimizer" in e for e in check_invariants("kernels", k_bad))
+    # a gated lane row that slips below the 2x floor fails the gate
+    k_slow = json.loads(json.dumps(k))
+    k_slow["lanes"][1]["lane_speedup"] = 1.7
+    assert any("2x vectorization floor" in e for e in check_invariants("kernels", k_slow))
+    # a missing gated row is a violation, not a silent skip
+    k_gone = json.loads(json.dumps(k))
+    del k_gone["lanes"][2]
+    assert any("residual_scatter" in e for e in check_invariants("kernels", k_gone))
+    # an allocating lane arm fails even when fast
+    k_alloc = json.loads(json.dumps(k))
+    k_alloc["lanes"][0]["vector_allocs_per_iter"] = 2.0
+    assert any("allocates" in e for e in check_invariants("kernels", k_alloc))
 
     # higher-is-better regression beyond 15% trips; within 15% passes
     fresh_ok = {"quick": True, "rows": [{"name": "axpy", "speedup": 1.8}]}
@@ -248,6 +296,12 @@ def self_test():
     assert compare("kernels", k, fresh_ok, 0.15) == ([], 1)
     regs, n = compare("kernels", k, fresh_bad, 0.15)
     assert n == 1 and len(regs) == 1 and "regressed" in regs[0]
+
+    # lane_speedup compares like any other higher-is-better metric
+    lane_fresh = {"quick": True,
+                  "lanes": [{"name": "fused_decay_step", "lane_speedup": 2.0}]}
+    regs, n = compare("kernels", k, lane_fresh, 0.15)
+    assert n == 1 and len(regs) == 1 and "lane_speedup" in regs[0]
 
     # lower-is-better metrics invert the ratio
     base = {"quick": False, "arms": [{"label": "a", "sim_step_s": 1.0}]}
