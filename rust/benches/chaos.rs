@@ -1,0 +1,228 @@
+//! Chaos bench: elastic membership under churn.
+//!
+//!     cargo bench --bench chaos [-- --quick]
+//!
+//! On a 4×1 mesh running synchronous DiLoCo (`diloco:4`) over a
+//! comm-visible link, sweeps a deterministic membership timeline across
+//! five arms:
+//!
+//! * `baseline` — fixed group, no churn;
+//! * `churn-mild` — node 1 leaves a quarter into the run and rejoins at
+//!   the half-way mark;
+//! * `churn-heavy` — nodes 1 *and* 2 leave (staggered) and rejoin later;
+//! * `crash-norejoin` — node 1 crashes at the half-way mark and never
+//!   returns (the survivors re-form a 3-node group for the rest);
+//! * `crash-rejoin-ckpt` — node 1 crashes with `--checkpoint-dir` set
+//!   and rejoins, restoring its private state from the stashed
+//!   checkpoint (the full crash→stash→restore→broadcast path).
+//!
+//! Asserted here (deterministic, schedule-independent):
+//!
+//! * every arm completes with finite losses, and the `membership` steps
+//!   column tracks the timeline exactly (masks at probe steps);
+//! * the crash arm actually stashed `crash-node1.ckpt`;
+//! * departed nodes stop driving inter-node traffic (mild churn's total
+//!   inter bytes stay below baseline's plus the join broadcast).
+//!
+//! The *statistical* invariants — graceful degradation (churned tail
+//! losses stay inside a bounded band of baseline) and the
+//! crash-then-rejoin gap (checkpointed rejoin lands within a bounded
+//! gap of the uninterrupted run) — are written into `BENCH_chaos.json`
+//! (schema: docs/BENCHMARKS.md) and enforced by
+//! `scripts/bench_gate.py`, so a regression fails CI with the numbers
+//! in hand.
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::runtime;
+use detonation::metrics::RunMetrics;
+use detonation::util::fmt_secs;
+use detonation::util::json::Json;
+
+const PERIOD: u64 = 4;
+/// Tail window for the loss comparisons (steps).
+const TAIL: usize = 8;
+
+fn base_cfg(steps: u64) -> Result<ExperimentConfig> {
+    let mut c = ExperimentConfig {
+        model: "synthetic-lm".into(),
+        nodes: 4,
+        accels_per_node: 1,
+        steps,
+        lr: 0.02,
+        seed: 17,
+        val_every: steps, // validate once, at the end
+        val_batches: 8,
+        ..Default::default()
+    };
+    // A visibly throttled link so membership changes move the clock,
+    // not just the numerics.
+    c.apply_arg("inter-mbps", "200")?;
+    c.apply_arg("repl", &format!("diloco:{PERIOD}"))?;
+    Ok(c)
+}
+
+fn run(c: ExperimentConfig) -> Result<RunMetrics> {
+    let rt = runtime()?;
+    let mut t = detonation::train::Trainer::new(&rt, c)?;
+    let m = t.run()?;
+    anyhow::ensure!(
+        m.steps.iter().all(|r| r.loss.is_finite()),
+        "non-finite loss"
+    );
+    Ok(m)
+}
+
+fn row(label: &str, m: &RunMetrics) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(label.to_string())),
+        ("sim_time_s", Json::Num(m.total_sim_time())),
+        ("sim_step_s", Json::Num(m.mean_step_time())),
+        ("inter_bytes", Json::Num(m.total_inter_bytes() as f64)),
+        (
+            "tail_loss",
+            m.tail_loss(TAIL).map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "final_val_loss",
+            m.final_val_loss().map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "final_membership",
+            Json::Str(
+                m.steps
+                    .last()
+                    .map(|r| r.membership.clone())
+                    .unwrap_or_default(),
+            ),
+        ),
+    ])
+}
+
+fn mask_at(m: &RunMetrics, step: u64) -> &str {
+    &m.steps[step as usize].membership
+}
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps: u64 = if quick { 16 } else { 40 };
+    let t_leave = steps / 4; // mild/heavy leave, crash-rejoin crash
+    let t_join = steps / 2; // mild/heavy rejoin, crash-norejoin crash
+
+    println!(
+        "{:<20} {:>12} {:>12} {:>10} {:>10}  {}",
+        "arm", "t/step", "total", "tail", "val", "final mask"
+    );
+    let print_row = |label: &str, m: &RunMetrics| {
+        println!(
+            "{:<20} {:>12} {:>12} {:>10.4} {:>10.4}  {}",
+            label,
+            fmt_secs(m.mean_step_time()),
+            fmt_secs(m.total_sim_time()),
+            m.tail_loss(TAIL).unwrap_or(f64::NAN),
+            m.final_val_loss().unwrap_or(f64::NAN),
+            m.steps.last().map(|r| r.membership.as_str()).unwrap_or(""),
+        );
+    };
+
+    // baseline: fixed group
+    let base = run(base_cfg(steps)?)?;
+    print_row("baseline", &base);
+    assert!(
+        base.steps.iter().all(|r| r.membership.is_empty()),
+        "baseline must not carry a membership column"
+    );
+
+    // churn-mild: node 1 out for a quarter of the run
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("churn", &format!("leave:1@{t_leave},join:1@{t_join}"))?;
+    let mild = run(cfg)?;
+    print_row("churn-mild", &mild);
+    assert_eq!(mask_at(&mild, 0), "1111");
+    assert_eq!(mask_at(&mild, t_leave), "1011");
+    assert_eq!(mask_at(&mild, t_join), "1111");
+
+    // churn-heavy: nodes 1 and 2 out, staggered
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg(
+        "churn",
+        &format!(
+            "leave:1@{t_leave},leave:2@{},join:1@{t_join},join:2@{}",
+            t_leave + 1,
+            t_join + 1
+        ),
+    )?;
+    let heavy = run(cfg)?;
+    print_row("churn-heavy", &heavy);
+    assert_eq!(mask_at(&heavy, t_leave + 1), "1001");
+    assert_eq!(mask_at(&heavy, t_join + 1), "1111");
+
+    // crash-norejoin: node 1 dies half-way and stays dead
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("crash", &format!("1@{t_join}"))?;
+    let norejoin = run(cfg)?;
+    print_row("crash-norejoin", &norejoin);
+    assert_eq!(mask_at(&norejoin, t_join), "1011");
+    assert_eq!(mask_at(&norejoin, steps - 1), "1011");
+
+    // crash-rejoin-ckpt: crash + checkpointed rejoin
+    let ckpt_dir = std::env::temp_dir().join("detonation-chaos-ckpt");
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("crash", &format!("1@{t_leave}:{t_join}"))?;
+    cfg.checkpoint_dir = Some(ckpt_dir.clone());
+    let rejoin = run(cfg)?;
+    print_row("crash-rejoin-ckpt", &rejoin);
+    assert_eq!(mask_at(&rejoin, t_leave), "1011");
+    assert_eq!(mask_at(&rejoin, t_join), "1111");
+    assert!(
+        ckpt_dir.join("crash-node1.ckpt").exists(),
+        "crash did not stash a checkpoint"
+    );
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+
+    // Structural traffic check: while a node is away the gather loses a
+    // member, so mild churn can only reduce total gather traffic; the
+    // one addition is the join broadcast (param buffer from node 0).
+    // Bound: mild's inter bytes < baseline's + 2× the parameter bytes.
+    let param_bytes = {
+        let t = detonation::train::Trainer::new(&runtime()?, base_cfg(1)?)?;
+        (t.layout.padded_len * 4) as u64
+    };
+    assert!(
+        mild.total_inter_bytes() < base.total_inter_bytes() + 2 * param_bytes,
+        "mild churn drove more traffic than the fixed group: {} vs {} (+{param_bytes} join)",
+        mild.total_inter_bytes(),
+        base.total_inter_bytes()
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("chaos".into())),
+        ("model", Json::Str("synthetic-lm".into())),
+        ("mesh", Json::Str("4x1".into())),
+        ("period", Json::Num(PERIOD as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("tail_window", Json::Num(TAIL as f64)),
+        ("quick", Json::Bool(quick)),
+        ("membership_masks_tracked", Json::Bool(true)),
+        ("crash_checkpoint_stashed", Json::Bool(true)),
+        (
+            "arms",
+            Json::Arr(vec![
+                row("baseline", &base),
+                row("churn-mild", &mild),
+                row("churn-heavy", &heavy),
+                row("crash-norejoin", &norejoin),
+                row("crash-rejoin-ckpt", &rejoin),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_chaos.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

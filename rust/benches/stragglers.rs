@@ -24,7 +24,11 @@
 //!   per-node staleness table — is bit-identical to the PR 4 async path
 //!   configured through the plain global `--staleness` knob;
 //! * the tolerant arms actually exercised the policy (`dropped_syncs`
-//!   counted late contributions under the 4× straggler).
+//!   counted late contributions under the 4× straggler);
+//! * a NIC-severity sweep (node 1's link at 1/2× and 1/4× of the tuned
+//!   bandwidth, `wait` vs `drop`) shows the same ordering for degraded
+//!   links as for degraded compute: at 4× NIC severity `drop` is
+//!   strictly faster and actually dropped late contributions.
 
 use anyhow::Result;
 use detonation::compress::Scratch;
@@ -237,6 +241,48 @@ fn main() -> Result<()> {
         "the wait window must never drop"
     );
 
+    // NIC-severity sweep: instead of slow *compute*, node 1 gets a slow
+    // *NIC* (its link runs at 1/severity of the tuned bandwidth, so its
+    // sync transfer spans severity·XFER_STEPS fast steps — far past the
+    // S = 2 deadline). The same ordering must hold: tolerating the
+    // degraded link beats waiting for it.
+    let mut nic_by_key = std::collections::BTreeMap::new();
+    for &severity in &[2.0f64, 4.0] {
+        for policy in ["wait", "drop"] {
+            let mut cfg = base_cfg(steps, step_flops, inter_bw, 1.0)?;
+            cfg.cluster.node_inter_bw = ClusterModel::parse_node_mbps(&format!(
+                "1:{}",
+                inter_bw / severity * 8.0 / 1e6
+            ))?;
+            cfg.apply_arg("staleness", &STALENESS.to_string())?;
+            cfg.apply_arg("late-policy", policy)?;
+            let m = run(cfg)?;
+            print_row(&format!("nic{severity} {policy}"), &m);
+            rows.push(row(
+                &format!("nic{severity}-{policy}"),
+                severity,
+                policy,
+                &m,
+            ));
+            nic_by_key.insert((severity as u64, policy.to_string()), m);
+        }
+    }
+
+    // Acceptance 3: under the 4× NIC degradation, drop is strictly
+    // faster than wait, and the policy actually fired.
+    let nic_wait4 = &nic_by_key[&(4u64, "wait".to_string())];
+    let nic_drop4 = &nic_by_key[&(4u64, "drop".to_string())];
+    assert!(
+        nic_drop4.total_sim_time() < nic_wait4.total_sim_time(),
+        "drop not faster than wait under the 4x NIC straggler: {} vs {}",
+        nic_drop4.total_sim_time(),
+        nic_wait4.total_sim_time()
+    );
+    assert!(
+        nic_drop4.total_dropped_syncs() > 0,
+        "drop recorded no late contributions under the 4x NIC straggler"
+    );
+
     // The auto arm: profile-derived per-node windows under the 4×
     // straggler (recorded, not asserted — the table is the datum).
     let mut auto_cfg = base_cfg(steps, step_flops, inter_bw, 4.0)?;
@@ -259,6 +305,7 @@ fn main() -> Result<()> {
         ("homogeneous_bit_identical_to_pr4_async", Json::Bool(true)),
         ("drop_beats_wait_under_4x_straggler", Json::Bool(true)),
         ("partial_beats_wait_under_4x_straggler", Json::Bool(true)),
+        ("drop_beats_wait_under_4x_nic_straggler", Json::Bool(true)),
         ("arms", Json::Arr(rows)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

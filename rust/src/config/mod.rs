@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use crate::net::{ClusterModel, NetModel};
+use crate::net::{ClusterModel, MembershipTimeline, NetModel};
 use crate::optim::OptSpec;
 use crate::replicate::{LatePolicy, ReplSpec};
 use crate::util::json::Json;
@@ -65,6 +65,17 @@ pub struct ExperimentConfig {
     /// `--node-staleness R:S[,R:S…]`: explicit per-node staleness
     /// overrides (index = node; `None` = use the global/auto value).
     pub node_staleness: Vec<Option<u64>>,
+    /// Deterministic join/leave/crash timeline (`--churn`, `--crash`;
+    /// empty = fixed group, bit-identical to the pre-elastic path).
+    pub membership: MembershipTimeline,
+    /// `--quorum K`: finalize a deferred sync window as soon as ≥K of g
+    /// contributions have landed instead of waiting on the arrival
+    /// deadline (0 = off, deadline semantics only).
+    pub quorum: usize,
+    /// `--checkpoint-dir`: persist full trainer state here after every
+    /// completed sync window, and restore crashed nodes from it on
+    /// rejoin (None = off).
+    pub checkpoint_dir: Option<PathBuf>,
 }
 
 impl Default for ExperimentConfig {
@@ -94,6 +105,9 @@ impl Default for ExperimentConfig {
             cluster: ClusterModel::uniform(),
             staleness_auto: false,
             node_staleness: Vec::new(),
+            membership: MembershipTimeline::new(),
+            quorum: 0,
+            checkpoint_dir: None,
         }
     }
 }
@@ -213,6 +227,23 @@ impl ExperimentConfig {
         Ok(table)
     }
 
+    /// Validate the elastic-membership knobs against the concrete mesh:
+    /// the churn/crash timeline must replay legally inside the run, and
+    /// a quorum threshold must fit the replication group. Called at
+    /// trainer construction, once mesh shape and step count are final.
+    pub fn validate_elastic(&self) -> anyhow::Result<()> {
+        self.membership.validate(self.nodes, self.steps)?;
+        if self.quorum > 0 {
+            anyhow::ensure!(
+                self.quorum <= self.nodes,
+                "--quorum {} exceeds the replication group size ({} nodes)",
+                self.quorum,
+                self.nodes
+            );
+        }
+        Ok(())
+    }
+
     /// Effective LR at a step (linear warmup → constant).
     pub fn lr_at(&self, step: u64) -> f32 {
         if self.warmup_steps == 0 || step >= self.warmup_steps {
@@ -270,6 +301,17 @@ impl ExperimentConfig {
             (
                 "late_policy",
                 Json::Str(self.late_policy().label().to_string()),
+            ),
+            ("membership", Json::Str(self.membership.render())),
+            ("quorum", Json::Num(self.quorum as f64)),
+            (
+                "checkpoint_dir",
+                Json::Str(
+                    self.checkpoint_dir
+                        .as_ref()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_default(),
+                ),
             ),
             (
                 "stragglers",
@@ -397,6 +439,27 @@ impl ExperimentConfig {
             }
             "straggler" => self.cluster.slowdown = ClusterModel::parse_slowdown(value)?,
             "node-mbps" => self.cluster.node_inter_bw = ClusterModel::parse_node_mbps(value)?,
+            // Elastic membership: --churn and --crash both append to one
+            // timeline, so the two flags compose. Syntax errors surface
+            // here; semantic validation against the mesh shape and step
+            // count happens at trainer construction (validate_elastic).
+            "churn" => self.membership.add_churn_spec(value)?,
+            "crash" => self.membership.add_crash_spec(value)?,
+            "quorum" => {
+                let k: usize = value.parse()?;
+                anyhow::ensure!(
+                    k >= 1,
+                    "--quorum must be >= 1 (omit the flag for deadline-only windows)"
+                );
+                self.quorum = k;
+            }
+            "checkpoint-dir" => {
+                self.checkpoint_dir = if value.is_empty() {
+                    None
+                } else {
+                    Some(value.into())
+                };
+            }
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -528,6 +591,56 @@ mod tests {
         // non-diloco schemes never defer, so they report wait
         c.apply_arg("repl", "full").unwrap();
         assert_eq!(c.late_policy(), LatePolicy::Wait);
+    }
+
+    #[test]
+    fn elastic_membership_knobs() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.membership.is_empty());
+        assert_eq!(c.quorum, 0);
+        assert!(c.checkpoint_dir.is_none());
+        c.validate_elastic().unwrap(); // defaults always pass
+
+        // --churn and --crash compose into one timeline
+        c.apply_arg("churn", "leave:1@4,join:1@8").unwrap();
+        c.apply_arg("crash", "1@20:30").unwrap();
+        assert_eq!(c.membership.render(), "leave:1@4,join:1@8,crash:1@20,join:1@30");
+        c.validate_elastic().unwrap();
+        // semantic errors surface at validate time, with the mesh known
+        c.apply_arg("steps", "25").unwrap();
+        assert!(c.validate_elastic().is_err()); // join:1@30 past the end
+        c.apply_arg("steps", "100").unwrap();
+        c.apply_arg("nodes", "1").unwrap();
+        assert!(c.validate_elastic().is_err()); // node 1 out of range
+        c.apply_arg("nodes", "2").unwrap();
+
+        // syntax errors surface at parse time
+        assert!(c.apply_arg("churn", "evaporate:1@4").is_err());
+        assert!(c.apply_arg("crash", "1@6:3").is_err());
+
+        // quorum: >= 1, bounded by the group size at validate time
+        assert!(c.apply_arg("quorum", "0").is_err());
+        assert!(c.apply_arg("quorum", "x").is_err());
+        c.apply_arg("quorum", "2").unwrap();
+        c.validate_elastic().unwrap();
+        c.apply_arg("quorum", "3").unwrap();
+        assert!(c.validate_elastic().is_err()); // 3 > 2 nodes
+        c.apply_arg("quorum", "1").unwrap();
+
+        // checkpoint-dir: path in, empty clears (trace-out idiom)
+        c.apply_arg("checkpoint-dir", "/tmp/ckpt").unwrap();
+        assert_eq!(
+            c.checkpoint_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/ckpt"))
+        );
+        c.apply_arg("checkpoint-dir", "").unwrap();
+        assert!(c.checkpoint_dir.is_none());
+
+        // all four knobs serialize
+        let j = c.to_json();
+        assert!(j.get("membership").unwrap().as_str().unwrap().contains("crash:1@20"));
+        assert_eq!(j.get("quorum").unwrap().as_usize(), Some(1));
+        assert!(j.get("checkpoint_dir").is_some());
     }
 
     #[test]

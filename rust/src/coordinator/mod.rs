@@ -132,6 +132,7 @@ mod tests {
                 node_staleness: String::new(),
                 sync_in_flight: 0,
                 dropped_syncs: String::new(),
+                membership: String::new(),
                 wall_time: 0.0,
             });
             m.val.push(crate::metrics::ValRow {

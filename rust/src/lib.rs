@@ -54,6 +54,16 @@
 //!   the contributing set) instead of blocking on the slowest member;
 //! * [`net::ClusterModel`] adds per-node straggler slowdowns and NIC
 //!   bandwidth overrides on top of the homogeneous α–β [`net::NetModel`];
+//! * membership is **elastic** ([`net::MembershipTimeline`]): a
+//!   deterministic `--churn`/`--crash` timeline of join/leave/crash
+//!   events re-forms each sync window's group around the departed
+//!   members (averaging denominator corrected, node 0 anchoring),
+//!   `--quorum K` finalizes a deferred window once K contributions
+//!   land, and `--checkpoint-dir` publishes a full trainer checkpoint
+//!   (`train::checkpoint` via [`train::Trainer::save_checkpoint`]) at
+//!   every window-quiescent step so a crashed node rejoins from its
+//!   stash bit-identically — an empty timeline is bit-inert
+//!   (prop-tested);
 //! * metrics split each step into compute vs exposed-comm vs hidden-comm
 //!   on the critical rank (`results/*.steps.csv` columns).
 //!

@@ -108,6 +108,37 @@ fn train_parser() -> ArgParser {
         )
         .opt("straggler", "", "per-node compute slowdown, NODE:FACTOR[,..]")
         .opt("node-mbps", "", "per-node NIC bandwidth override, NODE:MBPS[,..]")
+        .opt(
+            "churn",
+            "",
+            "deterministic membership timeline, EVENT:NODE@STEP[,..] with \
+             EVENT = join|leave|crash (e.g. 'leave:1@10,join:1@20'); a \
+             leaver keeps its state frozen, a crasher loses it; node 0 \
+             anchors the group and cannot churn",
+        )
+        .opt(
+            "crash",
+            "",
+            "crash shorthand, NODE@STEP[:REJOIN][,..] — node crashes at \
+             STEP and (with :REJOIN) rejoins at that step, restoring its \
+             private state from the stashed checkpoint when \
+             --checkpoint-dir is set",
+        )
+        .opt(
+            "quorum",
+            "0",
+            "finalize a deferred sync window once at least K of the \
+             group's contributions have landed; the earliest late \
+             transfers are waited for only up to the quorum, the rest \
+             follow --late-policy (0 = off)",
+        )
+        .opt(
+            "checkpoint-dir",
+            "",
+            "publish a full trainer checkpoint (latest.ckpt) at every \
+             window-quiescent step; crashes stash it for checkpointed \
+             rejoin, and restore is bit-identical to the uninterrupted run",
+        )
         .flag("no-overlap", "serialize phases (legacy barrier clock)")
         .opt("name", "cli", "experiment name (results/<name>/)")
 }
@@ -137,10 +168,21 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if args.flag("no-overlap") {
         cfg.overlap = false;
     }
-    for key in ["straggler", "node-mbps", "trace-out", "node-staleness"] {
+    for key in [
+        "straggler",
+        "node-mbps",
+        "trace-out",
+        "node-staleness",
+        "churn",
+        "crash",
+        "checkpoint-dir",
+    ] {
         if !args.str(key).is_empty() {
             cfg.apply_arg(key, args.str(key))?;
         }
+    }
+    if args.str("quorum") != "0" {
+        cfg.apply_arg("quorum", args.str("quorum"))?;
     }
     // "wait" is the universal default, so only a non-default policy (or
     // an explicit flag) needs to reach the config — mirroring how

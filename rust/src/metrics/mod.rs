@@ -46,6 +46,10 @@ pub struct StepRow {
     /// `partial`; always all-zero under `wait`). Empty when the
     /// straggler-tolerant path is inactive.
     pub dropped_syncs: String,
+    /// Per-node liveness mask at the end of this step, one `1`/`0` char
+    /// per node in node order (e.g. `"1011"` = node 1 down). Empty when
+    /// the run has no membership timeline (`--churn`/`--crash` unused).
+    pub membership: String,
     /// Real wall time spent computing this step (profiling only).
     pub wall_time: f64,
 }
@@ -149,12 +153,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
         writeln!(
             f,
-            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,node_staleness,sync_in_flight,dropped_syncs,wall_time"
+            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,node_staleness,sync_in_flight,dropped_syncs,membership,wall_time"
         )?;
         for r in &self.steps {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{:.6}",
+                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{},{:.6}",
                 r.step,
                 r.sim_time,
                 r.loss,
@@ -168,6 +172,7 @@ impl RunMetrics {
                 r.node_staleness,
                 r.sync_in_flight,
                 r.dropped_syncs,
+                r.membership,
                 r.wall_time
             )?;
         }
@@ -279,6 +284,7 @@ mod tests {
                 node_staleness: "0;0".into(),
                 sync_in_flight: 0,
                 dropped_syncs: if s % 2 == 0 { "1;0".into() } else { String::new() },
+                membership: if s % 2 == 0 { "10".into() } else { String::new() },
                 wall_time: 0.01,
             });
         }

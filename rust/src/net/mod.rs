@@ -266,6 +266,20 @@ impl TrafficMatrix {
         self.bytes.lock().unwrap().fill(0);
     }
 
+    /// Restore counters from a prior [`TrafficMatrix::snapshot`]
+    /// (checkpoint restore).
+    pub fn restore(&self, snapshot: &[u64]) -> anyhow::Result<()> {
+        let mut m = self.bytes.lock().unwrap();
+        anyhow::ensure!(
+            snapshot.len() == m.len(),
+            "traffic snapshot has {} cells, matrix has {}",
+            snapshot.len(),
+            m.len()
+        );
+        m.copy_from_slice(snapshot);
+        Ok(())
+    }
+
     /// Render as the Appendix-A-style traffic matrix (fig7).
     pub fn render(&self) -> String {
         let m = self.bytes.lock().unwrap();
@@ -453,6 +467,257 @@ fn parse_node_table(spec: &str, fill: f64) -> anyhow::Result<Vec<f64>> {
     Ok(table)
 }
 
+/// One membership transition, taking effect at the *start* of its step.
+///
+/// Transitions are node-granular: a node's accelerators enter and leave
+/// the cluster together (the intra-node shard group is never split).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// The node (re)enters the active set. Current params are
+    /// broadcast-in from node 0 before it contributes again.
+    Join,
+    /// The node departs cleanly: it stops computing and is excluded from
+    /// every subsequent sync group, but keeps its local state, so a
+    /// later [`MembershipEvent::Join`] resumes from it.
+    Leave,
+    /// The node dies: as `Leave`, but its optimizer moments, replicator
+    /// residuals, and carried windows are lost. A later `Join` restores
+    /// them from the last checkpoint when `--checkpoint-dir` is set,
+    /// from fresh state otherwise.
+    Crash,
+}
+
+impl MembershipEvent {
+    pub fn label(self) -> &'static str {
+        match self {
+            MembershipEvent::Join => "join",
+            MembershipEvent::Leave => "leave",
+            MembershipEvent::Crash => "crash",
+        }
+    }
+
+    fn parse(s: &str) -> anyhow::Result<MembershipEvent> {
+        match s.trim() {
+            "join" => Ok(MembershipEvent::Join),
+            "leave" => Ok(MembershipEvent::Leave),
+            "crash" => Ok(MembershipEvent::Crash),
+            other => anyhow::bail!("unknown membership event {other:?}, want join|leave|crash"),
+        }
+    }
+}
+
+/// A deterministic, node-granularity membership timeline (`--churn`,
+/// `--crash`): which nodes are active at each training step.
+///
+/// Events fire at step *boundaries* — an event at step `s` takes effect
+/// before any work of step `s` is scheduled — so runs are exactly
+/// reproducible from the spec string alone. Node 0 is the permanent
+/// anchor (the params source for validation and join broadcasts) and can
+/// never leave or crash; [`MembershipTimeline::validate`] rejects
+/// timelines that try. An empty timeline is the fixed-group path.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MembershipTimeline {
+    /// `(step, node, event)`, kept sorted by `(step, node)`.
+    events: Vec<(u64, usize, MembershipEvent)>,
+}
+
+impl MembershipTimeline {
+    pub fn new() -> MembershipTimeline {
+        MembershipTimeline::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// All events in `(step, node)` order.
+    pub fn events(&self) -> &[(u64, usize, MembershipEvent)] {
+        &self.events
+    }
+
+    fn push(&mut self, step: u64, node: usize, ev: MembershipEvent) {
+        self.events.push((step, node, ev));
+        self.events.sort_by_key(|&(s, n, _)| (s, n));
+    }
+
+    /// Parse and append a `--churn` spec: `EVENT:NODE@STEP[,...]`, e.g.
+    /// `leave:1@4,join:1@8,crash:2@6`. Syntax is checked here; semantic
+    /// validity (ranges, ordering) is checked by
+    /// [`MembershipTimeline::validate`] once the mesh size is known.
+    pub fn add_churn_spec(&mut self, spec: &str) -> anyhow::Result<()> {
+        if spec.trim().is_empty() {
+            return Ok(());
+        }
+        for part in spec.split(',') {
+            let bad =
+                || anyhow::anyhow!("bad churn entry {part:?}, want EVENT:NODE@STEP (e.g. leave:1@4)");
+            let (ev, rest) = part.split_once(':').ok_or_else(bad)?;
+            let ev = MembershipEvent::parse(ev)?;
+            let (node, step) = rest.split_once('@').ok_or_else(bad)?;
+            let node: usize = node
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad node in churn entry {part:?}: {e}"))?;
+            anyhow::ensure!(
+                node < MAX_SPEC_NODE,
+                "node index {node} out of range (max {MAX_SPEC_NODE})"
+            );
+            let step: u64 = step
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad step in churn entry {part:?}: {e}"))?;
+            self.push(step, node, ev);
+        }
+        Ok(())
+    }
+
+    /// Parse and append a `--crash` shorthand: `NODE@STEP[:REJOIN][,...]`.
+    /// The node crashes at the start of `STEP`; with `:REJOIN` it also
+    /// rejoins (from checkpoint, when `--checkpoint-dir` is set) at the
+    /// start of `REJOIN`.
+    pub fn add_crash_spec(&mut self, spec: &str) -> anyhow::Result<()> {
+        if spec.trim().is_empty() {
+            return Ok(());
+        }
+        for part in spec.split(',') {
+            let bad = || {
+                anyhow::anyhow!("bad crash entry {part:?}, want NODE@STEP or NODE@STEP:REJOIN")
+            };
+            let (node, rest) = part.split_once('@').ok_or_else(bad)?;
+            let node: usize = node
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad node in crash entry {part:?}: {e}"))?;
+            anyhow::ensure!(
+                node < MAX_SPEC_NODE,
+                "node index {node} out of range (max {MAX_SPEC_NODE})"
+            );
+            let (step, rejoin) = match rest.split_once(':') {
+                Some((s, r)) => (s, Some(r)),
+                None => (rest, None),
+            };
+            let step: u64 = step
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad step in crash entry {part:?}: {e}"))?;
+            self.push(step, node, MembershipEvent::Crash);
+            if let Some(r) = rejoin {
+                let r: u64 = r
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad rejoin step in crash entry {part:?}: {e}"))?;
+                anyhow::ensure!(
+                    r > step,
+                    "crash entry {part:?}: rejoin step {r} must come after the crash step {step}"
+                );
+                self.push(r, node, MembershipEvent::Join);
+            }
+        }
+        Ok(())
+    }
+
+    /// Semantic validation against a concrete mesh and run length:
+    /// every event's node must exist and not be the node-0 anchor, its
+    /// step must fall inside the run, at most one event per `(node,
+    /// step)`, and the whole timeline must replay as a legal state
+    /// machine (leave/crash only while active, join only while inactive).
+    pub fn validate(&self, nodes: usize, steps: u64) -> anyhow::Result<()> {
+        for w in self.events.windows(2) {
+            let (s0, n0, e0) = w[0];
+            let (s1, n1, e1) = w[1];
+            anyhow::ensure!(
+                (s0, n0) != (s1, n1),
+                "overlapping membership events for node {n0} at step {s0} ({} and {}): \
+                 at most one join/leave/crash per node per step",
+                e0.label(),
+                e1.label()
+            );
+        }
+        let mut active = vec![true; nodes];
+        for &(step, node, ev) in &self.events {
+            anyhow::ensure!(
+                node < nodes,
+                "membership event {}:{node}@{step}: node {node} out of range \
+                 (cluster has {nodes} nodes)",
+                ev.label()
+            );
+            anyhow::ensure!(
+                node != 0,
+                "membership event {}:{node}@{step}: node 0 is the permanent anchor \
+                 (params source for validation and join broadcasts) and cannot churn; \
+                 pick a node >= 1",
+                ev.label()
+            );
+            anyhow::ensure!(
+                step < steps,
+                "membership event {}:{node}@{step}: step {step} is past the end of \
+                 the run (steps = {steps})",
+                ev.label()
+            );
+            match ev {
+                MembershipEvent::Join => {
+                    anyhow::ensure!(
+                        !active[node],
+                        "membership event join:{node}@{step}: node {node} is already \
+                         active at step {step}"
+                    );
+                    active[node] = true;
+                }
+                MembershipEvent::Leave | MembershipEvent::Crash => {
+                    anyhow::ensure!(
+                        active[node],
+                        "membership event {}:{node}@{step}: node {node} is already \
+                         inactive at step {step}",
+                        ev.label()
+                    );
+                    active[node] = false;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The active-node mask at `step`, after applying every event with
+    /// `event_step <= step`.
+    pub fn active_at(&self, step: u64, nodes: usize) -> Vec<bool> {
+        let mut active = vec![true; nodes];
+        for &(s, node, ev) in &self.events {
+            if s > step {
+                break;
+            }
+            if node < nodes {
+                active[node] = matches!(ev, MembershipEvent::Join);
+            }
+        }
+        active
+    }
+
+    /// The events that fire at exactly `step`, in node order.
+    pub fn events_at(&self, step: u64) -> Vec<(usize, MembershipEvent)> {
+        self.events
+            .iter()
+            .filter(|&&(s, _, _)| s == step)
+            .map(|&(_, n, ev)| (n, ev))
+            .collect()
+    }
+
+    /// Canonical spec string (round-trips through
+    /// [`MembershipTimeline::add_churn_spec`]).
+    pub fn render(&self) -> String {
+        self.events
+            .iter()
+            .map(|&(s, n, ev)| format!("{}:{n}@{s}", ev.label()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Render an active-node mask as the steps-CSV `membership` bitmask
+/// (`"1011"` = four nodes, node 2 inactive).
+pub fn membership_label(active: &[bool]) -> String {
+    active.iter().map(|&a| if a { '1' } else { '0' }).collect()
+}
+
 /// Monotone per-lane ready-times — the discrete-event substrate.
 ///
 /// One lane per (rank, resource); the engine keeps one `Timeline` for
@@ -521,6 +786,26 @@ impl Timeline {
     pub fn reset(&mut self) {
         self.ready.fill(0.0);
         self.busy.fill(0.0);
+    }
+
+    /// Snapshot every lane's `(ready, busy)` pair for checkpointing.
+    pub fn export_state(&self) -> (Vec<SimTime>, Vec<f64>) {
+        (self.ready.clone(), self.busy.clone())
+    }
+
+    /// Restore lanes from an [`Timeline::export_state`] snapshot taken on
+    /// a timeline with the same lane count.
+    pub fn import_state(&mut self, ready: Vec<SimTime>, busy: Vec<f64>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ready.len() == self.ready.len() && busy.len() == self.busy.len(),
+            "timeline snapshot has {} ready / {} busy lanes, timeline has {}",
+            ready.len(),
+            busy.len(),
+            self.ready.len()
+        );
+        self.ready = ready;
+        self.busy = busy;
+        Ok(())
     }
 }
 
@@ -753,6 +1038,119 @@ mod tests {
             ClusterModel::uniform().auto_staleness(&net, 2, 1e9, 4000, 1),
             vec![0, 0]
         );
+    }
+
+    #[test]
+    fn membership_timeline_parse_and_replay() {
+        let mut t = MembershipTimeline::new();
+        t.add_churn_spec("leave:1@4,join:1@8,crash:2@6").unwrap();
+        assert!(!t.is_empty());
+        t.validate(3, 20).unwrap();
+        assert_eq!(t.active_at(0, 3), vec![true, true, true]);
+        assert_eq!(t.active_at(4, 3), vec![true, false, true]);
+        assert_eq!(t.active_at(6, 3), vec![true, false, false]);
+        assert_eq!(t.active_at(8, 3), vec![true, true, false]);
+        assert_eq!(t.events_at(6), vec![(2, MembershipEvent::Crash)]);
+        assert_eq!(t.events_at(5), vec![]);
+        // canonical render round-trips
+        let mut t2 = MembershipTimeline::new();
+        t2.add_churn_spec(&t.render()).unwrap();
+        assert_eq!(t, t2);
+        // empty timeline = fixed group
+        let e = MembershipTimeline::new();
+        assert!(e.is_empty());
+        e.validate(2, 10).unwrap();
+        assert_eq!(e.active_at(5, 2), vec![true, true]);
+        assert_eq!(membership_label(&[true, false, true, true]), "1011");
+    }
+
+    #[test]
+    fn membership_crash_shorthand() {
+        let mut t = MembershipTimeline::new();
+        t.add_crash_spec("1@6:12").unwrap();
+        t.validate(2, 20).unwrap();
+        assert_eq!(t.render(), "crash:1@6,join:1@12");
+        let mut t = MembershipTimeline::new();
+        t.add_crash_spec("1@6").unwrap();
+        t.validate(2, 20).unwrap();
+        assert_eq!(t.active_at(19, 2), vec![true, false]);
+        // rejoin must come after the crash
+        assert!(MembershipTimeline::new().add_crash_spec("1@6:6").is_err());
+        assert!(MembershipTimeline::new().add_crash_spec("1@6:3").is_err());
+    }
+
+    #[test]
+    fn membership_rejects_malformed_specs() {
+        // syntax errors at parse time
+        assert!(MembershipTimeline::new().add_churn_spec("nope").is_err());
+        assert!(MembershipTimeline::new().add_churn_spec("evaporate:1@4").is_err());
+        assert!(MembershipTimeline::new().add_churn_spec("leave:1").is_err());
+        assert!(MembershipTimeline::new().add_churn_spec("leave:x@4").is_err());
+        assert!(MembershipTimeline::new().add_churn_spec("leave:1@y").is_err());
+        assert!(MembershipTimeline::new()
+            .add_churn_spec("leave:4000000000@4")
+            .is_err());
+        assert!(MembershipTimeline::new().add_crash_spec("1").is_err());
+        assert!(MembershipTimeline::new().add_crash_spec("z@4").is_err());
+        // empty specs are no-ops
+        let mut t = MembershipTimeline::new();
+        t.add_churn_spec("").unwrap();
+        t.add_crash_spec("  ").unwrap();
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn membership_validate_rejects_semantic_errors() {
+        let ok = |spec: &str| {
+            let mut t = MembershipTimeline::new();
+            t.add_churn_spec(spec).unwrap();
+            t.validate(3, 10)
+        };
+        // node out of range
+        assert!(ok("leave:7@4").is_err());
+        // node 0 is the anchor
+        assert!(ok("crash:0@4").is_err());
+        assert!(ok("join:0@4").is_err());
+        // step past the end of the run
+        assert!(ok("leave:1@10").is_err());
+        assert!(ok("leave:1@99").is_err());
+        // overlapping events on one (node, step)
+        assert!(ok("leave:1@4,join:1@4").is_err());
+        // state-machine violations
+        assert!(ok("join:1@4").is_err()); // already active
+        assert!(ok("leave:1@2,crash:1@5").is_err()); // already gone
+        assert!(ok("leave:1@2,join:1@5,join:1@7").is_err());
+        // a legal double-churn replays fine
+        assert!(ok("leave:1@2,join:1@5,leave:1@7").is_ok());
+    }
+
+    #[test]
+    fn timeline_state_roundtrip() {
+        let mut tl = Timeline::new(2);
+        tl.reserve(0, 0.0, 2.0);
+        tl.reserve(1, 5.0, 0.5);
+        let (ready, busy) = tl.export_state();
+        let mut tl2 = Timeline::new(2);
+        tl2.import_state(ready, busy).unwrap();
+        assert_eq!(tl2.now(0), 2.0);
+        assert_eq!(tl2.now(1), 5.5);
+        assert_eq!(tl2.busy(1), 0.5);
+        // lane-count mismatch is rejected
+        let (r, b) = tl.export_state();
+        assert!(Timeline::new(3).import_state(r, b).is_err());
+    }
+
+    #[test]
+    fn traffic_matrix_restore_roundtrip() {
+        let tm = TrafficMatrix::new(2);
+        tm.record(0, 1, 100);
+        tm.record(0, 0, 7);
+        let snap = tm.snapshot();
+        let tm2 = TrafficMatrix::new(2);
+        tm2.restore(&snap).unwrap();
+        assert_eq!(tm2.inter_node_bytes(), 100);
+        assert_eq!(tm2.intra_node_bytes(), 7);
+        assert!(TrafficMatrix::new(3).restore(&snap).is_err());
     }
 
     #[test]

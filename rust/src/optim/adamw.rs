@@ -88,6 +88,23 @@ impl Optimizer for AdamW {
     fn state_bytes(&self) -> u64 {
         ((self.m1.len() + self.m2.len()) * 4) as u64
     }
+
+    fn export_state(&self) -> super::OptState {
+        super::OptState {
+            vecs: vec![self.m1.clone(), self.m2.clone(), self.buffer.clone()],
+            t: self.t,
+        }
+    }
+
+    fn import_state(&mut self, st: super::OptState) -> anyhow::Result<()> {
+        let lens = [self.m1.len(), self.m2.len(), self.buffer.len()];
+        let [m1, m2, buffer] = super::unpack_state("adamw", st.vecs, lens)?;
+        self.m1 = m1;
+        self.m2 = m2;
+        self.buffer = buffer;
+        self.t = st.t;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -61,6 +61,19 @@ impl Optimizer for DemoSgd {
     fn state_bytes(&self) -> u64 {
         (self.momentum.len() * 4) as u64
     }
+
+    fn export_state(&self) -> super::OptState {
+        super::OptState {
+            vecs: vec![self.momentum.clone()],
+            t: 0,
+        }
+    }
+
+    fn import_state(&mut self, st: super::OptState) -> anyhow::Result<()> {
+        let [momentum] = super::unpack_state("demo-sgd", st.vecs, [self.momentum.len()])?;
+        self.momentum = momentum;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -44,6 +44,19 @@ impl Optimizer for Sgd {
     fn state_bytes(&self) -> u64 {
         0
     }
+
+    fn export_state(&self) -> super::OptState {
+        super::OptState {
+            vecs: vec![self.buffer.clone()],
+            t: 0,
+        }
+    }
+
+    fn import_state(&mut self, st: super::OptState) -> anyhow::Result<()> {
+        let [buffer] = super::unpack_state("sgd", st.vecs, [self.buffer.len()])?;
+        self.buffer = buffer;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -151,6 +151,42 @@ pub trait Replicator: Send {
     fn gather_mode(&self) -> GatherMode {
         GatherMode::NaiveAllGather
     }
+
+    /// Snapshot the replicator's mutable state for checkpointing. The
+    /// every-step schemes (DeMo/Random/Striding/Full) are stateless —
+    /// their residual lives in the optimizer buffer — so the default is
+    /// the empty snapshot; DiLoCo overrides it to carry its displacement
+    /// accumulator (and async DiLoCo its in-flight launch snapshot).
+    fn export_state(&self) -> ReplState {
+        ReplState::default()
+    }
+
+    /// Restore an [`Replicator::export_state`] snapshot taken on a
+    /// replicator of the same kind and shard length.
+    fn import_state(&mut self, st: ReplState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            st.is_empty(),
+            "{} is stateless but its snapshot carries {} accumulator elements",
+            self.name(),
+            st.delta_acc.len()
+        );
+        Ok(())
+    }
+}
+
+/// A serializable snapshot of one replicator's mutable state: DiLoCo's
+/// displacement accumulator plus async DiLoCo's in-flight launch
+/// snapshot. Empty (the [`Default`]) for the stateless schemes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplState {
+    pub delta_acc: Vec<f32>,
+    pub in_flight: Option<Vec<f32>>,
+}
+
+impl ReplState {
+    pub fn is_empty(&self) -> bool {
+        self.delta_acc.is_empty() && self.in_flight.is_none()
+    }
 }
 
 /// What an async DiLoCo aggregation does with peer contributions that

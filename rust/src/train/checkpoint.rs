@@ -1,0 +1,770 @@
+//! Checkpoint/restore of the full trainer state (elastic membership's
+//! crash-recovery half).
+//!
+//! A checkpoint is a single versioned binary file capturing everything a
+//! run needs to continue **bit-identically**: the per-node parameter
+//! replicas, every rank's optimizer moments ([`OptState`]), replicator
+//! accumulators ([`ReplState`], including an async gather in flight at
+//! the snapshot), carried late deltas, the parked [`PendingSync`]
+//! windows, the discrete-event engine's lanes ([`EngineState`]), the
+//! traffic matrix, and the step cursor. Data streams and the membership
+//! timeline are derived from `(config, step)`, so no RNG state needs to
+//! be stored — the config *fingerprint* is embedded instead and restores
+//! onto a mismatched experiment are rejected with both strings shown.
+//!
+//! The encoding is deliberately boring: little-endian fixed-width
+//! primitives behind tiny bounds-checked writer/reader helpers (floats
+//! travel as raw IEEE bits — quantized payload values must not be
+//! re-quantized on the way back in). Saves are atomic
+//! (`latest.ckpt.tmp` + rename), so a crash mid-save never corrupts the
+//! previous checkpoint — which is exactly the file a crashed node's
+//! rejoin reads ([`Trainer::restore_node_from_checkpoint`]).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::compress::Payload;
+use crate::config::ExperimentConfig;
+use crate::net::SimTime;
+use crate::optim::OptState;
+use crate::replicate::ReplState;
+use crate::tensor::Dtype;
+
+use super::engine::EngineState;
+use super::{PendingSync, Trainer};
+
+const MAGIC: &[u8; 8] = b"DTNCKPT1";
+const VERSION: u32 = 1;
+
+/// The config facets a checkpoint must agree on to be restorable: the
+/// state vectors below are only meaningful on the same model/mesh/
+/// optimizer/replicator/seed/schedule.
+fn fingerprint(cfg: &ExperimentConfig) -> String {
+    format!(
+        "{}|{}x{}|{}|{}|seed={}|steps={}|lr={}",
+        cfg.model,
+        cfg.nodes,
+        cfg.accels_per_node,
+        cfg.opt.label(),
+        cfg.repl.label(),
+        cfg.seed,
+        cfg.steps,
+        cfg.lr,
+    )
+}
+
+// ---------------------------------------------------------------------
+// little-endian writer / bounds-checked reader
+
+struct W {
+    buf: Vec<u8>,
+}
+
+impl W {
+    fn new() -> W {
+        W { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn len(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn boolean(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn string(&mut self, s: &str) {
+        self.len(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.len(v.len());
+        for &x in v {
+            self.u32(x.to_bits());
+        }
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.len(v.len());
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    fn u64s(&mut self, v: &[u64]) {
+        self.len(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    fn f64s(&mut self, v: &[f64]) {
+        self.len(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn bools(&mut self, v: &[bool]) {
+        self.len(v.len());
+        for &x in v {
+            self.boolean(x);
+        }
+    }
+}
+
+struct R<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn new(b: &'a [u8]) -> R<'a> {
+        R { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.b.len() - self.pos,
+            "checkpoint truncated at byte {} ({} more wanted, {} left)",
+            self.pos,
+            n,
+            self.b.len() - self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Element count followed by `elem_bytes`-sized elements: the count
+    /// is validated against the bytes actually left, so a corrupt length
+    /// field errors instead of attempting a huge allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(
+            n.saturating_mul(elem_bytes) <= self.b.len() - self.pos,
+            "checkpoint corrupt: length {n} at byte {} exceeds the {} bytes left",
+            self.pos - 8,
+            self.b.len() - self.pos
+        );
+        Ok(n)
+    }
+
+    fn boolean(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).context("checkpoint string not utf-8")
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        (0..n).map(|_| Ok(f32::from_bits(self.u32()?))).collect()
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn bools(&mut self) -> Result<Vec<bool>> {
+        let n = self.count(1)?;
+        (0..n).map(|_| self.boolean()).collect()
+    }
+
+    fn done(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.pos == self.b.len(),
+            "checkpoint has {} trailing bytes",
+            self.b.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// component codecs
+
+fn write_payload(w: &mut W, p: &Payload) {
+    match &p.indices {
+        None => w.boolean(false),
+        Some(ix) => {
+            w.boolean(true);
+            w.u32s(ix);
+        }
+    }
+    w.f32s(&p.values);
+    w.u8(match p.dtype {
+        Dtype::F32 => 0,
+        Dtype::Bf16 => 1,
+        Dtype::F16 => 2,
+    });
+    w.boolean(p.sign);
+    w.boolean(p.packed);
+}
+
+fn read_payload(r: &mut R) -> Result<Payload> {
+    let indices = if r.boolean()? { Some(r.u32s()?) } else { None };
+    let values = r.f32s()?;
+    let dtype = match r.u8()? {
+        0 => Dtype::F32,
+        1 => Dtype::Bf16,
+        2 => Dtype::F16,
+        t => anyhow::bail!("checkpoint payload has unknown dtype tag {t}"),
+    };
+    let sign = r.boolean()?;
+    let packed = r.boolean()?;
+    // Field-literal reconstruction: the stored values already went
+    // through sign/dtype quantization at extraction time, and
+    // `Payload::new` would run that pass again.
+    Ok(Payload {
+        indices,
+        values,
+        dtype,
+        sign,
+        packed,
+    })
+}
+
+fn write_opt_state(w: &mut W, st: &OptState) {
+    w.len(st.vecs.len());
+    for v in &st.vecs {
+        w.f32s(v);
+    }
+    w.u64(st.t);
+}
+
+fn read_opt_state(r: &mut R) -> Result<OptState> {
+    let n = r.count(8)?;
+    let vecs = (0..n).map(|_| r.f32s()).collect::<Result<Vec<_>>>()?;
+    let t = r.u64()?;
+    Ok(OptState { vecs, t })
+}
+
+fn write_repl_state(w: &mut W, st: &ReplState) {
+    w.f32s(&st.delta_acc);
+    match &st.in_flight {
+        None => w.boolean(false),
+        Some(v) => {
+            w.boolean(true);
+            w.f32s(v);
+        }
+    }
+}
+
+fn read_repl_state(r: &mut R) -> Result<ReplState> {
+    let delta_acc = r.f32s()?;
+    let in_flight = if r.boolean()? { Some(r.f32s()?) } else { None };
+    Ok(ReplState {
+        delta_acc,
+        in_flight,
+    })
+}
+
+fn write_carried(w: &mut W, carried: &[(Payload, SimTime)]) {
+    w.len(carried.len());
+    for (p, end) in carried {
+        write_payload(w, p);
+        w.f64(*end);
+    }
+}
+
+fn read_carried(r: &mut R) -> Result<Vec<(Payload, SimTime)>> {
+    let n = r.count(8)?;
+    (0..n).map(|_| Ok((read_payload(r)?, r.f64()?))).collect()
+}
+
+fn write_pending(w: &mut W, slot: &Option<PendingSync>) {
+    match slot {
+        None => w.u8(0),
+        Some(PendingSync::Uniform { arrival, payloads }) => {
+            w.u8(1);
+            w.u64(*arrival);
+            w.len(payloads.len());
+            for p in payloads {
+                write_payload(w, p);
+            }
+        }
+        Some(PendingSync::PerNode {
+            group,
+            payloads,
+            contrib_end,
+            arrival,
+            applied,
+        }) => {
+            w.u8(2);
+            w.u64s(&group.iter().map(|&r| r as u64).collect::<Vec<u64>>());
+            w.len(payloads.len());
+            for p in payloads {
+                write_payload(w, p);
+            }
+            w.f64s(contrib_end);
+            w.u64s(arrival);
+            w.bools(applied);
+        }
+    }
+}
+
+fn read_pending(r: &mut R, world: usize) -> Result<Option<PendingSync>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => {
+            let arrival = r.u64()?;
+            let n = r.count(8)?;
+            let payloads = (0..n).map(|_| read_payload(r)).collect::<Result<Vec<_>>>()?;
+            Ok(Some(PendingSync::Uniform { arrival, payloads }))
+        }
+        2 => {
+            let group: Vec<usize> = r.u64s()?.into_iter().map(|x| x as usize).collect();
+            anyhow::ensure!(
+                group.iter().all(|&rank| rank < world),
+                "checkpoint pending window names a rank outside world size {world}"
+            );
+            let n = r.count(8)?;
+            let payloads = (0..n).map(|_| read_payload(r)).collect::<Result<Vec<_>>>()?;
+            let contrib_end = r.f64s()?;
+            let arrival = r.u64s()?;
+            let applied = r.bools()?;
+            let g = group.len();
+            anyhow::ensure!(
+                payloads.len() == g && contrib_end.len() == g && arrival.len() == g && applied.len() == g,
+                "checkpoint pending window has inconsistent member counts"
+            );
+            Ok(Some(PendingSync::PerNode {
+                group,
+                payloads,
+                contrib_end,
+                arrival,
+                applied,
+            }))
+        }
+        t => anyhow::bail!("checkpoint pending slot has unknown tag {t}"),
+    }
+}
+
+fn write_engine_state(w: &mut W, st: &EngineState) {
+    for lane in [&st.compute, &st.fabric, &st.nic] {
+        w.f64s(&lane.0);
+        w.f64s(&lane.1);
+    }
+    w.f64s(&st.update_visible);
+    w.f64s(&st.deferred_end);
+    w.f64s(&st.rs_done);
+    w.f64s(&st.bwd_start);
+    w.f64s(&st.bwd_end);
+    w.f64(st.serialized);
+    w.u64(st.next_event_id);
+}
+
+fn read_engine_state(r: &mut R) -> Result<EngineState> {
+    let mut lanes = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let ready = r.f64s()?;
+        let busy = r.f64s()?;
+        lanes.push((ready, busy));
+    }
+    let nic = lanes.pop().unwrap();
+    let fabric = lanes.pop().unwrap();
+    let compute = lanes.pop().unwrap();
+    Ok(EngineState {
+        compute,
+        fabric,
+        nic,
+        update_visible: r.f64s()?,
+        deferred_end: r.f64s()?,
+        rs_done: r.f64s()?,
+        bwd_start: r.f64s()?,
+        bwd_end: r.f64s()?,
+        serialized: r.f64()?,
+        next_event_id: r.u64()?,
+    })
+}
+
+/// A fully-decoded checkpoint, ready to apply (wholesale or per node).
+struct CkptData {
+    step: u64,
+    active: Vec<bool>,
+    crashed: Vec<bool>,
+    params: Vec<Vec<f32>>,
+    /// Per rank: optimizer, replicator, carried late deltas.
+    ranks: Vec<(OptState, ReplState, Vec<(Payload, SimTime)>)>,
+    pending: Vec<Option<PendingSync>>,
+    engine: EngineState,
+    traffic: Vec<u64>,
+    last_inter: u64,
+    last_intra: u64,
+}
+
+fn decode(bytes: &[u8], expect_fp: &str, world: usize) -> Result<CkptData> {
+    let mut r = R::new(bytes);
+    let magic = r.take(MAGIC.len())?;
+    anyhow::ensure!(
+        magic == MAGIC,
+        "not a detonation checkpoint (bad magic {magic:?})"
+    );
+    let version = r.u32()?;
+    anyhow::ensure!(
+        version == VERSION,
+        "checkpoint version {version} not supported (this build reads {VERSION})"
+    );
+    let fp = r.string()?;
+    anyhow::ensure!(
+        fp == expect_fp,
+        "checkpoint was written by a different experiment:\n  checkpoint: {fp}\n  current:    {expect_fp}"
+    );
+    let step = r.u64()?;
+    let active = r.bools()?;
+    let crashed = r.bools()?;
+    let n_params = r.count(8)?;
+    let params = (0..n_params).map(|_| r.f32s()).collect::<Result<Vec<_>>>()?;
+    let n_ranks = r.count(8)?;
+    let ranks = (0..n_ranks)
+        .map(|_| Ok((read_opt_state(&mut r)?, read_repl_state(&mut r)?, read_carried(&mut r)?)))
+        .collect::<Result<Vec<_>>>()?;
+    let n_pending = r.count(1)?;
+    let pending = (0..n_pending)
+        .map(|_| read_pending(&mut r, world))
+        .collect::<Result<Vec<_>>>()?;
+    let engine = read_engine_state(&mut r)?;
+    let traffic = r.u64s()?;
+    let last_inter = r.u64()?;
+    let last_intra = r.u64()?;
+    r.done()?;
+    Ok(CkptData {
+        step,
+        active,
+        crashed,
+        params,
+        ranks,
+        pending,
+        engine,
+        traffic,
+        last_inter,
+        last_intra,
+    })
+}
+
+impl Trainer {
+    /// Serialize the full trainer state into `dir/latest.ckpt`
+    /// (atomically: temp file + rename). Returns the written path.
+    pub fn save_checkpoint(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let mut w = W::new();
+        w.buf.extend_from_slice(MAGIC);
+        w.u32(VERSION);
+        w.string(&fingerprint(&self.cfg));
+        w.u64(self.step);
+        w.bools(&self.active);
+        w.bools(&self.crashed);
+        w.len(self.params.len());
+        for p in &self.params {
+            w.f32s(p);
+        }
+        w.len(self.ranks.len());
+        for st in &self.ranks {
+            write_opt_state(&mut w, &st.opt.export_state());
+            write_repl_state(&mut w, &st.repl.export_state());
+            write_carried(&mut w, &st.carried);
+        }
+        w.len(self.pending.len());
+        for slot in &self.pending {
+            write_pending(&mut w, slot);
+        }
+        write_engine_state(&mut w, &self.engine.export_state());
+        w.u64s(&self.traffic.snapshot());
+        w.u64(self.last_inter);
+        w.u64(self.last_intra);
+
+        let tmp = dir.join("latest.ckpt.tmp");
+        let path = dir.join("latest.ckpt");
+        std::fs::write(&tmp, &w.buf)
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Restore the **whole** trainer from a [`Trainer::save_checkpoint`]
+    /// file: params, every rank's optimizer/replicator state, carried
+    /// deltas, parked sync windows, engine lanes, traffic, and the step
+    /// cursor. Continuation is bit-identical to the uninterrupted run
+    /// (prop-tested in the integration suite). The trainer must have
+    /// been built from the same config (fingerprint-checked).
+    pub fn restore_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let world = self.mesh.topo.world_size();
+        let data = decode(&bytes, &fingerprint(&self.cfg), world)
+            .with_context(|| format!("restoring checkpoint {}", path.display()))?;
+        anyhow::ensure!(
+            data.active.len() == self.cfg.nodes && data.crashed.len() == self.cfg.nodes,
+            "checkpoint membership masks cover {} nodes, cluster has {}",
+            data.active.len(),
+            self.cfg.nodes
+        );
+        anyhow::ensure!(
+            data.params.len() == self.params.len(),
+            "checkpoint has {} parameter replicas, trainer has {}",
+            data.params.len(),
+            self.params.len()
+        );
+        for (i, p) in data.params.iter().enumerate() {
+            anyhow::ensure!(
+                p.len() == self.params[i].len(),
+                "checkpoint replica {i} has {} params, trainer has {}",
+                p.len(),
+                self.params[i].len()
+            );
+        }
+        anyhow::ensure!(
+            data.ranks.len() == self.ranks.len(),
+            "checkpoint covers {} ranks, trainer has {}",
+            data.ranks.len(),
+            self.ranks.len()
+        );
+        anyhow::ensure!(
+            data.pending.len() == self.pending.len(),
+            "checkpoint has {} pending slots, trainer has {}",
+            data.pending.len(),
+            self.pending.len()
+        );
+        for (i, (opt, repl, carried)) in data.ranks.into_iter().enumerate() {
+            let st = &mut self.ranks[i];
+            st.opt
+                .import_state(opt)
+                .with_context(|| format!("rank {i} optimizer"))?;
+            st.repl
+                .import_state(repl)
+                .with_context(|| format!("rank {i} replicator"))?;
+            st.carried = carried;
+        }
+        self.params = data.params;
+        self.pending = data.pending;
+        self.engine.import_state(data.engine)?;
+        self.traffic.restore(&data.traffic)?;
+        self.step = data.step;
+        self.active = data.active;
+        self.crashed = data.crashed;
+        self.engine.set_active(&self.active);
+        self.last_inter = data.last_inter;
+        self.last_intra = data.last_intra;
+        Ok(())
+    }
+
+    /// Restore **one node's** rank-local state (optimizer moments,
+    /// replicator accumulators, carried deltas) from a checkpoint — the
+    /// crashed-node rejoin path. Parameters are *not* taken from the
+    /// file: a rejoining node receives the cluster's current params via
+    /// the node-0 join broadcast; only its private state comes off its
+    /// own disk.
+    pub fn restore_node_from_checkpoint(&mut self, node: usize, path: &Path) -> Result<()> {
+        anyhow::ensure!(node < self.cfg.nodes, "node {node} out of range");
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let world = self.mesh.topo.world_size();
+        let data = decode(&bytes, &fingerprint(&self.cfg), world)
+            .with_context(|| format!("restoring node {node} from {}", path.display()))?;
+        anyhow::ensure!(
+            data.ranks.len() == self.ranks.len(),
+            "checkpoint covers {} ranks, trainer has {}",
+            data.ranks.len(),
+            self.ranks.len()
+        );
+        for (i, (opt, repl, carried)) in data.ranks.into_iter().enumerate() {
+            if self.mesh.topo.node_of(i) != node {
+                continue;
+            }
+            let st = &mut self.ranks[i];
+            st.opt
+                .import_state(opt)
+                .with_context(|| format!("rank {i} optimizer"))?;
+            st.repl
+                .import_state(repl)
+                .with_context(|| format!("rank {i} replicator"))?;
+            st.carried = carried;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_codec_roundtrip() {
+        let mut w = W::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f64(-0.0);
+        w.boolean(true);
+        w.string("fingerprint|2x2");
+        w.f32s(&[1.5, -0.0, f32::MIN_POSITIVE]);
+        w.u32s(&[0, 1, u32::MAX]);
+        w.u64s(&[42]);
+        w.f64s(&[]);
+        w.bools(&[true, false, true]);
+        let mut r = R::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.boolean().unwrap());
+        assert_eq!(r.string().unwrap(), "fingerprint|2x2");
+        let f = r.f32s().unwrap();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.u32s().unwrap(), vec![0, 1, u32::MAX]);
+        assert_eq!(r.u64s().unwrap(), vec![42]);
+        assert!(r.f64s().unwrap().is_empty());
+        assert_eq!(r.bools().unwrap(), vec![true, false, true]);
+        r.done().unwrap();
+        // truncation and corrupt lengths error instead of panicking
+        let mut t = R::new(&w.buf[..3]);
+        assert!(t.u32().is_err());
+        let mut w2 = W::new();
+        w2.u64(u64::MAX); // absurd element count
+        assert!(R::new(&w2.buf).f32s().is_err());
+    }
+
+    #[test]
+    fn payload_roundtrip_preserves_bits_without_requantizing() {
+        // A packed sign payload and a dense bf16 payload survive exactly.
+        let p1 = Payload::new(Some(vec![3, 9, 11]), vec![0.5, -2.0, 0.0], Dtype::F32, true)
+            .with_packing();
+        let p2 = Payload::new(None, vec![1.0 + 1e-3, -7.25], Dtype::Bf16, false);
+        for p in [&p1, &p2] {
+            let mut w = W::new();
+            write_payload(&mut w, p);
+            let mut r = R::new(&w.buf);
+            let q = read_payload(&mut r).unwrap();
+            r.done().unwrap();
+            assert_eq!(q.indices, p.indices);
+            assert_eq!(
+                q.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                p.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(q.dtype, p.dtype);
+            assert_eq!(q.sign, p.sign);
+            assert_eq!(q.packed, p.packed);
+        }
+    }
+
+    #[test]
+    fn pending_window_roundtrip_and_rank_bounds() {
+        let mk_payload = || Payload::new(None, vec![1.0, -1.0], Dtype::F32, false);
+        let slot = Some(PendingSync::PerNode {
+            group: vec![0, 2],
+            payloads: vec![mk_payload(), mk_payload()],
+            contrib_end: vec![0.25, 1.5],
+            arrival: vec![4, 6],
+            applied: vec![true, false],
+        });
+        let mut w = W::new();
+        write_pending(&mut w, &slot);
+        write_pending(&mut w, &None);
+        write_pending(
+            &mut w,
+            &Some(PendingSync::Uniform {
+                arrival: 9,
+                payloads: vec![mk_payload()],
+            }),
+        );
+        let mut r = R::new(&w.buf);
+        match read_pending(&mut r, 4).unwrap() {
+            Some(PendingSync::PerNode {
+                group,
+                contrib_end,
+                arrival,
+                applied,
+                payloads,
+            }) => {
+                assert_eq!(group, vec![0, 2]);
+                assert_eq!(contrib_end, vec![0.25, 1.5]);
+                assert_eq!(arrival, vec![4, 6]);
+                assert_eq!(applied, vec![true, false]);
+                assert_eq!(payloads.len(), 2);
+            }
+            other => panic!("wrong variant: {:?}", other.is_some()),
+        }
+        assert!(read_pending(&mut r, 4).unwrap().is_none());
+        assert!(matches!(
+            read_pending(&mut r, 4).unwrap(),
+            Some(PendingSync::Uniform { arrival: 9, .. })
+        ));
+        r.done().unwrap();
+        // a window naming rank 2 is rejected in a 2-rank world
+        let mut w2 = W::new();
+        write_pending(&mut w2, &slot);
+        assert!(read_pending(&mut R::new(&w2.buf), 2).is_err());
+    }
+
+    #[test]
+    fn opt_and_repl_state_roundtrip() {
+        let opt = OptState {
+            vecs: vec![vec![1.0, 2.0], vec![], vec![-0.5]],
+            t: 77,
+        };
+        let repl = ReplState {
+            delta_acc: vec![0.125; 4],
+            in_flight: Some(vec![9.0; 4]),
+        };
+        let mut w = W::new();
+        write_opt_state(&mut w, &opt);
+        write_repl_state(&mut w, &repl);
+        write_repl_state(&mut w, &ReplState::default());
+        let mut r = R::new(&w.buf);
+        assert_eq!(read_opt_state(&mut r).unwrap(), opt);
+        assert_eq!(read_repl_state(&mut r).unwrap(), repl);
+        assert_eq!(read_repl_state(&mut r).unwrap(), ReplState::default());
+        r.done().unwrap();
+    }
+}

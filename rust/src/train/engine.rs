@@ -126,6 +126,24 @@ pub struct StepTiming {
 /// bucket size is tiny relative to the payload.
 const MAX_BUCKETS: u64 = 32;
 
+/// A [`StepEngine`]'s full scheduling state at a step boundary —
+/// everything a checkpointed rank needs to continue bit-identically
+/// (each timeline's `(ready, busy)` lanes plus the per-rank dependency
+/// slots and the serialized reference clock).
+#[derive(Clone, Debug)]
+pub struct EngineState {
+    pub compute: (Vec<SimTime>, Vec<f64>),
+    pub fabric: (Vec<SimTime>, Vec<f64>),
+    pub nic: (Vec<SimTime>, Vec<f64>),
+    pub update_visible: Vec<SimTime>,
+    pub deferred_end: Vec<SimTime>,
+    pub rs_done: Vec<SimTime>,
+    pub bwd_start: Vec<SimTime>,
+    pub bwd_end: Vec<SimTime>,
+    pub serialized: SimTime,
+    pub next_event_id: u64,
+}
+
 pub struct StepEngine {
     topo: Topology,
     net: NetModel,
@@ -155,6 +173,11 @@ pub struct StepEngine {
     bwd_end: Vec<SimTime>,
     /// What the legacy barrier-synchronous clock would read.
     serialized: SimTime,
+    /// Per-node membership mask (elastic membership): inactive nodes'
+    /// ranks get no reservations — their lanes freeze at departure time
+    /// — and phase maxima are taken over active ranks only. All-true
+    /// (the default) is exactly the fixed-group schedule.
+    active: Vec<bool>,
     /// Scheduled events of the current/last step (debug + tests).
     pub events: Vec<CommEvent>,
     next_event_id: u64,
@@ -187,6 +210,7 @@ impl StepEngine {
             bwd_start: vec![0.0; world],
             bwd_end: vec![0.0; world],
             serialized: 0.0,
+            active: vec![true; topo.nodes],
             events: Vec::new(),
             next_event_id: 0,
             last_nic_event: vec![None; world],
@@ -209,6 +233,24 @@ impl StepEngine {
 
     pub fn overlap(&self) -> bool {
         self.overlap
+    }
+
+    /// Set the per-node membership mask for subsequent phases (elastic
+    /// membership). Inactive nodes are skipped by every phase as pure
+    /// control flow, so an all-true mask is bit-identical to never
+    /// calling this.
+    pub fn set_active(&mut self, active: &[bool]) {
+        debug_assert_eq!(active.len(), self.topo.nodes);
+        self.active.clear();
+        self.active.extend_from_slice(active);
+    }
+
+    fn node_active(&self, node: usize) -> bool {
+        self.active.get(node).copied().unwrap_or(true)
+    }
+
+    fn rank_active(&self, rank: usize) -> bool {
+        self.node_active(self.topo.node_of(rank))
     }
 
     /// Buckets a phase of `bytes` splits into (1 = whole-phase).
@@ -264,8 +306,14 @@ impl StepEngine {
     /// The rank on the step's critical path: latest end, ties broken by
     /// compute busy-time (so a barrier-fenced straggler still wins).
     pub fn critical_rank(&self) -> usize {
+        // Inactive ranks' frozen lanes stay off the critical path (under
+        // `--no-overlap` the barrier drags every lane to the horizon, so
+        // without the filter a departed straggler could win the tiebreak).
         let mut best = 0usize;
         for r in 1..self.topo.world_size() {
+            if !self.rank_active(r) {
+                continue;
+            }
             let (e, b) = (self.rank_end(r), self.compute.busy(r));
             let (be, bb) = (self.rank_end(best), self.compute.busy(best));
             if e > be || (e == be && b > bb) {
@@ -340,6 +388,9 @@ impl StepEngine {
             return;
         }
         for node in 0..self.topo.nodes {
+            if !self.node_active(node) {
+                continue;
+            }
             traffic.record(node, node, (accels - 1) as u64 * shard_bytes * accels as u64);
         }
         let link = Link::of(&self.net, LinkClass::IntraNode);
@@ -348,6 +399,9 @@ impl StepEngine {
         if !self.overlap {
             let h = self.barrier();
             for node in 0..self.topo.nodes {
+                if !self.node_active(node) {
+                    continue;
+                }
                 let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
                 for &r in &members {
                     self.fabric.reserve(r, h, dur);
@@ -357,6 +411,9 @@ impl StepEngine {
             }
         } else {
             for node in 0..self.topo.nodes {
+                if !self.node_active(node) {
+                    continue;
+                }
                 let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
                 let earliest = members
                     .iter()
@@ -382,6 +439,9 @@ impl StepEngine {
         if !self.overlap {
             let h = self.barrier();
             for r in 0..self.world() {
+                if !self.rank_active(r) {
+                    continue;
+                }
                 let tc = ct * self.cluster.slowdown_of(self.topo.node_of(r));
                 // Unsplit in serialized mode so the lane end is exactly
                 // h + tc (bit-parity with the legacy clock).
@@ -392,6 +452,9 @@ impl StepEngine {
             }
         } else {
             for r in 0..self.world() {
+                if !self.rank_active(r) {
+                    continue;
+                }
                 let tc = ct * self.cluster.slowdown_of(self.topo.node_of(r));
                 let tf = tc * FWD_FRACTION;
                 let tb = tc - tf;
@@ -413,6 +476,9 @@ impl StepEngine {
             // No reduction needed; the local update is ready when the
             // backward is.
             for r in 0..self.world() {
+                if !self.rank_active(r) {
+                    continue;
+                }
                 self.rs_done[r] = self.bwd_end[r];
                 self.update_visible[r] = self.bwd_end[r];
             }
@@ -425,6 +491,9 @@ impl StepEngine {
         if !self.overlap {
             let h = self.barrier();
             for node in 0..self.topo.nodes {
+                if !self.node_active(node) {
+                    continue;
+                }
                 let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
                 for &r in &members {
                     self.fabric.reserve(r, h, dur);
@@ -435,6 +504,9 @@ impl StepEngine {
             }
         } else if self.n_buckets(max_shard_bytes) <= 1 {
             for node in 0..self.topo.nodes {
+                if !self.node_active(node) {
+                    continue;
+                }
                 let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
                 let bwd_start_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_start[r]));
                 let bwd_end_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_end[r]));
@@ -458,6 +530,9 @@ impl StepEngine {
             // before the whole phase is done.
             let m = self.n_buckets(max_shard_bytes);
             for node in 0..self.topo.nodes {
+                if !self.node_active(node) {
+                    continue;
+                }
                 let members: Vec<usize> = (0..accels).map(|a| self.topo.rank(node, a)).collect();
                 let bwd_start_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_start[r]));
                 let bwd_end_max = members.iter().fold(0.0f64, |m, &r| m.max(self.bwd_end[r]));
@@ -631,6 +706,53 @@ impl StepEngine {
         self.bwd_end[rank]
     }
 
+    /// Elastic membership: a joining node receives the current
+    /// parameters from the node-0 anchor before contributing again. One
+    /// inter-node transfer of `param_bytes` rides the NIC lanes of both
+    /// nodes (at the pair's slowest NIC) and gates the joiner's next
+    /// backward; node 0 only donates NIC time. The serialized reference
+    /// is charged the same duration, so `--no-overlap` keeps
+    /// `now() == serialized_time()` through a join.
+    pub fn join_broadcast(&mut self, node: usize, param_bytes: u64, traffic: &TrafficMatrix) {
+        if node == 0 {
+            return;
+        }
+        traffic.record(0, node, param_bytes);
+        let class = LinkClass::InterNode;
+        let link = Link {
+            class,
+            lat: self.net.lat(class),
+            bw: self.cluster.group_bw(&self.net, class, &[0, node]),
+        };
+        let dur = link.xfer(param_bytes);
+        let accels = self.topo.accels_per_node;
+        let members: Vec<usize> = (0..accels)
+            .map(|a| self.topo.rank(0, a))
+            .chain((0..accels).map(|a| self.topo.rank(node, a)))
+            .collect();
+        let earliest = if self.overlap {
+            // The anchor ships its settled params: start once every
+            // involved lane (including the joiner's frozen ones) is free.
+            self.now()
+        } else {
+            self.barrier()
+        };
+        let start = self.nic.join(&members).max(earliest);
+        let deps = self.nic_deps(&members);
+        for &r in &members {
+            self.nic.reserve(r, start, dur);
+        }
+        for a in 0..accels {
+            let r = self.topo.rank(node, a);
+            self.update_visible[r] = start + dur;
+            // the joiner restarts clean: no stale deferred completion
+            self.deferred_end[r] = 0.0;
+        }
+        let ev = CommEvent::new("join-broadcast", class, param_bytes, dur).owned_by(0);
+        self.push_event(ev.scheduled(start, deps), &members);
+        self.serialized += dur;
+    }
+
     /// Where a gather's landing time goes: the next backward's dependency
     /// (synchronous), or the parked slot [`Self::sync_arrival`] drains
     /// (deferred). Keeping this the only difference between the two
@@ -734,6 +856,51 @@ impl StepEngine {
                 self.mark_update_visible(r, end, deferred);
             }
         }
+    }
+
+    /// Snapshot the full scheduling state at a step boundary
+    /// (checkpointing). Per-step scratch (`rs_bucket_end`, busy
+    /// baselines, `step_gather_max`) is refreshed by `begin_step` before
+    /// it is ever read, and `events`/`last_nic_event` only feed trace
+    /// metadata, so none of those need to survive a restore.
+    pub fn export_state(&self) -> EngineState {
+        EngineState {
+            compute: self.compute.export_state(),
+            fabric: self.fabric.export_state(),
+            nic: self.nic.export_state(),
+            update_visible: self.update_visible.clone(),
+            deferred_end: self.deferred_end.clone(),
+            rs_done: self.rs_done.clone(),
+            bwd_start: self.bwd_start.clone(),
+            bwd_end: self.bwd_end.clone(),
+            serialized: self.serialized,
+            next_event_id: self.next_event_id,
+        }
+    }
+
+    /// Restore a [`StepEngine::export_state`] snapshot taken on an
+    /// engine with the same world size.
+    pub fn import_state(&mut self, st: EngineState) -> anyhow::Result<()> {
+        let world = self.world();
+        anyhow::ensure!(
+            st.update_visible.len() == world,
+            "engine snapshot is for world size {}, engine has {}",
+            st.update_visible.len(),
+            world
+        );
+        self.compute.import_state(st.compute.0, st.compute.1)?;
+        self.fabric.import_state(st.fabric.0, st.fabric.1)?;
+        self.nic.import_state(st.nic.0, st.nic.1)?;
+        self.update_visible = st.update_visible;
+        self.deferred_end = st.deferred_end;
+        self.rs_done = st.rs_done;
+        self.bwd_start = st.bwd_start;
+        self.bwd_end = st.bwd_end;
+        self.serialized = st.serialized;
+        self.next_event_id = st.next_event_id;
+        self.events.clear();
+        self.last_nic_event.fill(None);
+        Ok(())
     }
 
     /// Close the step: settle barriers (serialized mode), fold the gather
@@ -1248,6 +1415,112 @@ mod tests {
         let mut ser = mk(false);
         drive(&mut ser, true);
         assert_eq!(ser.now(), ser.serialized_time());
+    }
+
+    /// Elastic membership at the engine level: an all-true mask is the
+    /// identity (bit-equal schedule), an inactive node's lanes freeze at
+    /// departure, and the surviving nodes' schedule is exactly the
+    /// smaller cluster's.
+    #[test]
+    fn membership_mask_identity_and_freeze() {
+        let mut plain = engine(2, 2, true);
+        let mut masked = engine(2, 2, true);
+        masked.set_active(&[true, true]);
+        drive(&mut plain, 4, true);
+        drive(&mut masked, 4, true);
+        assert_eq!(plain.now(), masked.now());
+        assert_eq!(plain.serialized_time(), masked.serialized_time());
+
+        // deactivate node 1: its lanes freeze, node 0 keeps moving
+        let frozen = {
+            let (c, f, n) = masked.timelines();
+            (2..4).map(|r| c.now(r).max(f.now(r)).max(n.now(r))).collect::<Vec<_>>()
+        };
+        masked.set_active(&[true, false]);
+        let traffic = TrafficMatrix::new(2);
+        for _ in 0..3 {
+            masked.begin_step();
+            masked.unshard(4096, &traffic);
+            masked.compute(1e9);
+            masked.reduce_scatter(4096);
+            // group re-formed to the single surviving member
+            masked.gather(&[0], GatherMode::NaiveAllGather, &[2048], &traffic);
+            masked.end_step();
+        }
+        let (c, f, n) = masked.timelines();
+        for (i, r) in (2..4).enumerate() {
+            assert_eq!(
+                c.now(r).max(f.now(r)).max(n.now(r)),
+                frozen[i],
+                "inactive rank {r} lanes moved"
+            );
+        }
+        assert!(c.now(0) > frozen[0]);
+        // inactive ranks never win the critical path
+        assert!(masked.critical_rank() < 2);
+    }
+
+    /// Join broadcast: gates the joiner's next backward, charges the
+    /// serialized reference, and `--no-overlap` keeps `now() ==
+    /// serialized_time()` through a leave/join cycle.
+    #[test]
+    fn join_broadcast_gates_joiner_and_keeps_serialized_parity() {
+        for overlap in [true, false] {
+            let mut e = engine(2, 1, overlap);
+            let traffic = TrafficMatrix::new(2);
+            let drive_step = |e: &mut StepEngine, with_node1: bool| {
+                e.begin_step();
+                e.unshard(4096, &traffic);
+                e.compute(1e9);
+                e.reduce_scatter(4096);
+                let group: Vec<usize> = if with_node1 { vec![0, 1] } else { vec![0] };
+                let sizes = vec![2048u64; group.len()];
+                e.gather(&group, GatherMode::NaiveAllGather, &sizes, &traffic);
+                e.end_step();
+            };
+            drive_step(&mut e, true);
+            e.set_active(&[true, false]);
+            drive_step(&mut e, false);
+            let frozen = e.rank_end(1);
+            e.set_active(&[true, true]);
+            e.join_broadcast(1, 1 << 20, &traffic);
+            assert!(e.events.iter().any(|ev| ev.label == "join-broadcast"));
+            // the broadcast moved the joiner's lanes and gates its backward
+            assert!(e.rank_end(1) > frozen);
+            let visible = e.rank_end(1);
+            drive_step(&mut e, true);
+            let (c, _, _) = e.timelines();
+            assert!(c.now(1) >= visible, "joiner's backward ran before the params landed");
+            if !overlap {
+                assert_eq!(e.now(), e.serialized_time());
+            }
+            // traffic flowed anchor → joiner
+            assert!(traffic.snapshot()[1] >= 1 << 20);
+        }
+    }
+
+    /// Checkpoint surface: export → import on a fresh engine, then drive
+    /// both identically — bit-equal horizons and serialized clocks.
+    #[test]
+    fn engine_state_roundtrip_continues_bit_identically() {
+        let mut a = engine(2, 2, true);
+        drive(&mut a, 3, true);
+        let mut b = engine(2, 2, true);
+        b.import_state(a.export_state()).unwrap();
+        assert_eq!(a.now(), b.now());
+        drive(&mut a, 3, true);
+        drive(&mut b, 3, true);
+        assert_eq!(a.now(), b.now());
+        assert_eq!(a.serialized_time(), b.serialized_time());
+        let (ac, af, an) = a.timelines();
+        let (bc, bf, bn) = b.timelines();
+        for r in 0..4 {
+            assert_eq!(ac.now(r), bc.now(r));
+            assert_eq!(af.now(r), bf.now(r));
+            assert_eq!(an.now(r), bn.now(r));
+        }
+        // world-size mismatch is rejected
+        assert!(engine(2, 1, true).import_state(a.export_state()).is_err());
     }
 
     #[test]

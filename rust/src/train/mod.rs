@@ -81,7 +81,9 @@
 //! across meshes and schemes in `tests/integration.rs`).
 
 pub mod engine;
+mod checkpoint;
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -92,7 +94,9 @@ use crate::compress::{Payload, Scratch, WireStats};
 use crate::config::ExperimentConfig;
 use crate::data::{task_for, Task};
 use crate::metrics::{RunMetrics, StepRow, ValRow};
-use crate::net::{SimTime, Topology, TrafficMatrix};
+use crate::net::{
+    membership_label, MembershipEvent, MembershipTimeline, SimTime, Topology, TrafficMatrix,
+};
 use crate::optim::Optimizer;
 use crate::parallel::{PoolHandle, SlicePtr, WorkerPool};
 use crate::replicate::{mean_decoded, mean_decoded_refs, LatePolicy, ReplCtx, Replicator, ReplSpec};
@@ -134,7 +138,12 @@ enum PendingSync {
     /// non-`wait` late policy): every member aggregates at its own
     /// arrival step from the contributions that met its own deadline.
     PerNode {
-        /// One payload per R-group member (group order); kept until
+        /// The ranks that launched this window, in launch order. Under
+        /// churn the *current* replication group can differ from this
+        /// one by the time the window arrives, so each arriving member
+        /// maps itself into the window by rank, not by position.
+        group: Vec<usize>,
+        /// One payload per window member (group order); kept until
         /// every member has applied, then recycled.
         payloads: Vec<Payload>,
         /// Per-member contribution completion times on the wire
@@ -186,10 +195,23 @@ pub struct Trainer {
     last_inter: u64,
     last_intra: u64,
     step: u64,
+    /// Deterministic churn timeline (cloned from the config); empty for
+    /// a fixed group, in which case every elastic branch below is dead
+    /// and the step is bit-identical to the pre-churn trainer (pinned).
+    membership: MembershipTimeline,
+    /// Per-node liveness mask (all `true` without churn).
+    active: Vec<bool>,
+    /// Nodes currently down *because of a crash*: unlike a graceful
+    /// leave, the node's in-memory state is lost, and a later join
+    /// restores its private state from the stashed checkpoint.
+    crashed: Vec<bool>,
+    /// Per-node checkpoint stashed at crash time (`--checkpoint-dir`).
+    crash_ckpt: Vec<Option<PathBuf>>,
 }
 
 impl Trainer {
     pub fn new(rt: &Runtime, cfg: ExperimentConfig) -> Result<Trainer> {
+        cfg.validate_elastic()?;
         let model = rt
             .load_model(&cfg.artifacts_dir, &cfg.model)
             .with_context(|| format!("loading model {}", cfg.model))?;
@@ -295,9 +317,146 @@ impl Trainer {
             last_timing: StepTiming::default(),
             last_inter: 0,
             last_intra: 0,
+            membership: cfg.membership.clone(),
+            active: vec![true; cfg.nodes],
+            crashed: vec![false; cfg.nodes],
+            crash_ckpt: (0..cfg.nodes).map(|_| None).collect(),
             cfg,
             step: 0,
         })
+    }
+
+    /// Per-node liveness mask (all `true` unless a churn timeline is
+    /// active).
+    pub fn active_nodes(&self) -> &[bool] {
+        &self.active
+    }
+
+    /// Rebuild one rank's replicator exactly as [`Trainer::new`] did —
+    /// the crash path wipes the node's in-memory state with this.
+    fn build_rank_repl(&self, rank: usize) -> Result<Box<dyn Replicator>> {
+        let shard_len = self.mesh.shards.shard_len();
+        if matches!(self.cfg.repl, ReplSpec::DiLoCo { staleness: Some(_), .. }) {
+            self.cfg
+                .repl
+                .build_with_staleness(shard_len, self.node_delay[self.mesh.topo.node_of(rank)])
+        } else {
+            Ok(self.cfg.repl.build(shard_len))
+        }
+    }
+
+    /// Fire this step's membership events. Runs right after
+    /// [`StepEngine::begin_step`] (which clears the per-step event
+    /// trace), so a join broadcast shows up in *this* step's events and
+    /// its completion gates the joiner's backward.
+    fn apply_membership_events(&mut self) -> Result<()> {
+        for (node, ev) in self.membership.events_at(self.step) {
+            match ev {
+                MembershipEvent::Leave => self.node_depart(node, false)?,
+                MembershipEvent::Crash => self.node_depart(node, true)?,
+                MembershipEvent::Join => self.node_join(node)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove a node from the active set. Its arrivals in every
+    /// in-flight window are cancelled (the survivors re-form the group
+    /// without it; its already-launched payload stays admissible — the
+    /// bytes were on the wire before it went down). A *crash*
+    /// additionally loses the node's in-memory state: the optimizer and
+    /// replicator are rebuilt fresh, carried deltas are dropped, and
+    /// the last published checkpoint is stashed for the rejoin.
+    fn node_depart(&mut self, node: usize, crash: bool) -> Result<()> {
+        log::info!(
+            "step {}: node {node} {}",
+            self.step,
+            if crash { "crashed" } else { "left" }
+        );
+        self.active[node] = false;
+        self.engine.set_active(&self.active);
+        for shard in 0..self.pending.len() {
+            let done = match self.pending[shard].as_mut() {
+                Some(PendingSync::PerNode { group, applied, .. }) => {
+                    for (wi, &r) in group.iter().enumerate() {
+                        if self.mesh.topo.node_of(r) == node {
+                            applied[wi] = true;
+                        }
+                    }
+                    applied.iter().all(|&x| x)
+                }
+                // The uniform (PR 4) window only launches when the
+                // timeline is empty, so churn can never catch one.
+                Some(PendingSync::Uniform { .. }) => anyhow::bail!(
+                    "step {}: membership event with a uniform async window in flight",
+                    self.step
+                ),
+                None => false,
+            };
+            if done {
+                let Some(PendingSync::PerNode { group, payloads, .. }) =
+                    self.pending[shard].take()
+                else {
+                    unreachable!("matched above");
+                };
+                for (wi, p) in payloads.into_iter().enumerate() {
+                    self.ranks[group[wi]].scratch.recycle_payload(p);
+                }
+            }
+        }
+        if crash {
+            self.crashed[node] = true;
+            self.crash_ckpt[node] = None;
+            if let Some(dir) = &self.cfg.checkpoint_dir {
+                let latest = dir.join("latest.ckpt");
+                if latest.exists() {
+                    let stash = dir.join(format!("crash-node{node}.ckpt"));
+                    std::fs::copy(&latest, &stash).with_context(|| {
+                        format!("stashing crash checkpoint for node {node}")
+                    })?;
+                    self.crash_ckpt[node] = Some(stash);
+                }
+            }
+            let shard_len = self.mesh.shards.shard_len();
+            for r in 0..self.mesh.topo.world_size() {
+                if self.mesh.topo.node_of(r) != node {
+                    continue;
+                }
+                let mut opt = self.cfg.opt.build(shard_len);
+                opt.attach_pool(PoolHandle::new(Arc::clone(&self.pool)));
+                let repl = self.build_rank_repl(r)?;
+                let st = &mut self.ranks[r];
+                st.opt = opt;
+                st.repl = repl;
+                st.carried.clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-admit a node. A crashed node first restores its private state
+    /// (optimizer moments, replicator accumulators, carried deltas)
+    /// from the checkpoint stashed when it went down; either way the
+    /// joiner receives the cluster's *current* parameters from node 0
+    /// over the inter-node link ([`StepEngine::join_broadcast`]), and
+    /// its next backward waits for that transfer.
+    fn node_join(&mut self, node: usize) -> Result<()> {
+        log::info!("step {}: node {node} joined", self.step);
+        if self.crashed[node] {
+            if let Some(path) = self.crash_ckpt[node].take() {
+                self.restore_node_from_checkpoint(node, &path)?;
+            }
+            self.crashed[node] = false;
+        }
+        self.active[node] = true;
+        self.engine.set_active(&self.active);
+        self.engine
+            .join_broadcast(node, (self.layout.padded_len * 4) as u64, &self.traffic);
+        // Node 0 anchors the group (the timeline validator rejects
+        // events on it), so its replica is always current.
+        let (node0, rest) = self.params.split_first_mut().expect("nodes >= 1");
+        rest[node - 1].copy_from_slice(node0);
+        Ok(())
     }
 
     /// Number of distinct gradient streams (DESIGN.md §2 scaling rule).
@@ -460,11 +619,13 @@ impl Trainer {
     ) -> Result<()> {
         let step = rctx.step;
         let policy = self.cfg.late_policy();
+        let quorum_k = self.cfg.quorum;
         // Take the window out of its slot so its payload borrows cannot
         // alias the rank/engine/param field borrows below.
         let mut pending = self.pending[shard].take();
         let done = {
             let Some(PendingSync::PerNode {
+                group: wgroup,
                 payloads,
                 contrib_end,
                 arrival,
@@ -475,12 +636,20 @@ impl Trainer {
             };
             for (gi, &rank) in group.iter().enumerate() {
                 let node = self.mesh.topo.node_of(rank);
-                if arrival[gi] != step || applied[gi] {
-                    // Not this member's arrival: plain local step.
+                // Map this member into the *window's* group by rank:
+                // under churn the current group can differ from the one
+                // that launched the window. A member with no slot
+                // (joined after the launch), a slot whose arrival is not
+                // now, or one already applied takes a plain local step.
+                let wi = wgroup
+                    .iter()
+                    .position(|&r| r == rank)
+                    .filter(|&wi| arrival[wi] == step && !applied[wi]);
+                let Some(wi) = wi else {
                     self.apply_local_one(rank, rctx, std::mem::take(&mut locals[gi]), (lo, hi), lr);
                     continue;
-                }
-                applied[gi] = true;
+                };
+                applied[wi] = true;
                 let deadline = self.engine.arrival_deadline(rank);
                 // Deltas carried from the previous window join ahead of
                 // this window's quorum once their transfer has landed;
@@ -490,31 +659,73 @@ impl Trainer {
                 let carried = std::mem::take(&mut self.ranks[rank].carried);
                 let mut next_carried: Vec<(Payload, SimTime)> = Vec::new();
                 let mut admitted = vec![false; carried.len()];
+                for (ci, (_, end)) in carried.iter().enumerate() {
+                    if *end <= deadline {
+                        admitted[ci] = true;
+                    }
+                }
+                // Peer admission: own delta always (it never crossed the
+                // wire); a peer's if `wait` admits everything (the
+                // whole-group semantics, only without `--quorum`) or its
+                // send landed by the deadline.
+                let mut admit_peer = vec![false; wgroup.len()];
+                let mut late_idx: Vec<usize> = Vec::new();
+                for wj in 0..wgroup.len() {
+                    if wj == wi
+                        || (quorum_k == 0 && policy == LatePolicy::Wait)
+                        || contrib_end[wj] <= deadline
+                    {
+                        admit_peer[wj] = true;
+                    } else {
+                        late_idx.push(wj);
+                    }
+                }
+                // `--quorum K`: the member finalizes once at least K of
+                // the window's contributions are in. If fewer landed on
+                // time, the earliest late transfers are admitted until
+                // the quorum is met — the gate then waits for them.
+                // Whatever is still left over follows the late policy.
+                if quorum_k > 0 {
+                    let mut n_admit = admit_peer.iter().filter(|&&x| x).count();
+                    if n_admit < quorum_k && !late_idx.is_empty() {
+                        late_idx.sort_by(|&x, &y| {
+                            contrib_end[x]
+                                .partial_cmp(&contrib_end[y])
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                                .then(x.cmp(&y))
+                        });
+                        for &wj in &late_idx {
+                            if n_admit >= quorum_k {
+                                break;
+                            }
+                            admit_peer[wj] = true;
+                            n_admit += 1;
+                        }
+                    }
+                }
                 let mut quorum: Vec<&Payload> = Vec::new();
                 let mut gate: SimTime = 0.0;
                 for (ci, (p, end)) in carried.iter().enumerate() {
-                    if *end <= deadline {
-                        admitted[ci] = true;
+                    if admitted[ci] {
                         gate = gate.max(*end);
                         quorum.push(p);
                     }
                 }
                 let mut late = 0u64;
-                for (gj, p) in payloads.iter().enumerate() {
-                    if gj == gi {
-                        quorum.push(p); // own delta, no wire involved
-                    } else if policy == LatePolicy::Wait || contrib_end[gj] <= deadline {
-                        // `wait` admits every peer regardless of the
-                        // deadline: the gate then carries the late
-                        // transfer's completion, so the next backward
-                        // stalls on it — per-member whole-group
-                        // semantics instead of a silent drop.
-                        gate = gate.max(contrib_end[gj]);
+                for (wj, p) in payloads.iter().enumerate() {
+                    if admit_peer[wj] {
+                        if wj != wi {
+                            // An admitted peer send gates the next
+                            // backward — under `wait` (or a quorum
+                            // top-up) that deliberately includes
+                            // transfers completing after the deadline.
+                            gate = gate.max(contrib_end[wj]);
+                        }
                         quorum.push(p);
                     } else {
                         late += 1;
                         if policy == LatePolicy::Partial {
-                            next_carried.push((p.clone(), contrib_end[gj]));
+                            next_carried.push((p.clone(), contrib_end[wj]));
                         }
                     }
                 }
@@ -549,13 +760,18 @@ impl Trainer {
             applied.iter().all(|&x| x)
         };
         if done {
-            let Some(PendingSync::PerNode { payloads, .. }) = pending else {
+            let Some(PendingSync::PerNode {
+                group: wgroup,
+                payloads,
+                ..
+            }) = pending
+            else {
                 unreachable!("checked above");
             };
             // Consumed payloads return their buffers to the ranks that
             // produced them — the next window reuses the capacity.
-            for (gi, p) in payloads.into_iter().enumerate() {
-                self.ranks[group[gi]].scratch.recycle_payload(p);
+            for (wi, p) in payloads.into_iter().enumerate() {
+                self.ranks[wgroup[wi]].scratch.recycle_payload(p);
             }
         } else {
             self.pending[shard] = pending;
@@ -577,6 +793,9 @@ impl Trainer {
         let step = self.step;
         self.engine.begin_step();
         self.dropped_step.fill(0);
+        if !self.membership.is_empty() {
+            self.apply_membership_events()?;
+        }
 
         // -- 0. FSDP unshard: within each node, updated parameters are
         // all-gathered from shards before they are next used. Data-wise
@@ -591,7 +810,14 @@ impl Trainer {
         let n_streams = self.n_streams();
         let stream_results = self.run_streams(n_streams)?;
         let mut loss_sum = 0.0f64;
+        let mut active_world = 0usize;
         for rank in 0..world {
+            // A departed node computes nothing; its stale gradient
+            // buffers are never read (every phase below skips it).
+            if !self.active[self.mesh.topo.node_of(rank)] {
+                continue;
+            }
+            active_world += 1;
             let (loss, grads) = &stream_results[rank % n_streams];
             loss_sum += *loss as f64;
             let g = &mut self.grads[rank];
@@ -611,6 +837,9 @@ impl Trainer {
             scratch: &mut self.coll_scratch,
         };
         for node in 0..self.cfg.nodes {
+            if !self.active[node] {
+                continue;
+            }
             let group = ctx.topo.shard_group(ctx.topo.rank(node, 0));
             let shards: Vec<(usize, usize)> =
                 (0..accels).map(|a| self.mesh.shards.range(a)).collect();
@@ -630,7 +859,14 @@ impl Trainer {
                 shard: a,
                 seed: self.cfg.seed,
             };
-            let group = self.mesh.repl_group_of_shard(a);
+            let mut group = self.mesh.repl_group_of_shard(a);
+            // Group re-formation under churn: departed nodes drop out of
+            // the gather and the averaging denominator follows the group
+            // size. Node 0 anchors every group, so it is never empty.
+            // `retain` on the all-active mask is a no-op (bit-identity
+            // with the fixed-group path is pinned by proptest).
+            group.retain(|&r| self.active[self.mesh.topo.node_of(r)]);
+            debug_assert!(!group.is_empty(), "node 0 anchors every repl group");
 
             // accumulate + extract on every rank of the group
             let mut locals: Vec<Vec<f32>> = Vec::with_capacity(group.len());
@@ -662,11 +898,15 @@ impl Trainer {
                     .map(|&r| self.node_delay[self.mesh.topo.node_of(r)])
                     .collect();
                 let uniform = delays.iter().all(|&d| d == delays[0]);
-                if uniform && delays[0] == 0 {
+                if uniform && delays[0] == 0 && self.cfg.quorum == 0 {
                     // Synchronous replication: the mean lands this step.
                     self.engine.gather(&group, mode, &sizes, &self.traffic);
                     self.apply_mean(&group, &rctx, payloads, &mut locals, (lo, hi), lr);
-                } else if uniform && self.cfg.late_policy() == LatePolicy::Wait {
+                } else if uniform
+                    && self.cfg.late_policy() == LatePolicy::Wait
+                    && self.cfg.quorum == 0
+                    && self.membership.is_empty()
+                {
                     // PR 4 async launch (bit-frozen whole-group window):
                     // charge the wire on the deferred lane, park the
                     // payloads, and apply only this step's local update —
@@ -697,6 +937,7 @@ impl Trainer {
                         &self.traffic,
                     );
                     self.pending[a] = Some(PendingSync::PerNode {
+                        group: group.clone(),
                         payloads,
                         contrib_end,
                         arrival: delays.iter().map(|&d| step + d).collect(),
@@ -729,7 +970,7 @@ impl Trainer {
         self.last_timing = self.engine.end_step();
 
         self.step += 1;
-        Ok(loss_sum / world as f64)
+        Ok(loss_sum / active_world.max(1) as f64)
     }
 
     /// Current simulated time (the event horizon across all ranks).
@@ -831,10 +1072,29 @@ impl Trainer {
                         .collect::<Vec<_>>()
                         .join(";")
                 },
+                membership: if self.membership.is_empty() {
+                    String::new()
+                } else {
+                    membership_label(&self.active)
+                },
                 wall_time: wall0.elapsed().as_secs_f64(),
             });
             self.last_inter = inter;
             self.last_intra = intra;
+
+            // `--checkpoint-dir`: publish a checkpoint at every
+            // window-quiescent step boundary, so a crash always has a
+            // "last completed sync window" to rejoin from. (Parking a
+            // window and crashing before its arrival would otherwise
+            // lose contributions that exist nowhere else.)
+            if self.cfg.checkpoint_dir.is_some() && self.syncs_in_flight() == 0 {
+                let dir = self
+                    .cfg
+                    .checkpoint_dir
+                    .clone()
+                    .expect("checked is_some above");
+                self.save_checkpoint(&dir)?;
+            }
 
             if self.cfg.val_every > 0 && self.step % self.cfg.val_every == 0 {
                 let vloss = self.validate(self.cfg.val_batches)?;

@@ -987,6 +987,270 @@ mod engine_invariants {
         }
     }
 
+    /// Bit-level fingerprint of a finished run: per-step losses, sim
+    /// times, validation losses, and node-0 parameters.
+    fn run_fingerprint(t: &Trainer, m: &RunMetrics) -> (Vec<u64>, Vec<u64>, Vec<u64>, Vec<u32>) {
+        (
+            m.steps.iter().map(|r| r.loss.to_bits()).collect(),
+            m.steps.iter().map(|r| r.sim_time.to_bits()).collect(),
+            m.val.iter().map(|r| r.loss.to_bits()).collect(),
+            t.params_node0().iter().map(|p| p.to_bits()).collect(),
+        )
+    }
+
+    /// Tentpole pin: an **empty** membership timeline — even with
+    /// `--checkpoint-dir` publishing a checkpoint every step — is
+    /// bit-identical to the pre-elastic fixed-group trainer at every
+    /// worker-pool width, across meshes and schemes. The elastic
+    /// machinery must be pure control flow when unused.
+    #[test]
+    fn prop_empty_timeline_and_checkpoint_dir_bit_inert() {
+        let ckpt_root = std::env::temp_dir().join("detonation-ckpt-inert");
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(1, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&["demo:1/8", "full", "diloco:2", "diloco:3:async=1"]);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let fingerprint = |ckpt: Option<std::path::PathBuf>| {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 5;
+                cfg.threads = threads;
+                cfg.val_every = 2;
+                cfg.val_batches = 2;
+                cfg.checkpoint_dir = ckpt;
+                let (t, m) = run(cfg);
+                assert!(m.steps.iter().all(|r| r.membership.is_empty()));
+                run_fingerprint(&t, &m)
+            };
+            let dir = ckpt_root.join(format!("{nodes}x{accels}-t{threads}"));
+            let plain = fingerprint(None);
+            let with_ckpt = fingerprint(Some(dir.clone()));
+            detonation::util::proptest::prop_assert(
+                plain == with_ckpt,
+                format!("{nodes}x{accels} {repl} t{threads}: checkpoint-dir changed bits"),
+            );
+            // the checkpoint actually got published
+            detonation::util::proptest::prop_assert(
+                dir.join("latest.ckpt").exists(),
+                format!("{}: latest.ckpt missing", dir.display()),
+            );
+        });
+        std::fs::remove_dir_all(&ckpt_root).ok();
+    }
+
+    /// Tentpole acceptance: save → restore → continue is bit-identical
+    /// to the uninterrupted run — losses, simulated clock, and final
+    /// parameters — across schemes (including async DiLoCo snapshotted
+    /// with windows in flight), meshes, and thread counts.
+    #[test]
+    fn prop_checkpoint_restore_continues_bit_identically() {
+        let ckpt_root = std::env::temp_dir().join("detonation-ckpt-resume");
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(1, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&[
+                "demo:1/8",
+                "full",
+                "diloco:2",
+                "diloco:3:async=2",
+                "striding:1/8",
+            ]);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let steps = 6u64;
+            let cut = g.usize(1, steps as usize - 1) as u64;
+            let mk_cfg = || {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = steps;
+                cfg.threads = threads;
+                cfg
+            };
+            // Uninterrupted reference.
+            let mut a = Trainer::new(&runtime(), mk_cfg()).unwrap();
+            let mut loss_a = Vec::new();
+            for _ in 0..steps {
+                loss_a.push(a.step().unwrap().to_bits());
+            }
+            // Interrupted: run to `cut`, checkpoint (possibly with async
+            // windows in flight), restore into a FRESH trainer, continue.
+            let dir = ckpt_root.join(format!("{nodes}x{accels}-t{threads}-c{cut}"));
+            let mut b = Trainer::new(&runtime(), mk_cfg()).unwrap();
+            let mut loss_b = Vec::new();
+            for _ in 0..cut {
+                loss_b.push(b.step().unwrap().to_bits());
+            }
+            let path = b.save_checkpoint(&dir).unwrap();
+            drop(b);
+            let mut c = Trainer::new(&runtime(), mk_cfg()).unwrap();
+            c.restore_checkpoint(&path).unwrap();
+            detonation::util::proptest::prop_assert(
+                c.current_step() == cut,
+                format!("restored step {} != {cut}", c.current_step()),
+            );
+            for _ in cut..steps {
+                loss_b.push(c.step().unwrap().to_bits());
+            }
+            let tag = format!("{nodes}x{accels} {repl} t{threads} cut@{cut}");
+            detonation::util::proptest::prop_assert(
+                loss_a == loss_b,
+                format!("{tag}: losses diverged after restore"),
+            );
+            detonation::util::proptest::prop_assert(
+                a.sim_now().to_bits() == c.sim_now().to_bits(),
+                format!("{tag}: simulated clock diverged after restore"),
+            );
+            let pa: Vec<u32> = a.params_node0().iter().map(|p| p.to_bits()).collect();
+            let pc: Vec<u32> = c.params_node0().iter().map(|p| p.to_bits()).collect();
+            detonation::util::proptest::prop_assert(
+                pa == pc,
+                format!("{tag}: parameters diverged after restore"),
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        });
+        std::fs::remove_dir_all(&ckpt_root).ok();
+    }
+
+    /// A checkpoint refuses to restore onto a different experiment.
+    #[test]
+    fn checkpoint_rejects_mismatched_experiment() {
+        let dir = std::env::temp_dir().join("detonation-ckpt-mismatch");
+        let mut t = Trainer::new(&runtime(), synth_cfg("diloco:2")).unwrap();
+        t.step().unwrap();
+        let path = t.save_checkpoint(&dir).unwrap();
+        let mut other_cfg = synth_cfg("diloco:2");
+        other_cfg.seed += 1;
+        let mut other = Trainer::new(&runtime(), other_cfg).unwrap();
+        let err = other.restore_checkpoint(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("different experiment"),
+            "unexpected error: {err:#}"
+        );
+        // truncated file errors instead of panicking
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let mut same = Trainer::new(&runtime(), synth_cfg("diloco:2")).unwrap();
+        assert!(same.restore_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Tentpole behavior: a leave/join timeline re-forms the replication
+    /// groups each window — inter-node traffic collapses while the node
+    /// is away, the join broadcast brings it back in sync from node 0,
+    /// and the steps CSV carries the membership mask.
+    #[test]
+    fn churn_timeline_reforms_groups_and_rejoins() {
+        let mut cfg = synth_cfg("demo:1/8");
+        cfg.steps = 6;
+        cfg.apply_arg("churn", "leave:1@2,join:1@4").unwrap();
+        let (t, m) = run(cfg);
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+        let masks: Vec<&str> = m.steps.iter().map(|r| r.membership.as_str()).collect();
+        assert_eq!(masks, ["11", "11", "10", "10", "11", "11"]);
+        // away: the every-step gather loses its only inter-node peer
+        assert!(
+            m.steps[3].inter_bytes < m.steps[1].inter_bytes,
+            "departed node still drove inter-node traffic: {} vs {}",
+            m.steps[3].inter_bytes,
+            m.steps[1].inter_bytes
+        );
+        // rejoin: the step-4 join broadcast ships the full parameter
+        // buffer from node 0 on top of resumed gather traffic
+        assert!(
+            m.steps[4].inter_bytes > m.steps[3].inter_bytes,
+            "join broadcast missing from the traffic: {} vs {}",
+            m.steps[4].inter_bytes,
+            m.steps[3].inter_bytes
+        );
+        assert_eq!(t.active_nodes(), &[true, true]);
+        // an event mid-run leaves the engine's serialized bound intact
+        assert!(t.engine.now() <= t.engine.serialized_time() * (1.0 + 1e-12));
+    }
+
+    /// Crash without a checkpoint dir: the node rejoins with fresh
+    /// optimizer/replicator state and the run completes; with a
+    /// checkpoint dir, the crash stashes the last published checkpoint
+    /// and the rejoin restores from it.
+    #[test]
+    fn crash_and_checkpointed_rejoin_complete() {
+        // fresh-state rejoin
+        let mut cfg = synth_cfg("diloco:2");
+        cfg.steps = 8;
+        cfg.apply_arg("crash", "1@3:5").unwrap();
+        let (_, m) = run(cfg);
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+        let masks: Vec<&str> = m.steps.iter().map(|r| r.membership.as_str()).collect();
+        assert_eq!(masks, ["11", "11", "11", "10", "10", "11", "11", "11"]);
+
+        // checkpointed rejoin
+        let dir = std::env::temp_dir().join("detonation-crash-rejoin");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = synth_cfg("diloco:2");
+        cfg.steps = 8;
+        cfg.apply_arg("crash", "1@3:5").unwrap();
+        cfg.checkpoint_dir = Some(dir.clone());
+        let (_, m) = run(cfg);
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+        assert!(
+            dir.join("crash-node1.ckpt").exists(),
+            "crash did not stash a checkpoint"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Elastic validation surfaces actionable errors at trainer build.
+    #[test]
+    fn elastic_misconfigurations_rejected_at_build() {
+        // quorum larger than the replication group
+        let mut cfg = synth_cfg("diloco:2");
+        cfg.quorum = 3; // 2 nodes
+        assert!(Trainer::new(&runtime(), cfg).is_err());
+        // churn on the anchor node
+        let mut cfg = synth_cfg("demo:1/8");
+        cfg.apply_arg("churn", "leave:0@2").unwrap();
+        let err = Trainer::new(&runtime(), cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("node 0"), "{err:#}");
+        // state-machine violations (join while up)
+        let mut cfg = synth_cfg("demo:1/8");
+        cfg.apply_arg("churn", "join:1@2").unwrap();
+        assert!(Trainer::new(&runtime(), cfg).is_err());
+    }
+
+    /// Satellite: `--quorum` caps how long an arrival waits. With K
+    /// equal to the group size every contribution is awaited — on a
+    /// non-uniform staleness table that is bit-identical to the `wait`
+    /// policy's whole-peer admission (same set, same gate). With K = 1
+    /// the member never waits on a late peer, so the simulated clock can
+    /// only improve.
+    #[test]
+    fn quorum_full_matches_wait_and_quorum_one_never_slower() {
+        let mk = |quorum: usize| {
+            let mut cfg = synth_cfg("diloco:3");
+            cfg.steps = 10;
+            cfg.apply_arg("staleness", "1").unwrap();
+            cfg.apply_arg("node-staleness", "1:2").unwrap(); // non-uniform
+            cfg.apply_arg("straggler", "1:4").unwrap();
+            cfg.quorum = quorum;
+            let (t, m) = run(cfg);
+            let fp = run_fingerprint(&t, &m);
+            (fp, m)
+        };
+        let (fp_wait, m_wait) = mk(0);
+        let (fp_full, m_full) = mk(2); // K = group size
+        assert_eq!(fp_wait, fp_full, "quorum=|R| diverged from wait");
+        let (_, m_one) = mk(1);
+        assert!(m_one.steps.iter().all(|r| r.loss.is_finite()));
+        assert!(
+            m_one.total_sim_time() <= m_wait.total_sim_time() * (1.0 + 1e-12),
+            "quorum=1 slower than wait: {} vs {}",
+            m_one.total_sim_time(),
+            m_wait.total_sim_time()
+        );
+        let _ = m_full;
+    }
+
     #[test]
     fn prop_overlap_bounded_across_random_meshes() {
         detonation::util::proptest::proptest(10, |g| {

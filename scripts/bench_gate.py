@@ -11,9 +11,11 @@ reported rather than silently skipped.
 Two layers, both of which must pass:
 
 1. **Invariants** — fields the benches assert while writing the artifact
-   (zero steady-state allocations, "drop beats wait", bit-identity
-   booleans, S >= 1 strictly faster than synchronous DiLoCo, the >=2x
-   lane-vectorization floor on the gated kernel rows). A bench
+   (zero steady-state allocations, "drop beats wait" under compute and
+   NIC stragglers alike, bit-identity booleans, S >= 1 strictly faster
+   than synchronous DiLoCo, the >=2x lane-vectorization floor on the
+   gated kernel rows, and the chaos bench's graceful-degradation band
+   and crash-then-rejoin gap). A bench
    that wrote a violating artifact has already failed its own process,
    but the gate re-checks the *committed* claims so a stale or
    hand-edited snapshot cannot pass review.
@@ -58,6 +60,7 @@ METRICS = {
     "overlap": [("schemes", ("scheme",), "sim_speedup", True)],
     "async_diloco": [("arms", ("label",), "sim_step_s", False)],
     "stragglers": [("arms", ("label",), "sim_step_s", False)],
+    "chaos": [("arms", ("label",), "sim_step_s", False)],
 }
 
 # invariant registry: artifact stem -> list of (dotted field path, expected)
@@ -72,8 +75,28 @@ INVARIANTS = {
         ("homogeneous_bit_identical_to_pr4_async", True),
         ("drop_beats_wait_under_4x_straggler", True),
         ("partial_beats_wait_under_4x_straggler", True),
+        ("drop_beats_wait_under_4x_nic_straggler", True),
+    ],
+    "chaos": [
+        ("membership_masks_tracked", True),
+        ("crash_checkpoint_stashed", True),
     ],
 }
+
+# chaos gate bands. Churn severity is ordered baseline <= mild <= heavy,
+# but short stochastic runs jitter, so "graceful degradation" is a
+# bounded band, not strict monotonicity: every churned arm's tail loss
+# must stay within GRACEFUL_BAND x baseline's. The checkpointed rejoin
+# must land within REJOIN_GAP of the uninterrupted run (relative).
+CHAOS_GRACEFUL_BAND = 1.5
+CHAOS_REJOIN_GAP = 0.5
+CHAOS_ARMS = (
+    "baseline",
+    "churn-mild",
+    "churn-heavy",
+    "crash-norejoin",
+    "crash-rejoin-ckpt",
+)
 
 
 def lookup(doc, dotted):
@@ -168,6 +191,59 @@ def computed_invariants(stem, doc):
                 )
             elif dropped is not None and dropped <= 0:
                 errors.append(f"{stem}: {label} recorded no late contributions")
+        nic_wait = arms.get("nic4-wait")
+        nic_drop = arms.get("nic4-drop")
+        if nic_wait is None or nic_drop is None:
+            errors.append(f"{stem}: nic4-wait/nic4-drop NIC-sweep arms missing")
+        else:
+            wt = _num(nic_wait, "sim_time_s", errors, stem, "nic4-wait")
+            dt = _num(nic_drop, "sim_time_s", errors, stem, "nic4-drop")
+            if wt is not None and dt is not None and not dt < wt:
+                errors.append(
+                    f"{stem}: drop not faster than wait under the 4x NIC "
+                    f"straggler ({dt} vs {wt})"
+                )
+    if stem == "chaos":
+        arms = {a.get("label"): a for a in doc.get("arms", [])}
+        for label in CHAOS_ARMS:
+            if label not in arms:
+                errors.append(f"{stem}: arm {label!r} missing")
+        base = arms.get("baseline")
+        if base is None:
+            return errors
+        base_tail = _num(base, "tail_loss", errors, stem, "baseline")
+        if base_tail is None or base_tail <= 0:
+            errors.append(f"{stem}: baseline tail_loss unusable ({base_tail!r})")
+            return errors
+        # graceful degradation: churn/crash never blows the loss out of
+        # a bounded band of the fixed-group run
+        for label in CHAOS_ARMS[1:]:
+            arm = arms.get(label)
+            if arm is None:
+                continue
+            tail = _num(arm, "tail_loss", errors, stem, label)
+            if tail is not None and not tail <= base_tail * CHAOS_GRACEFUL_BAND:
+                errors.append(
+                    f"{stem}: {label} tail loss {tail} outside the "
+                    f"{CHAOS_GRACEFUL_BAND}x graceful-degradation band of "
+                    f"baseline {base_tail}"
+                )
+        # checkpointed rejoin: within a bounded gap of the uninterrupted
+        # run (the restore is bit-exact for the node's private state; the
+        # gap only reflects the steps it sat out)
+        rejoin = arms.get("crash-rejoin-ckpt")
+        if rejoin is not None:
+            tail = _num(rejoin, "tail_loss", errors, stem, "crash-rejoin-ckpt")
+            if tail is not None and not abs(tail - base_tail) <= base_tail * CHAOS_REJOIN_GAP:
+                errors.append(
+                    f"{stem}: crash-rejoin-ckpt tail loss {tail} more than "
+                    f"{CHAOS_REJOIN_GAP:.0%} away from baseline {base_tail}"
+                )
+            if rejoin.get("final_membership") != "1111":
+                errors.append(
+                    f"{stem}: crash-rejoin-ckpt did not end fully rejoined "
+                    f"(final_membership = {rejoin.get('final_membership')!r})"
+                )
     return errors
 
 
@@ -316,16 +392,20 @@ def self_test():
     # quick-flag mismatch skips the compare entirely
     assert compare("kernels", dict(k, quick=False), fresh_bad, 0.15) == ([], 0)
 
-    # straggler computed invariants: drop/partial must beat wait
+    # straggler computed invariants: drop/partial must beat wait, for
+    # degraded compute and for degraded NIC alike
     s = {
         "arms": [
             {"label": "severity4-wait", "sim_time_s": 10.0, "dropped_syncs": 0},
             {"label": "severity4-drop", "sim_time_s": 8.0, "dropped_syncs": 4},
             {"label": "severity4-partial", "sim_time_s": 8.5, "dropped_syncs": 4},
+            {"label": "nic4-wait", "sim_time_s": 9.0, "dropped_syncs": 0},
+            {"label": "nic4-drop", "sim_time_s": 7.0, "dropped_syncs": 3},
         ],
         "homogeneous_bit_identical_to_pr4_async": True,
         "drop_beats_wait_under_4x_straggler": True,
         "partial_beats_wait_under_4x_straggler": True,
+        "drop_beats_wait_under_4x_nic_straggler": True,
     }
     assert check_invariants("stragglers", s) == []
     s_bad = json.loads(json.dumps(s))
@@ -335,6 +415,49 @@ def self_test():
     s_missing = json.loads(json.dumps(s))
     del s_missing["arms"][2]["sim_time_s"]
     assert any("missing numeric field" in e for e in check_invariants("stragglers", s_missing))
+    # the NIC sweep gates too: a wait-beating drop arm is required, and
+    # the arms themselves must be present
+    s_nic = json.loads(json.dumps(s))
+    s_nic["arms"][4]["sim_time_s"] = 9.5
+    assert any("4x NIC" in e for e in check_invariants("stragglers", s_nic))
+    s_nic_gone = json.loads(json.dumps(s))
+    del s_nic_gone["arms"][3]
+    assert any("NIC-sweep arms missing" in e for e in check_invariants("stragglers", s_nic_gone))
+
+    # chaos: graceful-degradation band + bounded rejoin gap
+    c = {
+        "membership_masks_tracked": True,
+        "crash_checkpoint_stashed": True,
+        "arms": [
+            {"label": "baseline", "tail_loss": 1.0, "final_membership": ""},
+            {"label": "churn-mild", "tail_loss": 1.1, "final_membership": "1111"},
+            {"label": "churn-heavy", "tail_loss": 1.3, "final_membership": "1111"},
+            {"label": "crash-norejoin", "tail_loss": 1.2, "final_membership": "1011"},
+            {"label": "crash-rejoin-ckpt", "tail_loss": 1.1, "final_membership": "1111"},
+        ],
+    }
+    assert check_invariants("chaos", c) == []
+    # a churned arm outside the graceful band trips the gate
+    c_blown = json.loads(json.dumps(c))
+    c_blown["arms"][2]["tail_loss"] = 1.6
+    assert any("graceful-degradation band" in e for e in check_invariants("chaos", c_blown))
+    # a rejoin that lands too far from the uninterrupted run trips it
+    # (the band is tighter than graceful degradation: 0.5 vs 1.5x)
+    c_gap = json.loads(json.dumps(c))
+    c_gap["arms"][4]["tail_loss"] = 1.49
+    assert check_invariants("chaos", c_gap) == []
+    c_gap["arms"][4]["tail_loss"] = 1.51
+    assert any("away from baseline" in e for e in check_invariants("chaos", c_gap))
+    # ...and so does ending the run without the crasher re-admitted
+    c_down = json.loads(json.dumps(c))
+    c_down["arms"][4]["final_membership"] = "1011"
+    assert any("fully rejoined" in e for e in check_invariants("chaos", c_down))
+    # a missing arm or flipped bench-side boolean is a violation
+    c_gone = json.loads(json.dumps(c))
+    del c_gone["arms"][1]
+    assert any("churn-mild" in e for e in check_invariants("chaos", c_gone))
+    c_flag = dict(c, crash_checkpoint_stashed=False)
+    assert any("crash_checkpoint_stashed" in e for e in check_invariants("chaos", c_flag))
 
     # async_diloco: S >= 1 must be faster than sync, S = 0 bit-identical
     a = {
