@@ -159,7 +159,7 @@ fn main() -> Result<()> {
         .parent()
         .expect("repo root")
         .join("BENCH_async_diloco.json");
-    std::fs::write(&path, out.to_string_pretty())?;
+    detonation::util::atomic_write(&path, out.to_string_pretty().as_bytes())?;
     println!("wrote {}", path.display());
     Ok(())
 }

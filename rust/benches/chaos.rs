@@ -222,7 +222,7 @@ fn main() -> Result<()> {
         .parent()
         .expect("repo root")
         .join("BENCH_chaos.json");
-    std::fs::write(&path, out.to_string_pretty())?;
+    detonation::util::atomic_write(&path, out.to_string_pretty().as_bytes())?;
     println!("wrote {}", path.display());
     Ok(())
 }

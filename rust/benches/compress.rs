@@ -218,7 +218,7 @@ fn main() -> anyhow::Result<()> {
         .parent()
         .expect("repo root")
         .join("BENCH_compress.json");
-    std::fs::write(&path, out.to_string_pretty())?;
+    detonation::util::atomic_write(&path, out.to_string_pretty().as_bytes())?;
     println!("wrote {}", path.display());
     Ok(())
 }

@@ -104,7 +104,7 @@ fn main() -> anyhow::Result<()> {
         .parent()
         .expect("repo root")
         .join("BENCH_dct.json");
-    std::fs::write(&path, out_json.to_string_pretty())?;
+    detonation::util::atomic_write(&path, out_json.to_string_pretty().as_bytes())?;
     println!("wrote {}", path.display());
     Ok(())
 }

@@ -1,0 +1,215 @@
+//! Fault-injection bench: flaky links and self-healing transfers.
+//!
+//!     cargo bench --bench faults [-- --quick]
+//!
+//! On the chaos bench's 4×1 DiLoCo mesh (`diloco:4`, 200 Mbps), sweeps
+//! the `--link-fault` timeline across six arms:
+//!
+//! * `baseline` — perfect network, default retry knobs;
+//! * `faultfree` — an *empty* fault timeline but non-default retry
+//!   knobs: the self-healing machinery must be pure control flow when
+//!   unused (bit-identical losses and per-step sim times to baseline);
+//! * `drop5` — every link drops each attempt with p = 0.05 (the paper
+//!   regime of occasional loss absorbed by retries);
+//! * `retry` — heavy loss *and* corruption (p = 0.3 each) healed by the
+//!   default timeout/backoff retry lane;
+//! * `resend` — the same fault spec, but the retry timeout is one full
+//!   DiLoCo window: the naive "re-send with the next window" strawman.
+//!   Self-healing retries must finish strictly sooner in sim time;
+//! * `partition` — node 1's outbound links are down for the whole run
+//!   (`flap:1-*`) under `--quorum 3`: the run must complete with finite
+//!   losses via the quorum fallback, never deadlock.
+//!
+//! Asserted here (deterministic, seeded): the fault-free arm is
+//! bit-identical to baseline, faulted arms actually retry and detect
+//! corruption, and the partition arm finishes finite. The *bands* —
+//! drop5's tail loss within 1.5× of baseline and retry strictly beating
+//! resend per sim step — are written into `BENCH_faults.json` (schema:
+//! docs/BENCHMARKS.md) and enforced by `scripts/bench_gate.py`.
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::runtime;
+use detonation::metrics::RunMetrics;
+use detonation::util::fmt_secs;
+use detonation::util::json::Json;
+
+const PERIOD: u64 = 4;
+/// Tail window for the loss comparisons (steps).
+const TAIL: usize = 8;
+
+fn base_cfg(steps: u64) -> Result<ExperimentConfig> {
+    let mut c = ExperimentConfig {
+        model: "synthetic-lm".into(),
+        nodes: 4,
+        accels_per_node: 1,
+        steps,
+        lr: 0.02,
+        seed: 17,
+        val_every: steps, // validate once, at the end
+        val_batches: 8,
+        ..Default::default()
+    };
+    // A visibly throttled link so retries and degradation move the
+    // clock, not just the numerics.
+    c.apply_arg("inter-mbps", "200")?;
+    c.apply_arg("repl", &format!("diloco:{PERIOD}"))?;
+    Ok(c)
+}
+
+fn run(c: ExperimentConfig) -> Result<RunMetrics> {
+    let rt = runtime()?;
+    let mut t = detonation::train::Trainer::new(&rt, c)?;
+    let m = t.run()?;
+    anyhow::ensure!(
+        m.steps.iter().all(|r| r.loss.is_finite()),
+        "non-finite loss"
+    );
+    Ok(m)
+}
+
+fn row(label: &str, m: &RunMetrics) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(label.to_string())),
+        ("sim_time_s", Json::Num(m.total_sim_time())),
+        ("sim_step_s", Json::Num(m.mean_step_time())),
+        ("inter_bytes", Json::Num(m.total_inter_bytes() as f64)),
+        (
+            "tail_loss",
+            m.tail_loss(TAIL).map(Json::Num).unwrap_or(Json::Null),
+        ),
+        ("retries", Json::Num(m.total_retries() as f64)),
+        (
+            "corrupt_detected",
+            Json::Num(m.total_corrupt_detected() as f64),
+        ),
+    ])
+}
+
+/// Bit-level fingerprint of a run: per-step losses and sim times.
+fn bits(m: &RunMetrics) -> (Vec<u64>, Vec<u64>) {
+    (
+        m.steps.iter().map(|r| r.loss.to_bits()).collect(),
+        m.steps.iter().map(|r| r.sim_time.to_bits()).collect(),
+    )
+}
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps: u64 = if quick { 16 } else { 40 };
+
+    println!(
+        "{:<12} {:>12} {:>12} {:>10} {:>8} {:>8}",
+        "arm", "t/step", "total", "tail", "retries", "corrupt"
+    );
+    let print_row = |label: &str, m: &RunMetrics| {
+        println!(
+            "{:<12} {:>12} {:>12} {:>10.4} {:>8} {:>8}",
+            label,
+            fmt_secs(m.mean_step_time()),
+            fmt_secs(m.total_sim_time()),
+            m.tail_loss(TAIL).unwrap_or(f64::NAN),
+            m.total_retries(),
+            m.total_corrupt_detected(),
+        );
+    };
+
+    // baseline: perfect network
+    let base = run(base_cfg(steps)?)?;
+    print_row("baseline", &base);
+    assert_eq!(base.total_retries(), 0, "retries on a perfect network");
+    assert_eq!(base.total_corrupt_detected(), 0);
+    assert!(base.steps.iter().all(|r| r.faulted_links == 0));
+
+    // faultfree: empty timeline + non-default retry knobs must be inert
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("max-retries", "5")?;
+    cfg.apply_arg("retry-timeout", "0.5")?;
+    cfg.apply_arg("retry-backoff", "0.2")?;
+    let faultfree = run(cfg)?;
+    print_row("faultfree", &faultfree);
+    let faultfree_identical = bits(&base) == bits(&faultfree);
+    assert!(
+        faultfree_identical,
+        "an empty --link-fault changed the schedule or the numerics"
+    );
+
+    // drop5: 5% per-attempt loss on every link, healed by retries
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("link-fault", "drop:*-*@p0.05")?;
+    let drop5 = run(cfg)?;
+    print_row("drop5", &drop5);
+    assert!(drop5.total_retries() > 0, "5% loss never retried");
+    assert!(drop5.steps.iter().all(|r| r.faulted_links == 12));
+
+    // retry vs resend: identical heavy loss + corruption, default
+    // timeout/backoff vs a timeout of one full DiLoCo window (the naive
+    // "re-send it with the next window" strawman).
+    const FLAKY: &str = "drop:*-*@p0.3,corrupt:*-*@p0.3";
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("link-fault", FLAKY)?;
+    let retry = run(cfg)?;
+    print_row("retry", &retry);
+    assert!(retry.total_retries() > 0);
+    assert!(
+        retry.total_corrupt_detected() > 0,
+        "corruption never detected at decode"
+    );
+
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("link-fault", FLAKY)?;
+    cfg.retry_timeout = PERIOD as f64 * base.mean_step_time();
+    let resend = run(cfg)?;
+    print_row("resend", &resend);
+    let retry_beats_resend = retry.total_sim_time() < resend.total_sim_time()
+        && retry.mean_step_time() < resend.mean_step_time();
+    assert!(
+        retry_beats_resend,
+        "timeout/backoff retries did not beat window-scale re-sends: {} vs {}",
+        retry.total_sim_time(),
+        resend.total_sim_time()
+    );
+
+    // partition: node 1 unreachable all run; quorum finalizes without it
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("link-fault", &format!("flap:1-*@0..{steps}"))?;
+    cfg.quorum = 3;
+    let partition = run(cfg)?;
+    print_row("partition", &partition);
+    let partition_completed = partition.steps.len() == steps as usize
+        && partition.total_sim_time().is_finite();
+    assert!(partition_completed, "partitioned run did not complete");
+    assert!(partition.steps.iter().all(|r| r.faulted_links == 3));
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("faults".into())),
+        ("model", Json::Str("synthetic-lm".into())),
+        ("mesh", Json::Str("4x1".into())),
+        ("period", Json::Num(PERIOD as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("tail_window", Json::Num(TAIL as f64)),
+        ("quick", Json::Bool(quick)),
+        ("faultfree_identical", Json::Bool(faultfree_identical)),
+        ("retry_beats_resend", Json::Bool(retry_beats_resend)),
+        ("partition_completed", Json::Bool(partition_completed)),
+        (
+            "arms",
+            Json::Arr(vec![
+                row("baseline", &base),
+                row("faultfree", &faultfree),
+                row("drop5", &drop5),
+                row("retry", &retry),
+                row("resend", &resend),
+                row("partition", &partition),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_faults.json");
+    detonation::util::atomic_write(&path, out.to_string_pretty().as_bytes())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

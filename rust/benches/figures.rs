@@ -254,7 +254,7 @@ fn fig7(rt: &Runtime) -> Result<()> {
         );
         render_all.push_str(&format!("{label}\n{rendered}\n"));
     }
-    std::fs::write(out.join("traffic.txt"), render_all)?;
+    detonation::util::atomic_write(&out.join("traffic.txt"), render_all.as_bytes())?;
     println!("  [paper App. A: FlexDeMo keeps expensive traffic intra-node, one gather per node]");
     Ok(())
 }

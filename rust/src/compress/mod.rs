@@ -120,6 +120,30 @@ impl Payload {
         }
     }
 
+    /// CRC-32 over the payload's wire image (index block, then value
+    /// block) — the cheap end-to-end integrity check the self-healing
+    /// transfer layer verifies at decode. Any single-bit corruption of
+    /// the wire bytes is guaranteed detected (CRC property), so a
+    /// corrupted transfer is retried instead of silently averaged into
+    /// the model.
+    pub fn checksum(&self) -> u32 {
+        crate::util::crc32(&self.wire_image())
+    }
+
+    /// The exact byte sequence this payload puts on the wire (index
+    /// block, then value block) — what [`Self::checksum`] covers, and
+    /// what the fault layer flips bits of to model corruption.
+    pub fn wire_image(&self) -> Vec<u8> {
+        let mut wire = Vec::with_capacity(self.wire_bytes() as usize);
+        if let Some(ix) = &self.indices {
+            for &i in ix {
+                wire.extend_from_slice(&i.to_le_bytes());
+            }
+        }
+        wire.extend_from_slice(&self.encode_values());
+        wire
+    }
+
     /// Decode a value block produced by `encode_values`.
     pub fn decode_values(bytes: &[u8], n: usize, dtype: Dtype, sign_packed: bool) -> Vec<f32> {
         if sign_packed {
@@ -314,6 +338,31 @@ mod tests {
         let packed = pack_ternary(&vals);
         assert_eq!(packed.len(), 3); // ceil(9/4)
         assert_eq!(unpack_ternary(&packed, 9), vals);
+    }
+
+    #[test]
+    fn payload_checksum_detects_wire_corruption() {
+        let p = Payload::new(Some(vec![3, 9, 11]), vec![0.5, -2.0, 1.25], Dtype::F32, false);
+        // stable across calls, sensitive to every field on the wire
+        assert_eq!(p.checksum(), p.checksum());
+        let mut q = p.clone();
+        q.values[1] = -2.5;
+        assert_ne!(p.checksum(), q.checksum());
+        let mut q = p.clone();
+        q.indices.as_mut().unwrap()[0] = 4;
+        assert_ne!(p.checksum(), q.checksum());
+        // a single flipped bit anywhere in the encoded value block is
+        // detected (what the corrupt fault injects)
+        let wire = p.encode_values();
+        let base = crate::util::crc32(&wire);
+        for byte in 0..wire.len() {
+            let mut flipped = wire.clone();
+            flipped[byte] ^= 0x10;
+            assert_ne!(crate::util::crc32(&flipped), base, "flip at byte {byte}");
+        }
+        // packed ternary payloads checksum their packed image
+        let t = Payload::new(None, vec![1.0, -1.0, 0.0, 1.0], Dtype::F32, true).with_packing();
+        assert_eq!(t.checksum(), crate::util::crc32(&t.encode_values()));
     }
 
     #[test]

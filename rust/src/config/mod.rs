@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use crate::net::{ClusterModel, MembershipTimeline, NetModel};
+use crate::net::{ClusterModel, FaultTimeline, MembershipTimeline, NetModel};
 use crate::optim::OptSpec;
 use crate::replicate::{LatePolicy, ReplSpec};
 use crate::util::json::Json;
@@ -76,6 +76,19 @@ pub struct ExperimentConfig {
     /// completed sync window, and restore crashed nodes from it on
     /// rejoin (None = off).
     pub checkpoint_dir: Option<PathBuf>,
+    /// Deterministic link-fault timeline (`--link-fault`; empty = the
+    /// perfect network, bit-identical to the pre-fault path).
+    pub link_fault: FaultTimeline,
+    /// `--max-retries`: attempts re-charged on the NIC timeline before a
+    /// failed/corrupt transfer gives up and falls back to the
+    /// late-arrival machinery.
+    pub max_retries: u32,
+    /// `--retry-timeout`: sim-seconds a sender waits on a failed attempt
+    /// before re-charging the transfer.
+    pub retry_timeout: f64,
+    /// `--retry-backoff`: base of the capped exponential backoff added
+    /// per retry attempt (sim-seconds; cap is 8x the base).
+    pub retry_backoff: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -108,6 +121,10 @@ impl Default for ExperimentConfig {
             membership: MembershipTimeline::new(),
             quorum: 0,
             checkpoint_dir: None,
+            link_fault: FaultTimeline::new(),
+            max_retries: 3,
+            retry_timeout: 0.1,
+            retry_backoff: 0.05,
         }
     }
 }
@@ -233,6 +250,15 @@ impl ExperimentConfig {
     /// trainer construction, once mesh shape and step count are final.
     pub fn validate_elastic(&self) -> anyhow::Result<()> {
         self.membership.validate(self.nodes, self.steps)?;
+        self.link_fault.validate(self.nodes)?;
+        anyhow::ensure!(
+            self.retry_timeout.is_finite() && self.retry_timeout >= 0.0,
+            "--retry-timeout must be a finite non-negative sim-time"
+        );
+        anyhow::ensure!(
+            self.retry_backoff.is_finite() && self.retry_backoff >= 0.0,
+            "--retry-backoff must be a finite non-negative sim-time"
+        );
         if self.quorum > 0 {
             anyhow::ensure!(
                 self.quorum <= self.nodes,
@@ -313,6 +339,10 @@ impl ExperimentConfig {
                         .unwrap_or_default(),
                 ),
             ),
+            ("link_fault", Json::Str(self.link_fault.render())),
+            ("max_retries", Json::Num(self.max_retries as f64)),
+            ("retry_timeout", Json::Num(self.retry_timeout)),
+            ("retry_backoff", Json::Num(self.retry_backoff)),
             (
                 "stragglers",
                 Json::Arr(self.cluster.slowdown.iter().map(|&s| Json::Num(s)).collect()),
@@ -459,6 +489,22 @@ impl ExperimentConfig {
                 } else {
                     Some(value.into())
                 };
+            }
+            // Link faults: repeated flags append to one timeline, so
+            // drop/corrupt/flap/degrade specs compose. Syntax errors
+            // surface here; endpoint validation against the mesh happens
+            // at trainer construction (validate_elastic).
+            "link-fault" => self.link_fault.add_spec(value)?,
+            "max-retries" => self.max_retries = value.parse()?,
+            "retry-timeout" => {
+                let t: f64 = value.parse()?;
+                anyhow::ensure!(t >= 0.0 && t.is_finite(), "retry-timeout must be >= 0");
+                self.retry_timeout = t;
+            }
+            "retry-backoff" => {
+                let b: f64 = value.parse()?;
+                anyhow::ensure!(b >= 0.0 && b.is_finite(), "retry-backoff must be >= 0");
+                self.retry_backoff = b;
             }
             other => anyhow::bail!("unknown config key {other:?}"),
         }
@@ -641,6 +687,48 @@ mod tests {
         assert!(j.get("membership").unwrap().as_str().unwrap().contains("crash:1@20"));
         assert_eq!(j.get("quorum").unwrap().as_usize(), Some(1));
         assert!(j.get("checkpoint_dir").is_some());
+    }
+
+    #[test]
+    fn link_fault_knobs() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.link_fault.is_empty());
+        assert_eq!(c.max_retries, 3);
+        c.validate_elastic().unwrap(); // defaults always pass
+
+        // repeated flags compose into one timeline
+        c.apply_arg("link-fault", "drop:0-1@p0.05").unwrap();
+        c.apply_arg("link-fault", "flap:1-0@4..8,degrade:0-*@0.5x").unwrap();
+        assert_eq!(
+            c.link_fault.render(),
+            "drop:0-1@p0.05,flap:1-0@4..8,degrade:0-*@0.5x"
+        );
+        c.validate_elastic().unwrap();
+        // semantic errors surface at validate time, with the mesh known
+        c.apply_arg("link-fault", "corrupt:5-0@p0.5").unwrap();
+        assert!(c.validate_elastic().is_err()); // node 5 out of range
+        // syntax errors surface at parse time
+        assert!(c.apply_arg("link-fault", "melt:0-1@p0.5").is_err());
+        assert!(c.apply_arg("link-fault", "drop:0-1@0.5").is_err()); // missing 'p'
+
+        // retry knobs parse and reject nonsense
+        c.apply_arg("max-retries", "5").unwrap();
+        assert_eq!(c.max_retries, 5);
+        assert!(c.apply_arg("max-retries", "-1").is_err());
+        c.apply_arg("retry-timeout", "0.25").unwrap();
+        assert_eq!(c.retry_timeout, 0.25);
+        assert!(c.apply_arg("retry-timeout", "-0.1").is_err());
+        assert!(c.apply_arg("retry-timeout", "nan").is_err());
+        c.apply_arg("retry-backoff", "0.02").unwrap();
+        assert_eq!(c.retry_backoff, 0.02);
+        assert!(c.apply_arg("retry-backoff", "inf").is_err());
+
+        // all four knobs serialize
+        let j = c.to_json();
+        assert!(j.get("link_fault").unwrap().as_str().unwrap().contains("flap:1-0@4..8"));
+        assert_eq!(j.get("max_retries").unwrap().as_usize(), Some(5));
+        assert!(j.get("retry_timeout").is_some());
+        assert!(j.get("retry_backoff").is_some());
     }
 
     #[test]

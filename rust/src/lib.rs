@@ -64,6 +64,17 @@
 //!   every window-quiescent step so a crashed node rejoins from its
 //!   stash bit-identically — an empty timeline is bit-inert
 //!   (prop-tested);
+//! * links are **fallible** ([`net::FaultTimeline`]): a seeded
+//!   `--link-fault` spec drops, corrupts, flaps, or degrades individual
+//!   directed links, payload checksums catch corruption at decode, and
+//!   the engine's retry lane re-charges failed transfers with
+//!   per-attempt timeout plus capped exponential backoff
+//!   (`--max-retries`/`--retry-timeout`/`--retry-backoff`); an
+//!   exhausted sender falls back through `--late-policy`/`--quorum`, so
+//!   a persistent partition degrades instead of deadlocking — every
+//!   fault decision is a pure hash of (seed, step, attempt, link), so
+//!   faulted runs are bit-reproducible and an empty spec is bit-inert
+//!   (both prop-tested);
 //! * metrics split each step into compute vs exposed-comm vs hidden-comm
 //!   on the critical rank (`results/*.steps.csv` columns).
 //!

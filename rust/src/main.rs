@@ -139,6 +139,35 @@ fn train_parser() -> ArgParser {
              window-quiescent step; crashes stash it for checkpointed \
              rejoin, and restore is bit-identical to the uninterrupted run",
         )
+        .opt(
+            "link-fault",
+            "",
+            "deterministic link-fault timeline, KIND:SRC-DST@PARAM[,..] \
+             with KIND = drop|corrupt (@pP, fault probability per \
+             attempt), flap (@A..B, link dead for steps A..B), degrade \
+             (@Fx, link runs at F times bandwidth); '*' wildcards an \
+             endpoint (e.g. 'drop:0-2@p0.05,flap:2-0@40..90'); failed or \
+             corrupt transfers retry with timeout+backoff, all \
+             deterministic from --seed",
+        )
+        .opt(
+            "max-retries",
+            "3",
+            "retry attempts for a failed/corrupt transfer before the \
+             sender is treated as late under --late-policy",
+        )
+        .opt(
+            "retry-timeout",
+            "0.1",
+            "sim-seconds a sender waits on a failed attempt before \
+             re-charging the transfer on the NIC",
+        )
+        .opt(
+            "retry-backoff",
+            "0.05",
+            "base of the capped exponential backoff added per retry \
+             (sim-seconds; cap = 8x base)",
+        )
         .flag("no-overlap", "serialize phases (legacy barrier clock)")
         .opt("name", "cli", "experiment name (results/<name>/)")
 }
@@ -176,10 +205,14 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         "churn",
         "crash",
         "checkpoint-dir",
+        "link-fault",
     ] {
         if !args.str(key).is_empty() {
             cfg.apply_arg(key, args.str(key))?;
         }
+    }
+    for key in ["max-retries", "retry-timeout", "retry-backoff"] {
+        cfg.apply_arg(key, args.str(key))?;
     }
     if args.str("quorum") != "0" {
         cfg.apply_arg("quorum", args.str("quorum"))?;

@@ -50,6 +50,15 @@ pub struct StepRow {
     /// per node in node order (e.g. `"1011"` = node 1 down). Empty when
     /// the run has no membership timeline (`--churn`/`--crash` unused).
     pub membership: String,
+    /// Retry attempts charged on the NIC this step (`--link-fault` +
+    /// `--max-retries` self-healing lane; 0 on a perfect network).
+    pub retries: u64,
+    /// Corrupt deliveries caught by the payload checksum this step
+    /// (each was retried instead of averaged into the model).
+    pub corrupt_detected: u64,
+    /// Directed links with at least one fault rule active at this step
+    /// (`--link-fault`; wildcards expand over the mesh).
+    pub faulted_links: u64,
     /// Real wall time spent computing this step (profiling only).
     pub wall_time: f64,
 }
@@ -130,6 +139,18 @@ impl RunMetrics {
             .sum()
     }
 
+    /// Total retry attempts across the run (the `retries` column; 0
+    /// without `--link-fault`).
+    pub fn total_retries(&self) -> u64 {
+        self.steps.iter().map(|r| r.retries).sum()
+    }
+
+    /// Total checksum-caught corrupt deliveries across the run (the
+    /// `corrupt_detected` column).
+    pub fn total_corrupt_detected(&self) -> u64 {
+        self.steps.iter().map(|r| r.corrupt_detected).sum()
+    }
+
     /// Mean simulated time per step.
     pub fn mean_step_time(&self) -> f64 {
         if self.steps.is_empty() {
@@ -153,12 +174,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
         writeln!(
             f,
-            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,node_staleness,sync_in_flight,dropped_syncs,membership,wall_time"
+            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,node_staleness,sync_in_flight,dropped_syncs,membership,retries,corrupt_detected,faulted_links,wall_time"
         )?;
         for r in &self.steps {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{},{:.6}",
+                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{},{:.6}",
                 r.step,
                 r.sim_time,
                 r.loss,
@@ -173,6 +194,9 @@ impl RunMetrics {
                 r.sync_in_flight,
                 r.dropped_syncs,
                 r.membership,
+                r.retries,
+                r.corrupt_detected,
+                r.faulted_links,
                 r.wall_time
             )?;
         }
@@ -285,6 +309,9 @@ mod tests {
                 sync_in_flight: 0,
                 dropped_syncs: if s % 2 == 0 { "1;0".into() } else { String::new() },
                 membership: if s % 2 == 0 { "10".into() } else { String::new() },
+                retries: if s % 3 == 0 { 2 } else { 0 },
+                corrupt_detected: if s % 5 == 0 { 1 } else { 0 },
+                faulted_links: 1,
                 wall_time: 0.01,
             });
         }
@@ -305,6 +332,9 @@ mod tests {
         // per-node dropped column sums across steps and nodes (empty
         // cells — inactive straggler path — count as zero)
         assert_eq!(m.total_dropped_syncs(), 5);
+        // fault columns aggregate the same way
+        assert_eq!(m.total_retries(), 8);
+        assert_eq!(m.total_corrupt_detected(), 2);
         assert!((m.total_sim_time() - 5.0).abs() < 1e-9);
         assert!((m.mean_step_time() - 0.5).abs() < 1e-9);
         let t = m.tail_loss(3).unwrap();
@@ -319,6 +349,11 @@ mod tests {
         let text = std::fs::read_to_string(dir.join("a-b.steps.csv")).unwrap();
         assert!(text.starts_with("step,"));
         assert!(text.lines().next().unwrap().contains("exposed_comm,hidden_comm"));
+        assert!(text
+            .lines()
+            .next()
+            .unwrap()
+            .contains("retries,corrupt_detected,faulted_links"));
         assert_eq!(text.lines().count(), 6);
         // every data row carries the full column set
         let cols = text.lines().next().unwrap().split(',').count();

@@ -718,6 +718,353 @@ pub fn membership_label(active: &[bool]) -> String {
     active.iter().map(|&a| if a { '1' } else { '0' }).collect()
 }
 
+/// What one simulated transfer attempt suffers on its way across the
+/// inter-node links (`--link-fault`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// The attempt crosses intact.
+    Delivered,
+    /// The attempt is lost in flight: the sender learns about it only
+    /// through its per-attempt timeout.
+    Dropped,
+    /// The attempt arrives bit-flipped: the receiver's payload checksum
+    /// catches it at decode and the sender retries.
+    Corrupted,
+}
+
+/// One `--link-fault` failure mode on one (possibly wildcarded) directed
+/// node-pair link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Each attempt is lost independently with probability `p`.
+    Drop { p: f64 },
+    /// Each attempt is bit-flipped independently with probability `p`.
+    Corrupt { p: f64 },
+    /// The link is fully down for steps in `[from, to)` — every attempt
+    /// during the window drops.
+    Flap { from: u64, to: u64 },
+    /// The link runs at `factor` of its nominal bandwidth (0 < factor
+    /// ≤ 1): every attempt's duration is divided by `factor`.
+    Degrade { factor: f64 },
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Drop { .. } => "drop",
+            FaultKind::Corrupt { .. } => "corrupt",
+            FaultKind::Flap { .. } => "flap",
+            FaultKind::Degrade { .. } => "degrade",
+        }
+    }
+}
+
+/// A [`FaultKind`] bound to a directed link: `None` endpoints are the
+/// spec's `*` wildcard ("any node").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    pub src: Option<usize>,
+    pub dst: Option<usize>,
+}
+
+impl FaultRule {
+    fn matches(&self, src: usize, dst: usize) -> bool {
+        self.src.is_none_or(|s| s == src) && self.dst.is_none_or(|d| d == dst)
+    }
+
+    /// Whether this rule can affect any transfer at `step` (flaps are
+    /// windowed; every other kind is permanent).
+    fn active_at(&self, step: u64) -> bool {
+        match self.kind {
+            FaultKind::Flap { from, to } => (from..to).contains(&step),
+            _ => true,
+        }
+    }
+}
+
+fn parse_fault_endpoint(s: &str) -> anyhow::Result<Option<usize>> {
+    let s = s.trim();
+    if s == "*" {
+        return Ok(None);
+    }
+    let node: usize = s
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad node {s:?} in link-fault entry: {e}"))?;
+    anyhow::ensure!(
+        node < MAX_SPEC_NODE,
+        "node index {node} out of range (max {MAX_SPEC_NODE})"
+    );
+    Ok(Some(node))
+}
+
+/// A deterministic link-fault timeline (`--link-fault`): which directed
+/// inter-node links drop, corrupt, flap, or degrade, and when.
+///
+/// Per-attempt fault decisions are pure functions of `(experiment seed,
+/// step, attempt, src, dst, rule index)` — no shared RNG stream is
+/// consumed — so faulted runs are bit-reproducible from the spec and the
+/// seed alone, and an empty timeline leaves the transfer schedule
+/// untouched (prop-tested bit-identical in the integration suite).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultTimeline {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultTimeline {
+    pub fn new() -> FaultTimeline {
+        FaultTimeline::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    /// Parse and append a `--link-fault` spec: comma-joined
+    /// `KIND:SRC-DST@PARAM` entries, e.g.
+    /// `drop:0-2@p0.05,corrupt:1-3@p0.01,flap:2-0@40..90,degrade:3-*@0.25x`.
+    /// Endpoints are node indices or `*`; parameters are `pP` (drop /
+    /// corrupt probability), `A..B` (flap step window), or `Fx`
+    /// (degrade bandwidth factor). Syntax is checked here; semantic
+    /// validity against a concrete mesh is checked by
+    /// [`FaultTimeline::validate`].
+    pub fn add_spec(&mut self, spec: &str) -> anyhow::Result<()> {
+        if spec.trim().is_empty() {
+            return Ok(());
+        }
+        for part in spec.split(',') {
+            let bad = || {
+                anyhow::anyhow!(
+                    "bad link-fault entry {part:?}, want KIND:SRC-DST@PARAM \
+                     (e.g. drop:0-2@p0.05, flap:2-0@40..90, degrade:3-*@0.25x)"
+                )
+            };
+            let (kind, rest) = part.split_once(':').ok_or_else(bad)?;
+            let (link, param) = rest.split_once('@').ok_or_else(bad)?;
+            let (src, dst) = link.split_once('-').ok_or_else(bad)?;
+            let src = parse_fault_endpoint(src)?;
+            let dst = parse_fault_endpoint(dst)?;
+            let param = param.trim();
+            let prob = |p: &str| -> anyhow::Result<f64> {
+                let p = p.strip_prefix('p').ok_or_else(|| {
+                    anyhow::anyhow!("bad probability {p:?} in {part:?}, want p0.05 style")
+                })?;
+                let p: f64 = p.parse()?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "probability {p} in {part:?} must be in [0, 1]"
+                );
+                Ok(p)
+            };
+            let kind = match kind.trim() {
+                "drop" => FaultKind::Drop { p: prob(param)? },
+                "corrupt" => FaultKind::Corrupt { p: prob(param)? },
+                "flap" => {
+                    let (from, to) = param.split_once("..").ok_or_else(|| {
+                        anyhow::anyhow!("bad flap window {param:?} in {part:?}, want A..B")
+                    })?;
+                    let from: u64 = from.trim().parse()?;
+                    let to: u64 = to.trim().parse()?;
+                    anyhow::ensure!(
+                        from < to,
+                        "flap window {from}..{to} in {part:?} is empty"
+                    );
+                    FaultKind::Flap { from, to }
+                }
+                "degrade" => {
+                    let f = param.strip_suffix('x').ok_or_else(|| {
+                        anyhow::anyhow!("bad degrade factor {param:?} in {part:?}, want 0.25x style")
+                    })?;
+                    let factor: f64 = f.parse()?;
+                    anyhow::ensure!(
+                        factor > 0.0 && factor <= 1.0,
+                        "degrade factor {factor} in {part:?} must be in (0, 1]"
+                    );
+                    FaultKind::Degrade { factor }
+                }
+                other => anyhow::bail!(
+                    "unknown link-fault kind {other:?} in {part:?} (drop|corrupt|flap|degrade)"
+                ),
+            };
+            self.rules.push(FaultRule { kind, src, dst });
+        }
+        Ok(())
+    }
+
+    /// Semantic validation against a concrete mesh: concrete endpoints
+    /// must name existing nodes, and a rule must not pin both endpoints
+    /// to the same node (there is no inter-node link from a node to
+    /// itself).
+    pub fn validate(&self, nodes: usize) -> anyhow::Result<()> {
+        for rule in &self.rules {
+            for endpoint in [rule.src, rule.dst].into_iter().flatten() {
+                anyhow::ensure!(
+                    endpoint < nodes,
+                    "link-fault rule {}: node {endpoint} out of range (cluster has {nodes} nodes)",
+                    self.render_rule(rule)
+                );
+            }
+            if let (Some(s), Some(d)) = (rule.src, rule.dst) {
+                anyhow::ensure!(
+                    s != d,
+                    "link-fault rule {}: src and dst are the same node (faults apply to \
+                     inter-node links only)",
+                    self.render_rule(rule)
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn render_rule(&self, rule: &FaultRule) -> String {
+        let ep = |e: Option<usize>| e.map_or("*".to_string(), |n| n.to_string());
+        let param = match rule.kind {
+            FaultKind::Drop { p } | FaultKind::Corrupt { p } => format!("p{p}"),
+            FaultKind::Flap { from, to } => format!("{from}..{to}"),
+            FaultKind::Degrade { factor } => format!("{factor}x"),
+        };
+        format!(
+            "{}:{}-{}@{}",
+            rule.kind.label(),
+            ep(rule.src),
+            ep(rule.dst),
+            param
+        )
+    }
+
+    /// Canonical spec string (round-trips through
+    /// [`FaultTimeline::add_spec`]).
+    pub fn render(&self) -> String {
+        self.rules
+            .iter()
+            .map(|r| self.render_rule(r))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Deterministic uniform draw in [0, 1) for one (rule, attempt, link)
+    /// decision — a pure hash of its coordinates, so fault decisions never
+    /// perturb any other RNG stream.
+    fn roll(seed: u64, step: u64, attempt: u32, src: usize, dst: usize, rule_ix: usize) -> f64 {
+        let h = seed
+            ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (attempt as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+            ^ (((src as u64) << 32) | dst as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)
+            ^ (rule_ix as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F);
+        let mut sm = crate::util::rng::SplitMix64::new(h);
+        (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// The fate of one transfer attempt from node `src` to the peer set
+    /// `dsts` at `(step, attempt)`. A transfer is lost if *any* traversed
+    /// link drops it (flap windows drop unconditionally) and corrupted if
+    /// any link flips it; loss takes precedence (a dropped attempt never
+    /// arrives to fail its checksum).
+    pub fn attempt_outcome(
+        &self,
+        seed: u64,
+        step: u64,
+        attempt: u32,
+        src: usize,
+        dsts: &[usize],
+    ) -> FaultOutcome {
+        if self.rules.is_empty() {
+            return FaultOutcome::Delivered;
+        }
+        let mut corrupted = false;
+        for &dst in dsts {
+            if dst == src {
+                continue;
+            }
+            for (ix, rule) in self.rules.iter().enumerate() {
+                if !rule.matches(src, dst) {
+                    continue;
+                }
+                match rule.kind {
+                    FaultKind::Drop { p } => {
+                        if p > 0.0 && Self::roll(seed, step, attempt, src, dst, ix) < p {
+                            return FaultOutcome::Dropped;
+                        }
+                    }
+                    FaultKind::Flap { .. } => {
+                        if rule.active_at(step) {
+                            return FaultOutcome::Dropped;
+                        }
+                    }
+                    FaultKind::Corrupt { p } => {
+                        if p > 0.0 && Self::roll(seed, step, attempt, src, dst, ix) < p {
+                            corrupted = true;
+                        }
+                    }
+                    FaultKind::Degrade { .. } => {}
+                }
+            }
+        }
+        if corrupted {
+            FaultOutcome::Corrupted
+        } else {
+            FaultOutcome::Delivered
+        }
+    }
+
+    /// Duration multiplier (≥ 1.0) for a transfer from `src` to `dsts` at
+    /// `step`: the worst degraded link on the path sets the pace (its
+    /// bandwidth factor divides into the nominal duration).
+    pub fn slowdown(&self, step: u64, src: usize, dsts: &[usize]) -> f64 {
+        let mut mult: f64 = 1.0;
+        for &dst in dsts {
+            if dst == src {
+                continue;
+            }
+            for rule in &self.rules {
+                if let FaultKind::Degrade { factor } = rule.kind {
+                    if rule.matches(src, dst) && rule.active_at(step) {
+                        mult = mult.max(1.0 / factor);
+                    }
+                }
+            }
+        }
+        mult
+    }
+
+    /// Whether any fault rule can affect a `src → dsts` transfer at
+    /// `step` (pre-check so the fault-free fast path skips per-attempt
+    /// bookkeeping entirely).
+    pub fn affects(&self, step: u64, src: usize, dsts: &[usize]) -> bool {
+        dsts.iter().any(|&dst| {
+            dst != src
+                && self
+                    .rules
+                    .iter()
+                    .any(|r| r.matches(src, dst) && r.active_at(step))
+        })
+    }
+
+    /// Number of distinct directed inter-node links with at least one
+    /// active fault rule at `step` (the steps-CSV `faulted_links`
+    /// column).
+    pub fn active_link_count(&self, step: u64, nodes: usize) -> u64 {
+        let mut count = 0u64;
+        for src in 0..nodes {
+            for dst in 0..nodes {
+                if src != dst
+                    && self
+                        .rules
+                        .iter()
+                        .any(|r| r.matches(src, dst) && r.active_at(step))
+                {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+}
+
 /// Monotone per-lane ready-times — the discrete-event substrate.
 ///
 /// One lane per (rank, resource); the engine keeps one `Timeline` for
@@ -1151,6 +1498,112 @@ mod tests {
         assert_eq!(tm2.inter_node_bytes(), 100);
         assert_eq!(tm2.intra_node_bytes(), 7);
         assert!(TrafficMatrix::new(3).restore(&snap).is_err());
+    }
+
+    #[test]
+    fn fault_timeline_parse_and_query() {
+        let mut t = FaultTimeline::new();
+        t.add_spec("drop:0-2@p0.05,corrupt:1-3@p0.01,flap:2-0@40..90,degrade:3-*@0.25x")
+            .unwrap();
+        assert!(!t.is_empty());
+        assert_eq!(t.rules().len(), 4);
+        t.validate(4).unwrap();
+        // canonical render round-trips
+        let mut t2 = FaultTimeline::new();
+        t2.add_spec(&t.render()).unwrap();
+        assert_eq!(t, t2);
+        // flap: link 2→0 is down exactly inside [40, 90)
+        for (step, down) in [(39, false), (40, true), (89, true), (90, false)] {
+            let out = t.attempt_outcome(7, step, 0, 2, &[0]);
+            assert_eq!(out == FaultOutcome::Dropped, down, "step {step}");
+        }
+        // degrade: 3→anything runs at 0.25× bandwidth (4× duration);
+        // untouched links stay nominal
+        assert_eq!(t.slowdown(0, 3, &[0, 1]), 4.0);
+        assert_eq!(t.slowdown(0, 1, &[0]), 1.0);
+        // the affects pre-check matches the rules
+        assert!(t.affects(0, 0, &[2]));
+        assert!(!t.affects(0, 0, &[1]));
+        assert!(t.affects(50, 2, &[0]));
+        // active link count: 0→2, 1→3, 3→{0,1,2} always; 2→0 only while
+        // flapping
+        assert_eq!(t.active_link_count(0, 4), 5);
+        assert_eq!(t.active_link_count(40, 4), 6);
+        // empty timeline: everything delivered, nothing slowed
+        let e = FaultTimeline::new();
+        assert!(e.is_empty());
+        e.validate(2).unwrap();
+        assert_eq!(e.attempt_outcome(7, 0, 0, 0, &[1]), FaultOutcome::Delivered);
+        assert_eq!(e.slowdown(0, 0, &[1]), 1.0);
+        assert_eq!(e.active_link_count(0, 4), 0);
+    }
+
+    #[test]
+    fn fault_decisions_are_deterministic_and_seed_sensitive() {
+        let mut t = FaultTimeline::new();
+        t.add_spec("drop:*-*@p0.5").unwrap();
+        // same coordinates → same outcome, every time
+        for step in 0..50 {
+            for attempt in 0..3 {
+                let a = t.attempt_outcome(11, step, attempt, 0, &[1]);
+                let b = t.attempt_outcome(11, step, attempt, 0, &[1]);
+                assert_eq!(a, b);
+            }
+        }
+        // p=0.5 actually fires sometimes and spares sometimes
+        let outcomes: Vec<FaultOutcome> =
+            (0..64).map(|s| t.attempt_outcome(11, s, 0, 0, &[1])).collect();
+        assert!(outcomes.contains(&FaultOutcome::Dropped));
+        assert!(outcomes.contains(&FaultOutcome::Delivered));
+        // a different seed draws a different pattern
+        let other: Vec<FaultOutcome> =
+            (0..64).map(|s| t.attempt_outcome(12, s, 0, 0, &[1])).collect();
+        assert_ne!(outcomes, other);
+        // attempts draw independently: a retry after a drop can succeed
+        let mut t1 = FaultTimeline::new();
+        t1.add_spec("drop:0-1@p1,corrupt:0-1@p1").unwrap();
+        // p = 1: always dropped (loss shadows corruption)
+        assert_eq!(t1.attempt_outcome(3, 0, 0, 0, &[1]), FaultOutcome::Dropped);
+        let mut t2 = FaultTimeline::new();
+        t2.add_spec("corrupt:0-1@p1").unwrap();
+        assert_eq!(t2.attempt_outcome(3, 0, 0, 0, &[1]), FaultOutcome::Corrupted);
+        // p = 0 never fires
+        let mut t0 = FaultTimeline::new();
+        t0.add_spec("drop:0-1@p0").unwrap();
+        for s in 0..32 {
+            assert_eq!(t0.attempt_outcome(3, s, 0, 0, &[1]), FaultOutcome::Delivered);
+        }
+    }
+
+    #[test]
+    fn fault_timeline_rejects_malformed_and_semantic_errors() {
+        let parse = |spec: &str| {
+            let mut t = FaultTimeline::new();
+            t.add_spec(spec).map(|()| t)
+        };
+        // syntax
+        assert!(parse("nope").is_err());
+        assert!(parse("evaporate:0-1@p0.5").is_err());
+        assert!(parse("drop:0-1").is_err());
+        assert!(parse("drop:01@p0.5").is_err());
+        assert!(parse("drop:0-1@0.5").is_err()); // missing 'p'
+        assert!(parse("drop:0-1@p1.5").is_err()); // p out of range
+        assert!(parse("flap:0-1@90..40").is_err()); // empty window
+        assert!(parse("flap:0-1@40").is_err());
+        assert!(parse("degrade:0-1@0.25").is_err()); // missing 'x'
+        assert!(parse("degrade:0-1@0x").is_err()); // factor out of range
+        assert!(parse("degrade:0-1@2x").is_err());
+        assert!(parse("drop:4000000000-1@p0.5").is_err());
+        // empty specs are no-ops
+        let t = parse("  ").unwrap();
+        assert!(t.is_empty());
+        // semantics against the mesh
+        let t = parse("drop:0-7@p0.5").unwrap();
+        assert!(t.validate(4).is_err());
+        let t = parse("drop:1-1@p0.5").unwrap();
+        assert!(t.validate(4).is_err());
+        let t = parse("drop:*-1@p0.5,degrade:1-*@0.5x").unwrap();
+        t.validate(4).unwrap();
     }
 
     #[test]

@@ -15,10 +15,14 @@
 //! The encoding is deliberately boring: little-endian fixed-width
 //! primitives behind tiny bounds-checked writer/reader helpers (floats
 //! travel as raw IEEE bits — quantized payload values must not be
-//! re-quantized on the way back in). Saves are atomic
-//! (`latest.ckpt.tmp` + rename), so a crash mid-save never corrupts the
-//! previous checkpoint — which is exactly the file a crashed node's
-//! rejoin reads ([`Trainer::restore_node_from_checkpoint`]).
+//! re-quantized on the way back in). Version 2 appends a CRC-32 of
+//! everything before it, verified up front at decode, so a truncated or
+//! bit-flipped file is rejected with one actionable error instead of a
+//! parse failure deep in the body. Saves are atomic
+//! ([`crate::util::atomic_write`]: temp file + rename), so a crash
+//! mid-save never corrupts the previous checkpoint — which is exactly
+//! the file a crashed node's rejoin reads
+//! ([`Trainer::restore_node_from_checkpoint`]).
 
 use std::path::{Path, PathBuf};
 
@@ -35,7 +39,7 @@ use super::engine::EngineState;
 use super::{PendingSync, Trainer};
 
 const MAGIC: &[u8; 8] = b"DTNCKPT1";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// The config facets a checkpoint must agree on to be restorable: the
 /// state vectors below are only meaningful on the same model/mesh/
@@ -453,6 +457,24 @@ fn decode(bytes: &[u8], expect_fp: &str, world: usize) -> Result<CkptData> {
         version == VERSION,
         "checkpoint version {version} not supported (this build reads {VERSION})"
     );
+    // Magic + version parse first so a genuinely-old file gets the
+    // version error above; everything after them is only trusted once
+    // the trailing CRC-32 (over all preceding bytes) checks out.
+    anyhow::ensure!(
+        bytes.len() >= r.pos + 4,
+        "checkpoint truncated: no room for the trailing CRC-32"
+    );
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().unwrap());
+    let computed = crate::util::crc32(body);
+    anyhow::ensure!(
+        stored == computed,
+        "checkpoint corrupt or truncated: CRC-32 mismatch (file says \
+         {stored:#010x}, contents hash to {computed:#010x}) — the file \
+         was damaged after it was written; restore from an older \
+         checkpoint or re-copy it"
+    );
+    let mut r = R { b: body, pos: r.pos };
     let fp = r.string()?;
     anyhow::ensure!(
         fp == expect_fp,
@@ -492,10 +514,9 @@ fn decode(bytes: &[u8], expect_fp: &str, world: usize) -> Result<CkptData> {
 
 impl Trainer {
     /// Serialize the full trainer state into `dir/latest.ckpt`
-    /// (atomically: temp file + rename). Returns the written path.
+    /// (atomically: temp file + rename), with a trailing CRC-32 over
+    /// the whole encoding. Returns the written path.
     pub fn save_checkpoint(&self, dir: &Path) -> Result<PathBuf> {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
         let mut w = W::new();
         w.buf.extend_from_slice(MAGIC);
         w.u32(VERSION);
@@ -521,13 +542,12 @@ impl Trainer {
         w.u64s(&self.traffic.snapshot());
         w.u64(self.last_inter);
         w.u64(self.last_intra);
+        let crc = crate::util::crc32(&w.buf);
+        w.u32(crc);
 
-        let tmp = dir.join("latest.ckpt.tmp");
         let path = dir.join("latest.ckpt");
-        std::fs::write(&tmp, &w.buf)
-            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        crate::util::atomic_write(&path, &w.buf)
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
         Ok(path)
     }
 

@@ -102,7 +102,10 @@
 //! construction (tested in `tests/integration.rs`).
 
 use crate::collectives::{ring_all_gather_event, ring_reduce_scatter_event, CommEvent, Link};
-use crate::net::{ClusterModel, LinkClass, NetModel, SimTime, Timeline, Topology, TrafficMatrix};
+use crate::net::{
+    ClusterModel, FaultOutcome, FaultTimeline, LinkClass, NetModel, SimTime, Timeline, Topology,
+    TrafficMatrix,
+};
 use crate::replicate::GatherMode;
 
 /// Fraction of a step's compute spent in the forward pass (fwd:bwd ≈ 1:2,
@@ -125,6 +128,40 @@ pub struct StepTiming {
 /// Hard cap on buckets per phase — bounds event-count blowup when the
 /// bucket size is tiny relative to the payload.
 const MAX_BUCKETS: u64 = 32;
+
+/// The self-healing transfer knobs (`--link-fault` + retry flags),
+/// handed to the engine at trainer construction. The retry lane
+/// re-charges a failed/corrupt per-member transfer on the NIC timeline
+/// after `retry_timeout` plus a capped exponential backoff
+/// (`retry_backoff · 2^attempt`, capped at [`BACKOFF_CAP`]× the base) —
+/// all sim-time, fully deterministic from `seed`.
+#[derive(Clone, Debug)]
+pub struct FaultLane {
+    pub timeline: FaultTimeline,
+    pub seed: u64,
+    pub max_retries: u32,
+    pub retry_timeout: f64,
+    pub retry_backoff: f64,
+}
+
+/// Exponential-backoff cap, as a multiple of the backoff base.
+pub const BACKOFF_CAP: f64 = 8.0;
+
+/// What the fault lane did to one member's transfer in a
+/// [`StepEngine::gather_deferred_per_member`] call — the trainer reads
+/// these (via [`StepEngine::last_member_faults`]) to count retries,
+/// verify detected corruption against the payload checksum, and route
+/// exhausted senders through the late-arrival machinery.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemberFault {
+    /// Extra attempts charged on the NIC beyond the first.
+    pub retries: u32,
+    /// Attempts that delivered corrupted bytes (caught by checksum).
+    pub corrupt: u32,
+    /// False = `max_retries` exhausted; the contribution never lands
+    /// (its completion is +∞) and falls back to `--late-policy`.
+    pub delivered: bool,
+}
 
 /// A [`StepEngine`]'s full scheduling state at a step boundary —
 /// everything a checkpointed rank needs to continue bit-identically
@@ -182,6 +219,17 @@ pub struct StepEngine {
     pub events: Vec<CommEvent>,
     next_event_id: u64,
     last_nic_event: Vec<Option<u64>>,
+    /// Link-fault model + retry knobs (None = the perfect network; every
+    /// transfer delivers first try, bit-identical to the pre-fault path).
+    fault: Option<FaultLane>,
+    /// Step index the fault timeline is consulted at (trainer-set).
+    fault_step: u64,
+    /// Per-step fault counters (reset by `begin_step`).
+    step_retries: u64,
+    step_corrupts: u64,
+    /// Per-member fault reports of the *last*
+    /// `gather_deferred_per_member` call (parallel to its return value).
+    last_member_faults: Vec<MemberFault>,
     // per-step bookkeeping
     step_start_horizon: SimTime,
     step_compute_busy0: Vec<f64>,
@@ -214,6 +262,11 @@ impl StepEngine {
             events: Vec::new(),
             next_event_id: 0,
             last_nic_event: vec![None; world],
+            fault: None,
+            fault_step: 0,
+            step_retries: 0,
+            step_corrupts: 0,
+            last_member_faults: Vec::new(),
             step_start_horizon: 0.0,
             step_compute_busy0: vec![0.0; world],
             step_fabric_busy0: vec![0.0; world],
@@ -229,6 +282,33 @@ impl StepEngine {
     pub fn with_buckets(mut self, bucket_bytes: u64) -> StepEngine {
         self.bucket_bytes = bucket_bytes;
         self
+    }
+
+    /// Builder: arm the link-fault model + retry lane (`--link-fault`).
+    /// An empty timeline is normalized to `None`, so the fault-free spec
+    /// is bit-identical to never calling this.
+    pub fn with_faults(mut self, lane: FaultLane) -> StepEngine {
+        self.fault = if lane.timeline.is_empty() { None } else { Some(lane) };
+        self
+    }
+
+    /// Announce the step index fault decisions are drawn at (the trainer
+    /// calls this at the top of each step; a no-op without faults).
+    pub fn set_fault_step(&mut self, step: u64) {
+        self.fault_step = step;
+    }
+
+    /// This step's fault counters so far: (retry attempts charged,
+    /// corrupt deliveries detected). Reset by [`Self::begin_step`].
+    pub fn step_fault_counts(&self) -> (u64, u64) {
+        (self.step_retries, self.step_corrupts)
+    }
+
+    /// Per-member fault reports of the last
+    /// [`Self::gather_deferred_per_member`] call, parallel to the
+    /// completion times it returned. Empty when no faults were armed.
+    pub fn last_member_faults(&self) -> &[MemberFault] {
+        &self.last_member_faults
     }
 
     pub fn overlap(&self) -> bool {
@@ -370,6 +450,8 @@ impl StepEngine {
         self.events.clear();
         self.step_gather_max = 0.0;
         self.gather_phase_start = None;
+        self.step_retries = 0;
+        self.step_corrupts = 0;
         self.step_start_horizon = self.now();
         for r in 0..self.world() {
             self.step_compute_busy0[r] = self.compute.busy(r);
@@ -646,6 +728,10 @@ impl StepEngine {
         };
         let mut ends = vec![0.0f64; g];
         let mut max_dur = 0.0f64;
+        let fault = self.fault.clone();
+        let member_nodes: Vec<usize> = group.iter().map(|&r| self.topo.node_of(r)).collect();
+        self.last_member_faults.clear();
+        self.last_member_faults.resize(g, MemberFault { delivered: true, ..Default::default() });
         for (i, &rank) in group.iter().enumerate() {
             let node = self.topo.node_of(rank);
             let link = Link {
@@ -671,12 +757,78 @@ impl StepEngine {
             }
             .owned_by(node);
             ev.label = "async-gather";
-            max_dur = max_dur.max(ev.duration);
             let earliest = h.unwrap_or(self.rs_done[rank]);
-            let deps = self.nic_deps(&[rank]);
-            let (start, end) = self.nic.reserve(rank, earliest, ev.duration);
+            // The sender's destinations are every *other* member's node
+            // — the links the fault timeline judges this transfer on.
+            let dsts: Vec<usize> = member_nodes
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .map(|(_, &n)| n)
+                .collect();
+            let faulted = fault
+                .as_ref()
+                .filter(|f| f.timeline.affects(self.fault_step, node, &dsts));
+            let Some(f) = faulted else {
+                // Perfect-network fast path: bit-identical to the
+                // pre-fault schedule (one reservation, no outcome roll).
+                max_dur = max_dur.max(ev.duration);
+                let deps = self.nic_deps(&[rank]);
+                let (start, end) = self.nic.reserve(rank, earliest, ev.duration);
+                ends[i] = end;
+                self.push_event(ev.scheduled(start, deps), &[rank]);
+                continue;
+            };
+            // Self-healing retry lane: attempt 0 plus up to max_retries
+            // re-charges, each a real NIC reservation (failed attempts
+            // occupy the wire). A degraded link stretches every attempt;
+            // the next attempt waits out the timeout + capped backoff.
+            let step = self.fault_step;
+            let dur = ev.duration * f.timeline.slowdown(step, node, &dsts);
+            let mut mf = MemberFault::default();
+            let mut next_earliest = earliest;
+            let mut first_start = f64::NAN;
+            let mut last_end = earliest;
+            let mut end = f64::INFINITY;
+            for attempt in 0..=f.max_retries {
+                let deps = self.nic_deps(&[rank]);
+                let (start, a_end) = self.nic.reserve(rank, next_earliest, dur);
+                if attempt == 0 {
+                    first_start = start;
+                } else {
+                    mf.retries += 1;
+                    self.step_retries += 1;
+                }
+                let mut at = ev.clone();
+                at.duration = dur;
+                if attempt > 0 {
+                    at.label = "retry-gather";
+                }
+                self.push_event(at.scheduled(start, deps), &[rank]);
+                last_end = a_end;
+                match f.timeline.attempt_outcome(f.seed, step, attempt, node, &dsts) {
+                    FaultOutcome::Delivered => {
+                        mf.delivered = true;
+                        end = a_end;
+                        break;
+                    }
+                    FaultOutcome::Corrupted => {
+                        mf.corrupt += 1;
+                        self.step_corrupts += 1;
+                    }
+                    FaultOutcome::Dropped => {}
+                }
+                let backoff = (f.retry_backoff * (1u64 << attempt.min(32)) as f64)
+                    .min(BACKOFF_CAP * f.retry_backoff);
+                next_earliest = a_end + f.retry_timeout + backoff;
+            }
+            // The serialized reference charges the whole chain's lane
+            // span (attempts + backoff gaps): exact barrier parity under
+            // `--no-overlap` (every chain starts at h), an upper bound
+            // with overlap on.
+            max_dur = max_dur.max(last_end - first_start);
             ends[i] = end;
-            self.push_event(ev.scheduled(start, deps), &[rank]);
+            self.last_member_faults[i] = mf;
         }
         // The serialized reference charges the phase's slowest member —
         // identical to the whole-phase event on a uniform cluster, and
@@ -1574,5 +1726,151 @@ mod tests {
         // document round-trips through the JSON parser
         let text = doc.to_string_pretty();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    fn fault_lane(spec: &str) -> FaultLane {
+        let mut timeline = FaultTimeline::new();
+        timeline.add_spec(spec).unwrap();
+        FaultLane {
+            timeline,
+            seed: 0xFA117,
+            max_retries: 3,
+            retry_timeout: 0.1,
+            retry_backoff: 0.05,
+        }
+    }
+
+    fn drive_per_member(e: &mut StepEngine, step: u64) -> Vec<SimTime> {
+        let traffic = TrafficMatrix::new(2);
+        e.set_fault_step(step);
+        e.begin_step();
+        e.unshard(4096, &traffic);
+        e.compute(1e9);
+        e.reduce_scatter(4096);
+        let ends = e.gather_deferred_per_member(
+            &[0, 1],
+            GatherMode::NaiveAllGather,
+            &[500_000, 500_000],
+            &traffic,
+        );
+        e.end_step();
+        ends
+    }
+
+    /// Tentpole: an always-dropping link exhausts the retry budget —
+    /// every attempt is a real NIC reservation with timeout + capped
+    /// backoff between attempts, retries carry the `retry-gather` trace
+    /// label, and the exhausted sender's completion is +∞ (the trainer's
+    /// late-arrival fallback), while the healthy sender is untouched.
+    #[test]
+    fn fault_lane_retries_then_falls_back_to_infinity() {
+        let topo = Topology::new(2, 1);
+        let mk = || StepEngine::new(topo, NetModel::throttled(50.0), ClusterModel::uniform(), true);
+        let mut e = mk().with_faults(fault_lane("drop:0-1@p1"));
+        let ends = drive_per_member(&mut e, 0);
+        assert!(ends[0].is_infinite(), "dead link delivered: {ends:?}");
+        assert!(ends[1].is_finite(), "healthy sender caught the fault");
+        let mf = e.last_member_faults()[0];
+        assert!(!mf.delivered);
+        assert_eq!(mf.retries, 3);
+        assert_eq!(e.last_member_faults()[1].retries, 0);
+        assert!(e.last_member_faults()[1].delivered);
+        assert_eq!(e.step_fault_counts(), (3, 0));
+        // attempt 0 keeps the async-gather label; retries are marked
+        let retries: Vec<&CommEvent> =
+            e.events.iter().filter(|ev| ev.label == "retry-gather").collect();
+        assert_eq!(retries.len(), 3);
+        assert!(retries.iter().all(|ev| ev.node == Some(0) && ev.ranks == vec![0]));
+        // backoff: gaps between consecutive attempts grow (capped exp)
+        let mut attempts: Vec<&CommEvent> = e
+            .events
+            .iter()
+            .filter(|ev| {
+                ev.node == Some(0) && (ev.label == "async-gather" || ev.label == "retry-gather")
+            })
+            .collect();
+        attempts.sort_by(|a, b| a.start.total_cmp(&b.start));
+        assert_eq!(attempts.len(), 4);
+        let gap = |i: usize| attempts[i + 1].start - attempts[i].end();
+        assert!(gap(1) > gap(0), "backoff not growing: {} vs {}", gap(1), gap(0));
+        // fixed seed → bit-reproducible schedule
+        let mut f = mk().with_faults(fault_lane("drop:0-1@p1"));
+        let ends2 = drive_per_member(&mut f, 0);
+        assert_eq!(ends[1].to_bits(), ends2[1].to_bits());
+        assert_eq!(e.now().to_bits(), f.now().to_bits());
+    }
+
+    /// The fault-free spec is the identity: an empty timeline is
+    /// normalized away and the schedule is bit-identical to an engine
+    /// that never heard of faults; corrupt-only links deliver after
+    /// retries (numerics unaffected, only sim-time paid); degraded links
+    /// stretch every attempt.
+    #[test]
+    fn fault_free_identity_corrupt_retries_and_degrade_stretch() {
+        let topo = Topology::new(2, 1);
+        let mk = || StepEngine::new(topo, NetModel::throttled(50.0), ClusterModel::uniform(), true);
+        let mut plain = mk();
+        let base = drive_per_member(&mut plain, 0);
+        let mut empty = mk().with_faults(FaultLane {
+            timeline: FaultTimeline::new(),
+            seed: 1,
+            max_retries: 3,
+            retry_timeout: 0.1,
+            retry_backoff: 0.05,
+        });
+        let ends = drive_per_member(&mut empty, 0);
+        assert_eq!(base[0].to_bits(), ends[0].to_bits());
+        assert_eq!(plain.now().to_bits(), empty.now().to_bits());
+        assert!(empty.last_member_faults().iter().all(|m| m.delivered && m.retries == 0));
+
+        // corrupt p=1: every pre-delivery attempt corrupts; with the
+        // retry budget it still exhausts (checksum rejects each copy)
+        let mut cor = mk().with_faults(fault_lane("corrupt:0-1@p1"));
+        let cends = drive_per_member(&mut cor, 0);
+        assert!(cends[0].is_infinite());
+        let mf = cor.last_member_faults()[0];
+        assert_eq!(mf.corrupt, 4, "all four attempts delivered garbage");
+        assert_eq!(cor.step_fault_counts().1, 4);
+
+        // degrade 0.25x: attempt duration stretches 4×, delivered first try
+        let mut deg = mk().with_faults(fault_lane("degrade:0-*@0.25x"));
+        let dends = drive_per_member(&mut deg, 0);
+        assert!(deg.last_member_faults()[0].delivered);
+        assert_eq!(deg.last_member_faults()[0].retries, 0);
+        assert!(dends[0] > base[0], "degraded link not slower");
+        let ev0 = deg
+            .events
+            .iter()
+            .find(|ev| ev.label == "async-gather" && ev.node == Some(0))
+            .unwrap();
+        let evb = plain
+            .events
+            .iter()
+            .find(|ev| ev.label == "async-gather" && ev.node == Some(0))
+            .unwrap();
+        assert!((ev0.duration / evb.duration - 4.0).abs() < 1e-9);
+
+        // a flap window drops unconditionally inside, heals outside
+        let mut flap = mk().with_faults(fault_lane("flap:0-1@1..2"));
+        let f0 = drive_per_member(&mut flap, 0);
+        assert!(f0[0].is_finite(), "link down before the flap window");
+        let f1 = drive_per_member(&mut flap, 1);
+        assert!(f1[0].is_infinite(), "link up inside the flap window");
+        let f2 = drive_per_member(&mut flap, 2);
+        assert!(f2[0].is_finite(), "link down after the flap window");
+    }
+
+    /// `--no-overlap` parity holds through the retry lane: the serialized
+    /// accumulator charges each chain's barriered lane span, so
+    /// `now() == serialized_time()` even with a flaky link retrying.
+    #[test]
+    fn fault_retries_keep_no_overlap_serialized_parity() {
+        let topo = Topology::new(2, 1);
+        let mut e = StepEngine::new(topo, NetModel::throttled(50.0), ClusterModel::uniform(), false)
+            .with_faults(fault_lane("drop:0-1@p0.7,corrupt:1-0@p0.4"));
+        for step in 0..5 {
+            drive_per_member(&mut e, step);
+        }
+        assert_eq!(e.now(), e.serialized_time());
     }
 }

@@ -103,7 +103,7 @@ use crate::replicate::{mean_decoded, mean_decoded_refs, LatePolicy, ReplCtx, Rep
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::shard::{FlatLayout, HybridMesh};
 
-use engine::{StepEngine, StepTiming};
+use engine::{FaultLane, MemberFault, StepEngine, StepTiming};
 
 /// Per-rank state (optimizer + replicator own shard-sized buffers, plus
 /// the per-worker compression scratch arena reused across steps — the
@@ -207,6 +207,14 @@ pub struct Trainer {
     crashed: Vec<bool>,
     /// Per-node checkpoint stashed at crash time (`--checkpoint-dir`).
     crash_ckpt: Vec<Option<PathBuf>>,
+    /// Corrupt transfers detected (checksum-verified) this step — the
+    /// `corrupt_detected` CSV column.
+    corrupt_detected_step: u64,
+    /// Retry attempts charged on the NIC this step (engine counter,
+    /// captured at `end_step`) — the `retries` CSV column.
+    last_retries: u64,
+    /// Emit the quorum-clamp warning only once per run.
+    quorum_clamp_warned: bool,
 }
 
 impl Trainer {
@@ -297,7 +305,14 @@ impl Trainer {
 
         let traffic = TrafficMatrix::new(cfg.nodes);
         let engine = StepEngine::new(topo, cfg.net, cfg.cluster.clone(), cfg.overlap)
-            .with_buckets(cfg.bucket_bytes());
+            .with_buckets(cfg.bucket_bytes())
+            .with_faults(FaultLane {
+                timeline: cfg.link_fault.clone(),
+                seed: cfg.seed,
+                max_retries: cfg.max_retries,
+                retry_timeout: cfg.retry_timeout,
+                retry_backoff: cfg.retry_backoff,
+            });
         Ok(Trainer {
             model,
             layout,
@@ -321,6 +336,9 @@ impl Trainer {
             active: vec![true; cfg.nodes],
             crashed: vec![false; cfg.nodes],
             crash_ckpt: (0..cfg.nodes).map(|_| None).collect(),
+            corrupt_detected_step: 0,
+            last_retries: 0,
+            quorum_clamp_warned: false,
             cfg,
             step: 0,
         })
@@ -619,7 +637,6 @@ impl Trainer {
     ) -> Result<()> {
         let step = rctx.step;
         let policy = self.cfg.late_policy();
-        let quorum_k = self.cfg.quorum;
         // Take the window out of its slot so its payload borrows cannot
         // alias the rank/engine/param field borrows below.
         let mut pending = self.pending[shard].take();
@@ -634,6 +651,24 @@ impl Trainer {
             else {
                 anyhow::bail!("step {step} shard {shard}: arrival scan without a per-node window");
             };
+            // `--quorum` is evaluated against the *window's* (re-formed)
+            // group: churn between the static validation and this window
+            // can shrink the group below K, in which case K clamps to
+            // what exists instead of waiting on contributions that can
+            // never come.
+            let mut quorum_k = self.cfg.quorum;
+            if quorum_k > wgroup.len() {
+                if !self.quorum_clamp_warned {
+                    log::warn!(
+                        "step {step}: --quorum {} exceeds the re-formed group size {}; \
+                         clamping to the group",
+                        quorum_k,
+                        wgroup.len()
+                    );
+                    self.quorum_clamp_warned = true;
+                }
+                quorum_k = wgroup.len();
+            }
             for (gi, &rank) in group.iter().enumerate() {
                 let node = self.mesh.topo.node_of(rank);
                 // Map this member into the *window's* group by rank:
@@ -667,12 +702,18 @@ impl Trainer {
                 // Peer admission: own delta always (it never crossed the
                 // wire); a peer's if `wait` admits everything (the
                 // whole-group semantics, only without `--quorum`) or its
-                // send landed by the deadline.
+                // send landed by the deadline. A +∞ completion is a
+                // transfer that exhausted its retries — it can *never*
+                // land, so not even `wait` admits it (gating on it would
+                // freeze the clock); it falls through to the late
+                // handling below.
                 let mut admit_peer = vec![false; wgroup.len()];
                 let mut late_idx: Vec<usize> = Vec::new();
                 for wj in 0..wgroup.len() {
                     if wj == wi
-                        || (quorum_k == 0 && policy == LatePolicy::Wait)
+                        || (quorum_k == 0
+                            && policy == LatePolicy::Wait
+                            && contrib_end[wj].is_finite())
                         || contrib_end[wj] <= deadline
                     {
                         admit_peer[wj] = true;
@@ -697,6 +738,12 @@ impl Trainer {
                         for &wj in &late_idx {
                             if n_admit >= quorum_k {
                                 break;
+                            }
+                            // A permanently partitioned sender can't top
+                            // up the quorum — waiting on it would be the
+                            // deadlock this fallback exists to prevent.
+                            if !contrib_end[wj].is_finite() {
+                                continue;
                             }
                             admit_peer[wj] = true;
                             n_admit += 1;
@@ -724,9 +771,14 @@ impl Trainer {
                         quorum.push(p);
                     } else {
                         late += 1;
-                        if policy == LatePolicy::Partial {
+                        if policy == LatePolicy::Partial && contrib_end[wj].is_finite() {
                             next_carried.push((p.clone(), contrib_end[wj]));
                         }
+                        // An exhausted (+∞) transfer degrades to drop
+                        // under every policy: the bytes never arrive, so
+                        // carrying or waiting on them is meaningless. The
+                        // denominator-corrected mean already handles the
+                        // missing contribution.
                     }
                 }
                 self.dropped_step[node] += late;
@@ -792,7 +844,9 @@ impl Trainer {
         let accels = self.cfg.accels_per_node;
         let step = self.step;
         self.engine.begin_step();
+        self.engine.set_fault_step(step);
         self.dropped_step.fill(0);
+        self.corrupt_detected_step = 0;
         if !self.membership.is_empty() {
             self.apply_membership_events()?;
         }
@@ -898,7 +952,12 @@ impl Trainer {
                     .map(|&r| self.node_delay[self.mesh.topo.node_of(r)])
                     .collect();
                 let uniform = delays.iter().all(|&d| d == delays[0]);
-                if uniform && delays[0] == 0 && self.cfg.quorum == 0 {
+                // Any non-empty link-fault timeline routes through the
+                // per-member path below: faults act on individual NIC
+                // transfers, which only exist as per-member lanes (the
+                // same trick the membership timeline uses).
+                let faultless = self.cfg.link_fault.is_empty();
+                if uniform && delays[0] == 0 && self.cfg.quorum == 0 && faultless {
                     // Synchronous replication: the mean lands this step.
                     self.engine.gather(&group, mode, &sizes, &self.traffic);
                     self.apply_mean(&group, &rctx, payloads, &mut locals, (lo, hi), lr);
@@ -906,6 +965,7 @@ impl Trainer {
                     && self.cfg.late_policy() == LatePolicy::Wait
                     && self.cfg.quorum == 0
                     && self.membership.is_empty()
+                    && faultless
                 {
                     // PR 4 async launch (bit-frozen whole-group window):
                     // charge the wire on the deferred lane, park the
@@ -936,6 +996,34 @@ impl Trainer {
                         &sizes,
                         &self.traffic,
                     );
+                    // Fault bookkeeping: every corrupt delivery is
+                    // checked against the payload's real checksum (the
+                    // detection the retry was predicated on), and an
+                    // exhausted sender is logged — its +∞ completion
+                    // falls back through the late-arrival machinery.
+                    if !faultless {
+                        let reports: Vec<MemberFault> =
+                            self.engine.last_member_faults().to_vec();
+                        for (i, mf) in reports.iter().enumerate() {
+                            if mf.corrupt > 0 {
+                                self.corrupt_detected_step += Self::verify_corrupt_detected(
+                                    &payloads[i],
+                                    self.cfg.seed,
+                                    step,
+                                    mf.corrupt,
+                                );
+                            }
+                            if !mf.delivered {
+                                log::warn!(
+                                    "step {step} shard {a}: node {} transfer failed after \
+                                     {} retries; sender treated as late ({})",
+                                    self.mesh.topo.node_of(group[i]),
+                                    mf.retries,
+                                    self.cfg.late_policy().label()
+                                );
+                            }
+                        }
+                    }
                     self.pending[a] = Some(PendingSync::PerNode {
                         group: group.clone(),
                         payloads,
@@ -968,9 +1056,39 @@ impl Trainer {
             }
         }
         self.last_timing = self.engine.end_step();
+        self.last_retries = self.engine.step_fault_counts().0;
 
         self.step += 1;
         Ok(loss_sum / active_world.max(1) as f64)
+    }
+
+    /// Verify that corruption is *detected*, not absorbed: flip one
+    /// deterministic bit of the payload's wire image per corrupt attempt
+    /// and count the flips the checksum catches. CRC-32 guarantees every
+    /// single-bit flip is caught, so this returns `attempts` — but it
+    /// returns the checked count rather than assuming it, which is the
+    /// point of shipping a checksum instead of a boolean.
+    fn verify_corrupt_detected(p: &Payload, seed: u64, step: u64, attempts: u32) -> u64 {
+        let expected = p.checksum();
+        let mut img = p.wire_image();
+        if img.is_empty() {
+            return 0;
+        }
+        let bits = img.len() as u64 * 8;
+        let mut detected = 0u64;
+        for a in 0..attempts {
+            let mut h = crate::util::rng::SplitMix64::new(
+                seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (a as u64 + 1),
+            );
+            let bit = h.next_u64() % bits;
+            let (byte, mask) = ((bit / 8) as usize, 1u8 << (bit % 8));
+            img[byte] ^= mask;
+            if crate::util::crc32(&img) != expected {
+                detected += 1;
+            }
+            img[byte] ^= mask; // restore for the next attempt's flip
+        }
+        detected
     }
 
     /// Current simulated time (the event horizon across all ranks).
@@ -1077,6 +1195,12 @@ impl Trainer {
                 } else {
                     membership_label(&self.active)
                 },
+                retries: self.last_retries,
+                corrupt_detected: self.corrupt_detected_step,
+                faulted_links: self
+                    .cfg
+                    .link_fault
+                    .active_link_count(self.step - 1, self.cfg.nodes),
                 wall_time: wall0.elapsed().as_secs_f64(),
             });
             self.last_inter = inter;

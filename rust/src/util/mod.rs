@@ -10,6 +10,56 @@ pub mod logging;
 pub mod proptest;
 pub mod rng;
 
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), table-driven. One
+/// shared implementation backs both integrity layers: checkpoint files
+/// append it over their payload, and wire [`crate::compress::Payload`]s
+/// use it as the corruption-detecting checksum verified at decode.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            table[i] = c;
+            i += 1;
+        }
+        table
+    };
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+/// Write `bytes` to `path` atomically: write to `<path>.tmp` in the same
+/// directory, then rename over the target. An interrupted writer can
+/// never leave a truncated file at `path` — at worst a stale `.tmp`
+/// litters the directory. Every `BENCH_*.json` writer and the
+/// checkpoint publisher go through here so `scripts/bench_gate.py` and
+/// crash-rejoin restores never read a half-written artifact.
+pub fn atomic_write(path: &std::path::Path, bytes: &[u8]) -> anyhow::Result<()> {
+    use anyhow::Context;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating directory {}", dir.display()))?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
+}
+
 /// Format a byte count human-readably (metrics + bench output).
 pub fn fmt_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -42,6 +92,41 @@ pub fn fmt_secs(s: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn crc32_known_vectors_and_sensitivity() {
+        // Published check values for the IEEE polynomial.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        // any single bit flip changes the checksum (CRC-32 guarantee)
+        let data = b"detonation payload".to_vec();
+        let base = crc32(&data);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut flipped = data.clone();
+                flipped[byte] ^= 1 << bit;
+                assert_ne!(crc32(&flipped), base, "flip {byte}:{bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn atomic_write_publishes_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("detonation-atomic-write");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("nested").join("out.json");
+        atomic_write(&path, b"{\"ok\": 1}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"ok\": 1}");
+        // the staging file is gone after the rename
+        assert!(!path.with_extension("json.tmp").exists());
+        // overwriting an existing file replaces it whole
+        atomic_write(&path, b"{}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{}");
+        // writing into an unwritable location errors instead of panicking
+        assert!(atomic_write(std::path::Path::new("/proc/definitely/not/here"), b"x").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     #[test]
     fn bytes_formatting() {

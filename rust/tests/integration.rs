@@ -1136,6 +1136,35 @@ mod engine_invariants {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// Satellite: the v2 checkpoint's trailing CRC-32 catches silent
+    /// bit-rot — a single flipped byte anywhere in the body is rejected
+    /// with an actionable error, and restoring the intact file still
+    /// works afterwards.
+    #[test]
+    fn checkpoint_crc_rejects_single_flipped_byte() {
+        let dir = std::env::temp_dir().join("detonation-ckpt-bitflip");
+        let mut t = Trainer::new(&runtime(), synth_cfg("diloco:2")).unwrap();
+        t.step().unwrap();
+        let path = t.save_checkpoint(&dir).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // flip one bit in the middle of the body
+        let mut bad = good.clone();
+        let ix = good.len() / 2;
+        bad[ix] ^= 0x10;
+        std::fs::write(&path, &bad).unwrap();
+        let mut same = Trainer::new(&runtime(), synth_cfg("diloco:2")).unwrap();
+        let err = same.restore_checkpoint(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("CRC-32 mismatch") && msg.contains("corrupt"),
+            "unexpected error: {msg}"
+        );
+        // the intact bytes still restore
+        std::fs::write(&path, &good).unwrap();
+        same.restore_checkpoint(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     /// Tentpole behavior: a leave/join timeline re-forms the replication
     /// groups each window — inter-node traffic collapses while the node
     /// is away, the join broadcast brings it back in sync from node 0,
@@ -1249,6 +1278,164 @@ mod engine_invariants {
             m_wait.total_sim_time()
         );
         let _ = m_full;
+    }
+
+    /// Tentpole pin: an **empty** `--link-fault` timeline — even with
+    /// every retry knob moved off its default — is bit-identical to the
+    /// pre-fault trainer across meshes, schemes, and worker-pool
+    /// widths. The self-healing machinery must be pure control flow
+    /// when no fault can ever fire.
+    #[test]
+    fn prop_empty_link_fault_bit_inert() {
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(1, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&["demo:1/8", "full", "diloco:2", "diloco:3:async=1"]);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let fingerprint = |tweak: bool| {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 5;
+                cfg.threads = threads;
+                cfg.val_every = 2;
+                cfg.val_batches = 2;
+                if tweak {
+                    cfg.apply_arg("link-fault", "").unwrap(); // explicit empty spec
+                    cfg.apply_arg("max-retries", "7").unwrap();
+                    cfg.apply_arg("retry-timeout", "0.9").unwrap();
+                    cfg.apply_arg("retry-backoff", "0.4").unwrap();
+                }
+                let (t, m) = run(cfg);
+                assert!(m.steps.iter().all(|r| {
+                    r.retries == 0 && r.corrupt_detected == 0 && r.faulted_links == 0
+                }));
+                run_fingerprint(&t, &m)
+            };
+            detonation::util::proptest::prop_assert(
+                fingerprint(false) == fingerprint(true),
+                format!("{nodes}x{accels} {repl} t{threads}: empty link-fault changed bits"),
+            );
+        });
+    }
+
+    /// Tentpole acceptance: a faulted run is a pure function of the
+    /// config — fixed seed and fixed `--link-fault` spec reproduce the
+    /// run bit-for-bit (fault decisions are hashes, not RNG draws).
+    #[test]
+    fn prop_faulted_runs_bit_reproducible() {
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(2, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&["demo:1/8", "diloco:2", "full"]);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let spec = *g.choose(&[
+                "drop:*-*@p0.3",
+                "corrupt:*-*@p0.4",
+                "drop:1-*@p0.5,degrade:*-1@0.5x",
+                "flap:1-0@1..3",
+            ]);
+            let fingerprint = || {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 5;
+                cfg.threads = threads;
+                cfg.apply_arg("link-fault", spec).unwrap();
+                let (t, m) = run(cfg);
+                assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+                run_fingerprint(&t, &m)
+            };
+            detonation::util::proptest::prop_assert(
+                fingerprint() == fingerprint(),
+                format!("{nodes}x{accels} {repl} t{threads} {spec}: faulted run not reproducible"),
+            );
+        });
+    }
+
+    /// Lossy links surface in the new metrics columns and the Chrome
+    /// trace: drops drive `retries` > 0, corruption is caught by the
+    /// payload checksum (`corrupt_detected` > 0), `faulted_links`
+    /// counts the spec's active directed links, and retry attempts are
+    /// labelled `retry-gather` in `--trace-out`.
+    #[test]
+    fn link_faults_surface_in_metrics_and_trace() {
+        let trace = std::env::temp_dir().join("detonation-fault-trace.json");
+        let _ = std::fs::remove_file(&trace);
+        let mut cfg = synth_cfg("diloco:2");
+        cfg.steps = 8;
+        cfg.trace_out = Some(trace.clone());
+        cfg.apply_arg("link-fault", "drop:*-*@p0.4,corrupt:*-*@p0.4")
+            .unwrap();
+        let (t, m) = run(cfg);
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+        assert!(m.total_retries() > 0, "40% loss never retried");
+        assert!(
+            m.total_corrupt_detected() > 0,
+            "40% corruption never detected at decode"
+        );
+        // 2 nodes, both directions wildcarded
+        assert!(m.steps.iter().all(|r| r.faulted_links == 2));
+        assert!(t.engine.now() <= t.engine.serialized_time() * (1.0 + 1e-12));
+        let text = std::fs::read_to_string(&trace).expect("trace written");
+        let doc = detonation::util::json::parse(&text).expect("valid JSON");
+        let names: Vec<&str> = doc
+            .get("traceEvents")
+            .and_then(|j| j.as_arr())
+            .expect("traceEvents array")
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        assert!(names.contains(&"retry-gather"), "{names:?}");
+        std::fs::remove_file(&trace).ok();
+    }
+
+    /// Acceptance: a link that is down for the whole run (a persistent
+    /// partition) exhausts `--max-retries` and falls back through the
+    /// existing machinery — the run completes with finite losses under
+    /// the default wait policy, under `--late-policy drop`, and under a
+    /// `--quorum` that the unreachable node can no longer satisfy.
+    /// Nothing deadlocks on a transfer that will never arrive.
+    #[test]
+    fn full_partition_falls_back_without_deadlock() {
+        let mk = |tune: &dyn Fn(&mut ExperimentConfig)| {
+            let mut cfg = synth_cfg("diloco:2");
+            cfg.steps = 8;
+            cfg.apply_arg("link-fault", "flap:1-*@0..99").unwrap();
+            tune(&mut cfg);
+            let (t, m) = run(cfg);
+            assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+            assert_eq!(m.steps.len(), 8);
+            assert!(m.total_sim_time().is_finite());
+            assert!(t.engine.now() <= t.engine.serialized_time() * (1.0 + 1e-12));
+            m
+        };
+        let wait = mk(&|_| {});
+        assert!(wait.total_retries() > 0);
+        let drop = mk(&|cfg| cfg.apply_arg("late-policy", "drop").unwrap());
+        assert!(
+            drop.total_dropped_syncs() > 0,
+            "partitioned sender never recorded as dropped"
+        );
+        let _quorum = mk(&|cfg| cfg.quorum = 2);
+    }
+
+    /// Satellite: `--quorum` × `--churn`. A quorum sized for the full
+    /// group is re-evaluated against the *re-formed* group after a
+    /// leave: K larger than the shrunken group clamps (with a warning)
+    /// instead of deadlocking, and the run completes.
+    #[test]
+    fn quorum_clamps_to_shrunken_churn_group() {
+        let mut cfg = synth_cfg("diloco:2");
+        cfg.steps = 8;
+        cfg.quorum = 2; // == full group, valid at build
+        cfg.apply_arg("churn", "leave:1@2").unwrap();
+        let (t, m) = run(cfg);
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+        let masks: Vec<&str> = m.steps.iter().map(|r| r.membership.as_str()).collect();
+        assert_eq!(masks, ["11", "11", "10", "10", "10", "10", "10", "10"]);
+        assert_eq!(m.steps.len(), 8, "quorum > group size deadlocked the run");
+        assert!(t.engine.now() <= t.engine.serialized_time() * (1.0 + 1e-12));
     }
 
     #[test]

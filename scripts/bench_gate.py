@@ -61,6 +61,7 @@ METRICS = {
     "async_diloco": [("arms", ("label",), "sim_step_s", False)],
     "stragglers": [("arms", ("label",), "sim_step_s", False)],
     "chaos": [("arms", ("label",), "sim_step_s", False)],
+    "faults": [("arms", ("label",), "sim_step_s", False)],
 }
 
 # invariant registry: artifact stem -> list of (dotted field path, expected)
@@ -81,6 +82,11 @@ INVARIANTS = {
         ("membership_masks_tracked", True),
         ("crash_checkpoint_stashed", True),
     ],
+    "faults": [
+        ("faultfree_identical", True),
+        ("retry_beats_resend", True),
+        ("partition_completed", True),
+    ],
 }
 
 # chaos gate bands. Churn severity is ordered baseline <= mild <= heavy,
@@ -96,6 +102,21 @@ CHAOS_ARMS = (
     "churn-heavy",
     "crash-norejoin",
     "crash-rejoin-ckpt",
+)
+
+# fault-injection gate bands. A 5% per-attempt loss rate healed by the
+# retry lane must keep the tail loss within FAULTS_LOSS_BAND x the
+# fault-free baseline's, and timeout/backoff retries must finish a
+# flaky-link run strictly sooner per sim step than the naive
+# re-send-with-the-next-window strawman.
+FAULTS_LOSS_BAND = 1.5
+FAULTS_ARMS = (
+    "baseline",
+    "faultfree",
+    "drop5",
+    "retry",
+    "resend",
+    "partition",
 )
 
 
@@ -244,6 +265,43 @@ def computed_invariants(stem, doc):
                     f"{stem}: crash-rejoin-ckpt did not end fully rejoined "
                     f"(final_membership = {rejoin.get('final_membership')!r})"
                 )
+    if stem == "faults":
+        arms = {a.get("label"): a for a in doc.get("arms", [])}
+        for label in FAULTS_ARMS:
+            if label not in arms:
+                errors.append(f"{stem}: arm {label!r} missing")
+        base = arms.get("baseline")
+        if base is None:
+            return errors
+        base_tail = _num(base, "tail_loss", errors, stem, "baseline")
+        retries = _num(base, "retries", errors, stem, "baseline")
+        if retries is not None and retries != 0:
+            errors.append(f"{stem}: baseline retried on a perfect network ({retries})")
+        # loss band: 5% drop healed by retries stays near fault-free loss
+        drop5 = arms.get("drop5")
+        if drop5 is not None and base_tail is not None and base_tail > 0:
+            tail = _num(drop5, "tail_loss", errors, stem, "drop5")
+            if tail is not None and not tail <= base_tail * FAULTS_LOSS_BAND:
+                errors.append(
+                    f"{stem}: drop5 tail loss {tail} outside the "
+                    f"{FAULTS_LOSS_BAND}x band of baseline {base_tail}"
+                )
+            r = _num(drop5, "retries", errors, stem, "drop5")
+            if r is not None and r <= 0:
+                errors.append(f"{stem}: drop5 arm recorded no retries")
+        # self-healing retries strictly beat window-scale re-sends
+        retry = arms.get("retry")
+        resend = arms.get("resend")
+        if retry is not None and resend is not None:
+            rt = _num(retry, "sim_step_s", errors, stem, "retry")
+            st = _num(resend, "sim_step_s", errors, stem, "resend")
+            if rt is not None and st is not None and not rt < st:
+                errors.append(
+                    f"{stem}: retry not faster than naive resend ({rt} vs {st})"
+                )
+            c = _num(retry, "corrupt_detected", errors, stem, "retry")
+            if c is not None and c <= 0:
+                errors.append(f"{stem}: retry arm detected no corruption")
     return errors
 
 
@@ -458,6 +516,55 @@ def self_test():
     assert any("churn-mild" in e for e in check_invariants("chaos", c_gone))
     c_flag = dict(c, crash_checkpoint_stashed=False)
     assert any("crash_checkpoint_stashed" in e for e in check_invariants("chaos", c_flag))
+
+    # faults: loss band under 5% drop, retry beats naive resend, and the
+    # bench-side booleans (fault-free bit-identity, partition fallback)
+    f = {
+        "faultfree_identical": True,
+        "retry_beats_resend": True,
+        "partition_completed": True,
+        "arms": [
+            {"label": "baseline", "tail_loss": 1.0, "sim_step_s": 1.0,
+             "retries": 0, "corrupt_detected": 0},
+            {"label": "faultfree", "tail_loss": 1.0, "sim_step_s": 1.0,
+             "retries": 0, "corrupt_detected": 0},
+            {"label": "drop5", "tail_loss": 1.2, "sim_step_s": 1.1,
+             "retries": 9, "corrupt_detected": 0},
+            {"label": "retry", "tail_loss": 1.3, "sim_step_s": 1.4,
+             "retries": 40, "corrupt_detected": 6},
+            {"label": "resend", "tail_loss": 1.3, "sim_step_s": 3.0,
+             "retries": 40, "corrupt_detected": 6},
+            {"label": "partition", "tail_loss": 1.4, "sim_step_s": 1.2,
+             "retries": 30, "corrupt_detected": 0},
+        ],
+    }
+    assert check_invariants("faults", f) == []
+    # a drop5 tail outside the 1.5x loss band trips the gate
+    f_blown = json.loads(json.dumps(f))
+    f_blown["arms"][2]["tail_loss"] = 1.6
+    assert any("band of baseline" in e for e in check_invariants("faults", f_blown))
+    # retries no faster than window-scale re-sends trips it too
+    f_slow = json.loads(json.dumps(f))
+    f_slow["arms"][3]["sim_step_s"] = 3.0
+    assert any("naive resend" in e for e in check_invariants("faults", f_slow))
+    # a baseline that somehow retried, a retry arm that never saw
+    # corruption, a missing arm, and a flipped boolean all fail
+    f_retry = json.loads(json.dumps(f))
+    f_retry["arms"][0]["retries"] = 2
+    assert any("perfect network" in e for e in check_invariants("faults", f_retry))
+    f_clean = json.loads(json.dumps(f))
+    f_clean["arms"][3]["corrupt_detected"] = 0
+    assert any("no corruption" in e for e in check_invariants("faults", f_clean))
+    f_gone = json.loads(json.dumps(f))
+    del f_gone["arms"][5]
+    assert any("partition" in e for e in check_invariants("faults", f_gone))
+    f_flag = dict(f, faultfree_identical=False)
+    assert any("faultfree_identical" in e for e in check_invariants("faults", f_flag))
+    # sim_step_s regressions compare like the other lower-is-better arms
+    f_base = {"quick": False, "arms": [{"label": "drop5", "sim_step_s": 1.0}]}
+    f_reg = {"quick": False, "arms": [{"label": "drop5", "sim_step_s": 1.3}]}
+    regs, n = compare("faults", f_base, f_reg, 0.15)
+    assert n == 1 and len(regs) == 1
 
     # async_diloco: S >= 1 must be faster than sync, S = 0 bit-identical
     a = {
