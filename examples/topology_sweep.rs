@@ -1,0 +1,98 @@
+//! Sync-topology sweep: who talks to whom in each sync window.
+//!
+//! Trains the same DiLoCo group under each `--topology` on an
+//! 8-node-pair cluster — the whole-group exchange (`full`), the ±1
+//! neighbor ring, the per-window seeded perfect matching
+//! (`random-pair`), and the rotating two-wide circulant fanout
+//! (`hier:2`) — and prints what each connectivity buys: inter-node
+//! bytes, the simulated time per step, and the per-member peer-set
+//! sizes from the steps CSV.
+//!
+//!     cargo run --release --example topology_sweep
+//!
+//! The peer sets are pure hashes of (seed, step, shard), so every arm
+//! is bit-reproducible, and `full` is bit-identical to not passing
+//! `--topology` at all. Uses the in-process `synthetic-lm` surrogate,
+//! so no artifacts are needed. The same sweep at bench scale
+//! (g up to 64) writes `BENCH_topology.json`
+//! (`cargo bench --bench topology`).
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::{results_root, runtime, Experiment};
+use detonation::metrics::sparkline;
+use detonation::util::argparse::ArgParser;
+use detonation::util::fmt_secs;
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let args = ArgParser::new("topology_sweep", "gossip vs full-group sync windows")
+        .opt("period", "4", "DiLoCo sync period (steps)")
+        .opt("nodes", "8", "replication group size (one rank per node)")
+        .opt("steps", "48", "training steps per arm")
+        .flag("quick", "CI smoke shape (3 sync windows per arm)")
+        .parse_env();
+    let period: u64 = args.str("period").parse()?;
+    let nodes: usize = args.str("nodes").parse()?;
+    let steps: u64 = if args.flag("quick") {
+        3 * period
+    } else {
+        args.str("steps").parse()?
+    };
+
+    let rt = runtime()?;
+    let mut exp = Experiment::new("topology_sweep", &results_root());
+
+    let base = {
+        let mut c = ExperimentConfig {
+            model: "synthetic-lm".into(),
+            nodes,
+            accels_per_node: 1,
+            steps,
+            lr: 0.02,
+            seed: 23,
+            val_every: steps,
+            val_batches: 8,
+            compute_streams: 4,
+            ..Default::default()
+        };
+        c.apply_arg("inter-mbps", "200")?;
+        c.apply_arg("repl", &format!("diloco:{period}"))?;
+        c
+    };
+
+    let arms: [&str; 4] = ["full", "ring", "random-pair", "hier:2"];
+    for topo in arms {
+        let mut c = base.clone();
+        c.apply_arg("topology", topo)?;
+        exp.run(&rt, &c, Some(&topo.replace(':', "")))?;
+    }
+
+    println!("\n=== DiLoCo sync windows by topology (period {period}, {nodes} nodes) ===\n");
+    let full_step = exp.runs[0].mean_step_time();
+    let full_bytes = exp.runs[0].total_inter_bytes() as f64;
+    for run in &exp.runs {
+        let losses: Vec<f64> = run.steps.iter().map(|r| r.loss).collect();
+        // the last launch step's per-member peer-set sizes (empty under
+        // full: the whole-group path never populates the column)
+        let peers = run
+            .steps
+            .iter()
+            .rev()
+            .find(|r| !r.peer_set.is_empty())
+            .map(|r| r.peer_set.clone())
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<12} loss {}  t/step {:>9} ({:>5.2}x)  inter {:>5.2}x  peers {}",
+            run.label,
+            sparkline(&losses, 32),
+            fmt_secs(run.mean_step_time()),
+            run.mean_step_time() / full_step,
+            run.total_inter_bytes() as f64 / full_bytes,
+            peers,
+        );
+    }
+    println!("{}", exp.finish()?);
+    println!("CSV series in {}", exp.out_dir.display());
+    Ok(())
+}

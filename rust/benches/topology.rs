@@ -1,0 +1,219 @@
+//! Sync-topology bench: gossip and partial connectivity at scale.
+//!
+//!     cargo bench --bench topology [-- --quick]
+//!
+//! Sweeps `--topology` across group sizes g ∈ {4, 16, 64} (one rank per
+//! node, `diloco:4` windows on a 200 Mbps link) with four arms per g:
+//!
+//! * `full` — the whole-group exchange, explicitly requested: must be
+//!   bit-identical to a default-config run (the pre-topology path is
+//!   frozen);
+//! * `ring` — each member exchanges with its ±1 neighbors only;
+//! * `random-pair` — a seeded perfect matching re-drawn every window;
+//! * `hier2` — the rotating two-wide circulant fanout (`hier:2`).
+//!
+//! The claim under test is the gossip scaling law: a member's exposed
+//! per-window communication is O(degree), not O(g), so the per-step
+//! simulated time of the sparse arms stays roughly flat from g = 4 to
+//! g = 64 while the full-group arm grows with the group. Asserted here
+//! (deterministic, seeded): the explicit-full arm is bit-identical to
+//! the default config at every g, every sparse arm at g = 64 stays
+//! within `FLAT_BAND`× its own g = 4 per-step time, and full at g = 64
+//! is strictly slower than full at g = 4. The same invariants — plus
+//! the sparse arms' tail loss staying within a band of full — are
+//! written into `BENCH_topology.json` (schema: docs/BENCHMARKS.md) and
+//! enforced by `scripts/bench_gate.py`.
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::runtime;
+use detonation::metrics::RunMetrics;
+use detonation::util::fmt_secs;
+use detonation::util::json::Json;
+
+const PERIOD: u64 = 4;
+/// Tail window for the loss comparisons (steps).
+const TAIL: usize = 4;
+/// Sparse arms at g = 64 may cost at most this multiple of their own
+/// g = 4 per-step time (O(1) gossip, with slack for arrival jitter).
+const FLAT_BAND: f64 = 1.5;
+
+const GROUPS: [usize; 3] = [4, 16, 64];
+const SPARSE: [&str; 3] = ["ring", "random-pair", "hier:2"];
+
+fn base_cfg(nodes: usize, steps: u64) -> Result<ExperimentConfig> {
+    let mut c = ExperimentConfig {
+        model: "synthetic-lm".into(),
+        nodes,
+        accels_per_node: 1,
+        steps,
+        lr: 0.02,
+        seed: 31,
+        val_every: steps, // validate once, at the end
+        val_batches: 4,
+        // a handful of distinct data streams so the 64-node arm dedupes
+        // compute instead of running 64 unique models
+        compute_streams: 4,
+        ..Default::default()
+    };
+    // A visibly throttled link so the exchange degree moves the clock.
+    c.apply_arg("inter-mbps", "200")?;
+    c.apply_arg("repl", &format!("diloco:{PERIOD}"))?;
+    Ok(c)
+}
+
+fn run(c: ExperimentConfig) -> Result<RunMetrics> {
+    let rt = runtime()?;
+    let mut t = detonation::train::Trainer::new(&rt, c)?;
+    let m = t.run()?;
+    anyhow::ensure!(
+        m.steps.iter().all(|r| r.loss.is_finite()),
+        "non-finite loss"
+    );
+    Ok(m)
+}
+
+fn row(label: &str, m: &RunMetrics) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(label.to_string())),
+        ("sim_time_s", Json::Num(m.total_sim_time())),
+        ("sim_step_s", Json::Num(m.mean_step_time())),
+        ("inter_bytes", Json::Num(m.total_inter_bytes() as f64)),
+        (
+            "tail_loss",
+            m.tail_loss(TAIL).map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+/// Bit-level fingerprint of a run: per-step losses and sim times.
+fn bits(m: &RunMetrics) -> (Vec<u64>, Vec<u64>) {
+    (
+        m.steps.iter().map(|r| r.loss.to_bits()).collect(),
+        m.steps.iter().map(|r| r.sim_time.to_bits()).collect(),
+    )
+}
+
+/// `hier:2` → `hier2`: colon-free arm labels for the JSON rows.
+fn arm_label(g: usize, topo: &str) -> String {
+    format!("g{g}-{}", topo.replace(':', ""))
+}
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    // every g arm survives --quick: the scaling claim *is* the bench
+    let steps: u64 = if quick { 2 * PERIOD } else { 4 * PERIOD };
+
+    println!(
+        "{:<18} {:>12} {:>12} {:>14} {:>10}",
+        "arm", "t/step", "total", "inter", "tail"
+    );
+    let print_row = |label: &str, m: &RunMetrics| {
+        println!(
+            "{:<18} {:>12} {:>12} {:>14} {:>10.4}",
+            label,
+            fmt_secs(m.mean_step_time()),
+            fmt_secs(m.total_sim_time()),
+            m.total_inter_bytes(),
+            m.tail_loss(TAIL).unwrap_or(f64::NAN),
+        );
+    };
+
+    let mut arms: Vec<Json> = Vec::new();
+    // per g: (full, [sparse…]) for the invariant checks below
+    let mut full_by_g: Vec<RunMetrics> = Vec::new();
+    let mut sparse_by_g: Vec<Vec<(String, RunMetrics)>> = Vec::new();
+    let mut full_bit_identical = true;
+
+    for &g in &GROUPS {
+        // the regression anchor: explicit `--topology full` against the
+        // untouched default config, bit for bit
+        let default_run = run(base_cfg(g, steps)?)?;
+        let mut cfg = base_cfg(g, steps)?;
+        cfg.apply_arg("topology", "full")?;
+        let full = run(cfg)?;
+        if bits(&default_run) != bits(&full) {
+            full_bit_identical = false;
+        }
+        let label = arm_label(g, "full");
+        print_row(&label, &full);
+        arms.push(row(&label, &full));
+
+        let mut sparse_runs = Vec::new();
+        for topo in SPARSE {
+            let mut cfg = base_cfg(g, steps)?;
+            cfg.apply_arg("topology", topo)?;
+            let m = run(cfg)?;
+            let label = arm_label(g, topo);
+            print_row(&label, &m);
+            // a sparse window must never ship more than the full group
+            assert!(
+                m.total_inter_bytes() < full.total_inter_bytes(),
+                "{label}: sparse exchange moved {} bytes vs full {}",
+                m.total_inter_bytes(),
+                full.total_inter_bytes()
+            );
+            arms.push(row(&label, &m));
+            sparse_runs.push((topo.to_string(), m));
+        }
+        full_by_g.push(full);
+        sparse_by_g.push(sparse_runs);
+    }
+    assert!(
+        full_bit_identical,
+        "--topology full diverged from the pre-topology path"
+    );
+
+    // gossip scaling: every sparse arm stays roughly flat in g…
+    let mut gossip_flat = true;
+    for (topo, m64) in &sparse_by_g[GROUPS.len() - 1] {
+        let m4 = &sparse_by_g[0]
+            .iter()
+            .find(|(t, _)| t == topo)
+            .expect("same sparse sweep per g")
+            .1;
+        let growth = m64.mean_step_time() / m4.mean_step_time();
+        println!("{topo}: g64/g4 per-step growth {growth:.3}");
+        if growth > FLAT_BAND {
+            gossip_flat = false;
+        }
+    }
+    assert!(
+        gossip_flat,
+        "a gossip arm's per-step sim time grew past {FLAT_BAND}x from g=4 to g=64"
+    );
+    // …while the full-group exchange grows with the group.
+    let full_grows = full_by_g[GROUPS.len() - 1].mean_step_time() > full_by_g[0].mean_step_time();
+    assert!(
+        full_grows,
+        "full-group exchange did not grow with g: {} vs {}",
+        full_by_g[GROUPS.len() - 1].mean_step_time(),
+        full_by_g[0].mean_step_time()
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("topology".into())),
+        ("model", Json::Str("synthetic-lm".into())),
+        (
+            "groups",
+            Json::Arr(GROUPS.iter().map(|&g| Json::Num(g as f64)).collect()),
+        ),
+        ("period", Json::Num(PERIOD as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("tail_window", Json::Num(TAIL as f64)),
+        ("flat_band", Json::Num(FLAT_BAND)),
+        ("quick", Json::Bool(quick)),
+        ("full_bit_identical", Json::Bool(full_bit_identical)),
+        ("gossip_flat", Json::Bool(gossip_flat)),
+        ("full_grows", Json::Bool(full_grows)),
+        ("arms", Json::Arr(arms)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_topology.json");
+    detonation::util::atomic_write(&path, out.to_string_pretty().as_bytes())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -8,7 +8,7 @@ use std::path::PathBuf;
 
 use crate::net::{ClusterModel, FaultTimeline, MembershipTimeline, NetModel};
 use crate::optim::OptSpec;
-use crate::replicate::{LatePolicy, ReplSpec};
+use crate::replicate::{LatePolicy, ReplSpec, SyncTopology};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -89,6 +89,11 @@ pub struct ExperimentConfig {
     /// `--retry-backoff`: base of the capped exponential backoff added
     /// per retry attempt (sim-seconds; cap is 8x the base).
     pub retry_backoff: f64,
+    /// `--topology`: which peers each R-group member exchanges payloads
+    /// with per sync window ([`SyncTopology`]; `full` = the bit-frozen
+    /// whole-group path, `ring`/`random-pair`/`hier:<F>` = NoLoCo-style
+    /// gossip with O(1) per-window inter-node cost).
+    pub topology: SyncTopology,
 }
 
 impl Default for ExperimentConfig {
@@ -125,6 +130,7 @@ impl Default for ExperimentConfig {
             max_retries: 3,
             retry_timeout: 0.1,
             retry_backoff: 0.05,
+            topology: SyncTopology::Full,
         }
     }
 }
@@ -251,6 +257,9 @@ impl ExperimentConfig {
     pub fn validate_elastic(&self) -> anyhow::Result<()> {
         self.membership.validate(self.nodes, self.steps)?;
         self.link_fault.validate(self.nodes)?;
+        // The replication group spans one member per node, so the
+        // topology validates against the node count.
+        self.topology.validate(self.nodes)?;
         anyhow::ensure!(
             self.retry_timeout.is_finite() && self.retry_timeout >= 0.0,
             "--retry-timeout must be a finite non-negative sim-time"
@@ -340,6 +349,7 @@ impl ExperimentConfig {
                 ),
             ),
             ("link_fault", Json::Str(self.link_fault.render())),
+            ("topology", Json::Str(self.topology.label())),
             ("max_retries", Json::Num(self.max_retries as f64)),
             ("retry_timeout", Json::Num(self.retry_timeout)),
             ("retry_backoff", Json::Num(self.retry_backoff)),
@@ -495,6 +505,9 @@ impl ExperimentConfig {
             // surface here; endpoint validation against the mesh happens
             // at trainer construction (validate_elastic).
             "link-fault" => self.link_fault.add_spec(value)?,
+            // Sync-window exchange topology; shape validation against
+            // the mesh happens at trainer construction (validate_elastic).
+            "topology" => self.topology = SyncTopology::parse(value)?,
             "max-retries" => self.max_retries = value.parse()?,
             "retry-timeout" => {
                 let t: f64 = value.parse()?;
@@ -729,6 +742,42 @@ mod tests {
         assert_eq!(j.get("max_retries").unwrap().as_usize(), Some(5));
         assert!(j.get("retry_timeout").is_some());
         assert!(j.get("retry_backoff").is_some());
+    }
+
+    #[test]
+    fn topology_knob() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.topology.is_full());
+        c.validate_elastic().unwrap(); // defaults always pass
+
+        c.apply_arg("topology", "random-pair").unwrap();
+        assert_eq!(c.topology, SyncTopology::RandomPair);
+        c.validate_elastic().unwrap(); // any group size is fine
+        c.apply_arg("topology", "hier:1").unwrap();
+        assert_eq!(c.topology, SyncTopology::Hier { fanout: 1 });
+        c.validate_elastic().unwrap(); // 1 < 2 nodes
+
+        // shape errors surface at validate time, with the mesh known,
+        // and carry an actionable message — no panic, no silent clamp
+        c.apply_arg("topology", "ring").unwrap();
+        let err = c.validate_elastic().unwrap_err().to_string();
+        assert!(err.contains(">= 3") && err.contains("got 2"), "unactionable: {err}");
+        c.apply_arg("nodes", "3").unwrap();
+        c.validate_elastic().unwrap();
+        c.apply_arg("topology", "hier:3").unwrap();
+        let err = c.validate_elastic().unwrap_err().to_string();
+        assert!(err.contains("fanout < ") && err.contains('3'), "unactionable: {err}");
+        c.apply_arg("nodes", "4").unwrap();
+        c.validate_elastic().unwrap();
+
+        // syntax errors surface at parse time
+        assert!(c.apply_arg("topology", "star").is_err());
+        assert!(c.apply_arg("topology", "hier:0").is_err());
+        assert!(c.apply_arg("topology", "hier:two").is_err());
+
+        // the knob serializes with its CLI spelling
+        let j = c.to_json();
+        assert_eq!(j.get("topology").unwrap().as_str(), Some("hier:3"));
     }
 
     #[test]

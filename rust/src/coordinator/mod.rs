@@ -132,7 +132,11 @@ mod tests {
                 node_staleness: String::new(),
                 sync_in_flight: 0,
                 dropped_syncs: String::new(),
+                peer_set: String::new(),
                 membership: String::new(),
+                retries: 0,
+                corrupt_detected: 0,
+                faulted_links: 0,
                 wall_time: 0.0,
             });
             m.val.push(crate::metrics::ValRow {

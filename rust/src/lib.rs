@@ -75,6 +75,18 @@
 //!   fault decision is a pure hash of (seed, step, attempt, link), so
 //!   faulted runs are bit-reproducible and an empty spec is bit-inert
 //!   (both prop-tested);
+//! * connectivity is **selectable** ([`replicate::SyncTopology`]):
+//!   `--topology full|ring|random-pair|hier:<F>` picks, per sync
+//!   window, which peers each node exchanges deltas with — `full`
+//!   keeps today's whole-group exchange bit-frozen (prop-tested
+//!   identical), `ring` talks to ±1 neighbors, `random-pair` draws a
+//!   seeded perfect matching per window (a pure hash of seed × step,
+//!   no RNG stream consumed), and `hier:<F>` combines the intra-node
+//!   fabric reduce with a rotating F-wide inter-node fanout; the
+//!   engine charges only the selected links' NIC events, so gossip
+//!   topologies expose O(1) comm per window while `full` grows with
+//!   the group (gated in `BENCH_topology.json`), and the averaging
+//!   denominator is always the contributing set actually heard from;
 //! * metrics split each step into compute vs exposed-comm vs hidden-comm
 //!   on the critical rank (`results/*.steps.csv` columns).
 //!

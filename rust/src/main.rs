@@ -168,6 +168,17 @@ fn train_parser() -> ArgParser {
             "base of the capped exponential backoff added per retry \
              (sim-seconds; cap = 8x base)",
         )
+        .opt(
+            "topology",
+            "full",
+            "which peers each node exchanges deltas with per sync window: \
+             full = the whole replication group (bit-identical to the \
+             pre-topology path), ring = the two ring neighbors, \
+             random-pair = a seeded perfect matching re-drawn every \
+             window, hier:<F> = fabric reduce inside the node plus an \
+             F-wide rotating inter-node fanout; averaging always divides \
+             by the contributing set actually heard from",
+        )
         .flag("no-overlap", "serialize phases (legacy barrier clock)")
         .opt("name", "cli", "experiment name (results/<name>/)")
 }
@@ -211,7 +222,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             cfg.apply_arg(key, args.str(key))?;
         }
     }
-    for key in ["max-retries", "retry-timeout", "retry-backoff"] {
+    for key in ["max-retries", "retry-timeout", "retry-backoff", "topology"] {
         cfg.apply_arg(key, args.str(key))?;
     }
     if args.str("quorum") != "0" {

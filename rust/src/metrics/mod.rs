@@ -46,6 +46,11 @@ pub struct StepRow {
     /// `partial`; always all-zero under `wait`). Empty when the
     /// straggler-tolerant path is inactive.
     pub dropped_syncs: String,
+    /// Per-member peer-set sizes of the sync window launched this step
+    /// (`;`-joined in group order — e.g. `"1;1;1;1"` for a random-pair
+    /// matching, `"2;2;2;2"` for a ring). Empty under `--topology full`
+    /// and on steps that launch no window.
+    pub peer_set: String,
     /// Per-node liveness mask at the end of this step, one `1`/`0` char
     /// per node in node order (e.g. `"1011"` = node 1 down). Empty when
     /// the run has no membership timeline (`--churn`/`--crash` unused).
@@ -174,12 +179,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
         writeln!(
             f,
-            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,node_staleness,sync_in_flight,dropped_syncs,membership,retries,corrupt_detected,faulted_links,wall_time"
+            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,node_staleness,sync_in_flight,dropped_syncs,peer_set,membership,retries,corrupt_detected,faulted_links,wall_time"
         )?;
         for r in &self.steps {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{},{:.6}",
+                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{},{},{:.6}",
                 r.step,
                 r.sim_time,
                 r.loss,
@@ -193,6 +198,7 @@ impl RunMetrics {
                 r.node_staleness,
                 r.sync_in_flight,
                 r.dropped_syncs,
+                r.peer_set,
                 r.membership,
                 r.retries,
                 r.corrupt_detected,
@@ -308,6 +314,7 @@ mod tests {
                 node_staleness: "0;0".into(),
                 sync_in_flight: 0,
                 dropped_syncs: if s % 2 == 0 { "1;0".into() } else { String::new() },
+                peer_set: if s % 2 == 0 { "1;1".into() } else { String::new() },
                 membership: if s % 2 == 0 { "10".into() } else { String::new() },
                 retries: if s % 3 == 0 { 2 } else { 0 },
                 corrupt_detected: if s % 5 == 0 { 1 } else { 0 },

@@ -53,12 +53,14 @@ mod diloco;
 mod full;
 mod random;
 mod striding;
+pub mod topology;
 
 pub use demo::DemoReplicator;
 pub use diloco::{AsyncDiLoCoReplicator, DiLoCoReplicator};
 pub use full::FullReplicator;
 pub use random::RandomReplicator;
 pub use striding::StridingReplicator;
+pub use topology::SyncTopology;
 
 use crate::compress::{Payload, Scratch};
 use crate::tensor::Dtype;

@@ -1,0 +1,399 @@
+//! Sync-window exchange topologies — who talks to whom, per window.
+//!
+//! Every replication scheme historically synchronized over the *full*
+//! R-group, so per-window inter-node cost grows O(g) with the mesh.
+//! NoLoCo (Kolehmainen et al. 2025) shows gossip averaging — each node
+//! exchanging with a tiny, varying peer set — still converges, turning
+//! the per-window sync into O(1). [`SyncTopology`] is that knob:
+//! `--topology full|ring|random-pair|hier:<F>` selects, per sync window,
+//! the peer subset each group member exchanges its payload with.
+//!
+//! * `full` — today's whole-group exchange. The default, and bit-frozen:
+//!   every dispatch path, event schedule, and averaging denominator is
+//!   exactly the pre-topology trainer (pinned by proptest).
+//! * `ring` — fixed neighbor averaging: member *i* exchanges with
+//!   *i ± 1* (mod g) in the window's group order. Two peers per member
+//!   regardless of g.
+//! * `random-pair` — NoLoCo's actual scheme: a seeded perfect matching
+//!   per window pairs members two by two; an odd group leaves exactly
+//!   one member self-paired (it averages only itself that window). The
+//!   matching is a pure function of (seed, step, shard) — *no* shared
+//!   RNG stream is consumed, so arming the topology perturbs nothing
+//!   else and reruns are bit-reproducible.
+//! * `hier:<F>` — two-level: level 1 is the existing intra-node fabric
+//!   reduce (unchanged — it is how each member's payload already
+//!   aggregates its node), level 2 replaces the dense inter-node
+//!   exchange with a sparse symmetric overlay of `F` fanout links per
+//!   member, built from window-rotating circulant offsets so coverage
+//!   rotates across windows.
+//!
+//! Peer sets are always **symmetric** (j ∈ peers(i) ⟺ i ∈ peers(j)) —
+//! an exchange is two half-duplex sends, and both ends must agree to
+//! admit each other's payload into the mean. They are computed over
+//! *positions* in the (churn re-formed) window group, so a departed
+//! member simply vanishes and the ring/matching re-links over the
+//! survivors at the next window.
+
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Which peers each R-group member exchanges with per sync window. See
+/// the module docs for the four shapes. `Full` is the default and is
+/// bit-frozen to the pre-topology trainer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncTopology {
+    /// Whole-group exchange (the legacy path, bit-frozen).
+    Full,
+    /// Fixed ±1 neighbor ring over the window's group order.
+    Ring,
+    /// Seeded perfect matching per window (NoLoCo gossip); odd group
+    /// size leaves one member self-paired.
+    RandomPair,
+    /// Two-level: intra-node fabric reduce, then a sparse inter-node
+    /// circulant overlay of `fanout` links per member.
+    Hier {
+        /// Inter-node links per member (validated `1 ≤ F < g`).
+        fanout: usize,
+    },
+}
+
+impl Default for SyncTopology {
+    fn default() -> Self {
+        SyncTopology::Full
+    }
+}
+
+impl SyncTopology {
+    /// Parse a `--topology` value: `full`, `ring`, `random-pair`, or
+    /// `hier:<F>`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "full" => Ok(SyncTopology::Full),
+            "ring" => Ok(SyncTopology::Ring),
+            "random-pair" => Ok(SyncTopology::RandomPair),
+            _ => {
+                if let Some(f) = s.strip_prefix("hier:") {
+                    let fanout: usize = f.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "--topology hier:<F>: fanout {f:?} is not an integer (e.g. hier:2)"
+                        )
+                    })?;
+                    anyhow::ensure!(
+                        fanout >= 1,
+                        "--topology hier:<F>: fanout must be >= 1 (hier:0 exchanges nothing; \
+                         use a larger F or a different topology)"
+                    );
+                    Ok(SyncTopology::Hier { fanout })
+                } else {
+                    anyhow::bail!(
+                        "unknown --topology {s:?}: expected full, ring, random-pair, or hier:<F>"
+                    )
+                }
+            }
+        }
+    }
+
+    /// Canonical CLI spelling (round-trips through [`Self::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            SyncTopology::Full => "full".into(),
+            SyncTopology::Ring => "ring".into(),
+            SyncTopology::RandomPair => "random-pair".into(),
+            SyncTopology::Hier { fanout } => format!("hier:{fanout}"),
+        }
+    }
+
+    /// The bit-frozen legacy path?
+    pub fn is_full(&self) -> bool {
+        matches!(self, SyncTopology::Full)
+    }
+
+    /// Static validation against the configured replication-group size
+    /// (one member per node in the hybrid mesh). Rejects shapes that
+    /// cannot do what they promise instead of panicking or silently
+    /// clamping; churn shrinking a group *below* these floors at runtime
+    /// is handled gracefully by [`Self::peer_sets`].
+    pub fn validate(&self, group_size: usize) -> anyhow::Result<()> {
+        match *self {
+            SyncTopology::Ring => anyhow::ensure!(
+                group_size >= 3,
+                "--topology ring needs a replication group of >= 3 nodes (got {group_size}): \
+                 a 2-node ring is just the full exchange and a 1-node ring is a no-op; \
+                 use --topology full (or random-pair) on meshes this small"
+            ),
+            SyncTopology::Hier { fanout } => anyhow::ensure!(
+                fanout < group_size,
+                "--topology hier:{fanout} needs fanout < the replication group size \
+                 ({group_size} node{}): {fanout} inter-node links per member would \
+                 reach the whole group — lower F or use --topology full",
+                if group_size == 1 { "" } else { "s" }
+            ),
+            SyncTopology::Full | SyncTopology::RandomPair => {}
+        }
+        Ok(())
+    }
+
+    /// The window's exchange sets: for each member *position* `i` in a
+    /// group of `g`, the sorted peer positions it exchanges payloads
+    /// with (`i` itself excluded — a member always averages its own
+    /// contribution). Symmetric by construction for every variant, and a
+    /// pure function of `(seed, step, shard, g)`: no RNG stream is
+    /// consumed, so identical inputs give identical sets on every rank,
+    /// thread count, and rerun.
+    pub fn peer_sets(&self, seed: u64, step: u64, shard: u64, g: usize) -> Vec<Vec<usize>> {
+        match *self {
+            SyncTopology::Full => (0..g).map(|i| (0..g).filter(|&j| j != i).collect()).collect(),
+            SyncTopology::Ring => {
+                // Churn can shrink a validated group below 3; degrade to
+                // the dense exchange (g ≤ 2 ring = full) rather than
+                // refusing to sync.
+                (0..g)
+                    .map(|i| {
+                        let mut p = vec![(i + g - 1) % g, (i + 1) % g];
+                        p.sort_unstable();
+                        p.dedup();
+                        p.retain(|&j| j != i);
+                        p
+                    })
+                    .collect()
+            }
+            SyncTopology::RandomPair => {
+                let mut perm: Vec<usize> = (0..g).collect();
+                // A *locally* seeded generator: the stream is derived
+                // from (seed, step, shard) and dropped afterwards, so
+                // the experiment's shared streams never advance.
+                Rng::new(mix(seed, step, shard, 0x70_61_69_72)).shuffle(&mut perm);
+                let mut peers = vec![Vec::new(); g];
+                for pair in perm.chunks_exact(2) {
+                    peers[pair[0]] = vec![pair[1]];
+                    peers[pair[1]] = vec![pair[0]];
+                }
+                // Odd g: perm's last element is unmatched — it keeps an
+                // empty peer set and averages only itself this window.
+                peers
+            }
+            SyncTopology::Hier { fanout } => {
+                let mut degree = fanout.min(g.saturating_sub(1));
+                let mut offsets: Vec<usize> = Vec::new();
+                if degree % 2 == 1 {
+                    if g % 2 == 0 {
+                        // The diameter offset g/2 is its own inverse:
+                        // one link, keeping the overlay symmetric at an
+                        // odd degree.
+                        offsets.push(g / 2);
+                        degree -= 1;
+                    } else {
+                        // No odd-degree regular graph exists on an odd
+                        // node count; round the degree up to the next
+                        // even value (capped at g−1, which is even here)
+                        // so hier:1 still exchanges something.
+                        degree = (degree + 1).min(g - 1);
+                    }
+                }
+                let pairs = degree / 2;
+                let avail = (g - 1) / 2;
+                if pairs > 0 && avail > 0 {
+                    // Rotate the circulant strides per window so sparse
+                    // overlays still mix information across the whole
+                    // group over time.
+                    let start = (mix(seed, step, shard, 0x68_69_65_72) % avail as u64) as usize;
+                    for j in 0..pairs {
+                        offsets.push(1 + (start + j) % avail);
+                    }
+                }
+                (0..g)
+                    .map(|i| {
+                        let mut p: Vec<usize> = offsets
+                            .iter()
+                            .flat_map(|&o| [(i + o) % g, (i + g - o) % g])
+                            .filter(|&j| j != i)
+                            .collect();
+                        p.sort_unstable();
+                        p.dedup();
+                        p
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for SyncTopology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// One SplitMix64 draw over the window coordinates — the same
+/// pure-hash-of-(seed, step, …) idiom the fault timeline uses, with a
+/// per-use tag so topology draws never collide with other consumers.
+fn mix(seed: u64, step: u64, shard: u64, tag: u64) -> u64 {
+    SplitMix64::new(
+        seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ shard.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+            ^ tag.rotate_left(31),
+    )
+    .next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    fn check_symmetric(peers: &[Vec<usize>]) {
+        for (i, ps) in peers.iter().enumerate() {
+            for &j in ps {
+                assert_ne!(i, j, "member {i} lists itself");
+                assert!(
+                    peers[j].contains(&i),
+                    "asymmetric: {i} lists {j} but not vice versa ({peers:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        for s in ["full", "ring", "random-pair", "hier:2", "hier:7"] {
+            assert_eq!(SyncTopology::parse(s).unwrap().label(), s);
+        }
+        assert!(SyncTopology::parse("mesh").is_err());
+        assert!(SyncTopology::parse("hier:").is_err());
+        assert!(SyncTopology::parse("hier:x").is_err());
+        let err = SyncTopology::parse("hier:0").unwrap_err().to_string();
+        assert!(err.contains(">= 1"), "unactionable: {err}");
+    }
+
+    #[test]
+    fn validate_rejects_tiny_ring_and_wide_hier() {
+        let err = SyncTopology::Ring.validate(2).unwrap_err().to_string();
+        assert!(err.contains(">= 3") && err.contains("full"), "unactionable: {err}");
+        SyncTopology::Ring.validate(3).unwrap();
+        let err = SyncTopology::Hier { fanout: 4 }
+            .validate(4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fanout < "), "unactionable: {err}");
+        SyncTopology::Hier { fanout: 3 }.validate(4).unwrap();
+        SyncTopology::Full.validate(1).unwrap();
+        SyncTopology::RandomPair.validate(1).unwrap();
+    }
+
+    #[test]
+    fn full_is_everyone_else() {
+        let peers = SyncTopology::Full.peer_sets(1, 2, 3, 4);
+        assert_eq!(peers, vec![vec![1, 2, 3], vec![0, 2, 3], vec![0, 1, 3], vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn ring_is_both_neighbors_and_degrades_small() {
+        let peers = SyncTopology::Ring.peer_sets(0, 0, 0, 5);
+        assert_eq!(peers[0], vec![1, 4]);
+        assert_eq!(peers[2], vec![1, 3]);
+        check_symmetric(&peers);
+        // Churn-shrunk groups: g = 2 degrades to the pair, g = 1 to
+        // nothing — no panic, no self-loop.
+        assert_eq!(SyncTopology::Ring.peer_sets(0, 0, 0, 2), vec![vec![1], vec![0]]);
+        assert_eq!(SyncTopology::Ring.peer_sets(0, 0, 0, 1), vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn random_pair_is_a_perfect_matching() {
+        proptest(200, |gen| {
+            let g = gen.usize(1, 33);
+            let seed = gen.u64();
+            let step = gen.u64() % 1000;
+            let t = SyncTopology::RandomPair;
+            let peers = t.peer_sets(seed, step, 2, g);
+            check_symmetric(&peers);
+            let selfies = peers.iter().filter(|p| p.is_empty()).count();
+            crate::util::proptest::prop_assert(
+                selfies == g % 2,
+                &format!("odd-one-out count {selfies} for g={g}"),
+            );
+            for p in &peers {
+                crate::util::proptest::prop_assert(p.len() <= 1, "matching degree > 1");
+            }
+            // Pure hash: a rerun (fresh call, no shared state) is
+            // bit-identical.
+            crate::util::proptest::prop_assert(
+                peers == t.peer_sets(seed, step, 2, g),
+                "matching not reproducible",
+            );
+        });
+    }
+
+    #[test]
+    fn random_pair_varies_across_windows() {
+        // Not a fixed pairing: across many windows of an 8-group each
+        // member meets more than one distinct partner.
+        let t = SyncTopology::RandomPair;
+        let mut partners: Vec<std::collections::HashSet<usize>> =
+            (0..8).map(|_| Default::default()).collect();
+        for step in 0..32 {
+            for (i, p) in t.peer_sets(42, step, 0, 8).iter().enumerate() {
+                partners[i].extend(p.iter().copied());
+            }
+        }
+        assert!(partners.iter().all(|s| s.len() >= 3), "{partners:?}");
+    }
+
+    #[test]
+    fn hier_is_symmetric_sparse_and_rotates() {
+        proptest(200, |gen| {
+            let g = gen.usize(2, 33);
+            let fanout = gen.usize(1, g);
+            let seed = gen.u64();
+            let step = gen.u64() % 1000;
+            let t = SyncTopology::Hier { fanout };
+            let peers = t.peer_sets(seed, step, 1, g);
+            check_symmetric(&peers);
+            for p in &peers {
+                // Odd F on an odd g rounds up by one; never denser than
+                // the full group.
+                crate::util::proptest::prop_assert(
+                    p.len() <= (fanout + 1).min(g - 1),
+                    &format!("degree {} exceeds fanout {fanout} (g={g})", p.len()),
+                );
+                crate::util::proptest::prop_assert(
+                    fanout < g - 1 || p.len() == g - 1,
+                    "fanout g-1 must reach everyone",
+                );
+            }
+            crate::util::proptest::prop_assert(
+                peers == t.peer_sets(seed, step, 1, g),
+                "overlay not reproducible",
+            );
+        });
+        // The stride rotates with the step: on a large group, some pair
+        // of windows must differ.
+        let t = SyncTopology::Hier { fanout: 2 };
+        let first = t.peer_sets(7, 0, 0, 16);
+        assert!((1..8).any(|s| t.peer_sets(7, s, 0, 16) != first));
+    }
+
+    #[test]
+    fn peer_sets_are_sorted_dedup_in_range() {
+        proptest(200, |gen| {
+            let g = gen.usize(1, 20);
+            let fanout = 1 + gen.usize(0, g.max(2) - 2);
+            let t = *gen.choose(&[
+                SyncTopology::Full,
+                SyncTopology::Ring,
+                SyncTopology::RandomPair,
+                SyncTopology::Hier { fanout },
+            ]);
+            let peers = t.peer_sets(gen.u64(), gen.u64(), gen.u64(), g);
+            crate::util::proptest::prop_assert(peers.len() == g, "wrong member count");
+            for (i, p) in peers.iter().enumerate() {
+                for w in p.windows(2) {
+                    crate::util::proptest::prop_assert(w[0] < w[1], "unsorted or dup");
+                }
+                crate::util::proptest::prop_assert(
+                    p.iter().all(|&j| j < g && j != i),
+                    "peer out of range or self",
+                );
+            }
+        });
+    }
+}

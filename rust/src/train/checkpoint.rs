@@ -18,7 +18,9 @@
 //! re-quantized on the way back in). Version 2 appends a CRC-32 of
 //! everything before it, verified up front at decode, so a truncated or
 //! bit-flipped file is rejected with one actionable error instead of a
-//! parse failure deep in the body. Saves are atomic
+//! parse failure deep in the body; version 3 adds each parked window's
+//! per-member peer sets (the sync-topology selection the window was
+//! launched under) and folds the topology into the config fingerprint. Saves are atomic
 //! ([`crate::util::atomic_write`]: temp file + rename), so a crash
 //! mid-save never corrupts the previous checkpoint — which is exactly
 //! the file a crashed node's rejoin reads
@@ -39,19 +41,20 @@ use super::engine::EngineState;
 use super::{PendingSync, Trainer};
 
 const MAGIC: &[u8; 8] = b"DTNCKPT1";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// The config facets a checkpoint must agree on to be restorable: the
 /// state vectors below are only meaningful on the same model/mesh/
 /// optimizer/replicator/seed/schedule.
 fn fingerprint(cfg: &ExperimentConfig) -> String {
     format!(
-        "{}|{}x{}|{}|{}|seed={}|steps={}|lr={}",
+        "{}|{}x{}|{}|{}|topo={}|seed={}|steps={}|lr={}",
         cfg.model,
         cfg.nodes,
         cfg.accels_per_node,
         cfg.opt.label(),
         cfg.repl.label(),
+        cfg.topology.label(),
         cfg.seed,
         cfg.steps,
         cfg.lr,
@@ -341,6 +344,7 @@ fn write_pending(w: &mut W, slot: &Option<PendingSync>) {
             contrib_end,
             arrival,
             applied,
+            peers,
         }) => {
             w.u8(2);
             w.u64s(&group.iter().map(|&r| r as u64).collect::<Vec<u64>>());
@@ -351,6 +355,10 @@ fn write_pending(w: &mut W, slot: &Option<PendingSync>) {
             w.f64s(contrib_end);
             w.u64s(arrival);
             w.bools(applied);
+            w.len(peers.len());
+            for p in peers {
+                w.u64s(&p.iter().map(|&j| j as u64).collect::<Vec<u64>>());
+            }
         }
     }
 }
@@ -375,10 +383,22 @@ fn read_pending(r: &mut R, world: usize) -> Result<Option<PendingSync>> {
             let contrib_end = r.f64s()?;
             let arrival = r.u64s()?;
             let applied = r.bools()?;
+            let np = r.count(8)?;
+            let peers = (0..np)
+                .map(|_| Ok(r.u64s()?.into_iter().map(|x| x as usize).collect::<Vec<usize>>()))
+                .collect::<Result<Vec<_>>>()?;
             let g = group.len();
             anyhow::ensure!(
-                payloads.len() == g && contrib_end.len() == g && arrival.len() == g && applied.len() == g,
+                payloads.len() == g
+                    && contrib_end.len() == g
+                    && arrival.len() == g
+                    && applied.len() == g
+                    && peers.len() == g,
                 "checkpoint pending window has inconsistent member counts"
+            );
+            anyhow::ensure!(
+                peers.iter().all(|p| p.iter().all(|&j| j < g)),
+                "checkpoint pending window peer set names a member outside the group"
             );
             Ok(Some(PendingSync::PerNode {
                 group,
@@ -386,6 +406,7 @@ fn read_pending(r: &mut R, world: usize) -> Result<Option<PendingSync>> {
                 contrib_end,
                 arrival,
                 applied,
+                peers,
             }))
         }
         t => anyhow::bail!("checkpoint pending slot has unknown tag {t}"),
@@ -727,6 +748,7 @@ mod tests {
             contrib_end: vec![0.25, 1.5],
             arrival: vec![4, 6],
             applied: vec![true, false],
+            peers: vec![vec![1], vec![0]],
         });
         let mut w = W::new();
         write_pending(&mut w, &slot);
@@ -746,12 +768,14 @@ mod tests {
                 arrival,
                 applied,
                 payloads,
+                peers,
             }) => {
                 assert_eq!(group, vec![0, 2]);
                 assert_eq!(contrib_end, vec![0.25, 1.5]);
                 assert_eq!(arrival, vec![4, 6]);
                 assert_eq!(applied, vec![true, false]);
                 assert_eq!(payloads.len(), 2);
+                assert_eq!(peers, vec![vec![1], vec![0]]);
             }
             other => panic!("wrong variant: {:?}", other.is_some()),
         }

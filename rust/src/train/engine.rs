@@ -704,16 +704,38 @@ impl StepEngine {
     /// PR 4 whole-group event ([`Self::gather_deferred`]) — that path is
     /// bit-frozen; this one intentionally prices the same bytes as
     /// independent per-sender queues.
+    ///
+    /// `topo_dests` arms a non-full [`SyncTopology`]: member *i* then
+    /// sends only to the member indices in `topo_dests[i]`, its NIC
+    /// event is priced as that many point-to-point sends (so gossip's
+    /// O(1) per-window cost is what the clock and traces actually see,
+    /// labelled `gossip-gather`), traffic is recorded on the selected
+    /// links only, and the fault timeline judges the transfer on those
+    /// links alone — a fault on an unused link cannot touch it. A
+    /// self-paired member (empty dest list) charges nothing and cannot
+    /// fault. `None` is the whole-group exchange, bit-identical to the
+    /// pre-topology schedule.
     pub fn gather_deferred_per_member(
         &mut self,
         group: &[usize],
         mode: GatherMode,
         payload_bytes: &[u64],
         traffic: &TrafficMatrix,
+        topo_dests: Option<&[Vec<usize>]>,
     ) -> Vec<SimTime> {
         let g = group.len();
         let class = self.topo.group_link_class(group);
-        mode.record_traffic(traffic, &self.topo, group, payload_bytes);
+        match topo_dests {
+            None => mode.record_traffic(traffic, &self.topo, group, payload_bytes),
+            Some(dests) => {
+                for (i, d) in dests.iter().enumerate() {
+                    let src = self.topo.node_of(group[i]);
+                    for &j in d {
+                        traffic.record(src, self.topo.node_of(group[j]), payload_bytes[i]);
+                    }
+                }
+            }
+        }
         let h = if self.overlap {
             None
         } else {
@@ -739,8 +761,20 @@ impl StepEngine {
                 lat: self.net.lat(class),
                 bw: self.cluster.group_bw(&self.net, class, &[node]),
             };
-            let mut ev = match mode {
-                GatherMode::NaiveAllGather => {
+            let mut ev = match (topo_dests, mode) {
+                // A topology-selected peer set prices exactly its links:
+                // |dests| point-to-point sends of this member's payload,
+                // whatever the scheme's whole-group transport would be.
+                (Some(dests), _) => {
+                    let n = dests[i].len() as u64;
+                    CommEvent::new(
+                        "gossip-gather",
+                        class,
+                        n * payload_bytes[i],
+                        n as f64 * link.xfer(payload_bytes[i]),
+                    )
+                }
+                (None, GatherMode::NaiveAllGather) => {
                     let (bytes, dur) = if g <= 1 {
                         (0, 0.0)
                     } else {
@@ -753,22 +787,30 @@ impl StepEngine {
                 }
                 // Ring transports have no per-sender decomposition;
                 // charge the whole event on this member's lane.
-                _ => mode.comm_event(&link, payload_bytes),
+                (None, _) => mode.comm_event(&link, payload_bytes),
             }
             .owned_by(node);
-            ev.label = "async-gather";
+            ev.label = if topo_dests.is_some() {
+                "gossip-gather"
+            } else {
+                "async-gather"
+            };
             let earliest = h.unwrap_or(self.rs_done[rank]);
-            // The sender's destinations are every *other* member's node
-            // — the links the fault timeline judges this transfer on.
-            let dsts: Vec<usize> = member_nodes
-                .iter()
-                .enumerate()
-                .filter(|&(j, _)| j != i)
-                .map(|(_, &n)| n)
-                .collect();
+            // The sender's destinations — every *other* member's node,
+            // or only the topology-selected peers' nodes — are the links
+            // the fault timeline judges this transfer on.
+            let dsts: Vec<usize> = match topo_dests {
+                Some(dests) => dests[i].iter().map(|&j| member_nodes[j]).collect(),
+                None => member_nodes
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, _)| j != i)
+                    .map(|(_, &n)| n)
+                    .collect(),
+            };
             let faulted = fault
                 .as_ref()
-                .filter(|f| f.timeline.affects(self.fault_step, node, &dsts));
+                .filter(|f| !dsts.is_empty() && f.timeline.affects(self.fault_step, node, &dsts));
             let Some(f) = faulted else {
                 // Perfect-network fast path: bit-identical to the
                 // pre-fault schedule (one reservation, no outcome roll).
@@ -1473,8 +1515,13 @@ mod tests {
         e.unshard(4096, &traffic);
         e.compute(1e9);
         e.reduce_scatter(4096);
-        let ends =
-            e.gather_deferred_per_member(&group, GatherMode::NaiveAllGather, &payload, &traffic);
+        let ends = e.gather_deferred_per_member(
+            &group,
+            GatherMode::NaiveAllGather,
+            &payload,
+            &traffic,
+            None,
+        );
         e.end_step();
         let evs: Vec<CommEvent> = e
             .events
@@ -1547,6 +1594,7 @@ mod tests {
                         GatherMode::NaiveAllGather,
                         &payload,
                         &traffic,
+                        None,
                     );
                     e.sync_arrival_member(0, ends[1]);
                     e.sync_arrival_member(1, ends[0]);
@@ -1752,6 +1800,7 @@ mod tests {
             GatherMode::NaiveAllGather,
             &[500_000, 500_000],
             &traffic,
+            None,
         );
         e.end_step();
         ends

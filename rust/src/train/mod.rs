@@ -153,6 +153,12 @@ enum PendingSync {
         arrival: Vec<u64>,
         /// Which members have aggregated already.
         applied: Vec<bool>,
+        /// Per-member admissible peer positions within the window
+        /// ([`crate::replicate::SyncTopology::peer_sets`] at launch): a
+        /// member aggregates only itself plus these. Under `--topology
+        /// full` every other position is listed, reproducing the
+        /// whole-group mean.
+        peers: Vec<Vec<usize>>,
     },
 }
 
@@ -186,6 +192,10 @@ pub struct Trainer {
     node_staleness_label: String,
     /// Per-node late-contribution counts this step (`dropped_syncs`).
     dropped_step: Vec<u64>,
+    /// `;`-joined per-member peer-set sizes of the last sync window
+    /// launched this step (the `peer_set` CSV column; empty under
+    /// `--topology full` or on steps without a launch).
+    peer_set_step: String,
     /// The discrete-event clock (per-rank compute + NIC timelines).
     pub engine: StepEngine,
     pub traffic: TrafficMatrix,
@@ -327,6 +337,7 @@ impl Trainer {
             node_delay,
             node_staleness_label,
             dropped_step: vec![0; cfg.nodes],
+            peer_set_step: String::new(),
             engine,
             traffic,
             last_timing: StepTiming::default(),
@@ -647,6 +658,7 @@ impl Trainer {
                 contrib_end,
                 arrival,
                 applied,
+                peers,
             }) = pending.as_mut()
             else {
                 anyhow::bail!("step {step} shard {shard}: arrival scan without a per-node window");
@@ -707,9 +719,20 @@ impl Trainer {
                 // land, so not even `wait` admits it (gating on it would
                 // freeze the clock); it falls through to the late
                 // handling below.
+                // A position outside this member's topology peer set is
+                // not part of its exchange at all: never admitted, never
+                // late, never counted — the member's mean is over its
+                // peer set only. `--topology full` lists every other
+                // position, so in_scope is always true there and the
+                // decisions below are bit-identical to the pre-topology
+                // scan.
+                let in_scope = |wj: usize| wj == wi || peers[wi].contains(&wj);
                 let mut admit_peer = vec![false; wgroup.len()];
                 let mut late_idx: Vec<usize> = Vec::new();
                 for wj in 0..wgroup.len() {
+                    if !in_scope(wj) {
+                        continue;
+                    }
                     if wj == wi
                         || (quorum_k == 0
                             && policy == LatePolicy::Wait
@@ -769,7 +792,7 @@ impl Trainer {
                             gate = gate.max(contrib_end[wj]);
                         }
                         quorum.push(p);
-                    } else {
+                    } else if in_scope(wj) {
                         late += 1;
                         if policy == LatePolicy::Partial && contrib_end[wj].is_finite() {
                             next_carried.push((p.clone(), contrib_end[wj]));
@@ -846,6 +869,7 @@ impl Trainer {
         self.engine.begin_step();
         self.engine.set_fault_step(step);
         self.dropped_step.fill(0);
+        self.peer_set_step.clear();
         self.corrupt_detected_step = 0;
         if !self.membership.is_empty() {
             self.apply_membership_events()?;
@@ -955,13 +979,17 @@ impl Trainer {
                 // Any non-empty link-fault timeline routes through the
                 // per-member path below: faults act on individual NIC
                 // transfers, which only exist as per-member lanes (the
-                // same trick the membership timeline uses).
+                // same trick the membership timeline uses). A non-full
+                // sync topology does the same: a gossip exchange only
+                // exists as per-member peer-set lanes.
                 let faultless = self.cfg.link_fault.is_empty();
-                if uniform && delays[0] == 0 && self.cfg.quorum == 0 && faultless {
+                let topo_full = self.cfg.topology.is_full();
+                if topo_full && uniform && delays[0] == 0 && self.cfg.quorum == 0 && faultless {
                     // Synchronous replication: the mean lands this step.
                     self.engine.gather(&group, mode, &sizes, &self.traffic);
                     self.apply_mean(&group, &rctx, payloads, &mut locals, (lo, hi), lr);
-                } else if uniform
+                } else if topo_full
+                    && uniform
                     && self.cfg.late_policy() == LatePolicy::Wait
                     && self.cfg.quorum == 0
                     && self.membership.is_empty()
@@ -990,12 +1018,30 @@ impl Trainer {
                         self.pending[a].is_none(),
                         "step {step} shard {a}: deferred sync launched with one still in flight"
                     );
+                    // The window's exchange sets, computed once at
+                    // launch over the (re-formed) group's positions: a
+                    // pure hash of (seed, step, shard), identical on
+                    // every rank and rerun. Full lists every other
+                    // position — the whole-group mean, bit-identical
+                    // admission decisions to the pre-topology scan.
+                    let peers =
+                        self.cfg
+                            .topology
+                            .peer_sets(self.cfg.seed, step, a as u64, group.len());
                     let contrib_end = self.engine.gather_deferred_per_member(
                         &group,
                         mode,
                         &sizes,
                         &self.traffic,
+                        if topo_full { None } else { Some(&peers) },
                     );
+                    if !topo_full {
+                        self.peer_set_step = peers
+                            .iter()
+                            .map(|p| p.len().to_string())
+                            .collect::<Vec<_>>()
+                            .join(";");
+                    }
                     // Fault bookkeeping: every corrupt delivery is
                     // checked against the payload's real checksum (the
                     // detection the retry was predicated on), and an
@@ -1030,6 +1076,7 @@ impl Trainer {
                         contrib_end,
                         arrival: delays.iter().map(|&d| step + d).collect(),
                         applied: vec![false; group.len()],
+                        peers,
                     });
                     self.arrival_scan(&group, &rctx, a, &mut locals, (lo, hi), lr)?;
                 }
@@ -1190,6 +1237,7 @@ impl Trainer {
                         .collect::<Vec<_>>()
                         .join(";")
                 },
+                peer_set: self.peer_set_step.clone(),
                 membership: if self.membership.is_empty() {
                     String::new()
                 } else {

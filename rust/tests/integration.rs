@@ -1438,6 +1438,238 @@ mod engine_invariants {
         assert!(t.engine.now() <= t.engine.serialized_time() * (1.0 + 1e-12));
     }
 
+    // -----------------------------------------------------------------
+    // sync topology (gossip / partial connectivity)
+    // -----------------------------------------------------------------
+
+    /// Tentpole pin: `--topology full` is the bit-frozen pre-topology
+    /// path. An explicit `full` must reproduce the default config
+    /// exactly — losses, sim times, validation, final parameters —
+    /// across schemes (hitting all three dispatch paths: synchronous,
+    /// whole-group window, per-member window), meshes, and
+    /// `--threads {1, 2, 4}`.
+    #[test]
+    fn prop_topology_full_bit_identical_to_default() {
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(1, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&["demo:1/8", "full", "diloco:2", "diloco:3:async=1"]);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let fingerprint = |explicit: bool| {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 5;
+                cfg.threads = threads;
+                cfg.val_every = 2;
+                cfg.val_batches = 2;
+                if explicit {
+                    cfg.apply_arg("topology", "full").unwrap();
+                }
+                let (t, m) = run(cfg);
+                // full never populates the peer-set column
+                assert!(m.steps.iter().all(|r| r.peer_set.is_empty()));
+                run_fingerprint(&t, &m)
+            };
+            detonation::util::proptest::prop_assert(
+                fingerprint(false) == fingerprint(true),
+                format!("{nodes}x{accels} {repl} t{threads}: explicit --topology full changed bits"),
+            );
+        });
+    }
+
+    /// Tentpole acceptance: a random-pair run is a pure function of
+    /// the config — the per-window matching is a hash of
+    /// (seed, step, shard), not an RNG draw — so a fixed seed
+    /// reproduces the run bit-for-bit across reruns and
+    /// `--threads {1, 2, 4}`, and every launch step's peer-set column
+    /// records a perfect matching (everyone paired on even groups, one
+    /// self-paired member on odd ones).
+    #[test]
+    fn prop_random_pair_bit_reproducible_across_reruns_and_threads() {
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(2, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&["demo:1/8", "diloco:2", "diloco:3:async=1"]);
+            let fingerprint = |threads: usize| {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 5;
+                cfg.threads = threads;
+                cfg.apply_arg("topology", "random-pair").unwrap();
+                let (t, m) = run(cfg);
+                assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+                let mut launches = 0;
+                for r in &m.steps {
+                    if r.peer_set.is_empty() {
+                        continue;
+                    }
+                    launches += 1;
+                    let sizes: Vec<usize> =
+                        r.peer_set.split(';').map(|s| s.parse().unwrap()).collect();
+                    assert_eq!(sizes.len(), nodes, "step {}: {:?}", r.step, r.peer_set);
+                    assert!(sizes.iter().all(|&s| s <= 1), "{:?}", r.peer_set);
+                    assert_eq!(
+                        sizes.iter().sum::<usize>(),
+                        2 * (nodes / 2),
+                        "step {}: not a perfect matching: {:?}",
+                        r.step,
+                        r.peer_set
+                    );
+                }
+                assert!(launches > 0, "no per-member window ever launched");
+                run_fingerprint(&t, &m)
+            };
+            let serial = fingerprint(1);
+            detonation::util::proptest::prop_assert(
+                serial == fingerprint(1),
+                format!("{nodes}x{accels} {repl}: random-pair rerun changed bits"),
+            );
+            for threads in [2usize, 4] {
+                detonation::util::proptest::prop_assert(
+                    serial == fingerprint(threads),
+                    format!("{nodes}x{accels} {repl}: --threads {threads} changed bits"),
+                );
+            }
+        });
+    }
+
+    /// Satellite: `--topology ring` composes with `--churn`. A 4-node
+    /// ring loses a member mid-run: the window re-forms around the
+    /// departed node, ring peer sets are recomputed over the re-formed
+    /// group (3 members → both neighbors = everyone else), and the run
+    /// completes with finite losses and the engine bound intact.
+    #[test]
+    fn ring_topology_composes_with_churn() {
+        let mut cfg = synth_cfg("diloco:2");
+        cfg.nodes = 4;
+        cfg.accels_per_node = 1;
+        cfg.steps = 8;
+        cfg.apply_arg("topology", "ring").unwrap();
+        cfg.apply_arg("churn", "leave:2@3,join:2@6").unwrap();
+        let (t, m) = run(cfg);
+        assert!(m.steps.iter().all(|r| r.loss.is_finite()));
+        assert_eq!(m.steps.len(), 8, "churned ring did not complete");
+        let masks: Vec<&str> = m.steps.iter().map(|r| r.membership.as_str()).collect();
+        assert_eq!(
+            masks,
+            ["1111", "1111", "1111", "1101", "1101", "1101", "1111", "1111"]
+        );
+        // launch steps carry the peer-set sizes: 2 neighbors each on
+        // the full ring, and still 2 each on the re-formed 3-group
+        for r in &m.steps {
+            if !r.peer_set.is_empty() {
+                let sizes: Vec<usize> =
+                    r.peer_set.split(';').map(|s| s.parse().unwrap()).collect();
+                assert!(
+                    sizes == vec![2; 4] || sizes == vec![2; 3],
+                    "step {}: unexpected ring peer sets {:?}",
+                    r.step,
+                    r.peer_set
+                );
+            }
+        }
+        assert!(t.engine.now() <= t.engine.serialized_time() * (1.0 + 1e-12));
+    }
+
+    /// Satellite pin: a gossip window's averaging denominator is the
+    /// contributing set, not the group size — `mean_decoded_refs` over
+    /// a ring member's {self, 2 neighbors} divides by 3, and over a
+    /// churn-shrunken {self, 1 peer} set by 2, bit-for-bit the float
+    /// chain of averaging a group of that size.
+    #[test]
+    fn gossip_window_mean_divides_by_the_peer_set() {
+        use detonation::compress::Scratch;
+        use detonation::replicate::{mean_decoded_refs, DiLoCoReplicator, ReplCtx, Replicator};
+        use detonation::tensor::Dtype;
+        let len = 5;
+        let ctx = ReplCtx {
+            step: 0,
+            shard: 0,
+            seed: 3,
+        };
+        let mut scratch = Scratch::new();
+        let mut payloads = Vec::new();
+        for delta in [1.0f32, 3.0, 8.0, 100.0] {
+            let mut r = DiLoCoReplicator::new(1, false, Dtype::F32, len);
+            let mut buf = vec![delta; len];
+            let (_, p) = r.extract(&ctx, &mut buf, &mut scratch);
+            payloads.push(p.expect("period-1 diloco emits every step"));
+        }
+        let decoder = DiLoCoReplicator::new(1, false, Dtype::F32, len);
+        let [pa, pb, pc, pd] = &payloads[..] else {
+            unreachable!()
+        };
+        // ring member: itself plus its two neighbors → /3, the
+        // 100-delta outsider never enters the mean
+        let ring = mean_decoded_refs(&decoder, &ctx, &[pa, pb, pc], len, &mut scratch);
+        assert!(
+            ring.iter().all(|&x| (x - (1.0 + 3.0 + 8.0) / 3.0).abs() < 1e-5),
+            "{ring:?}"
+        );
+        scratch.put_f32(ring);
+        // churn-shrunken pair → /2
+        let pair = mean_decoded_refs(&decoder, &ctx, &[pa, pb], len, &mut scratch);
+        assert_eq!(pair, vec![(1.0f32 + 3.0) * 0.5; len]);
+        scratch.put_f32(pair);
+        let _ = pd;
+    }
+
+    /// Satellite: `--topology random-pair` × a persistent partition.
+    /// The matching keeps drawing the dead link (2 nodes pair with
+    /// each other every window); retries exhaust and the sender falls
+    /// back through each `--late-policy` without deadlock.
+    #[test]
+    fn random_pair_full_partition_completes_under_every_late_policy() {
+        for policy in ["wait", "drop", "partial"] {
+            let mut cfg = synth_cfg("diloco:2");
+            cfg.steps = 8;
+            cfg.apply_arg("topology", "random-pair").unwrap();
+            cfg.apply_arg("link-fault", "flap:1-*@0..99").unwrap();
+            cfg.apply_arg("late-policy", policy).unwrap();
+            let (t, m) = run(cfg);
+            assert!(m.steps.iter().all(|r| r.loss.is_finite()), "{policy}");
+            assert_eq!(m.steps.len(), 8, "{policy}: partitioned gossip deadlocked");
+            assert!(m.total_sim_time().is_finite(), "{policy}");
+            assert!(
+                m.total_retries() > 0,
+                "{policy}: the paired transfer never hit the dead link"
+            );
+            assert!(t.engine.now() <= t.engine.serialized_time() * (1.0 + 1e-12));
+        }
+    }
+
+    /// Gossip ships O(degree), not O(group): at 8 nodes a ring window
+    /// moves strictly fewer inter-node bytes than the full-group
+    /// window with identical payloads, and the sparse exchange can
+    /// only shorten the simulated clock.
+    #[test]
+    fn ring_ships_fewer_bytes_than_full_at_eight_nodes() {
+        let mk = |topo: &str| {
+            let mut cfg = synth_cfg("diloco:2");
+            cfg.nodes = 8;
+            cfg.accels_per_node = 1;
+            cfg.steps = 6;
+            cfg.apply_arg("topology", topo).unwrap();
+            run(cfg).1
+        };
+        let full = mk("full");
+        let ring = mk("ring");
+        assert!(
+            ring.total_inter_bytes() < full.total_inter_bytes(),
+            "ring {} >= full {}",
+            ring.total_inter_bytes(),
+            full.total_inter_bytes()
+        );
+        assert!(
+            ring.total_sim_time() <= full.total_sim_time() * (1.0 + 1e-12),
+            "sparse exchange slower than full: {} vs {}",
+            ring.total_sim_time(),
+            full.total_sim_time()
+        );
+    }
+
     #[test]
     fn prop_overlap_bounded_across_random_meshes() {
         detonation::util::proptest::proptest(10, |g| {

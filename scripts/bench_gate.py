@@ -62,6 +62,7 @@ METRICS = {
     "stragglers": [("arms", ("label",), "sim_step_s", False)],
     "chaos": [("arms", ("label",), "sim_step_s", False)],
     "faults": [("arms", ("label",), "sim_step_s", False)],
+    "topology": [("arms", ("label",), "sim_step_s", False)],
 }
 
 # invariant registry: artifact stem -> list of (dotted field path, expected)
@@ -86,6 +87,11 @@ INVARIANTS = {
         ("faultfree_identical", True),
         ("retry_beats_resend", True),
         ("partition_completed", True),
+    ],
+    "topology": [
+        ("full_bit_identical", True),
+        ("gossip_flat", True),
+        ("full_grows", True),
     ],
 }
 
@@ -118,6 +124,17 @@ FAULTS_ARMS = (
     "resend",
     "partition",
 )
+
+# sync-topology gate bands. Gossip exchanges are O(degree), so a sparse
+# arm's per-step sim time at g = 64 must stay within TOPOLOGY_FLAT_BAND x
+# its own g = 4 time (the full-group arm, by contrast, must grow), and a
+# sparse arm's tail loss must stay within TOPOLOGY_LOSS_BAND x the
+# full-group arm's at the same g (gossip mixes slower, it must not
+# diverge).
+TOPOLOGY_FLAT_BAND = 1.5
+TOPOLOGY_LOSS_BAND = 2.0
+TOPOLOGY_GROUPS = (4, 16, 64)
+TOPOLOGY_SPARSE = ("ring", "random-pair", "hier2")
 
 
 def lookup(doc, dotted):
@@ -302,6 +319,58 @@ def computed_invariants(stem, doc):
             c = _num(retry, "corrupt_detected", errors, stem, "retry")
             if c is not None and c <= 0:
                 errors.append(f"{stem}: retry arm detected no corruption")
+    if stem == "topology":
+        arms = {a.get("label"): a for a in doc.get("arms", [])}
+        for g in TOPOLOGY_GROUPS:
+            for topo in ("full",) + TOPOLOGY_SPARSE:
+                if f"g{g}-{topo}" not in arms:
+                    errors.append(f"{stem}: arm 'g{g}-{topo}' missing")
+        g_lo, g_hi = TOPOLOGY_GROUPS[0], TOPOLOGY_GROUPS[-1]
+        # gossip scaling: every sparse arm stays flat from g_lo to g_hi…
+        for topo in TOPOLOGY_SPARSE:
+            lo = arms.get(f"g{g_lo}-{topo}")
+            hi = arms.get(f"g{g_hi}-{topo}")
+            if lo is None or hi is None:
+                continue
+            lo_t = _num(lo, "sim_step_s", errors, stem, f"g{g_lo}-{topo}")
+            hi_t = _num(hi, "sim_step_s", errors, stem, f"g{g_hi}-{topo}")
+            if lo_t is not None and hi_t is not None and lo_t > 0 \
+                    and not hi_t <= lo_t * TOPOLOGY_FLAT_BAND:
+                errors.append(
+                    f"{stem}: {topo} per-step time grew past the "
+                    f"{TOPOLOGY_FLAT_BAND}x gossip band from g={g_lo} to "
+                    f"g={g_hi} ({lo_t} -> {hi_t})"
+                )
+        # …while the full-group exchange grows with the group
+        full_lo = arms.get(f"g{g_lo}-full")
+        full_hi = arms.get(f"g{g_hi}-full")
+        if full_lo is not None and full_hi is not None:
+            lo_t = _num(full_lo, "sim_step_s", errors, stem, f"g{g_lo}-full")
+            hi_t = _num(full_hi, "sim_step_s", errors, stem, f"g{g_hi}-full")
+            if lo_t is not None and hi_t is not None and not hi_t > lo_t:
+                errors.append(
+                    f"{stem}: full-group per-step time did not grow with g "
+                    f"({lo_t} -> {hi_t})"
+                )
+        # loss band: gossip mixes slower but must not diverge from full
+        for g in TOPOLOGY_GROUPS:
+            full = arms.get(f"g{g}-full")
+            if full is None:
+                continue
+            full_tail = _num(full, "tail_loss", errors, stem, f"g{g}-full")
+            if full_tail is None or full_tail <= 0:
+                errors.append(f"{stem}: g{g}-full tail_loss unusable ({full_tail!r})")
+                continue
+            for topo in TOPOLOGY_SPARSE:
+                arm = arms.get(f"g{g}-{topo}")
+                if arm is None:
+                    continue
+                tail = _num(arm, "tail_loss", errors, stem, f"g{g}-{topo}")
+                if tail is not None and not tail <= full_tail * TOPOLOGY_LOSS_BAND:
+                    errors.append(
+                        f"{stem}: g{g}-{topo} tail loss {tail} outside the "
+                        f"{TOPOLOGY_LOSS_BAND}x band of full {full_tail}"
+                    )
     return errors
 
 
@@ -564,6 +633,55 @@ def self_test():
     f_base = {"quick": False, "arms": [{"label": "drop5", "sim_step_s": 1.0}]}
     f_reg = {"quick": False, "arms": [{"label": "drop5", "sim_step_s": 1.3}]}
     regs, n = compare("faults", f_base, f_reg, 0.15)
+    assert n == 1 and len(regs) == 1
+
+    # topology: gossip arms flat in g, full grows, loss band vs full
+    def topo_doc():
+        arms = []
+        for g, step in ((4, 1.0), (16, 1.4), (64, 2.2)):
+            arms.append({"label": f"g{g}-full", "sim_step_s": step,
+                         "tail_loss": 1.0})
+            for topo in ("ring", "random-pair", "hier2"):
+                arms.append({"label": f"g{g}-{topo}", "sim_step_s": 1.0,
+                             "tail_loss": 1.5})
+        return {
+            "full_bit_identical": True,
+            "gossip_flat": True,
+            "full_grows": True,
+            "arms": arms,
+        }
+
+    t = topo_doc()
+    assert check_invariants("topology", t) == []
+    # a gossip arm whose per-step time grows with g trips the gate
+    t_grown = topo_doc()
+    for arm in t_grown["arms"]:
+        if arm["label"] == "g64-ring":
+            arm["sim_step_s"] = 1.8
+    assert any("gossip band" in e for e in check_invariants("topology", t_grown))
+    # a full-group arm that stopped growing trips it too (the exchange
+    # degree is the thing under test)
+    t_flat = topo_doc()
+    for arm in t_flat["arms"]:
+        if arm["label"] == "g64-full":
+            arm["sim_step_s"] = 1.0
+    assert any("did not grow" in e for e in check_invariants("topology", t_flat))
+    # a sparse arm diverging past the loss band fails
+    t_diverged = topo_doc()
+    for arm in t_diverged["arms"]:
+        if arm["label"] == "g16-random-pair":
+            arm["tail_loss"] = 2.5
+    assert any("band of full" in e for e in check_invariants("topology", t_diverged))
+    # a missing arm and a flipped bit-identity boolean are violations
+    t_gone = topo_doc()
+    t_gone["arms"] = [a for a in t_gone["arms"] if a["label"] != "g16-hier2"]
+    assert any("g16-hier2" in e for e in check_invariants("topology", t_gone))
+    t_flag = dict(topo_doc(), full_bit_identical=False)
+    assert any("full_bit_identical" in e for e in check_invariants("topology", t_flag))
+    # sim_step_s regressions compare like the other lower-is-better arms
+    t_base = {"quick": False, "arms": [{"label": "g4-ring", "sim_step_s": 1.0}]}
+    t_reg = {"quick": False, "arms": [{"label": "g4-ring", "sim_step_s": 1.3}]}
+    regs, n = compare("topology", t_base, t_reg, 0.15)
     assert n == 1 and len(regs) == 1
 
     # async_diloco: S >= 1 must be faster than sync, S = 0 bit-identical
