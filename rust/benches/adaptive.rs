@@ -1,0 +1,213 @@
+//! Adaptive rate-control bench: AIMD vs uniform fixed rates on a mixed
+//! cluster.
+//!
+//!     cargo bench --bench adaptive [-- --quick]
+//!
+//! Four nodes, one rank each, `random` replication every step on a
+//! comm-exposed 100 Mbps link — except node 0, whose NIC runs at 25 Mbps
+//! (the 4x mixed-NIC profile). Arms:
+//!
+//! * `fixed8` / `fixed16` / `fixed32` — uniform `random:1/N`, no
+//!   controller: every node ships the same fraction, so the slow node's
+//!   send paces every window;
+//! * `aimd` — `--compress-control aimd` with a `[1/64, 1/16]` band: the
+//!   controller backs node 0 off toward the floor (its NIC is busy and
+//!   the comm is exposed) while the idle fast peers hold the cap.
+//!
+//! The claim under test is water-filling: with per-node rates the gate
+//! is `max(slow_rate/slow_bw, fast_rate/fast_bw)`, which the controller
+//! drives below what ANY uniform rate can reach — a uniform rate pays
+//! `rate/slow_bw` on the slow NIC. Asserted here (deterministic,
+//! seeded): the `aimd` arm's per-step simulated time is strictly below
+//! every fixed arm's, its tail loss stays within `LOSS_BAND`x the
+//! uncontrolled `fixed8` baseline (compression error feedback keeps the
+//! residual), and `--compress-control off` (plus the band/window knobs)
+//! is bit-identical to a config that never mentions the controller. The
+//! same invariants are written into `BENCH_adaptive.json` (schema:
+//! docs/BENCHMARKS.md) and enforced by `scripts/bench_gate.py`.
+
+use anyhow::Result;
+use detonation::config::ExperimentConfig;
+use detonation::coordinator::runtime;
+use detonation::metrics::RunMetrics;
+use detonation::util::fmt_secs;
+use detonation::util::json::Json;
+
+const NODES: usize = 4;
+/// Tail window for the loss comparisons (steps).
+const TAIL: usize = 4;
+/// The aimd arm's tail loss may cost at most this multiple of the
+/// uncontrolled fixed-1/8 baseline's.
+const LOSS_BAND: f64 = 1.5;
+/// Steps per controller window (short, so --quick still retunes).
+const WINDOW: u64 = 2;
+
+const FIXED: [u64; 3] = [8, 16, 32];
+
+fn base_cfg(steps: u64) -> Result<ExperimentConfig> {
+    let mut c = ExperimentConfig {
+        model: "synthetic-lm".into(),
+        nodes: NODES,
+        accels_per_node: 1,
+        steps,
+        lr: 0.02,
+        seed: 47,
+        val_every: steps, // validate once, at the end
+        val_batches: 4,
+        ..Default::default()
+    };
+    // Comm-exposed for the whole cluster, with node 0 at a quarter of
+    // its peers' NIC bandwidth — the profile the controller exploits.
+    c.apply_arg("inter-mbps", "100")?;
+    c.apply_arg("node-mbps", "0:25")?;
+    c.apply_arg("repl", "random:1/8")?;
+    Ok(c)
+}
+
+fn run(c: ExperimentConfig) -> Result<RunMetrics> {
+    let rt = runtime()?;
+    let mut t = detonation::train::Trainer::new(&rt, c)?;
+    let m = t.run()?;
+    anyhow::ensure!(
+        m.steps.iter().all(|r| r.loss.is_finite()),
+        "non-finite loss"
+    );
+    Ok(m)
+}
+
+fn row(label: &str, m: &RunMetrics) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(label.to_string())),
+        ("sim_time_s", Json::Num(m.total_sim_time())),
+        ("sim_step_s", Json::Num(m.mean_step_time())),
+        ("inter_bytes", Json::Num(m.total_inter_bytes() as f64)),
+        (
+            "tail_loss",
+            m.tail_loss(TAIL).map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+/// Bit-level fingerprint of a run: per-step losses and sim times.
+fn bits(m: &RunMetrics) -> (Vec<u64>, Vec<u64>) {
+    (
+        m.steps.iter().map(|r| r.loss.to_bits()).collect(),
+        m.steps.iter().map(|r| r.sim_time.to_bits()).collect(),
+    )
+}
+
+fn main() -> Result<()> {
+    detonation::util::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    // Enough windows for the controller to settle past its transient
+    // even under --quick (window = 2 -> 8 retunes minimum).
+    let steps: u64 = if quick { 16 } else { 32 };
+
+    println!(
+        "{:<12} {:>12} {:>12} {:>14} {:>10} {:>22}",
+        "arm", "t/step", "total", "inter", "tail", "final rates"
+    );
+    let print_row = |label: &str, m: &RunMetrics| {
+        println!(
+            "{:<12} {:>12} {:>12} {:>14} {:>10.4} {:>22}",
+            label,
+            fmt_secs(m.mean_step_time()),
+            fmt_secs(m.total_sim_time()),
+            m.total_inter_bytes(),
+            m.tail_loss(TAIL).unwrap_or(f64::NAN),
+            m.steps.last().map(|r| r.rate.clone()).unwrap_or_default(),
+        );
+    };
+
+    // The bit-freeze anchor: explicit `--compress-control off` (with the
+    // window/band knobs, which must be inert while off) against a config
+    // that never mentions the controller.
+    let absent = run(base_cfg(steps)?)?;
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("compress-control", "off")?;
+    cfg.apply_arg("control-window", &WINDOW.to_string())?;
+    cfg.apply_arg("rate-min", "1/64")?;
+    cfg.apply_arg("rate-max", "1/16")?;
+    let off = run(cfg)?;
+    let off_bit_identical = bits(&absent) == bits(&off);
+    assert!(
+        off_bit_identical,
+        "--compress-control off diverged from the controller-free path"
+    );
+    assert!(
+        off.steps.iter().all(|r| r.rate.is_empty()),
+        "off-arm run populated the rate column"
+    );
+
+    let mut arms: Vec<Json> = Vec::new();
+    let mut fixed_runs: Vec<(String, RunMetrics)> = Vec::new();
+    for n in FIXED {
+        let mut cfg = base_cfg(steps)?;
+        cfg.apply_arg("repl", &format!("random:1/{n}"))?;
+        let m = run(cfg)?;
+        let label = format!("fixed{n}");
+        print_row(&label, &m);
+        arms.push(row(&label, &m));
+        fixed_runs.push((label, m));
+    }
+
+    let mut cfg = base_cfg(steps)?;
+    cfg.apply_arg("compress-control", "aimd")?;
+    cfg.apply_arg("control-window", &WINDOW.to_string())?;
+    cfg.apply_arg("rate-min", "1/64")?;
+    cfg.apply_arg("rate-max", "1/16")?;
+    let aimd = run(cfg)?;
+    print_row("aimd", &aimd);
+    arms.push(row("aimd", &aimd));
+    assert!(
+        aimd.steps.last().is_some_and(|r| !r.rate.is_empty()),
+        "aimd arm never populated the rate column"
+    );
+
+    // Water-filling beats every uniform rate on the mixed profile.
+    let mut controller_beats_fixed = true;
+    for (label, m) in &fixed_runs {
+        let ratio = aimd.mean_step_time() / m.mean_step_time();
+        println!("aimd / {label} per-step ratio {ratio:.3}");
+        if aimd.mean_step_time() >= m.mean_step_time() {
+            controller_beats_fixed = false;
+        }
+    }
+    assert!(
+        controller_beats_fixed,
+        "the controller arm did not beat every uniform fixed rate"
+    );
+
+    // ...without giving the convergence away: tail loss stays inside the
+    // band around the uncontrolled spec-rate baseline.
+    let base_tail = fixed_runs[0].1.tail_loss(TAIL).expect("fixed8 tail");
+    let aimd_tail = aimd.tail_loss(TAIL).expect("aimd tail");
+    let loss_within_band = aimd_tail <= base_tail * LOSS_BAND;
+    assert!(
+        loss_within_band,
+        "aimd tail loss {aimd_tail:.4} outside {LOSS_BAND}x of the \
+         fixed-1/8 baseline {base_tail:.4}"
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("adaptive".into())),
+        ("model", Json::Str("synthetic-lm".into())),
+        ("nodes", Json::Num(NODES as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("control_window", Json::Num(WINDOW as f64)),
+        ("tail_window", Json::Num(TAIL as f64)),
+        ("loss_band", Json::Num(LOSS_BAND)),
+        ("quick", Json::Bool(quick)),
+        ("off_bit_identical", Json::Bool(off_bit_identical)),
+        ("controller_beats_fixed", Json::Bool(controller_beats_fixed)),
+        ("loss_within_band", Json::Bool(loss_within_band)),
+        ("arms", Json::Arr(arms)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_adaptive.json");
+    detonation::util::atomic_write(&path, out.to_string_pretty().as_bytes())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -36,7 +36,7 @@ use detonation::config::ExperimentConfig;
 use detonation::coordinator::runtime;
 use detonation::metrics::RunMetrics;
 use detonation::net::ClusterModel;
-use detonation::replicate::{ReplCtx, Replicator, ReplSpec};
+use detonation::replicate::{ReplBuildCtx, ReplCtx, Replicator, ReplSpec};
 use detonation::train::Trainer;
 use detonation::util::fmt_secs;
 use detonation::util::json::Json;
@@ -125,7 +125,8 @@ fn main() -> Result<()> {
         let probe_cfg = base_cfg(1, 1e9, 1e9, 1.0)?;
         let t = Trainer::new(&runtime()?, probe_cfg)?;
         let shard_len = t.mesh.shards.shard_len();
-        let mut repl = ReplSpec::parse("diloco:1")?.build(shard_len);
+        let mut repl =
+            ReplSpec::parse("diloco:1")?.build_for_node(0, &ReplBuildCtx::uniform(shard_len))?;
         let mut buf = vec![0.0f32; shard_len];
         let ctx = ReplCtx {
             step: 0,

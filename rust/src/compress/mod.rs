@@ -39,6 +39,13 @@ pub struct Payload {
     /// for the possibility to compress the data even more") — so this is
     /// an opt-in extension (`ReplSpec` suffix `:packed`), off by default.
     pub packed: bool,
+    /// Selection hint for heterogeneous-rate decode (4 B on the wire
+    /// when present): the one scalar a receiver cannot reconstruct when
+    /// peers compress at *different* rates — Striding ships its stride
+    /// (Random's k is implied by `values.len()`, DeMo ships indices
+    /// anyway). Only attached while the adaptive rate controller is
+    /// armed; `None` keeps the fixed-rate wire format bit-identical.
+    pub sel: Option<u32>,
 }
 
 impl Payload {
@@ -69,6 +76,7 @@ impl Payload {
             dtype,
             sign,
             packed: false,
+            sel: None,
         }
     }
 
@@ -78,20 +86,29 @@ impl Payload {
         self
     }
 
-    /// Exact wire size in bytes: index block + value block.
+    /// Attach a selection hint (see `sel`; adds 4 B to the wire size).
+    pub fn with_sel(mut self, sel: u32) -> Payload {
+        self.sel = Some(sel);
+        self
+    }
+
+    /// Exact wire size in bytes: selection hint + index block + value
+    /// block.
     ///
+    /// * selection hint: 4 B (u32), only under adaptive rate control.
     /// * indices: 4 B each (u32), omitted when regenerable.
     /// * values: `dtype.bytes()` each (sign values ride as ±1.0 in
     ///   `dtype`, exactly like the paper's implementation) — unless the
     ///   `packed` ternary extension is on: then 2 bits each.
     pub fn wire_bytes(&self) -> u64 {
+        let sel = if self.sel.is_some() { 4 } else { 0 };
         let idx = self.indices.as_ref().map_or(0, |ix| 4 * ix.len() as u64);
         let vals = if self.sign && self.packed {
             (self.values.len() as u64 + 3) / 4
         } else {
             (self.dtype.bytes() * self.values.len()) as u64
         };
-        idx + vals
+        sel + idx + vals
     }
 
     /// Serialize the value block to bytes (what actually crosses the link
@@ -130,11 +147,15 @@ impl Payload {
         crate::util::crc32(&self.wire_image())
     }
 
-    /// The exact byte sequence this payload puts on the wire (index
-    /// block, then value block) — what [`Self::checksum`] covers, and
-    /// what the fault layer flips bits of to model corruption.
+    /// The exact byte sequence this payload puts on the wire (selection
+    /// hint, then index block, then value block) — what
+    /// [`Self::checksum`] covers, and what the fault layer flips bits of
+    /// to model corruption.
     pub fn wire_image(&self) -> Vec<u8> {
         let mut wire = Vec::with_capacity(self.wire_bytes() as usize);
+        if let Some(sel) = self.sel {
+            wire.extend_from_slice(&sel.to_le_bytes());
+        }
         if let Some(ix) = &self.indices {
             for &i in ix {
                 wire.extend_from_slice(&i.to_le_bytes());
@@ -407,6 +428,21 @@ mod tests {
         let demo = Payload::new(Some(ix), vals.clone(), Dtype::F32, false);
         let random = Payload::new(None, vals, Dtype::F32, false);
         assert_eq!(demo.wire_bytes(), 2 * random.wire_bytes());
+    }
+
+    #[test]
+    fn sel_hint_costs_four_bytes_and_is_checksummed() {
+        // The adaptive-control selection hint is honest: 4 B on the wire,
+        // covered by the checksum — and absent by default, so fixed-rate
+        // payloads are bit-identical to the pre-controller format.
+        let base = Payload::new(None, vec![1.0f32; 64], Dtype::F32, false);
+        let hinted = base.clone().with_sel(8);
+        assert_eq!(base.sel, None);
+        assert_eq!(hinted.wire_bytes(), base.wire_bytes() + 4);
+        assert_eq!(hinted.wire_image().len() as u64, hinted.wire_bytes());
+        assert_ne!(base.checksum(), hinted.checksum());
+        // the hint value itself is covered, not just its presence
+        assert_ne!(hinted.checksum(), base.clone().with_sel(9).checksum());
     }
 
     #[test]

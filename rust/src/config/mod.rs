@@ -8,8 +8,19 @@ use std::path::PathBuf;
 
 use crate::net::{ClusterModel, FaultTimeline, MembershipTimeline, NetModel};
 use crate::optim::OptSpec;
-use crate::replicate::{LatePolicy, ReplSpec, SyncTopology};
+use crate::replicate::control::parse_rate;
+use crate::replicate::{ControlSpec, LatePolicy, ReplSpec, SyncTopology};
 use crate::util::json::Json;
+
+/// A recorded `--staleness` intent, held until it can attach to a DiLoCo
+/// spec (see [`ExperimentConfig::validate`] — flags fold in any order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StalenessArg {
+    /// `--staleness auto`: derive one window per node from its profile.
+    Auto,
+    /// `--staleness S`: one global window.
+    Fixed(u64),
+}
 
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -94,6 +105,22 @@ pub struct ExperimentConfig {
     /// whole-group path, `ring`/`random-pair`/`hier:<F>` = NoLoCo-style
     /// gossip with O(1) per-window inter-node cost).
     pub topology: SyncTopology,
+    /// `--compress-control`: the closed-loop per-node rate controller
+    /// ([`crate::replicate::RateController`]; `off` = bit-frozen
+    /// fixed-rate default, `aimd[:key=val…]` = AIMD on NIC occupancy).
+    pub compress_control: ControlSpec,
+    /// `--control-window`: steps between controller retunes (>= 1).
+    pub control_window: u64,
+    /// `--rate-min` / `--rate-max`: the band the controller may move a
+    /// node's compression rate within (`1/N` or float forms).
+    pub rate_min: f64,
+    pub rate_max: f64,
+    /// `--staleness` intent not yet folded into the spec (attaches to
+    /// whichever `--repl` the config ends up with; leftover incompatible
+    /// intents are reported by [`ExperimentConfig::validate`]).
+    pub pending_staleness: Option<StalenessArg>,
+    /// `--late-policy` intent not yet folded into the spec.
+    pub pending_late_policy: Option<LatePolicy>,
 }
 
 impl Default for ExperimentConfig {
@@ -131,6 +158,12 @@ impl Default for ExperimentConfig {
             retry_timeout: 0.1,
             retry_backoff: 0.05,
             topology: SyncTopology::Full,
+            compress_control: ControlSpec::Off,
+            control_window: 8,
+            rate_min: 1.0 / 64.0,
+            rate_max: 1.0 / 4.0,
+            pending_staleness: None,
+            pending_late_policy: None,
         }
     }
 }
@@ -250,33 +283,151 @@ impl ExperimentConfig {
         Ok(table)
     }
 
-    /// Validate the elastic-membership knobs against the concrete mesh:
-    /// the churn/crash timeline must replay legally inside the run, and
-    /// a quorum threshold must fit the replication group. Called at
-    /// trainer construction, once mesh shape and step count are final.
-    pub fn validate_elastic(&self) -> anyhow::Result<()> {
-        self.membership.validate(self.nodes, self.steps)?;
-        self.link_fault.validate(self.nodes)?;
+    /// Fold recorded `--staleness` / `--late-policy` intents into the
+    /// current replication spec where they fit, silently keeping what
+    /// doesn't fit pending (for [`ExperimentConfig::validate`] to
+    /// report). Best-effort and idempotent — called after every
+    /// [`ExperimentConfig::apply_arg`] so the spec, its label, and the
+    /// [`ExperimentConfig::staleness`]/[`ExperimentConfig::late_policy`]
+    /// accessors are correct in *any* flag order.
+    fn fold_pending(&mut self) {
+        if let ReplSpec::DiLoCo {
+            period, staleness, ..
+        } = &mut self.repl
+        {
+            match self.pending_staleness {
+                Some(StalenessArg::Auto) => {
+                    // Arm the async machinery; the trainer fills the
+                    // per-node table at resolve time.
+                    staleness.get_or_insert(0);
+                    self.staleness_auto = true;
+                    self.pending_staleness = None;
+                }
+                Some(StalenessArg::Fixed(s)) if s < *period => {
+                    *staleness = Some(s);
+                    self.staleness_auto = false;
+                    self.pending_staleness = None;
+                }
+                // Out-of-band values stay pending: validate reports them
+                // against the period they failed to fit.
+                Some(StalenessArg::Fixed(_)) | None => {}
+            }
+        }
+        if let ReplSpec::DiLoCo { policy, .. } = &mut self.repl {
+            if let Some(p) = self.pending_late_policy.take() {
+                *policy = p;
+            }
+        }
+        // A per-node staleness table arms the async window on whichever
+        // DiLoCo spec is current (values validate at resolve time).
+        if self.node_staleness.iter().any(|s| s.is_some_and(|s| s > 0)) {
+            if let ReplSpec::DiLoCo { staleness, .. } = &mut self.repl {
+                staleness.get_or_insert(0);
+            }
+        }
+    }
+
+    /// Validate the whole configuration at once — every cross-flag
+    /// incompatibility (repl × staleness × late-policy × controller),
+    /// plus the mesh-dependent checks (membership/fault timelines,
+    /// topology shape, quorum vs group size), reported together in one
+    /// error instead of one-at-a-time in flag order. Called at trainer
+    /// construction, once mesh shape and step count are final; folds
+    /// pending intents first, so it is order-independent and idempotent.
+    pub fn validate(&mut self) -> anyhow::Result<()> {
+        self.fold_pending();
+        let mut errors: Vec<String> = Vec::new();
+        match self.pending_staleness {
+            Some(StalenessArg::Auto) => errors.push(format!(
+                "--staleness auto only applies to the diloco replicator (got {:?})",
+                self.repl.label()
+            )),
+            Some(StalenessArg::Fixed(s)) => {
+                if let ReplSpec::DiLoCo { period, .. } = self.repl {
+                    // It failed to fold, so it broke the period bound.
+                    errors.push(format!(
+                        "staleness {s} must be < diloco period {period} \
+                         (one gather in flight at a time)"
+                    ));
+                } else if s > 0 {
+                    errors.push(format!(
+                        "--staleness only applies to the diloco replicator (got {:?})",
+                        self.repl.label()
+                    ));
+                }
+                // s = 0 on a non-diloco scheme is the harmless default.
+            }
+            None => {}
+        }
+        if let Some(p) = self.pending_late_policy {
+            // Only a real (non-Wait) policy needs the deferring scheme.
+            if p != LatePolicy::Wait {
+                errors.push(format!(
+                    "--late-policy only applies to the diloco replicator (got {:?})",
+                    self.repl.label()
+                ));
+            }
+        }
+        if self.node_staleness.iter().any(|s| s.is_some_and(|s| s > 0))
+            && !matches!(self.repl, ReplSpec::DiLoCo { .. })
+        {
+            errors.push(format!(
+                "--node-staleness only applies to the diloco replicator (got {:?})",
+                self.repl.label()
+            ));
+        }
+        if self.compress_control.is_armed()
+            && !matches!(
+                self.repl,
+                ReplSpec::Demo { .. } | ReplSpec::Random { .. } | ReplSpec::Striding { .. }
+            )
+        {
+            errors.push(format!(
+                "--compress-control {} only applies to demo/random/striding (got {:?})",
+                self.compress_control.label(),
+                self.repl.label()
+            ));
+        }
+        if self.control_window == 0 {
+            errors.push("--control-window must be >= 1 steps".into());
+        }
+        if !(self.rate_min > 0.0 && self.rate_min <= self.rate_max && self.rate_max <= 1.0) {
+            errors.push(format!(
+                "need 0 < rate-min <= rate-max <= 1 (got {} / {})",
+                self.rate_min, self.rate_max
+            ));
+        }
+        if let Err(e) = self.membership.validate(self.nodes, self.steps) {
+            errors.push(e.to_string());
+        }
+        if let Err(e) = self.link_fault.validate(self.nodes) {
+            errors.push(e.to_string());
+        }
         // The replication group spans one member per node, so the
         // topology validates against the node count.
-        self.topology.validate(self.nodes)?;
-        anyhow::ensure!(
-            self.retry_timeout.is_finite() && self.retry_timeout >= 0.0,
-            "--retry-timeout must be a finite non-negative sim-time"
-        );
-        anyhow::ensure!(
-            self.retry_backoff.is_finite() && self.retry_backoff >= 0.0,
-            "--retry-backoff must be a finite non-negative sim-time"
-        );
-        if self.quorum > 0 {
-            anyhow::ensure!(
-                self.quorum <= self.nodes,
-                "--quorum {} exceeds the replication group size ({} nodes)",
-                self.quorum,
-                self.nodes
-            );
+        if let Err(e) = self.topology.validate(self.nodes) {
+            errors.push(e.to_string());
         }
-        Ok(())
+        if !(self.retry_timeout.is_finite() && self.retry_timeout >= 0.0) {
+            errors.push("--retry-timeout must be a finite non-negative sim-time".into());
+        }
+        if !(self.retry_backoff.is_finite() && self.retry_backoff >= 0.0) {
+            errors.push("--retry-backoff must be a finite non-negative sim-time".into());
+        }
+        if self.quorum > self.nodes {
+            errors.push(format!(
+                "--quorum {} exceeds the replication group size ({} nodes)",
+                self.quorum, self.nodes
+            ));
+        }
+        match errors.len() {
+            0 => Ok(()),
+            1 => anyhow::bail!("{}", errors.remove(0)),
+            n => anyhow::bail!(
+                "invalid configuration ({n} errors):\n  - {}",
+                errors.join("\n  - ")
+            ),
+        }
     }
 
     /// Effective LR at a step (linear warmup → constant).
@@ -350,6 +501,13 @@ impl ExperimentConfig {
             ),
             ("link_fault", Json::Str(self.link_fault.render())),
             ("topology", Json::Str(self.topology.label())),
+            (
+                "compress_control",
+                Json::Str(self.compress_control.label().to_string()),
+            ),
+            ("control_window", Json::Num(self.control_window as f64)),
+            ("rate_min", Json::Num(self.rate_min)),
+            ("rate_max", Json::Num(self.rate_max)),
             ("max_retries", Json::Num(self.max_retries as f64)),
             ("retry_timeout", Json::Num(self.retry_timeout)),
             ("retry_backoff", Json::Num(self.retry_backoff)),
@@ -406,83 +564,43 @@ impl ExperimentConfig {
             // Async DiLoCo: apply the periodic sync `S` steps after its
             // launch (S = 0 runs the async path, bit-identical to the
             // synchronous scheme). "auto" derives one S per node from
-            // its simulated compute/NIC profile. Must come after "repl"
-            // so it attaches to the configured period.
+            // its simulated compute/NIC profile. Recorded as an intent
+            // and folded into whichever spec the config ends up with —
+            // `--staleness`/`--repl` compose in either order; an intent
+            // that never fits is reported by `validate`.
             "staleness" => {
-                if value == "auto" {
-                    match &mut self.repl {
-                        ReplSpec::DiLoCo { staleness, .. } => {
-                            // Arm the async machinery; the trainer fills
-                            // the per-node table at resolve time.
-                            staleness.get_or_insert(0);
-                            self.staleness_auto = true;
-                        }
-                        _ => anyhow::bail!(
-                            "--staleness auto only applies to the diloco replicator (got {:?})",
-                            self.repl.label()
-                        ),
-                    }
-                    return Ok(());
-                }
-                let s: u64 = value.parse()?;
-                match &mut self.repl {
-                    ReplSpec::DiLoCo {
-                        period, staleness, ..
-                    } => {
-                        anyhow::ensure!(
-                            s < *period,
-                            "staleness {s} must be < diloco period {period} \
-                             (one gather in flight at a time)"
-                        );
-                        *staleness = Some(s);
-                        self.staleness_auto = false;
-                    }
-                    // 0 is the harmless default for every scheme; a real
-                    // staleness needs the periodic scheme to defer.
-                    _ if s == 0 => {}
-                    _ => anyhow::bail!(
-                        "--staleness only applies to the diloco replicator (got {:?})",
-                        self.repl.label()
-                    ),
-                }
+                self.pending_staleness = Some(if value == "auto" {
+                    StalenessArg::Auto
+                } else {
+                    StalenessArg::Fixed(value.parse()?)
+                });
             }
             // Per-node staleness overrides (straggler-tolerant async
-            // DiLoCo); validated against the period at resolve time so
-            // the spec order of --repl / --node-staleness doesn't matter.
-            "node-staleness" => {
-                let table = Self::parse_node_staleness(value)?;
-                if table.iter().any(|s| s.is_some_and(|s| s > 0)) {
-                    anyhow::ensure!(
-                        matches!(self.repl, ReplSpec::DiLoCo { .. }),
-                        "--node-staleness only applies to the diloco replicator (got {:?})",
-                        self.repl.label()
-                    );
-                    if let ReplSpec::DiLoCo { staleness, .. } = &mut self.repl {
-                        staleness.get_or_insert(0);
-                    }
-                }
-                self.node_staleness = table;
-            }
+            // DiLoCo); values are validated against the period at resolve
+            // time, scheme compatibility by `validate` — order-free.
+            "node-staleness" => self.node_staleness = Self::parse_node_staleness(value)?,
             // What an aggregation does with peer contributions that miss
             // its arrival deadline; "wait" is the harmless default for
-            // every scheme.
-            "late-policy" => {
-                let p = LatePolicy::parse(value)?;
-                match &mut self.repl {
-                    ReplSpec::DiLoCo { policy, .. } => *policy = p,
-                    _ if p == LatePolicy::Wait => {}
-                    _ => anyhow::bail!(
-                        "--late-policy only applies to the diloco replicator (got {:?})",
-                        self.repl.label()
-                    ),
-                }
+            // every scheme. Intent-recorded like --staleness (and like
+            // it, an explicit flag beats the `async=S,policy` spec form
+            // regardless of flag order).
+            "late-policy" => self.pending_late_policy = Some(LatePolicy::parse(value)?),
+            // Closed-loop per-node compression control. Cross-checks
+            // against the scheme (sparse-only) live in `validate`.
+            "compress-control" => self.compress_control = ControlSpec::parse(value)?,
+            "control-window" => {
+                let w: u64 = value.parse()?;
+                anyhow::ensure!(w >= 1, "--control-window must be >= 1 steps");
+                self.control_window = w;
             }
+            "rate-min" => self.rate_min = parse_rate(value)?,
+            "rate-max" => self.rate_max = parse_rate(value)?,
             "straggler" => self.cluster.slowdown = ClusterModel::parse_slowdown(value)?,
             "node-mbps" => self.cluster.node_inter_bw = ClusterModel::parse_node_mbps(value)?,
             // Elastic membership: --churn and --crash both append to one
             // timeline, so the two flags compose. Syntax errors surface
             // here; semantic validation against the mesh shape and step
-            // count happens at trainer construction (validate_elastic).
+            // count happens at trainer construction (validate).
             "churn" => self.membership.add_churn_spec(value)?,
             "crash" => self.membership.add_crash_spec(value)?,
             "quorum" => {
@@ -503,10 +621,10 @@ impl ExperimentConfig {
             // Link faults: repeated flags append to one timeline, so
             // drop/corrupt/flap/degrade specs compose. Syntax errors
             // surface here; endpoint validation against the mesh happens
-            // at trainer construction (validate_elastic).
+            // at trainer construction (validate).
             "link-fault" => self.link_fault.add_spec(value)?,
             // Sync-window exchange topology; shape validation against
-            // the mesh happens at trainer construction (validate_elastic).
+            // the mesh happens at trainer construction (validate).
             "topology" => self.topology = SyncTopology::parse(value)?,
             "max-retries" => self.max_retries = value.parse()?,
             "retry-timeout" => {
@@ -521,6 +639,7 @@ impl ExperimentConfig {
             }
             other => anyhow::bail!("unknown config key {other:?}"),
         }
+        self.fold_pending();
         Ok(())
     }
 }
@@ -570,31 +689,154 @@ mod tests {
         assert_eq!(c.staleness(), 0);
         // 0 is a harmless default on non-diloco schemes…
         c.apply_arg("staleness", "0").unwrap();
-        // …but a real staleness needs the periodic scheme
-        assert!(c.apply_arg("staleness", "2").is_err());
-        c.apply_arg("repl", "diloco:8").unwrap();
-        assert_eq!(c.staleness(), 0);
+        c.validate().unwrap();
+        // …but a real staleness needs the periodic scheme: the intent is
+        // recorded at apply time and reported by validate
         c.apply_arg("staleness", "2").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("--staleness only applies to the diloco replicator"),
+            "{err}"
+        );
+        c.apply_arg("repl", "diloco:8").unwrap();
+        // the pending intent folded into the new spec — order-free
         assert_eq!(c.staleness(), 2);
         assert_eq!(c.repl.label(), "diloco-1/8-async2");
+        c.validate().unwrap();
         assert_eq!(c.to_json().get("staleness").unwrap().as_usize(), Some(2));
         // staleness 0 on diloco selects the async implementation (S = 0)
         c.apply_arg("staleness", "0").unwrap();
         assert_eq!(c.staleness(), 0);
         assert_eq!(c.repl.label(), "diloco-1/8-async0");
-        // bounded by the period
-        assert!(c.apply_arg("staleness", "8").is_err());
+        // bounded by the period (reported with both numbers)
+        c.apply_arg("staleness", "8").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("staleness 8 must be < diloco period 8"),
+            "{err}"
+        );
+        // the spec keeps its last valid shape while the bad intent waits
+        assert_eq!(c.staleness(), 0);
+        // garbage values still fail at parse time
         assert!(c.apply_arg("staleness", "-1").is_err());
         assert!(c.apply_arg("staleness", "nan").is_err());
     }
 
     #[test]
+    fn flag_order_is_irrelevant() {
+        // The PR-9 ordering hacks are gone: every legal flag set yields
+        // the same config whichever order it arrives in.
+        let args = [
+            ("staleness", "2"),
+            ("late-policy", "drop"),
+            ("node-staleness", "1:3"),
+            ("repl", "diloco:8"),
+            ("quorum", "2"),
+        ];
+        let mut fwd = ExperimentConfig::default();
+        for (k, v) in args {
+            fwd.apply_arg(k, v).unwrap();
+        }
+        fwd.validate().unwrap();
+        let mut rev = ExperimentConfig::default();
+        for (k, v) in args.iter().rev() {
+            rev.apply_arg(k, v).unwrap();
+        }
+        rev.validate().unwrap();
+        assert_eq!(fwd.repl, rev.repl);
+        assert_eq!(fwd.staleness(), 2);
+        assert_eq!(fwd.late_policy(), LatePolicy::Drop);
+        assert_eq!(fwd.node_staleness, rev.node_staleness);
+        assert_eq!(fwd.to_json().to_string(), rev.to_json().to_string());
+    }
+
+    #[test]
+    fn validate_reports_all_errors_at_once() {
+        let mut c = ExperimentConfig::default();
+        c.apply_arg("staleness", "2").unwrap(); // demo scheme: incompatible
+        c.apply_arg("topology", "ring").unwrap(); // needs >= 3 nodes, have 2
+        c.apply_arg("quorum", "5").unwrap(); // exceeds the 2-node group
+        c.apply_arg("compress-control", "aimd").unwrap();
+        c.apply_arg("rate-min", "1/4").unwrap();
+        c.apply_arg("rate-max", "1/8").unwrap(); // inverted band
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("invalid configuration (4 errors)"), "{err}");
+        assert!(
+            err.contains("--staleness only applies to the diloco replicator"),
+            "{err}"
+        );
+        assert!(err.contains(">= 3") && err.contains("got 2"), "{err}");
+        assert!(err.contains("--quorum 5 exceeds"), "{err}");
+        assert!(
+            err.contains("need 0 < rate-min <= rate-max <= 1"),
+            "{err}"
+        );
+        // fixing everything clears the report — validate is idempotent
+        c.apply_arg("repl", "diloco:8").unwrap();
+        c.apply_arg("compress-control", "off").unwrap();
+        c.apply_arg("nodes", "5").unwrap();
+        c.apply_arg("rate-max", "1/2").unwrap();
+        c.validate().unwrap();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn compress_control_knobs() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.compress_control.is_armed());
+        c.validate().unwrap(); // off composes with everything
+        // armed: needs a sparse every-step scheme
+        c.apply_arg("compress-control", "aimd:add=1/32").unwrap();
+        c.apply_arg("repl", "random:1/8").unwrap();
+        c.validate().unwrap();
+        for repl in ["diloco:8", "full"] {
+            c.apply_arg("repl", repl).unwrap();
+            let err = c.validate().unwrap_err().to_string();
+            assert!(
+                err.contains("--compress-control aimd only applies to demo/random/striding"),
+                "{err}"
+            );
+        }
+        c.apply_arg("repl", "striding:1/8").unwrap();
+        c.validate().unwrap();
+        // window and band knobs parse both rate forms and reject nonsense
+        c.apply_arg("control-window", "4").unwrap();
+        assert_eq!(c.control_window, 4);
+        assert!(c.apply_arg("control-window", "0").is_err());
+        c.apply_arg("rate-min", "1/64").unwrap();
+        c.apply_arg("rate-max", "0.25").unwrap();
+        assert_eq!(c.rate_min, 1.0 / 64.0);
+        assert_eq!(c.rate_max, 0.25);
+        assert!(c.apply_arg("rate-min", "0").is_err());
+        assert!(c.apply_arg("rate-max", "1/0").is_err());
+        assert!(c.apply_arg("compress-control", "pid").is_err());
+        // everything serializes
+        let j = c.to_json();
+        assert_eq!(j.get("compress_control").unwrap().as_str(), Some("aimd"));
+        assert_eq!(j.get("control_window").unwrap().as_usize(), Some(4));
+        assert!(j.get("rate_min").is_some() && j.get("rate_max").is_some());
+    }
+
+    #[test]
     fn staleness_auto_and_node_table_knobs() {
         let mut c = ExperimentConfig::default();
-        // auto / node tables are diloco-only
-        assert!(c.apply_arg("staleness", "auto").is_err());
-        assert!(c.apply_arg("node-staleness", "1:2").is_err());
+        // auto / node tables are diloco-only: recorded at apply time,
+        // reported by validate with the offending scheme named
+        c.apply_arg("staleness", "auto").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("--staleness auto only applies to the diloco replicator"),
+            "{err}"
+        );
+        c.pending_staleness = None;
+        c.apply_arg("node-staleness", "1:2").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("--node-staleness only applies to the diloco replicator"),
+            "{err}"
+        );
         c.apply_arg("node-staleness", "").unwrap(); // empty is a no-op
+        c.validate().unwrap();
         c.apply_arg("repl", "diloco:8").unwrap();
         c.apply_arg("staleness", "auto").unwrap();
         assert!(c.staleness_auto);
@@ -632,10 +874,18 @@ mod tests {
         let mut c = ExperimentConfig::default();
         assert_eq!(c.late_policy(), LatePolicy::Wait);
         c.apply_arg("late-policy", "wait").unwrap(); // harmless anywhere
-        assert!(c.apply_arg("late-policy", "drop").is_err()); // demo scheme
-        c.apply_arg("repl", "diloco:8").unwrap();
+        c.validate().unwrap();
+        // a real policy on a non-deferring scheme is a validate error
         c.apply_arg("late-policy", "drop").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("--late-policy only applies to the diloco replicator"),
+            "{err}"
+        );
+        // …and folds into a diloco spec whichever side of it arrives
+        c.apply_arg("repl", "diloco:8").unwrap();
         assert_eq!(c.late_policy(), LatePolicy::Drop);
+        c.validate().unwrap();
         c.apply_arg("late-policy", "partial").unwrap();
         assert_eq!(c.late_policy(), LatePolicy::Partial);
         assert!(c.apply_arg("late-policy", "sometimes").is_err());
@@ -650,6 +900,7 @@ mod tests {
         // non-diloco schemes never defer, so they report wait
         c.apply_arg("repl", "full").unwrap();
         assert_eq!(c.late_policy(), LatePolicy::Wait);
+        c.validate().unwrap();
     }
 
     #[test]
@@ -658,19 +909,19 @@ mod tests {
         assert!(c.membership.is_empty());
         assert_eq!(c.quorum, 0);
         assert!(c.checkpoint_dir.is_none());
-        c.validate_elastic().unwrap(); // defaults always pass
+        c.validate().unwrap(); // defaults always pass
 
         // --churn and --crash compose into one timeline
         c.apply_arg("churn", "leave:1@4,join:1@8").unwrap();
         c.apply_arg("crash", "1@20:30").unwrap();
         assert_eq!(c.membership.render(), "leave:1@4,join:1@8,crash:1@20,join:1@30");
-        c.validate_elastic().unwrap();
+        c.validate().unwrap();
         // semantic errors surface at validate time, with the mesh known
         c.apply_arg("steps", "25").unwrap();
-        assert!(c.validate_elastic().is_err()); // join:1@30 past the end
+        assert!(c.validate().is_err()); // join:1@30 past the end
         c.apply_arg("steps", "100").unwrap();
         c.apply_arg("nodes", "1").unwrap();
-        assert!(c.validate_elastic().is_err()); // node 1 out of range
+        assert!(c.validate().is_err()); // node 1 out of range
         c.apply_arg("nodes", "2").unwrap();
 
         // syntax errors surface at parse time
@@ -681,9 +932,9 @@ mod tests {
         assert!(c.apply_arg("quorum", "0").is_err());
         assert!(c.apply_arg("quorum", "x").is_err());
         c.apply_arg("quorum", "2").unwrap();
-        c.validate_elastic().unwrap();
+        c.validate().unwrap();
         c.apply_arg("quorum", "3").unwrap();
-        assert!(c.validate_elastic().is_err()); // 3 > 2 nodes
+        assert!(c.validate().is_err()); // 3 > 2 nodes
         c.apply_arg("quorum", "1").unwrap();
 
         // checkpoint-dir: path in, empty clears (trace-out idiom)
@@ -707,7 +958,7 @@ mod tests {
         let mut c = ExperimentConfig::default();
         assert!(c.link_fault.is_empty());
         assert_eq!(c.max_retries, 3);
-        c.validate_elastic().unwrap(); // defaults always pass
+        c.validate().unwrap(); // defaults always pass
 
         // repeated flags compose into one timeline
         c.apply_arg("link-fault", "drop:0-1@p0.05").unwrap();
@@ -716,10 +967,10 @@ mod tests {
             c.link_fault.render(),
             "drop:0-1@p0.05,flap:1-0@4..8,degrade:0-*@0.5x"
         );
-        c.validate_elastic().unwrap();
+        c.validate().unwrap();
         // semantic errors surface at validate time, with the mesh known
         c.apply_arg("link-fault", "corrupt:5-0@p0.5").unwrap();
-        assert!(c.validate_elastic().is_err()); // node 5 out of range
+        assert!(c.validate().is_err()); // node 5 out of range
         // syntax errors surface at parse time
         assert!(c.apply_arg("link-fault", "melt:0-1@p0.5").is_err());
         assert!(c.apply_arg("link-fault", "drop:0-1@0.5").is_err()); // missing 'p'
@@ -748,27 +999,27 @@ mod tests {
     fn topology_knob() {
         let mut c = ExperimentConfig::default();
         assert!(c.topology.is_full());
-        c.validate_elastic().unwrap(); // defaults always pass
+        c.validate().unwrap(); // defaults always pass
 
         c.apply_arg("topology", "random-pair").unwrap();
         assert_eq!(c.topology, SyncTopology::RandomPair);
-        c.validate_elastic().unwrap(); // any group size is fine
+        c.validate().unwrap(); // any group size is fine
         c.apply_arg("topology", "hier:1").unwrap();
         assert_eq!(c.topology, SyncTopology::Hier { fanout: 1 });
-        c.validate_elastic().unwrap(); // 1 < 2 nodes
+        c.validate().unwrap(); // 1 < 2 nodes
 
         // shape errors surface at validate time, with the mesh known,
         // and carry an actionable message — no panic, no silent clamp
         c.apply_arg("topology", "ring").unwrap();
-        let err = c.validate_elastic().unwrap_err().to_string();
+        let err = c.validate().unwrap_err().to_string();
         assert!(err.contains(">= 3") && err.contains("got 2"), "unactionable: {err}");
         c.apply_arg("nodes", "3").unwrap();
-        c.validate_elastic().unwrap();
+        c.validate().unwrap();
         c.apply_arg("topology", "hier:3").unwrap();
-        let err = c.validate_elastic().unwrap_err().to_string();
+        let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("fanout < ") && err.contains('3'), "unactionable: {err}");
         c.apply_arg("nodes", "4").unwrap();
-        c.validate_elastic().unwrap();
+        c.validate().unwrap();
 
         // syntax errors surface at parse time
         assert!(c.apply_arg("topology", "star").is_err());

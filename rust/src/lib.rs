@@ -87,6 +87,17 @@
 //!   topologies expose O(1) comm per window while `full` grows with
 //!   the group (gated in `BENCH_topology.json`), and the averaging
 //!   denominator is always the contributing set actually heard from;
+//! * the compression rate is **adaptive**
+//!   ([`replicate::RateController`]): `--compress-control aimd` runs a
+//!   per-node AIMD loop that samples each node's NIC busy fraction
+//!   (`train::engine::StepEngine::nic_busy`) and the run's exposed-comm
+//!   ratio once per `--control-window`, backs a congested node's
+//!   DeMo/Random/Striding rate off multiplicatively while idle peers
+//!   climb additively, clamped to `[--rate-min, --rate-max]` — the
+//!   water-filling equilibrium beats every uniform fixed rate on a
+//!   mixed-NIC cluster (gated in `BENCH_adaptive.json`); retuned rates
+//!   land in the steps-CSV `rate` column and the v4 checkpoint, and
+//!   `off` (the default) is bit-inert (prop-tested);
 //! * metrics split each step into compute vs exposed-comm vs hidden-comm
 //!   on the critical rank (`results/*.steps.csv` columns).
 //!

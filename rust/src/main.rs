@@ -179,6 +179,33 @@ fn train_parser() -> ArgParser {
              F-wide rotating inter-node fanout; averaging always divides \
              by the contributing set actually heard from",
         )
+        .opt(
+            "compress-control",
+            "off",
+            "closed-loop per-node compression-rate control: off = fixed \
+             spec rate (bit-identical to no flag), aimd[:key=val...] = \
+             per --control-window, back a node's rate off \
+             multiplicatively when its NIC is congested AND comm is \
+             exposed, raise it additively when the NIC idles (keys: \
+             add, mul, hi, lo, exposed; demo/random/striding only)",
+        )
+        .opt(
+            "control-window",
+            "8",
+            "steps per rate-controller window (occupancy sampled and \
+             rates retuned at each window boundary)",
+        )
+        .opt(
+            "rate-min",
+            "1/64",
+            "controller floor: no node's rate is tuned below this \
+             ('1/N' or a float in (0, 1])",
+        )
+        .opt(
+            "rate-max",
+            "1/4",
+            "controller cap: no node's rate is tuned above this",
+        )
         .flag("no-overlap", "serialize phases (legacy barrier clock)")
         .opt("name", "cli", "experiment name (results/<name>/)")
 }
@@ -222,7 +249,16 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             cfg.apply_arg(key, args.str(key))?;
         }
     }
-    for key in ["max-retries", "retry-timeout", "retry-backoff", "topology"] {
+    for key in [
+        "max-retries",
+        "retry-timeout",
+        "retry-backoff",
+        "topology",
+        "compress-control",
+        "control-window",
+        "rate-min",
+        "rate-max",
+    ] {
         cfg.apply_arg(key, args.str(key))?;
     }
     if args.str("quorum") != "0" {

@@ -6,6 +6,34 @@ use std::path::Path;
 
 use crate::util::json::Json;
 
+/// The steps-CSV schema, in column order — the **single source of
+/// truth**: [`RunMetrics::write_csv`] derives both the header and every
+/// row from this slice (a row cell per entry via [`StepRow::cell`]), so
+/// the two can never drift, and the column table in
+/// `docs/BENCHMARKS.md` is tested against it.
+pub const STEP_COLUMNS: &[&str] = &[
+    "step",
+    "sim_time",
+    "loss",
+    "inter_bytes",
+    "intra_bytes",
+    "compute_time",
+    "exposed_comm",
+    "hidden_comm",
+    "comm_events",
+    "staleness",
+    "node_staleness",
+    "rate",
+    "sync_in_flight",
+    "dropped_syncs",
+    "peer_set",
+    "membership",
+    "retries",
+    "corrupt_detected",
+    "faulted_links",
+    "wall_time",
+];
+
 /// One training-step record.
 #[derive(Clone, Debug)]
 pub struct StepRow {
@@ -36,6 +64,11 @@ pub struct StepRow {
     /// Resolved per-node staleness table, `;`-joined in node order
     /// (e.g. `"2;4"`); empty for runs without the async machinery.
     pub node_staleness: String,
+    /// Per-node compression rates under `--compress-control aimd`,
+    /// `;`-joined in node order at 4 decimals (e.g. `"0.1250;0.0312"`);
+    /// empty while the controller is off — fixed-rate runs keep the
+    /// column blank.
+    pub rate: String,
     /// Deferred syncs in flight at the end of this step (shards whose
     /// launched gather has not arrived yet; always 0 for synchronous
     /// schemes).
@@ -66,6 +99,38 @@ pub struct StepRow {
     pub faulted_links: u64,
     /// Real wall time spent computing this step (profiling only).
     pub wall_time: f64,
+}
+
+impl StepRow {
+    /// The CSV cell for one [`STEP_COLUMNS`] column. The writer iterates
+    /// the schema slice, so a field added here without a schema entry
+    /// (or vice versa) is unreachable/panics in every test that writes a
+    /// CSV — the drift shows up immediately, not in a reader.
+    fn cell(&self, col: &str) -> String {
+        match col {
+            "step" => self.step.to_string(),
+            "sim_time" => format!("{:.6}", self.sim_time),
+            "loss" => format!("{:.6}", self.loss),
+            "inter_bytes" => self.inter_bytes.to_string(),
+            "intra_bytes" => self.intra_bytes.to_string(),
+            "compute_time" => format!("{:.9}", self.compute_time),
+            "exposed_comm" => format!("{:.9}", self.exposed_comm),
+            "hidden_comm" => format!("{:.9}", self.hidden_comm),
+            "comm_events" => self.comm_events.to_string(),
+            "staleness" => self.staleness.to_string(),
+            "node_staleness" => self.node_staleness.clone(),
+            "rate" => self.rate.clone(),
+            "sync_in_flight" => self.sync_in_flight.to_string(),
+            "dropped_syncs" => self.dropped_syncs.clone(),
+            "peer_set" => self.peer_set.clone(),
+            "membership" => self.membership.clone(),
+            "retries" => self.retries.to_string(),
+            "corrupt_detected" => self.corrupt_detected.to_string(),
+            "faulted_links" => self.faulted_links.to_string(),
+            "wall_time" => format!("{:.6}", self.wall_time),
+            other => unreachable!("column {other} is not in STEP_COLUMNS"),
+        }
+    }
 }
 
 /// One validation record.
@@ -177,34 +242,10 @@ impl RunMetrics {
         std::fs::create_dir_all(dir)?;
         let safe = self.label.replace('/', "-");
         let mut f = std::fs::File::create(dir.join(format!("{safe}.steps.csv")))?;
-        writeln!(
-            f,
-            "step,sim_time,loss,inter_bytes,intra_bytes,compute_time,exposed_comm,hidden_comm,comm_events,staleness,node_staleness,sync_in_flight,dropped_syncs,peer_set,membership,retries,corrupt_detected,faulted_links,wall_time"
-        )?;
+        writeln!(f, "{}", STEP_COLUMNS.join(","))?;
         for r in &self.steps {
-            writeln!(
-                f,
-                "{},{:.6},{:.6},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{},{},{:.6}",
-                r.step,
-                r.sim_time,
-                r.loss,
-                r.inter_bytes,
-                r.intra_bytes,
-                r.compute_time,
-                r.exposed_comm,
-                r.hidden_comm,
-                r.comm_events,
-                r.staleness,
-                r.node_staleness,
-                r.sync_in_flight,
-                r.dropped_syncs,
-                r.peer_set,
-                r.membership,
-                r.retries,
-                r.corrupt_detected,
-                r.faulted_links,
-                r.wall_time
-            )?;
+            let cells: Vec<String> = STEP_COLUMNS.iter().map(|c| r.cell(c)).collect();
+            writeln!(f, "{}", cells.join(","))?;
         }
         if !self.val.is_empty() {
             let mut f = std::fs::File::create(dir.join(format!("{safe}.val.csv")))?;
@@ -312,6 +353,7 @@ mod tests {
                 comm_events: 6,
                 staleness: 0,
                 node_staleness: "0;0".into(),
+                rate: if s % 2 == 0 { "0.1250;0.0625".into() } else { String::new() },
                 sync_in_flight: 0,
                 dropped_syncs: if s % 2 == 0 { "1;0".into() } else { String::new() },
                 peer_set: if s % 2 == 0 { "1;1".into() } else { String::new() },
@@ -370,6 +412,56 @@ mod tests {
         let val = std::fs::read_to_string(dir.join("a-b.val.csv")).unwrap();
         assert_eq!(val.lines().count(), 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn step_columns_schema_covers_every_cell() {
+        // Every schema column formats (the unreachable arm would panic
+        // here on drift), the header is exactly the schema, and the
+        // `rate` column sits where the docs say it does.
+        let m = mk("schema", 2);
+        for r in &m.steps {
+            for c in STEP_COLUMNS {
+                let _ = r.cell(c);
+            }
+        }
+        assert_eq!(STEP_COLUMNS.len(), 20);
+        assert_eq!(
+            STEP_COLUMNS.iter().position(|&c| c == "rate"),
+            Some(STEP_COLUMNS.iter().position(|&c| c == "node_staleness").unwrap() + 1)
+        );
+    }
+
+    #[test]
+    fn docs_column_table_matches_schema() {
+        // docs/BENCHMARKS.md documents the steps CSV as a markdown table
+        // whose first cell is the backticked column name; the table must
+        // list exactly STEP_COLUMNS, in order.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../docs/BENCHMARKS.md");
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        let mut cols: Vec<String> = Vec::new();
+        let mut in_section = false;
+        for line in text.lines() {
+            if line.starts_with('#') {
+                in_section = line.to_lowercase().contains("steps csv");
+                continue;
+            }
+            if !in_section {
+                continue;
+            }
+            if let Some(rest) = line.trim_start().strip_prefix("| `") {
+                if let Some((name, _)) = rest.split_once('`') {
+                    cols.push(name.to_string());
+                }
+            }
+        }
+        assert_eq!(
+            cols,
+            STEP_COLUMNS.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            "docs/BENCHMARKS.md steps-CSV column table is out of sync with STEP_COLUMNS"
+        );
     }
 
     #[test]

@@ -1,0 +1,433 @@
+//! Closed-loop bandwidth-adaptive compression control (`--compress-control`).
+//!
+//! DeMo fixes one global top-k rate for the whole run; the DeToNATION
+//! paper challenges exactly that choice, and on a heterogeneous cluster
+//! it is untenable — a 100 Mbps node should ship 1/32 of its momentum
+//! while 1 Gbps peers ship 1/8. The [`RateController`] closes the loop:
+//! once per `--control-window` sync windows it reads each node's NIC
+//! busy fraction (from the engine's `net::Timeline` occupancy taps) and
+//! the run's exposed-comm ratio, and retunes that node's
+//! DeMo/Random/Striding rate via AIMD — **a**dditive **i**ncrease while
+//! the NIC has headroom, **m**ultiplicative **d**ecrease while it is
+//! saturated *and* communication is actually exposed (a busy NIC whose
+//! transfers hide behind compute costs nothing and is left alone).
+//! Rates stay inside `[--rate-min, --rate-max]`; the fixed point is
+//! water-filling — congested nodes back off until they leave the
+//! critical path, unconstrained nodes rise to the cap.
+//!
+//! `--compress-control off` (and the flag absent) never constructs a
+//! controller: builds are uniform, no `sel` hints ride the wire, and
+//! the run is bit-identical to the fixed-rate trainer (prop-tested in
+//! `tests/integration.rs`).
+
+/// Parse a compression rate written either as `1/N` or as a bare float
+/// (`0.125`). Shared by the controller spec and the `--rate-min` /
+/// `--rate-max` CLI knobs.
+pub fn parse_rate(s: &str) -> anyhow::Result<f64> {
+    let r = match s.strip_prefix("1/") {
+        Some(den) => 1.0 / den.parse::<f64>()?,
+        None => s.parse::<f64>()?,
+    };
+    anyhow::ensure!(
+        r.is_finite() && r > 0.0 && r <= 1.0,
+        "rate {s:?} must land in (0, 1]"
+    );
+    Ok(r)
+}
+
+/// AIMD tuning knobs (the `aimd:key=val` spec components).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AimdParams {
+    /// Additive step per window while the NIC has headroom (`add=1/64`).
+    pub add: f64,
+    /// Multiplicative factor on congestion (`mul=0.5`), in (0, 1).
+    pub mul: f64,
+    /// NIC busy fraction above which a node counts as congested (`hi=`).
+    pub hi: f64,
+    /// NIC busy fraction below which a node has headroom (`lo=`).
+    pub lo: f64,
+    /// Exposed-comm ratio (exposed seconds / window sim seconds) below
+    /// which congestion is ignored — hidden communication is free
+    /// (`exposed=`).
+    pub exposed: f64,
+}
+
+impl Default for AimdParams {
+    fn default() -> AimdParams {
+        AimdParams {
+            add: 1.0 / 64.0,
+            mul: 0.5,
+            hi: 0.75,
+            lo: 0.5,
+            exposed: 0.02,
+        }
+    }
+}
+
+/// `--compress-control` surface: `off` (bit-frozen default) or
+/// `aimd[:add=1/64][:mul=0.5][:hi=0.75][:lo=0.5][:exposed=0.02]`.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum ControlSpec {
+    #[default]
+    Off,
+    Aimd(AimdParams),
+}
+
+impl ControlSpec {
+    pub fn parse(s: &str) -> anyhow::Result<ControlSpec> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        match kind {
+            "off" => {
+                anyhow::ensure!(
+                    parts.next().is_none(),
+                    "compress-control off takes no parameters (got {s:?})"
+                );
+                Ok(ControlSpec::Off)
+            }
+            "aimd" => {
+                let mut p = AimdParams::default();
+                for part in parts {
+                    let (k, v) = part.split_once('=').ok_or_else(|| {
+                        anyhow::anyhow!("bad aimd component {part:?} (want key=value)")
+                    })?;
+                    match k {
+                        "add" => p.add = parse_rate(v)?,
+                        "mul" => p.mul = v.parse()?,
+                        "hi" => p.hi = v.parse()?,
+                        "lo" => p.lo = v.parse()?,
+                        "exposed" => p.exposed = v.parse()?,
+                        other => anyhow::bail!(
+                            "unknown aimd parameter {other:?} (add|mul|hi|lo|exposed)"
+                        ),
+                    }
+                }
+                anyhow::ensure!(
+                    p.mul > 0.0 && p.mul < 1.0,
+                    "aimd mul {} must be in (0, 1)",
+                    p.mul
+                );
+                anyhow::ensure!(
+                    0.0 <= p.lo && p.lo < p.hi && p.hi <= 1.0,
+                    "aimd thresholds need 0 <= lo < hi <= 1 (lo={}, hi={})",
+                    p.lo,
+                    p.hi
+                );
+                anyhow::ensure!(
+                    p.exposed >= 0.0 && p.exposed.is_finite(),
+                    "aimd exposed threshold {} must be finite and >= 0",
+                    p.exposed
+                );
+                Ok(ControlSpec::Aimd(p))
+            }
+            other => anyhow::bail!("unknown compress-control {other:?} (off|aimd[:key=val...])"),
+        }
+    }
+
+    pub fn is_armed(&self) -> bool {
+        !matches!(self, ControlSpec::Off)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ControlSpec::Off => "off",
+            ControlSpec::Aimd(_) => "aimd",
+        }
+    }
+}
+
+/// The controller's serializable snapshot (checkpoint v4): rates plus
+/// the in-window measurement baselines, so a rejoining node resumes the
+/// loop mid-window bit-identically.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ControlState {
+    pub rates: Vec<f64>,
+    pub exposed_acc: f64,
+    pub sim0: f64,
+    pub busy0: Vec<f64>,
+}
+
+/// Per-node AIMD rate loop. The trainer owns one (when
+/// `--compress-control aimd`), calls [`RateController::note_step`] every
+/// step with that step's exposed-comm seconds, and every
+/// `--control-window` steps hands it the cumulative per-node NIC busy
+/// seconds + the sim clock; [`RateController::retune`] turns the window
+/// deltas into occupancy fractions and nudges each node's rate.
+#[derive(Clone, Debug)]
+pub struct RateController {
+    params: AimdParams,
+    rate_min: f64,
+    rate_max: f64,
+    rates: Vec<f64>,
+    exposed_acc: f64,
+    sim0: f64,
+    busy0: Vec<f64>,
+}
+
+impl RateController {
+    /// `nodes` control loops seeded at `init_rate` (the spec's uniform
+    /// rate), clamped into `[rate_min, rate_max]`.
+    pub fn new(
+        params: AimdParams,
+        rate_min: f64,
+        rate_max: f64,
+        nodes: usize,
+        init_rate: f64,
+    ) -> anyhow::Result<RateController> {
+        anyhow::ensure!(
+            0.0 < rate_min && rate_min <= rate_max && rate_max <= 1.0,
+            "need 0 < rate-min <= rate-max <= 1 (got {rate_min} / {rate_max})"
+        );
+        Ok(RateController {
+            params,
+            rate_min,
+            rate_max,
+            rates: vec![init_rate.clamp(rate_min, rate_max); nodes.max(1)],
+            exposed_acc: 0.0,
+            sim0: 0.0,
+            busy0: vec![0.0; nodes.max(1)],
+        })
+    }
+
+    /// Current per-node rates (indexed by node).
+    pub fn rates(&self) -> &[f64] {
+        &self.rates
+    }
+
+    /// Accumulate one step's exposed-communication seconds.
+    pub fn note_step(&mut self, exposed_s: f64) {
+        self.exposed_acc += exposed_s.max(0.0);
+    }
+
+    /// Close the window: `busy[n]` is node n's *cumulative* NIC busy
+    /// seconds, `now` the sim clock. Returns `true` if any rate moved
+    /// (the trainer then pushes rates into the replicators via
+    /// [`super::Replicator::set_rate`]).
+    pub fn retune(&mut self, busy: &[f64], now: f64) -> bool {
+        let dt = now - self.sim0;
+        if dt <= 0.0 {
+            return false;
+        }
+        let exposed_ratio = self.exposed_acc / dt;
+        let mut moved = false;
+        for (n, rate) in self.rates.iter_mut().enumerate() {
+            let busy_frac = ((busy.get(n).copied().unwrap_or(0.0)
+                - self.busy0.get(n).copied().unwrap_or(0.0))
+                / dt)
+                .clamp(0.0, 1.0);
+            let next = if busy_frac > self.params.hi && exposed_ratio > self.params.exposed {
+                *rate * self.params.mul
+            } else if busy_frac < self.params.lo {
+                *rate + self.params.add
+            } else {
+                *rate
+            }
+            .clamp(self.rate_min, self.rate_max);
+            if next != *rate {
+                *rate = next;
+                moved = true;
+            }
+        }
+        self.exposed_acc = 0.0;
+        self.sim0 = now;
+        self.busy0.clear();
+        self.busy0.extend_from_slice(busy);
+        self.busy0.resize(self.rates.len(), 0.0);
+        moved
+    }
+
+    /// Per-node rates as a `;`-joined metrics label (the steps-CSV
+    /// `rate` column), e.g. `0.1250;0.0312`.
+    pub fn label(&self) -> String {
+        self.rates
+            .iter()
+            .map(|r| format!("{r:.4}"))
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    pub fn export_state(&self) -> ControlState {
+        ControlState {
+            rates: self.rates.clone(),
+            exposed_acc: self.exposed_acc,
+            sim0: self.sim0,
+            busy0: self.busy0.clone(),
+        }
+    }
+
+    pub fn import_state(&mut self, st: ControlState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            st.rates.len() == self.rates.len() && st.busy0.len() == self.busy0.len(),
+            "controller snapshot is for {} nodes, this run has {}",
+            st.rates.len(),
+            self.rates.len()
+        );
+        self.rates = st.rates;
+        self.exposed_acc = st.exposed_acc;
+        self.sim0 = st.sim0;
+        self.busy0 = st.busy0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aimd(spec: &str) -> AimdParams {
+        match ControlSpec::parse(spec).unwrap() {
+            ControlSpec::Aimd(p) => p,
+            ControlSpec::Off => panic!("expected aimd"),
+        }
+    }
+
+    #[test]
+    fn parse_specs_and_errors() {
+        assert_eq!(ControlSpec::parse("off").unwrap(), ControlSpec::Off);
+        assert!(!ControlSpec::parse("off").unwrap().is_armed());
+        assert_eq!(aimd("aimd"), AimdParams::default());
+        let p = aimd("aimd:add=1/32:mul=0.7:hi=0.8:lo=0.3:exposed=0.05");
+        assert_eq!(p.add, 1.0 / 32.0);
+        assert_eq!(p.mul, 0.7);
+        assert_eq!(p.hi, 0.8);
+        assert_eq!(p.lo, 0.3);
+        assert_eq!(p.exposed, 0.05);
+        assert!(ControlSpec::parse("aimd").unwrap().is_armed());
+        assert_eq!(ControlSpec::parse("aimd").unwrap().label(), "aimd");
+        assert_eq!(ControlSpec::parse("off").unwrap().label(), "off");
+        // loud errors, each naming the offending piece
+        for bad in [
+            "pid",
+            "off:x=1",
+            "aimd:mul=1.5",
+            "aimd:mul=0",
+            "aimd:lo=0.9:hi=0.8",
+            "aimd:bogus=1",
+            "aimd:add",
+            "aimd:add=0",
+            "aimd:exposed=-1",
+        ] {
+            assert!(ControlSpec::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn parse_rate_forms() {
+        assert_eq!(parse_rate("1/8").unwrap(), 0.125);
+        assert_eq!(parse_rate("0.25").unwrap(), 0.25);
+        assert!(parse_rate("0").is_err());
+        assert!(parse_rate("2.0").is_err());
+        assert!(parse_rate("1/0").is_err());
+        assert!(parse_rate("x").is_err());
+    }
+
+    fn ctl(nodes: usize) -> RateController {
+        RateController::new(AimdParams::default(), 1.0 / 64.0, 0.25, nodes, 1.0 / 8.0).unwrap()
+    }
+
+    #[test]
+    fn congested_node_backs_off_only_when_comm_is_exposed() {
+        let mut c = ctl(2);
+        // node 0 saturated, node 1 in the dead band; comm is exposed
+        c.note_step(0.5);
+        assert!(c.retune(&[0.9, 0.6], 1.0));
+        assert_eq!(c.rates()[0], 0.125 * 0.5);
+        assert_eq!(c.rates()[1], 0.125);
+        // same occupancy but comm fully hidden: congestion is free, hold
+        let mut c = ctl(2);
+        assert!(!c.retune(&[0.9, 0.6], 1.0));
+        assert_eq!(c.rates(), &[0.125, 0.125]);
+    }
+
+    #[test]
+    fn idle_node_rises_additively_to_the_cap() {
+        let mut c = ctl(1);
+        let mut prev = c.rates()[0];
+        for w in 1..=20u32 {
+            c.retune(&[0.0], w as f64);
+            let r = c.rates()[0];
+            assert!(r >= prev, "window {w}: rate fell with headroom");
+            assert!(r <= 0.25, "window {w}: cap breached");
+            prev = r;
+        }
+        assert_eq!(prev, 0.25, "never reached rate-max");
+    }
+
+    #[test]
+    fn floor_and_window_deltas_are_respected() {
+        let mut c = ctl(1);
+        // repeated congestion pins at the floor, never below
+        for w in 1..=20u32 {
+            c.note_step(1.0);
+            c.retune(&[w as f64 * 0.95], w as f64);
+        }
+        assert_eq!(c.rates()[0], 1.0 / 64.0);
+        // busy is *cumulative*: a node busy in window 1 but idle in
+        // window 2 must read as idle in window 2 (delta, not total)
+        let mut c = ctl(1);
+        c.note_step(0.5);
+        c.retune(&[0.9], 1.0); // decrease
+        let after_congestion = c.rates()[0];
+        c.retune(&[0.9], 2.0); // same cumulative busy => idle window
+        assert!(c.rates()[0] > after_congestion, "window delta ignored");
+        // zero-length window is a no-op
+        assert!(!c.retune(&[0.9], 2.0));
+    }
+
+    #[test]
+    fn water_filling_on_a_mixed_cluster_converges() {
+        // Toy closed loop: node 0's NIC takes 4x as long per shipped
+        // byte as its three peers (a 4x mixed-NIC profile). Model each
+        // window's busy fraction as rate-proportional and iterate; the
+        // slow node must settle strictly below the fast ones, everyone
+        // inside the band.
+        let mut c = ctl(4);
+        let mut cum = [0.0f64; 4];
+        for w in 1..=40u32 {
+            let r = c.rates().to_vec();
+            for (n, b) in cum.iter_mut().enumerate() {
+                let per_byte = if n == 0 { 4.0 } else { 1.0 };
+                *b += (r[n] * 8.0 * per_byte).min(1.0);
+            }
+            c.note_step(0.2);
+            c.retune(&cum, w as f64);
+        }
+        let r = c.rates();
+        assert!(
+            r[0] < r[1] && r[0] < r[2] && r[0] < r[3],
+            "slow node not below fast peers: {r:?}"
+        );
+        for (n, &x) in r.iter().enumerate() {
+            assert!((1.0 / 64.0..=0.25).contains(&x), "node {n} out of band");
+        }
+        assert_eq!(c.label().split(';').count(), 4);
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_mid_window() {
+        let mut a = ctl(3);
+        a.note_step(0.3);
+        a.retune(&[0.9, 0.1, 0.6], 1.0);
+        a.note_step(0.7);
+        let st = a.export_state();
+        let mut b = ctl(3);
+        b.import_state(st.clone()).unwrap();
+        assert_eq!(a.export_state(), b.export_state());
+        // identical future behaviour
+        assert_eq!(a.retune(&[1.8, 0.2, 1.2], 2.0), b.retune(&[1.8, 0.2, 1.2], 2.0));
+        assert_eq!(a.rates(), b.rates());
+        // wrong-geometry snapshots are refused
+        let mut wrong = ctl(2);
+        assert!(wrong.import_state(st).is_err());
+    }
+
+    #[test]
+    fn controller_bounds_are_validated() {
+        assert!(RateController::new(AimdParams::default(), 0.0, 0.5, 2, 0.1).is_err());
+        assert!(RateController::new(AimdParams::default(), 0.5, 0.25, 2, 0.1).is_err());
+        assert!(RateController::new(AimdParams::default(), 0.1, 2.0, 2, 0.1).is_err());
+        // init rate outside the band is clamped in, not rejected
+        let c = RateController::new(AimdParams::default(), 0.1, 0.2, 2, 0.5).unwrap();
+        assert_eq!(c.rates(), &[0.2, 0.2]);
+    }
+}

@@ -241,6 +241,14 @@ impl Replicator for DemoReplicator {
     fn rate(&self) -> f64 {
         self.k as f64 / self.chunk as f64
     }
+
+    fn set_rate(&mut self, rate: f64) -> bool {
+        assert!(rate > 0.0 && rate <= 1.0, "rate {rate}");
+        // Same quantization as `from_rate`: decode needs no hint either
+        // way — DeMo payloads carry their indices.
+        self.k = ((self.chunk as f64 * rate).round() as usize).clamp(1, self.chunk);
+        true
+    }
 }
 
 #[cfg(test)]

@@ -626,7 +626,10 @@ mod tests {
         };
         assert!(sync.import_state(with_flight.clone()).is_err());
         // …and the stateless default refuses any non-empty snapshot.
-        let mut demo = crate::replicate::ReplSpec::parse("demo:1/8").unwrap().build(len);
+        let mut demo = crate::replicate::ReplSpec::parse("demo:1/8")
+            .unwrap()
+            .build_for_node(0, &crate::replicate::ReplBuildCtx::uniform(len))
+            .unwrap();
         assert!(demo.export_state().is_empty());
         with_flight.in_flight = None;
         assert!(demo.import_state(with_flight).is_err());

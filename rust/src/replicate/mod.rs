@@ -47,7 +47,23 @@
 //! in steady state (asserted by `benches/compress.rs`); Random still
 //! builds its seeded sample set internally (`Rng::sample_indices_into`
 //! is honest about this), so only its output vectors are pooled.
+//!
+//! ## Per-node construction and adaptive rates
+//!
+//! Every rank's replicator is instantiated through one entry point,
+//! [`ReplSpec::build_for_node`], which reads that rank's node-local
+//! staleness window and compression rate out of a [`ReplBuildCtx`] —
+//! heterogeneous clusters get per-node schedules *and* per-node rates
+//! from the same construction site. At runtime the closed-loop
+//! [`control::RateController`] (`--compress-control aimd`) watches each
+//! node's NIC occupancy and exposed-comm ratio and retunes its rate via
+//! [`Replicator::set_rate`] — no accumulator rebuild. Decode stays
+//! correct under heterogeneous k because every every-step scheme
+//! recovers its selection from the payload itself (DeMo ships indices,
+//! Random implies k by `values.len()`, Striding ships its stride as the
+//! payload's `sel` hint while the controller is armed).
 
+pub mod control;
 mod demo;
 mod diloco;
 mod full;
@@ -55,6 +71,7 @@ mod random;
 mod striding;
 pub mod topology;
 
+pub use control::{AimdParams, ControlSpec, RateController};
 pub use demo::DemoReplicator;
 pub use diloco::{AsyncDiLoCoReplicator, DiLoCoReplicator};
 pub use full::FullReplicator;
@@ -132,6 +149,15 @@ pub trait Replicator: Send {
     /// Fraction of components selected per replicating step (reporting).
     fn rate(&self) -> f64;
 
+    /// Retune the selection fraction in place — the adaptive controller's
+    /// hook (`--compress-control aimd`), called between steps so no
+    /// accumulator is rebuilt. Returns `true` if the scheme honoured the
+    /// new rate; the default (`false`) is for schemes whose "rate" is
+    /// structural (DiLoCo's period, Full's everything) and is ignored.
+    fn set_rate(&mut self, _rate: f64) -> bool {
+        false
+    }
+
     /// Steps between a payload-emitting step and the application of its
     /// gathered mean for *this instance*. 0 (the default for every
     /// synchronous scheme) means the mean lands in the same step's
@@ -139,7 +165,7 @@ pub trait Replicator: Send {
     /// window. The trainer is the source of truth for the schedule — it
     /// resolves one window per node (`--staleness [auto]`,
     /// `--node-staleness`) and constructs each rank's replicator with
-    /// its node's value via `ReplSpec::build_with_staleness`, so this
+    /// its node's value via [`ReplSpec::build_for_node`], so this
     /// method reports that window rather than driving it. Must be
     /// strictly smaller than the interval between payload-emitting
     /// steps.
@@ -299,6 +325,42 @@ impl GatherMode {
     }
 }
 
+/// Everything [`ReplSpec::build_for_node`] needs to instantiate one
+/// rank's replicator on a heterogeneous cluster: the shard geometry plus
+/// the optional per-*node* parameter tables (indexed by
+/// `rank / accels`). `None` tables mean "uniform, straight from the
+/// spec" — [`ReplBuildCtx::uniform`] is the homogeneous build.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplBuildCtx<'a> {
+    /// Elements in the shard this replicator covers.
+    pub shard_len: usize,
+    /// Accelerators per node (maps a rank to its node; 0 acts as 1).
+    pub accels: usize,
+    /// Per-node staleness windows (diloco-only; resolved by the trainer
+    /// from `--staleness [auto]` / `--node-staleness`).
+    pub staleness: Option<&'a [u64]>,
+    /// Per-node compression rates (demo/random/striding-only; seeded and
+    /// then retuned by the [`control::RateController`]).
+    pub rates: Option<&'a [f64]>,
+    /// True while the adaptive controller is armed: schemes whose decode
+    /// needs a selection hint under heterogeneous rates (Striding) ship
+    /// it on the wire. Off keeps the wire format bit-identical.
+    pub adaptive: bool,
+}
+
+impl ReplBuildCtx<'static> {
+    /// Homogeneous build: every rank gets the spec's own parameters.
+    pub fn uniform(shard_len: usize) -> ReplBuildCtx<'static> {
+        ReplBuildCtx {
+            shard_len,
+            accels: 1,
+            staleness: None,
+            rates: None,
+            adaptive: false,
+        }
+    }
+}
+
 /// Which scheme to build (config / CLI surface).
 #[derive(Clone, Debug, PartialEq)]
 pub enum ReplSpec {
@@ -443,28 +505,72 @@ impl ReplSpec {
         })
     }
 
-    /// Instantiate for a shard of `shard_len` elements.
-    pub fn build(&self, shard_len: usize) -> Box<dyn Replicator> {
-        match *self {
+    /// Instantiate this spec for the rank at `rank` — the single
+    /// construction entry point. The [`ReplBuildCtx`] carries everything
+    /// per-node: the rank's node is `rank / ctx.accels`, and that node's
+    /// staleness window / compression rate (when the respective tables
+    /// are armed) parameterize the instance. `ReplBuildCtx::uniform`
+    /// reproduces the old homogeneous build exactly.
+    pub fn build_for_node(
+        &self,
+        rank: usize,
+        ctx: &ReplBuildCtx,
+    ) -> anyhow::Result<Box<dyn Replicator>> {
+        let node = rank / ctx.accels.max(1);
+        let pick = |table: Option<&[f64]>| -> anyhow::Result<Option<f64>> {
+            match table {
+                None => Ok(None),
+                Some(t) => Ok(Some(*t.get(node).ok_or_else(|| {
+                    anyhow::anyhow!("rate table has {} entries but rank {rank} is on node {node}", t.len())
+                })?)),
+            }
+        };
+        if ctx.staleness.is_some() && !matches!(self, ReplSpec::DiLoCo { .. }) {
+            anyhow::bail!(
+                "per-node staleness only applies to the diloco replicator (got {:?})",
+                self.label()
+            );
+        }
+        if ctx.rates.is_some() && matches!(self, ReplSpec::DiLoCo { .. } | ReplSpec::Full { .. }) {
+            anyhow::bail!(
+                "per-node compression rates only apply to demo/random/striding (got {:?})",
+                self.label()
+            );
+        }
+        let shard_len = ctx.shard_len;
+        Ok(match *self {
             ReplSpec::Demo {
                 rate,
                 chunk,
                 sign,
                 dtype,
                 packed,
-            } => Box::new(DemoReplicator::from_rate(rate, chunk, sign, dtype).packed(packed)),
+            } => {
+                let rate = pick(ctx.rates)?.unwrap_or(rate);
+                Box::new(DemoReplicator::from_rate(rate, chunk, sign, dtype).packed(packed))
+            }
             ReplSpec::Random {
                 rate,
                 sign,
                 dtype,
                 packed,
-            } => Box::new(RandomReplicator::new(rate, sign, dtype).packed(packed)),
+            } => {
+                let rate = pick(ctx.rates)?.unwrap_or(rate);
+                Box::new(RandomReplicator::new(rate, sign, dtype).packed(packed))
+            }
             ReplSpec::Striding {
                 rate,
                 sign,
                 dtype,
                 packed,
-            } => Box::new(StridingReplicator::new(rate, sign, dtype).packed(packed)),
+            } => {
+                let rate = pick(ctx.rates)?.unwrap_or(rate);
+                Box::new(
+                    StridingReplicator::new(rate, sign, dtype)
+                        .packed(packed)
+                        .adaptive(ctx.adaptive),
+                )
+            }
             ReplSpec::DiLoCo {
                 period,
                 sign,
@@ -472,59 +578,42 @@ impl ReplSpec {
                 packed,
                 staleness,
                 ..
-            } => match staleness {
-                // One construction site for the async variant: the
-                // global-staleness build is the per-node build with a
-                // uniform window (parse/apply_arg already validated
-                // s < period, so the Result is vacuous here).
-                Some(s) => self
-                    .build_with_staleness(shard_len, s)
-                    .expect("staleness validated against the period at parse time"),
-                None => {
-                    Box::new(DiLoCoReplicator::new(period, sign, dtype, shard_len).packed(packed))
+            } => {
+                // Per-node table wins over the spec's uniform window; a
+                // spec-level `async=S` without a table is the uniform
+                // per-node build.
+                let window = match ctx.staleness {
+                    Some(t) => Some(*t.get(node).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "staleness table has {} entries but rank {rank} is on node {node}",
+                            t.len()
+                        )
+                    })?),
+                    None => staleness,
+                };
+                match window {
+                    Some(s) => {
+                        anyhow::ensure!(
+                            s < period,
+                            "staleness {s} must be < diloco period {period} \
+                             (one gather in flight at a time)"
+                        );
+                        Box::new(
+                            AsyncDiLoCoReplicator::new(period, sign, dtype, shard_len, s)
+                                .packed(packed),
+                        )
+                    }
+                    None => Box::new(
+                        DiLoCoReplicator::new(period, sign, dtype, shard_len).packed(packed),
+                    ),
                 }
-            },
+            }
             ReplSpec::Full {
                 sign,
                 dtype,
                 packed,
             } => Box::new(FullReplicator::new(sign, dtype).packed(packed)),
-        }
-    }
-
-    /// Build the async DiLoCo variant with an explicit per-node staleness
-    /// override — the straggler-tolerant trainer resolves one value per
-    /// node (`--staleness auto` / `--node-staleness`) and instantiates
-    /// each rank's replicator with its node's window. Errors for
-    /// non-DiLoCo schemes: only the periodic scheme can defer its sync.
-    pub fn build_with_staleness(
-        &self,
-        shard_len: usize,
-        staleness: u64,
-    ) -> anyhow::Result<Box<dyn Replicator>> {
-        match *self {
-            ReplSpec::DiLoCo {
-                period,
-                sign,
-                dtype,
-                packed,
-                ..
-            } => {
-                anyhow::ensure!(
-                    staleness < period,
-                    "staleness {staleness} must be < diloco period {period} \
-                     (one gather in flight at a time)"
-                );
-                Ok(Box::new(
-                    AsyncDiLoCoReplicator::new(period, sign, dtype, shard_len, staleness)
-                        .packed(packed),
-                ))
-            }
-            _ => anyhow::bail!(
-                "per-node staleness only applies to the diloco replicator (got {:?})",
-                self.label()
-            ),
-        }
+        })
     }
 
     pub fn label(&self) -> String {
@@ -546,6 +635,19 @@ impl ReplSpec {
             }
             ReplSpec::DiLoCo { period, .. } => format!("diloco-1/{period}"),
             ReplSpec::Full { .. } => "full".to_string(),
+        }
+    }
+
+    /// The configured compression rate of a sparse scheme — the rate
+    /// controller's per-node starting point. `None` for DiLoCo/Full,
+    /// whose "rate" is structural (period / everything) rather than a
+    /// retunable fraction.
+    pub fn base_rate(&self) -> Option<f64> {
+        match self {
+            ReplSpec::Demo { rate, .. }
+            | ReplSpec::Random { rate, .. }
+            | ReplSpec::Striding { rate, .. } => Some(*rate),
+            ReplSpec::DiLoCo { .. } | ReplSpec::Full { .. } => None,
         }
     }
 }
@@ -677,17 +779,159 @@ mod tests {
     }
 
     #[test]
-    fn build_with_staleness_is_diloco_only_and_bounded() {
+    fn build_for_node_staleness_is_diloco_only_and_bounded() {
         let spec = ReplSpec::parse("diloco:4").unwrap();
-        let r = spec.build_with_staleness(8, 2).unwrap();
+        let with = |table: &'static [u64]| ReplBuildCtx {
+            staleness: Some(table),
+            ..ReplBuildCtx::uniform(8)
+        };
+        let r = spec.build_for_node(0, &with(&[2])).unwrap();
         assert_eq!(r.sync_delay(), 2);
-        assert!(spec.build_with_staleness(8, 4).is_err());
-        assert!(ReplSpec::parse("demo:1/8")
+        let err = spec.build_for_node(0, &with(&[4])).unwrap_err().to_string();
+        assert!(err.contains("must be < diloco period"), "{err}");
+        let err = ReplSpec::parse("demo:1/8")
             .unwrap()
-            .build_with_staleness(8, 1)
-            .is_err());
+            .build_for_node(0, &with(&[1]))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("per-node staleness only applies to the diloco replicator"),
+            "{err}"
+        );
         // S = 0 builds the async implementation (bit-identical to sync)
-        assert_eq!(spec.build_with_staleness(8, 0).unwrap().sync_delay(), 0);
+        assert_eq!(spec.build_for_node(0, &with(&[0])).unwrap().sync_delay(), 0);
+        // a rank beyond the table is a hard error, not a silent default
+        assert!(spec.build_for_node(3, &with(&[2, 0])).is_err());
+    }
+
+    #[test]
+    fn build_for_node_rates_map_ranks_to_nodes() {
+        // 2 accels/node: ranks {0,1} read rates[0], ranks {2,3} rates[1].
+        let rates: &[f64] = &[1.0 / 32.0, 1.0 / 8.0];
+        let ctx = ReplBuildCtx {
+            accels: 2,
+            rates: Some(rates),
+            adaptive: true,
+            ..ReplBuildCtx::uniform(128)
+        };
+        for spec in ["demo:1/16", "random:1/16", "striding:1/16"] {
+            let spec = ReplSpec::parse(spec).unwrap();
+            let slow = spec.build_for_node(1, &ctx).unwrap();
+            let fast = spec.build_for_node(2, &ctx).unwrap();
+            assert!(
+                slow.rate() < fast.rate(),
+                "{}: {} !< {}",
+                slow.name(),
+                slow.rate(),
+                fast.rate()
+            );
+        }
+        // rate tables are meaningless for period/full schemes — loud error
+        for spec in ["diloco:4", "full"] {
+            let err = ReplSpec::parse(spec)
+                .unwrap()
+                .build_for_node(0, &ctx)
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("per-node compression rates only apply"),
+                "{err}"
+            );
+        }
+        // and a uniform ctx reproduces the spec's own rate
+        let uni = ReplSpec::parse("random:1/16")
+            .unwrap()
+            .build_for_node(0, &ReplBuildCtx::uniform(128))
+            .unwrap();
+        assert_eq!(uni.rate(), 1.0 / 16.0);
+    }
+
+    #[test]
+    fn set_rate_retunes_sparse_schemes_and_ignores_structural_ones() {
+        let ctx = ReplBuildCtx::uniform(256);
+        for spec in ["demo:1/8", "random:1/8", "striding:1/8"] {
+            let mut r = ReplSpec::parse(spec).unwrap().build_for_node(0, &ctx).unwrap();
+            let before = r.rate();
+            assert!(r.set_rate(1.0 / 32.0), "{spec} refused set_rate");
+            assert!(r.rate() < before, "{spec}: rate did not drop");
+        }
+        for spec in ["diloco:4", "full"] {
+            let mut r = ReplSpec::parse(spec).unwrap().build_for_node(0, &ctx).unwrap();
+            let before = r.rate();
+            assert!(!r.set_rate(1.0 / 32.0), "{spec} claimed to retune");
+            assert_eq!(r.rate(), before);
+        }
+    }
+
+    #[test]
+    fn mean_decoded_refs_heterogeneous_k_matches_dense_reference() {
+        // Satellite: peers running different compression rates (the
+        // adaptive controller's steady state, e.g. 1/8 vs 1/32) must
+        // average bit-exactly against a dense per-element reference, at
+        // every dtype and thread count.
+        use crate::parallel::{PoolHandle, WorkerPool};
+        use crate::util::proptest::{prop_assert, proptest};
+        proptest(6, |g| {
+            for dtype in ["f32", "bf16"] {
+                for threads in [1usize, 2, 4] {
+                    for kind in ["demo", "random", "striding"] {
+                        let len = 128 * g.usize(1, 2);
+                        let ctx = ReplCtx {
+                            step: g.usize(0, 7) as u64,
+                            shard: 0,
+                            seed: 11,
+                        };
+                        let mut scratch =
+                            Scratch::with_pool(PoolHandle::new(WorkerPool::new(threads)));
+                        // Build one encoder per peer at heterogeneous
+                        // rates, plus a decoder at the slow rate (decode
+                        // must be rate-agnostic: payload-driven).
+                        let bctx = |rate: &'static str| {
+                            ReplSpec::parse(&format!("{kind}:{rate}:{dtype}"))
+                                .unwrap()
+                                .build_for_node(
+                                    0,
+                                    &ReplBuildCtx {
+                                        adaptive: true,
+                                        ..ReplBuildCtx::uniform(len)
+                                    },
+                                )
+                                .unwrap()
+                        };
+                        let mut peers = [bctx("1/8"), bctx("1/32")];
+                        let decoder = bctx("1/32");
+                        let mut payloads = Vec::new();
+                        for r in peers.iter_mut() {
+                            let mut buf = g.vec_normal(len, 1.0);
+                            let (q, p) = r.extract(&ctx, &mut buf, &mut scratch);
+                            scratch.put_f32(q);
+                            payloads.push(p.expect("every-step scheme must emit"));
+                        }
+                        let refs: Vec<&Payload> = payloads.iter().collect();
+                        let got = mean_decoded_refs(&*decoder, &ctx, &refs, len, &mut scratch);
+                        // dense reference: decode each payload alone,
+                        // then the same sequential add + 1/n scale
+                        let mut want = vec![0.0f32; len];
+                        for p in &refs {
+                            let mut tmp = vec![0.0f32; len];
+                            decoder.decode(&ctx, p, &mut tmp, &mut scratch);
+                            for (w, t) in want.iter_mut().zip(&tmp) {
+                                *w += *t;
+                            }
+                        }
+                        let inv = 1.0 / refs.len() as f32;
+                        for w in want.iter_mut() {
+                            *w *= inv;
+                        }
+                        prop_assert(
+                            got == want,
+                            format!("{kind}/{dtype}/t{threads}: heterogeneous-k mean diverged"),
+                        );
+                        scratch.put_f32(got);
+                    }
+                }
+            }
+        });
     }
 
     #[test]
@@ -732,8 +976,9 @@ mod tests {
             ] {
                 let len = 128 * g.usize(1, 3);
                 let mut reused = Scratch::new();
-                let mut ra = ReplSpec::parse(spec).unwrap().build(len);
-                let mut rb = ReplSpec::parse(spec).unwrap().build(len);
+                let bctx = ReplBuildCtx::uniform(len);
+                let mut ra = ReplSpec::parse(spec).unwrap().build_for_node(0, &bctx).unwrap();
+                let mut rb = ReplSpec::parse(spec).unwrap().build_for_node(0, &bctx).unwrap();
                 for step in 0..4u64 {
                     let data = g.vec_normal(len, 1.0);
                     let ctx = ReplCtx {

@@ -58,8 +58,21 @@ impl RandomReplicator {
 
     /// [`RandomReplicator::indices`] into a reusable buffer.
     pub fn indices_into(&self, ctx: &ReplCtx, len: usize, out: &mut Vec<usize>) {
-        let k = ((len as f64 * self.rate).round() as usize).clamp(1, len);
-        ctx.shared_rng().sample_indices_into(len, k, out);
+        Self::indices_into_k(ctx, len, Self::k_for(self.rate, len), out);
+    }
+
+    fn k_for(rate: f64, len: usize) -> usize {
+        ((len as f64 * rate).round() as usize).clamp(1, len)
+    }
+
+    /// The shared index set at an explicit component count: the same
+    /// `(seed, step, shard, len, k)` always yields the same set, so a
+    /// decoder regenerates *any* peer's selection from its payload's
+    /// value count — heterogeneous rates decode without shipping
+    /// indices, and at uniform rates this is exactly the encoder's own
+    /// call (bit-identical to the fixed-rate path).
+    fn indices_into_k(ctx: &ReplCtx, len: usize, k: usize, out: &mut Vec<usize>) {
+        ctx.shared_rng().sample_indices_into(len, k.clamp(1, len), out);
     }
 }
 
@@ -91,7 +104,10 @@ impl Replicator for RandomReplicator {
     }
 
     fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32], scratch: &mut Scratch) {
-        self.indices_into(ctx, out.len(), &mut scratch.idx);
+        // k comes from the payload, not this instance's rate: a peer may
+        // run a different controller-tuned rate and its selection is
+        // still recoverable (same shared stream, its value count).
+        Self::indices_into_k(ctx, out.len(), payload.values.len(), &mut scratch.idx);
         debug_assert_eq!(scratch.idx.len(), payload.values.len());
         for (&i, &v) in scratch.idx.iter().zip(&payload.values) {
             out[i] = v;
@@ -100,6 +116,12 @@ impl Replicator for RandomReplicator {
 
     fn rate(&self) -> f64 {
         self.rate
+    }
+
+    fn set_rate(&mut self, rate: f64) -> bool {
+        assert!(rate > 0.0 && rate <= 1.0, "rate {rate}");
+        self.rate = rate;
+        true
     }
 }
 
@@ -192,6 +214,31 @@ mod tests {
             .values
             .iter()
             .all(|&v| v == 1.0 || v == -1.0 || v == 0.0));
+    }
+
+    #[test]
+    fn decode_is_rate_agnostic_for_heterogeneous_peers() {
+        // A peer tuned to 1/32 by the controller ships fewer values; any
+        // decoder instance (whatever its own rate) must regenerate that
+        // peer's exact selection from the value count alone.
+        let mut rng = Rng::new(4);
+        let orig: Vec<f32> = (0..2048).map(|_| rng.normal_f32(1.0)).collect();
+        let mut buf = orig.clone();
+        let mut slow = RandomReplicator::new(1.0 / 32.0, false, Dtype::F32);
+        let c = ctx(6);
+        let mut s = Scratch::new();
+        let (q, p) = slow.extract(&c, &mut buf, &mut s);
+        let p = p.unwrap();
+        assert_eq!(p.values.len(), 64);
+        let fast = RandomReplicator::new(1.0 / 8.0, false, Dtype::F32);
+        let mut via_fast = vec![0.0f32; 2048];
+        fast.decode(&c, &p, &mut via_fast, &mut s);
+        assert_eq!(via_fast, q, "decoder rate leaked into the selection");
+        // retuning an instance mid-run changes its *next* extraction only
+        assert!(slow.set_rate(1.0 / 8.0));
+        let mut buf2 = orig.clone();
+        let (_, p2) = slow.extract(&c, &mut buf2, &mut s);
+        assert_eq!(p2.unwrap().values.len(), 256);
     }
 
     #[test]

@@ -19,6 +19,11 @@ pub struct StridingReplicator {
     pub sign: bool,
     pub dtype: Dtype,
     is_packed: bool,
+    /// Adaptive-controller mode: peers may run different strides, so the
+    /// payload carries this instance's stride as its `sel` hint (4 B)
+    /// and decode reads the *payload's* stride, not its own. Off by
+    /// default — fixed-rate payloads stay bit-identical.
+    is_adaptive: bool,
 }
 
 impl StridingReplicator {
@@ -30,6 +35,7 @@ impl StridingReplicator {
             sign,
             dtype,
             is_packed: false,
+            is_adaptive: false,
         }
     }
 
@@ -37,6 +43,13 @@ impl StridingReplicator {
     /// `compress::Payload::packed`).
     pub fn packed(mut self, packed: bool) -> Self {
         self.is_packed = packed;
+        self
+    }
+
+    /// Builder: ship the stride as the payload's `sel` hint so peers at
+    /// controller-tuned heterogeneous strides decode each other.
+    pub fn adaptive(mut self, adaptive: bool) -> Self {
+        self.is_adaptive = adaptive;
         self
     }
 
@@ -56,7 +69,14 @@ impl StridingReplicator {
     }
 
     pub fn indices(&self, ctx: &ReplCtx, len: usize) -> impl Iterator<Item = usize> + '_ {
-        (self.offset(ctx)..len).step_by(self.stride)
+        Self::indices_at(self.stride, ctx, len)
+    }
+
+    /// The strided index set at an explicit stride — decode uses the
+    /// *payload's* stride (its `sel` hint) when present, so a peer at a
+    /// different controller-tuned rate is recoverable.
+    fn indices_at(stride: usize, ctx: &ReplCtx, len: usize) -> impl Iterator<Item = usize> {
+        ((ctx.step % stride as u64) as usize..len).step_by(stride)
     }
 }
 
@@ -81,7 +101,10 @@ impl Replicator for StridingReplicator {
         for i in self.indices(ctx, len) {
             buf[i] = 0.0;
         }
-        let payload = self.mk_payload(None, values);
+        let mut payload = self.mk_payload(None, values);
+        if self.is_adaptive {
+            payload = payload.with_sel(self.stride as u32);
+        }
         let mut q_local = scratch.take_f32_zeroed(len);
         self.decode(ctx, &payload, &mut q_local, scratch);
         (q_local, Some(payload))
@@ -89,13 +112,23 @@ impl Replicator for StridingReplicator {
 
     fn decode(&self, ctx: &ReplCtx, payload: &Payload, out: &mut [f32], _scratch: &mut Scratch) {
         let n = out.len();
-        for (i, &v) in self.indices(ctx, n).zip(&payload.values) {
+        let stride = match payload.sel {
+            Some(s) => (s as usize).max(1),
+            None => self.stride,
+        };
+        for (i, &v) in Self::indices_at(stride, ctx, n).zip(&payload.values) {
             out[i] = v;
         }
     }
 
     fn rate(&self) -> f64 {
         1.0 / self.stride as f64
+    }
+
+    fn set_rate(&mut self, rate: f64) -> bool {
+        assert!(rate > 0.0 && rate <= 1.0, "rate {rate}");
+        self.stride = (1.0 / rate).round().max(1.0) as usize;
+        true
     }
 }
 
@@ -160,6 +193,33 @@ mod tests {
         let mut out = vec![0.0f32; 100];
         r.decode(&c, &p.unwrap(), &mut out, &mut s);
         assert_eq!(q, out);
+    }
+
+    #[test]
+    fn adaptive_sel_hint_makes_decode_stride_agnostic() {
+        // Controller mode: a 1/16 peer's payload decodes correctly on a
+        // rank whose own instance runs 1/4, because the stride rides the
+        // payload. Non-adaptive payloads carry no hint (bit-frozen wire).
+        let mut rng = Rng::new(7);
+        let orig: Vec<f32> = (0..256).map(|_| rng.normal_f32(1.0)).collect();
+        let c = ctx(5);
+        let mut s = Scratch::new();
+        let mut slow = StridingReplicator::new(1.0 / 16.0, false, Dtype::F32).adaptive(true);
+        let mut buf = orig.clone();
+        let (q, p) = slow.extract(&c, &mut buf, &mut s);
+        let p = p.unwrap();
+        assert_eq!(p.sel, Some(16));
+        let fast = StridingReplicator::new(1.0 / 4.0, false, Dtype::F32).adaptive(true);
+        let mut out = vec![0.0f32; 256];
+        fast.decode(&c, &p, &mut out, &mut s);
+        assert_eq!(out, q, "decoder's own stride leaked into decode");
+        // fixed-rate mode ships no hint
+        let mut fixed = StridingReplicator::new(1.0 / 16.0, false, Dtype::F32);
+        let (_, pf) = fixed.extract(&c, &mut orig.clone(), &mut s);
+        assert_eq!(pf.unwrap().sel, None);
+        // set_rate retunes the stride in place
+        assert!(slow.set_rate(1.0 / 4.0));
+        assert_eq!(slow.stride, 4);
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //! bit-flipped file is rejected with one actionable error instead of a
 //! parse failure deep in the body; version 3 adds each parked window's
 //! per-member peer sets (the sync-topology selection the window was
-//! launched under) and folds the topology into the config fingerprint. Saves are atomic
+//! launched under) and folds the topology into the config fingerprint;
+//! version 4 adds the payload `sel` rate hint and the adaptive rate
+//! controller's mid-window state ([`ControlState`]), with the control
+//! spec folded into the fingerprint. Saves are atomic
 //! ([`crate::util::atomic_write`]: temp file + rename), so a crash
 //! mid-save never corrupts the previous checkpoint — which is exactly
 //! the file a crashed node's rejoin reads
@@ -34,6 +37,7 @@ use crate::compress::Payload;
 use crate::config::ExperimentConfig;
 use crate::net::SimTime;
 use crate::optim::OptState;
+use crate::replicate::control::ControlState;
 use crate::replicate::ReplState;
 use crate::tensor::Dtype;
 
@@ -41,20 +45,21 @@ use super::engine::EngineState;
 use super::{PendingSync, Trainer};
 
 const MAGIC: &[u8; 8] = b"DTNCKPT1";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 
 /// The config facets a checkpoint must agree on to be restorable: the
 /// state vectors below are only meaningful on the same model/mesh/
 /// optimizer/replicator/seed/schedule.
 fn fingerprint(cfg: &ExperimentConfig) -> String {
     format!(
-        "{}|{}x{}|{}|{}|topo={}|seed={}|steps={}|lr={}",
+        "{}|{}x{}|{}|{}|topo={}|ctl={}|seed={}|steps={}|lr={}",
         cfg.model,
         cfg.nodes,
         cfg.accels_per_node,
         cfg.opt.label(),
         cfg.repl.label(),
         cfg.topology.label(),
+        cfg.compress_control.label(),
         cfg.seed,
         cfg.steps,
         cfg.lr,
@@ -254,6 +259,13 @@ fn write_payload(w: &mut W, p: &Payload) {
     });
     w.boolean(p.sign);
     w.boolean(p.packed);
+    match p.sel {
+        None => w.boolean(false),
+        Some(s) => {
+            w.boolean(true);
+            w.u32(s);
+        }
+    }
 }
 
 fn read_payload(r: &mut R) -> Result<Payload> {
@@ -267,6 +279,7 @@ fn read_payload(r: &mut R) -> Result<Payload> {
     };
     let sign = r.boolean()?;
     let packed = r.boolean()?;
+    let sel = if r.boolean()? { Some(r.u32()?) } else { None };
     // Field-literal reconstruction: the stored values already went
     // through sign/dtype quantization at extraction time, and
     // `Payload::new` would run that pass again.
@@ -276,6 +289,7 @@ fn read_payload(r: &mut R) -> Result<Payload> {
         dtype,
         sign,
         packed,
+        sel,
     })
 }
 
@@ -311,6 +325,22 @@ fn read_repl_state(r: &mut R) -> Result<ReplState> {
     Ok(ReplState {
         delta_acc,
         in_flight,
+    })
+}
+
+fn write_control_state(w: &mut W, st: &ControlState) {
+    w.f64s(&st.rates);
+    w.f64(st.exposed_acc);
+    w.f64(st.sim0);
+    w.f64s(&st.busy0);
+}
+
+fn read_control_state(r: &mut R) -> Result<ControlState> {
+    Ok(ControlState {
+        rates: r.f64s()?,
+        exposed_acc: r.f64()?,
+        sim0: r.f64()?,
+        busy0: r.f64s()?,
     })
 }
 
@@ -464,6 +494,9 @@ struct CkptData {
     traffic: Vec<u64>,
     last_inter: u64,
     last_intra: u64,
+    /// Rate-controller snapshot (`Some` iff the run was controller-on;
+    /// the fingerprint's `ctl=` facet already pins the spec).
+    control: Option<ControlState>,
 }
 
 fn decode(bytes: &[u8], expect_fp: &str, world: usize) -> Result<CkptData> {
@@ -518,6 +551,11 @@ fn decode(bytes: &[u8], expect_fp: &str, world: usize) -> Result<CkptData> {
     let traffic = r.u64s()?;
     let last_inter = r.u64()?;
     let last_intra = r.u64()?;
+    let control = if r.boolean()? {
+        Some(read_control_state(&mut r)?)
+    } else {
+        None
+    };
     r.done()?;
     Ok(CkptData {
         step,
@@ -530,6 +568,7 @@ fn decode(bytes: &[u8], expect_fp: &str, world: usize) -> Result<CkptData> {
         traffic,
         last_inter,
         last_intra,
+        control,
     })
 }
 
@@ -563,6 +602,13 @@ impl Trainer {
         w.u64s(&self.traffic.snapshot());
         w.u64(self.last_inter);
         w.u64(self.last_intra);
+        match &self.controller {
+            None => w.boolean(false),
+            Some(c) => {
+                w.boolean(true);
+                write_control_state(&mut w, &c.export_state());
+            }
+        }
         let crc = crate::util::crc32(&w.buf);
         w.u32(crc);
 
@@ -636,6 +682,27 @@ impl Trainer {
         self.engine.set_active(&self.active);
         self.last_inter = data.last_inter;
         self.last_intra = data.last_intra;
+        // The fingerprint's `ctl=` facet guarantees both sides agree on
+        // off vs aimd, so this match never crosses. Restored rates are
+        // pushed back into every rank's replicator — the snapshot was
+        // taken mid-window, possibly after retunes.
+        let expects = self.controller.is_some();
+        match (data.control, self.controller.as_mut()) {
+            (None, None) => {}
+            (Some(st), Some(ctl)) => {
+                ctl.import_state(st)?;
+                for r in 0..world {
+                    let rate = ctl.rates()[self.mesh.topo.node_of(r)];
+                    self.ranks[r].repl.set_rate(rate);
+                }
+                self.rate_label = ctl.label();
+            }
+            (have, _) => anyhow::bail!(
+                "checkpoint {} a rate-controller snapshot but this run {} one",
+                if have.is_some() { "carries" } else { "lacks" },
+                if expects { "expects" } else { "does not run" }
+            ),
+        }
         Ok(())
     }
 
@@ -722,7 +789,9 @@ mod tests {
         let p1 = Payload::new(Some(vec![3, 9, 11]), vec![0.5, -2.0, 0.0], Dtype::F32, true)
             .with_packing();
         let p2 = Payload::new(None, vec![1.0 + 1e-3, -7.25], Dtype::Bf16, false);
-        for p in [&p1, &p2] {
+        // An adaptive-striding payload carries its stride as a sel hint.
+        let p3 = Payload::new(None, vec![0.5, 0.25], Dtype::F32, false).with_sel(16);
+        for p in [&p1, &p2, &p3] {
             let mut w = W::new();
             write_payload(&mut w, p);
             let mut r = R::new(&w.buf);
@@ -736,7 +805,23 @@ mod tests {
             assert_eq!(q.dtype, p.dtype);
             assert_eq!(q.sign, p.sign);
             assert_eq!(q.packed, p.packed);
+            assert_eq!(q.sel, p.sel);
         }
+    }
+
+    #[test]
+    fn control_state_roundtrip() {
+        let st = ControlState {
+            rates: vec![0.125, 0.03125],
+            exposed_acc: 1.5,
+            sim0: 9.0,
+            busy0: vec![4.0, 2.0],
+        };
+        let mut w = W::new();
+        write_control_state(&mut w, &st);
+        let mut r = R::new(&w.buf);
+        assert_eq!(read_control_state(&mut r).unwrap(), st);
+        r.done().unwrap();
     }
 
     #[test]

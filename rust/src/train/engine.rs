@@ -409,6 +409,13 @@ impl StepEngine {
         (&self.compute, &self.fabric, &self.nic)
     }
 
+    /// Cumulative NIC-busy seconds of one rank's lane — the occupancy
+    /// tap the adaptive rate controller samples per window (it takes
+    /// deltas itself, so this stays a monotone run total).
+    pub fn nic_busy(&self, rank: usize) -> f64 {
+        self.nic.busy(rank)
+    }
+
     fn world(&self) -> usize {
         self.topo.world_size()
     }
@@ -1259,6 +1266,24 @@ mod tests {
             "serialized hid comm: {t_ser:?}"
         );
         assert!(t_ovl.hidden_comm > 1e-7 * ovl.now(), "{t_ovl:?}");
+    }
+
+    #[test]
+    fn nic_busy_tap_is_monotone_and_tracks_gather_traffic() {
+        let mut e = engine(2, 2, true);
+        assert_eq!(e.nic_busy(0), 0.0);
+        let mut prev = vec![0.0f64; 4];
+        for _ in 0..4 {
+            drive(&mut e, 1, true);
+            for (r, p) in prev.iter_mut().enumerate() {
+                let b = e.nic_busy(r);
+                assert!(b >= *p, "rank {r}: cumulative busy went backwards");
+                assert_eq!(b, e.timelines().2.busy(r));
+                *p = b;
+            }
+        }
+        // gather traffic actually lands on the tap
+        assert!(prev.iter().all(|&b| b > 0.0), "no NIC occupancy recorded");
     }
 
     #[test]

@@ -99,7 +99,10 @@ use crate::net::{
 };
 use crate::optim::Optimizer;
 use crate::parallel::{PoolHandle, SlicePtr, WorkerPool};
-use crate::replicate::{mean_decoded, mean_decoded_refs, LatePolicy, ReplCtx, Replicator, ReplSpec};
+use crate::replicate::{
+    mean_decoded, mean_decoded_refs, ControlSpec, LatePolicy, RateController, ReplBuildCtx,
+    ReplCtx, Replicator, ReplSpec,
+};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::shard::{FlatLayout, HybridMesh};
 
@@ -190,6 +193,15 @@ pub struct Trainer {
     /// `;`-joined `node_delay` for the steps CSV (empty when the async
     /// machinery is unarmed).
     node_staleness_label: String,
+    /// Closed-loop AIMD rate controller (`--compress-control aimd`):
+    /// per `--control-window`, each node's compression rate is retuned
+    /// from that node's NIC-occupancy tap ([`engine::StepEngine::nic_busy`])
+    /// and the window's exposed-comm ratio. `None` = `off`, the
+    /// bit-frozen fixed-rate path (prop-tested identical to no flag).
+    controller: Option<RateController>,
+    /// `;`-joined per-node rates for the steps CSV `rate` column (empty
+    /// while the controller is off — fixed-rate runs keep it blank).
+    rate_label: String,
     /// Per-node late-contribution counts this step (`dropped_syncs`).
     dropped_step: Vec<u64>,
     /// `;`-joined per-member peer-set sizes of the last sync window
@@ -228,8 +240,8 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(rt: &Runtime, cfg: ExperimentConfig) -> Result<Trainer> {
-        cfg.validate_elastic()?;
+    pub fn new(rt: &Runtime, mut cfg: ExperimentConfig) -> Result<Trainer> {
+        cfg.validate()?;
         let model = rt
             .load_model(&cfg.artifacts_dir, &cfg.model)
             .with_context(|| format!("loading model {}", cfg.model))?;
@@ -294,16 +306,38 @@ impl Trainer {
         } else {
             String::new()
         };
+        // Closed-loop rate control: one rate slot per node, seeded from
+        // the spec's configured rate. `validate()` already pinned the
+        // armed controller to sparse schemes, so `base_rate` is Some.
+        let controller = match cfg.compress_control {
+            ControlSpec::Aimd(params) => {
+                let init = cfg
+                    .repl
+                    .base_rate()
+                    .context("--compress-control needs a sparse scheme")?;
+                Some(RateController::new(
+                    params,
+                    cfg.rate_min,
+                    cfg.rate_max,
+                    cfg.nodes,
+                    init,
+                )?)
+            }
+            ControlSpec::Off => None,
+        };
+        let rate_label = controller.as_ref().map(|c| c.label()).unwrap_or_default();
+        let bctx = ReplBuildCtx {
+            shard_len,
+            accels: cfg.accels_per_node,
+            staleness: if async_armed { Some(&node_delay) } else { None },
+            rates: controller.as_ref().map(|c| c.rates()),
+            adaptive: controller.is_some(),
+        };
         let ranks = (0..topo.world_size())
             .map(|r| {
                 let mut opt = cfg.opt.build(shard_len);
                 opt.attach_pool(PoolHandle::new(Arc::clone(&pool)));
-                let repl = if async_armed {
-                    cfg.repl
-                        .build_with_staleness(shard_len, node_delay[topo.node_of(r)])?
-                } else {
-                    cfg.repl.build(shard_len)
-                };
+                let repl = cfg.repl.build_for_node(r, &bctx)?;
                 Ok(RankState {
                     opt,
                     repl,
@@ -336,6 +370,8 @@ impl Trainer {
             pending: (0..cfg.accels_per_node).map(|_| None).collect(),
             node_delay,
             node_staleness_label,
+            controller,
+            rate_label,
             dropped_step: vec![0; cfg.nodes],
             peer_set_step: String::new(),
             engine,
@@ -361,17 +397,25 @@ impl Trainer {
         &self.active
     }
 
+    /// The per-node construction context [`Trainer::new`] built the
+    /// ranks with, rebuilt from the trainer's own tables — so the crash
+    /// path's rebuilds see the same staleness windows and the
+    /// controller's *current* rates.
+    fn build_ctx(&self) -> ReplBuildCtx<'_> {
+        let async_armed = matches!(self.cfg.repl, ReplSpec::DiLoCo { staleness: Some(_), .. });
+        ReplBuildCtx {
+            shard_len: self.mesh.shards.shard_len(),
+            accels: self.cfg.accels_per_node,
+            staleness: if async_armed { Some(&self.node_delay) } else { None },
+            rates: self.controller.as_ref().map(|c| c.rates()),
+            adaptive: self.controller.is_some(),
+        }
+    }
+
     /// Rebuild one rank's replicator exactly as [`Trainer::new`] did —
     /// the crash path wipes the node's in-memory state with this.
     fn build_rank_repl(&self, rank: usize) -> Result<Box<dyn Replicator>> {
-        let shard_len = self.mesh.shards.shard_len();
-        if matches!(self.cfg.repl, ReplSpec::DiLoCo { staleness: Some(_), .. }) {
-            self.cfg
-                .repl
-                .build_with_staleness(shard_len, self.node_delay[self.mesh.topo.node_of(rank)])
-        } else {
-            Ok(self.cfg.repl.build(shard_len))
-        }
+        self.cfg.repl.build_for_node(rank, &self.build_ctx())
     }
 
     /// Fire this step's membership events. Runs right after
@@ -984,7 +1028,20 @@ impl Trainer {
                 // exists as per-member peer-set lanes.
                 let faultless = self.cfg.link_fault.is_empty();
                 let topo_full = self.cfg.topology.is_full();
-                if topo_full && uniform && delays[0] == 0 && self.cfg.quorum == 0 && faultless {
+                // An armed rate controller also routes per-member: rates
+                // may diverge across nodes mid-run, and the controller's
+                // occupancy taps need each member's send on its own NIC
+                // lane. With delays all 0 and `wait` the scan below
+                // admits everything in this same step — the whole-group
+                // mean, charged per member.
+                let ctl_armed = self.controller.is_some();
+                if topo_full
+                    && uniform
+                    && delays[0] == 0
+                    && self.cfg.quorum == 0
+                    && faultless
+                    && !ctl_armed
+                {
                     // Synchronous replication: the mean lands this step.
                     self.engine.gather(&group, mode, &sizes, &self.traffic);
                     self.apply_mean(&group, &rctx, payloads, &mut locals, (lo, hi), lr);
@@ -994,6 +1051,7 @@ impl Trainer {
                     && self.cfg.quorum == 0
                     && self.membership.is_empty()
                     && faultless
+                    && !ctl_armed
                 {
                     // PR 4 async launch (bit-frozen whole-group window):
                     // charge the wire on the deferred lane, park the
@@ -1105,6 +1163,28 @@ impl Trainer {
         self.last_timing = self.engine.end_step();
         self.last_retries = self.engine.step_fault_counts().0;
 
+        // Controller window: accumulate this step's exposed comm and, at
+        // the window boundary, retune each node's rate from its NIC
+        // lanes' busy deltas (a node's accels share its NIC — their lane
+        // totals sum; `retune` clamps the fraction to [0, 1]) before
+        // pushing the new rates into every rank's replicator.
+        if let Some(ctl) = self.controller.as_mut() {
+            ctl.note_step(self.last_timing.exposed_comm);
+            if (step + 1) % self.cfg.control_window == 0 {
+                let mut busy = vec![0.0f64; self.cfg.nodes];
+                for r in 0..world {
+                    busy[self.mesh.topo.node_of(r)] += self.engine.nic_busy(r);
+                }
+                if ctl.retune(&busy, self.engine.now()) {
+                    for r in 0..world {
+                        let rate = ctl.rates()[self.mesh.topo.node_of(r)];
+                        self.ranks[r].repl.set_rate(rate);
+                    }
+                    self.rate_label = ctl.label();
+                }
+            }
+        }
+
         self.step += 1;
         Ok(loss_sum / active_world.max(1) as f64)
     }
@@ -1178,7 +1258,7 @@ impl Trainer {
             shard: 0,
             seed: self.cfg.seed,
         };
-        let mut probe = self.cfg.repl.build(self.mesh.shards.shard_len());
+        let mut probe = self.cfg.repl.build_for_node(0, &self.build_ctx()).ok()?;
         let st = &mut self.ranks[0];
         // Stage the optimizer buffer through a scratch-pooled vector
         // instead of a fresh `to_vec` clone per probe — the next probe
@@ -1227,6 +1307,7 @@ impl Trainer {
                 comm_events: self.engine.events.len() as u64,
                 staleness: self.node_delay.iter().copied().max().unwrap_or(0),
                 node_staleness: self.node_staleness_label.clone(),
+                rate: self.rate_label.clone(),
                 sync_in_flight: self.syncs_in_flight(),
                 dropped_syncs: if self.node_staleness_label.is_empty() {
                     String::new()

@@ -1478,6 +1478,90 @@ mod engine_invariants {
         });
     }
 
+    /// Tentpole pin: `--compress-control off` — explicit or absent — is
+    /// bit-identical across schemes, meshes, and thread counts. The
+    /// controller's off path must be pure control flow: no sel hints on
+    /// the wire, no dispatch change, no retunes, empty `rate` column.
+    #[test]
+    fn prop_compress_control_off_bit_identical_to_absent() {
+        detonation::util::proptest::proptest(6, |g| {
+            let nodes = g.usize(1, 3);
+            let accels = g.usize(1, 2);
+            let repl = *g.choose(&[
+                "demo:1/8",
+                "random:1/8",
+                "striding:1/8",
+                "diloco:2",
+                "full",
+            ]);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let fingerprint = |explicit: bool| {
+                let mut cfg = synth_cfg(repl);
+                cfg.nodes = nodes;
+                cfg.accels_per_node = accels;
+                cfg.steps = 5;
+                cfg.threads = threads;
+                cfg.val_every = 2;
+                cfg.val_batches = 2;
+                if explicit {
+                    cfg.apply_arg("compress-control", "off").unwrap();
+                    cfg.apply_arg("control-window", "4").unwrap();
+                }
+                let (t, m) = run(cfg);
+                // off never populates the rate column
+                assert!(m.steps.iter().all(|r| r.rate.is_empty()));
+                run_fingerprint(&t, &m)
+            };
+            detonation::util::proptest::prop_assert(
+                fingerprint(false) == fingerprint(true),
+                format!(
+                    "{nodes}x{accels} {repl} t{threads}: explicit --compress-control off changed bits"
+                ),
+            );
+        });
+    }
+
+    /// Tentpole end-to-end: under AIMD control on a 4-node mesh whose
+    /// node 0 has a 100x slower NIC, the controller backs node 0's rate
+    /// off below the spec's 1/8 while the idle fast peers rise above it
+    /// (water-filling), the steps CSV `rate` column tracks the table,
+    /// and a rerun reproduces the run bit-for-bit.
+    #[test]
+    fn aimd_controller_backs_off_congested_node_end_to_end() {
+        let mk = || {
+            let mut cfg = synth_cfg("random:1/8");
+            cfg.nodes = 4;
+            cfg.accels_per_node = 1;
+            cfg.steps = 32;
+            cfg.apply_arg("node-mbps", "0:1").unwrap();
+            cfg.apply_arg("compress-control", "aimd").unwrap();
+            cfg.apply_arg("control-window", "4").unwrap();
+            cfg.apply_arg("rate-min", "1/64").unwrap();
+            cfg.apply_arg("rate-max", "1/4").unwrap();
+            run(cfg)
+        };
+        let (t, m) = mk();
+        let last = m.steps.last().unwrap();
+        let rates: Vec<f64> = last
+            .rate
+            .split(';')
+            .map(|s| s.parse().unwrap())
+            .collect();
+        assert_eq!(rates.len(), 4, "rate column: {:?}", last.rate);
+        assert!(
+            rates[0] < 0.125 && rates.iter().skip(1).all(|&r| r > 0.125),
+            "congested node 0 should settle below the spec rate and idle \
+             peers above it: {:?}",
+            last.rate
+        );
+        let (t2, m2) = mk();
+        assert_eq!(
+            run_fingerprint(&t, &m),
+            run_fingerprint(&t2, &m2),
+            "controller-on run is not deterministic"
+        );
+    }
+
     /// Tentpole acceptance: a random-pair run is a pure function of
     /// the config — the per-window matching is a hash of
     /// (seed, step, shard), not an RNG draw — so a fixed seed

@@ -14,8 +14,9 @@ Two layers, both of which must pass:
    (zero steady-state allocations, "drop beats wait" under compute and
    NIC stragglers alike, bit-identity booleans, S >= 1 strictly faster
    than synchronous DiLoCo, the >=2x lane-vectorization floor on the
-   gated kernel rows, and the chaos bench's graceful-degradation band
-   and crash-then-rejoin gap). A bench
+   gated kernel rows, the chaos bench's graceful-degradation band
+   and crash-then-rejoin gap, and the adaptive controller's
+   beats-every-uniform-rate and loss-band claims). A bench
    that wrote a violating artifact has already failed its own process,
    but the gate re-checks the *committed* claims so a stale or
    hand-edited snapshot cannot pass review.
@@ -58,6 +59,7 @@ METRICS = {
     "collectives": [("rows", ("name",), "gb_per_sec", True)],
     "runtime": [("rows", ("model",), "gflops_per_sec", True)],
     "overlap": [("schemes", ("scheme",), "sim_speedup", True)],
+    "adaptive": [("arms", ("label",), "sim_step_s", False)],
     "async_diloco": [("arms", ("label",), "sim_step_s", False)],
     "stragglers": [("arms", ("label",), "sim_step_s", False)],
     "chaos": [("arms", ("label",), "sim_step_s", False)],
@@ -67,6 +69,11 @@ METRICS = {
 
 # invariant registry: artifact stem -> list of (dotted field path, expected)
 INVARIANTS = {
+    "adaptive": [
+        ("off_bit_identical", True),
+        ("controller_beats_fixed", True),
+        ("loss_within_band", True),
+    ],
     "kernels": [
         ("collectives_steady_state_allocs", 0),
         ("optimizer_steady_state_allocs", 0),
@@ -135,6 +142,15 @@ TOPOLOGY_FLAT_BAND = 1.5
 TOPOLOGY_LOSS_BAND = 2.0
 TOPOLOGY_GROUPS = (4, 16, 64)
 TOPOLOGY_SPARSE = ("ring", "random-pair", "hier2")
+
+# adaptive rate-control gate bands. On the 4x mixed-NIC profile the AIMD
+# controller's water-filled per-node rates must make its per-step sim
+# time strictly lower than EVERY uniform fixed-rate arm's, while its tail
+# loss stays within ADAPTIVE_LOSS_BAND x the uncontrolled fixed-1/8
+# baseline's. The off-arm bit-identity boolean is asserted by the bench
+# while writing the artifact and re-checked here via INVARIANTS.
+ADAPTIVE_LOSS_BAND = 1.5
+ADAPTIVE_FIXED_ARMS = ("fixed8", "fixed16", "fixed32")
 
 
 def lookup(doc, dotted):
@@ -371,6 +387,37 @@ def computed_invariants(stem, doc):
                         f"{stem}: g{g}-{topo} tail loss {tail} outside the "
                         f"{TOPOLOGY_LOSS_BAND}x band of full {full_tail}"
                     )
+    if stem == "adaptive":
+        arms = {a.get("label"): a for a in doc.get("arms", [])}
+        for label in ADAPTIVE_FIXED_ARMS + ("aimd",):
+            if label not in arms:
+                errors.append(f"{stem}: arm {label!r} missing")
+        aimd = arms.get("aimd")
+        if aimd is None:
+            return errors
+        aimd_step = _num(aimd, "sim_step_s", errors, stem, "aimd")
+        # water-filling: per-node rates beat every uniform fixed rate
+        for label in ADAPTIVE_FIXED_ARMS:
+            arm = arms.get(label)
+            if arm is None:
+                continue
+            step = _num(arm, "sim_step_s", errors, stem, label)
+            if aimd_step is not None and step is not None and not aimd_step < step:
+                errors.append(
+                    f"{stem}: aimd not faster than uniform {label} "
+                    f"({aimd_step} vs {step})"
+                )
+        # ...without giving convergence away vs the uncontrolled spec rate
+        base = arms.get("fixed8")
+        if base is not None:
+            base_tail = _num(base, "tail_loss", errors, stem, "fixed8")
+            tail = _num(aimd, "tail_loss", errors, stem, "aimd")
+            if base_tail is not None and base_tail > 0 and tail is not None \
+                    and not tail <= base_tail * ADAPTIVE_LOSS_BAND:
+                errors.append(
+                    f"{stem}: aimd tail loss {tail} outside the "
+                    f"{ADAPTIVE_LOSS_BAND}x band of fixed8 {base_tail}"
+                )
     return errors
 
 
@@ -682,6 +729,44 @@ def self_test():
     t_base = {"quick": False, "arms": [{"label": "g4-ring", "sim_step_s": 1.0}]}
     t_reg = {"quick": False, "arms": [{"label": "g4-ring", "sim_step_s": 1.3}]}
     regs, n = compare("topology", t_base, t_reg, 0.15)
+    assert n == 1 and len(regs) == 1
+
+    # adaptive: controller beats every uniform fixed rate, loss band vs
+    # the uncontrolled fixed-1/8 baseline, off-arm bit-identity boolean
+    ad = {
+        "off_bit_identical": True,
+        "controller_beats_fixed": True,
+        "loss_within_band": True,
+        "arms": [
+            {"label": "fixed8", "sim_step_s": 2.0, "tail_loss": 1.0},
+            {"label": "fixed16", "sim_step_s": 1.5, "tail_loss": 1.2},
+            {"label": "fixed32", "sim_step_s": 1.2, "tail_loss": 1.4},
+            {"label": "aimd", "sim_step_s": 1.0, "tail_loss": 1.3},
+        ],
+    }
+    assert check_invariants("adaptive", ad) == []
+    # an aimd arm no faster than SOME uniform rate trips the gate
+    ad_slow = json.loads(json.dumps(ad))
+    ad_slow["arms"][3]["sim_step_s"] = 1.2
+    assert any("not faster than uniform" in e for e in check_invariants("adaptive", ad_slow))
+    # an aimd tail outside the 1.5x band of the fixed-1/8 baseline fails
+    ad_lossy = json.loads(json.dumps(ad))
+    ad_lossy["arms"][3]["tail_loss"] = 1.6
+    assert any("band of fixed8" in e for e in check_invariants("adaptive", ad_lossy))
+    # a missing arm and a flipped bit-identity boolean are violations
+    ad_gone = json.loads(json.dumps(ad))
+    del ad_gone["arms"][1]
+    assert any("fixed16" in e for e in check_invariants("adaptive", ad_gone))
+    ad_flag = dict(ad, off_bit_identical=False)
+    assert any("off_bit_identical" in e for e in check_invariants("adaptive", ad_flag))
+    # schema drift (missing field) is a reported violation, not a crash
+    ad_missing = json.loads(json.dumps(ad))
+    del ad_missing["arms"][3]["tail_loss"]
+    assert any("missing numeric field" in e for e in check_invariants("adaptive", ad_missing))
+    # sim_step_s regressions compare like the other lower-is-better arms
+    ad_base = {"quick": False, "arms": [{"label": "aimd", "sim_step_s": 1.0}]}
+    ad_reg = {"quick": False, "arms": [{"label": "aimd", "sim_step_s": 1.3}]}
+    regs, n = compare("adaptive", ad_base, ad_reg, 0.15)
     assert n == 1 and len(regs) == 1
 
     # async_diloco: S >= 1 must be faster than sync, S = 0 bit-identical
